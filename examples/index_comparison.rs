@@ -1,0 +1,79 @@
+//! Figure 2 interactive driver: our measured centralized index vs the
+//! P-RLS analytic model, with adjustable index size.
+//!
+//! Run: `cargo run --release --example index_comparison -- --entries 4000000`
+
+use datadiffusion::index::central::CentralIndex;
+use datadiffusion::index::prls::{PrlsModel, MEASURED};
+use datadiffusion::storage::object::ObjectId;
+use datadiffusion::util::bench::black_box;
+use datadiffusion::util::cli::{help_if_requested, Args, OptSpec};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env(&["help"]);
+    let specs = [OptSpec {
+        name: "entries",
+        value: "N",
+        help: "index size (paper studies 1M-8M)",
+        default: "1000000",
+    }];
+    help_if_requested(&args, "index_comparison", "Fig 2: central index vs P-RLS", &specs);
+    let entries: u64 = args.num_or("entries", 1_000_000);
+
+    println!("building a {entries}-entry centralized index...");
+    let mut idx = CentralIndex::new();
+    let t0 = Instant::now();
+    for i in 0..entries {
+        idx.insert(ObjectId(i), (i % 128) as usize);
+    }
+    let insert_total = t0.elapsed().as_secs_f64();
+    println!(
+        "inserts: {:.2}s total, {:.3} us/op (paper: 1-3 us at 1M-8M entries)",
+        insert_total,
+        insert_total / entries as f64 * 1e6
+    );
+
+    let lookups = entries.min(4_000_000);
+    let mut acc = 0usize;
+    let t0 = Instant::now();
+    for i in 0..lookups {
+        acc += black_box(idx.locations(ObjectId((i * 6_364_136_223_846_793_005u64.wrapping_add(7)) % entries)).len());
+    }
+    black_box(acc);
+    let per = t0.elapsed().as_secs_f64() / lookups as f64;
+    let rate = 1.0 / per;
+    println!(
+        "lookups: {:.3} us/op -> {:.3e} lookups/s (paper: 0.25-1 us, ~4.18e6/s)",
+        per * 1e6,
+        rate
+    );
+
+    let model = PrlsModel::fit();
+    println!("\nChervenak et al. measured P-RLS points (nodes, latency):");
+    for (n, lat) in MEASURED.iter().step_by(4) {
+        println!("  {n:>3} nodes: {:.2} ms", lat * 1e3);
+    }
+    println!(
+        "log fit: latency(n) = {:.3}ms + {:.3}ms*ln(n)",
+        model.a * 1e3,
+        model.b * 1e3
+    );
+    println!("\n{:>10} {:>16} {:>20}", "nodes", "P-RLS latency", "P-RLS agg lookups/s");
+    let mut n = 1u64;
+    while n <= 1 << 20 {
+        println!(
+            "{n:>10} {:>14.2}ms {:>20.3e}",
+            model.latency(n) * 1e3,
+            model.aggregate_throughput(n)
+        );
+        n <<= 2;
+    }
+    match model.crossover_nodes(rate) {
+        Some(x) => println!(
+            "\nP-RLS needs {x} nodes to match this one-node index (paper: >32K nodes). \
+             Conclusion: a centralized index is the right call at Falkon's scale."
+        ),
+        None => println!("\nP-RLS never catches up within 2^30 nodes."),
+    }
+}

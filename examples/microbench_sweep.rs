@@ -1,0 +1,128 @@
+//! Configurable §4.3 micro-benchmark sweep driver.
+//!
+//! The figure benches run fixed sweeps; this example exposes the whole
+//! 896-experiment matrix (8 configurations × read/read+write × node
+//! counts × file sizes) for interactive exploration.
+//!
+//! Examples:
+//!   cargo run --release --example microbench_sweep -- \
+//!       --configs 3,5,8 --nodes 8,64 --sizes 1MB,100MB --read-write
+//!   cargo run --release --example microbench_sweep -- --full
+
+use datadiffusion::analysis::model;
+use datadiffusion::config::Config;
+use datadiffusion::driver::sim::SimDriver;
+use datadiffusion::util::cli::{help_if_requested, Args, OptSpec};
+use datadiffusion::util::units::{fmt_bps, fmt_bytes, parse_size};
+use datadiffusion::workloads::microbench::{generate, MbConfig, FILE_SIZES, NODE_COUNTS};
+
+fn config_by_number(n: u32) -> Option<MbConfig> {
+    match n {
+        1 => Some(MbConfig::ModelLocalDisk),
+        2 => Some(MbConfig::ModelGpfs),
+        3 => Some(MbConfig::FirstAvailable),
+        4 => Some(MbConfig::FirstAvailableWrapper),
+        5 => Some(MbConfig::FirstCacheAvail0),
+        6 => Some(MbConfig::FirstCacheAvail100),
+        7 => Some(MbConfig::MaxComputeUtil0),
+        8 => Some(MbConfig::MaxComputeUtil100),
+        _ => None,
+    }
+}
+
+fn main() {
+    let args = Args::from_env(&["read-write", "full", "help"]);
+    let specs = [
+        OptSpec { name: "configs", value: "LIST", help: "paper config numbers 1-8", default: "2,3,8" },
+        OptSpec { name: "nodes", value: "LIST", help: "node counts", default: "1,8,64" },
+        OptSpec { name: "sizes", value: "LIST", help: "file sizes (1B..1GB)", default: "100MB" },
+        OptSpec { name: "tpn", value: "N", help: "tasks per node", default: "8" },
+        OptSpec { name: "read-write", value: "", help: "read+write variant", default: "" },
+        OptSpec { name: "full", value: "", help: "the full 896-cell matrix (slow)", default: "" },
+    ];
+    help_if_requested(&args, "microbench_sweep", "§4.3 micro-benchmark matrix", &specs);
+
+    let full = args.flag("full");
+    let rw_list: Vec<bool> = if full {
+        vec![false, true]
+    } else {
+        vec![args.flag("read-write")]
+    };
+    let configs: Vec<MbConfig> = if full {
+        (1..=8).filter_map(config_by_number).collect()
+    } else {
+        args.num_list_or("configs", &[2u32, 3, 8])
+            .into_iter()
+            .filter_map(config_by_number)
+            .collect()
+    };
+    let nodes_list: Vec<usize> = if full {
+        NODE_COUNTS.to_vec()
+    } else {
+        args.num_list_or("nodes", &[1usize, 8, 64])
+    };
+    let sizes: Vec<u64> = if full {
+        FILE_SIZES.to_vec()
+    } else {
+        args.str_or("sizes", "100MB")
+            .split(',')
+            .map(|s| parse_size(s).unwrap_or_else(|| panic!("bad size {s:?}")))
+            .collect()
+    };
+    let tpn: usize = args.num_or("tpn", 8);
+
+    let mut cells = 0usize;
+    println!(
+        "{:<48} {:>4} {:>6} {:>10} {:>14} {:>10}",
+        "config", "rw", "nodes", "size", "throughput", "tasks/s"
+    );
+    for &rw in &rw_list {
+        for &nodes in &nodes_list {
+            for &size in &sizes {
+                for &mb in &configs {
+                    cells += 1;
+                    let (bps, rate) = match mb {
+                        MbConfig::ModelLocalDisk => {
+                            let cfg = Config::with_nodes(nodes);
+                            let bps = if rw {
+                                model::local_disk_rw_bps(&cfg, nodes, size)
+                            } else {
+                                model::local_disk_read_bps(&cfg, nodes, size)
+                            };
+                            (bps, f64::NAN)
+                        }
+                        MbConfig::ModelGpfs => {
+                            let cfg = Config::with_nodes(nodes);
+                            let bps = if rw {
+                                model::gpfs_rw_bps(&cfg, nodes, size)
+                            } else {
+                                model::gpfs_read_bps(&cfg, nodes, size)
+                            };
+                            (bps, f64::NAN)
+                        }
+                        _ => {
+                            let exp = generate(mb, nodes, size, rw, tpn);
+                            let out = SimDriver::new(exp.config, exp.spec, exp.catalog).run();
+                            let bps = if rw {
+                                out.metrics.rw_throughput_bps()
+                            } else {
+                                out.metrics.read_throughput_bps()
+                            };
+                            (bps, out.metrics.task_rate())
+                        }
+                    };
+                    println!(
+                        "{:<48} {:>4} {:>6} {:>10} {:>14} {:>10.1}",
+                        mb.label(),
+                        if rw { "rw" } else { "r" },
+                        nodes,
+                        fmt_bytes(size),
+                        fmt_bps(bps),
+                        rate
+                    );
+                }
+            }
+        }
+    }
+    println!("\n{cells} experiment cells (paper's full matrix: 896).");
+}

@@ -1,0 +1,10 @@
+use datadiffusion::analysis::figures::{run_stacking, StackConfig};
+use datadiffusion::workloads::astro;
+fn main() {
+    let row = astro::row_for_locality(1.38);
+    let t0 = std::time::Instant::now();
+    let out = run_stacking(128, row, StackConfig::DiffusionGz, 0.3, 1);
+    println!("tasks={} wall={:.2}s events={} ev/s={:.0}",
+        out.metrics.tasks_done, t0.elapsed().as_secs_f64(), out.events,
+        out.events as f64 / out.wall_s);
+}

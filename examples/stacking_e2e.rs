@@ -1,0 +1,205 @@
+//! END-TO-END driver: the paper's astronomy image-stacking application on
+//! the full three-layer stack, on a real (small) workload.
+//!
+//! * Layer 3: the Rust coordinator (this process) — dispatch, caching,
+//!   peer transfers, metrics — over a live mini-cluster of executor
+//!   threads and real files (gzip-compressed synthetic sky images).
+//! * Layer 2/1: the JAX/Pallas stacking model, AOT-compiled to
+//!   `artifacts/*.hlo.txt` by `make artifacts`, executed through PJRT on
+//!   the request path. Python is NOT involved at runtime.
+//!
+//! The run sweeps data locality (Table 2 style) and compares data
+//! diffusion against the GPFS-only baseline on the paper's headline
+//! metrics: cache-hit ratio vs ideal, bytes by source, time per stack.
+//! Numerics are verified against the pure-jnp oracle via the golden
+//! fixture (`artifacts/golden_stack.tsv`).
+//!
+//! Run: `make artifacts && cargo run --release --example stacking_e2e`
+//! Flags: `--profile` prints the Fig 7-style phase breakdown;
+//!        `--tasks N --objects N --nodes N` resize the workload.
+
+use datadiffusion::config::Config;
+use datadiffusion::coordinator::task::{Task, TaskId};
+use datadiffusion::driver::live::LiveCluster;
+use datadiffusion::runtime::{artifacts_dir, PjrtEngine, StackRequest};
+use datadiffusion::scheduler::DispatchPolicy;
+use datadiffusion::storage::live::LiveStore;
+use datadiffusion::storage::object::{DataFormat, ObjectId};
+use datadiffusion::util::cli::Args;
+use datadiffusion::util::units::{fmt_bytes, fmt_secs};
+use datadiffusion::workloads::astro;
+use std::time::Instant;
+
+fn verify_golden(engine: &PjrtEngine) -> datadiffusion::Result<f64> {
+    // The golden fixture pins the PJRT execution to the pure-jnp oracle:
+    // inputs and the reference output were produced at AOT time.
+    let path = artifacts_dir().join("golden_stack.tsv");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| datadiffusion::Error::Artifact(format!("{}: {e}", path.display())))?;
+    let mut fields = std::collections::HashMap::new();
+    let mut shape = (0usize, 0usize, 0usize);
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (name, rest) = line.split_once('\t').expect("golden format");
+        if name == "shape" {
+            let v: Vec<usize> = rest
+                .split_whitespace()
+                .map(|s| s.parse().unwrap())
+                .collect();
+            shape = (v[0], v[1], v[2]);
+        } else {
+            let vals: Vec<f64> = rest
+                .split_whitespace()
+                .map(|s| s.parse().unwrap())
+                .collect();
+            fields.insert(name.to_string(), vals);
+        }
+    }
+    let (n, h, w) = shape;
+    let req = StackRequest {
+        raw: fields["raw"].iter().map(|&v| v as i16).collect(),
+        sky: fields["sky"].iter().map(|&v| v as f32).collect(),
+        cal: fields["cal"].iter().map(|&v| v as f32).collect(),
+        shifts: fields["shifts"].iter().map(|&v| v as f32).collect(),
+        weights: fields["weights"].iter().map(|&v| v as f32).collect(),
+        depth: n,
+    };
+    let out = engine.stack(&req)?;
+    let expect = &fields["output"];
+    assert_eq!(out.len(), h * w);
+    let mut max_err = 0.0f64;
+    for (a, b) in out.iter().zip(expect) {
+        max_err = max_err.max((*a as f64 - b).abs());
+    }
+    Ok(max_err)
+}
+
+fn profile_phases(engine: &PjrtEngine) {
+    // Fig 7-style phase breakdown on 1 CPU: I/O phases (open/read) are
+    // owned by the executor; compute phases run through PJRT.
+    println!("\n--- Fig 7-style profile (1 CPU, 1000 objects, 100x100 ROIs) ---");
+    let (h, w) = engine.roi_shape();
+    let depth = 8usize;
+    let mut io_s = 0.0;
+    let mut compute_s = 0.0;
+    let dir = std::env::temp_dir().join("dd_e2e_profile");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = LiveStore::create(&dir, DataFormat::Gz).expect("store");
+    for i in 0..50 {
+        store.populate(ObjectId(i), h * w).expect("populate");
+    }
+    let runs = 1000;
+    for i in 0..runs {
+        let obj = ObjectId(i % 50);
+        let t0 = Instant::now();
+        let raw = store.read(obj).expect("read");
+        let pixels = datadiffusion::storage::live::pixels_of(&raw);
+        io_s += t0.elapsed().as_secs_f64();
+        let (raw_px, sky, cal, shifts, weights) =
+            datadiffusion::workloads::sky::stack_inputs(obj, &pixels, depth, h, w);
+        let t1 = Instant::now();
+        let _ = engine
+            .stack(&StackRequest {
+                raw: raw_px,
+                sky,
+                cal,
+                shifts,
+                weights,
+                depth,
+            })
+            .expect("stack");
+        compute_s += t1.elapsed().as_secs_f64();
+    }
+    println!(
+        "open+readHDU+getTile (I/O+gunzip): {:.3} ms/task",
+        io_s / runs as f64 * 1e3
+    );
+    println!(
+        "calibration+interpolation+doStacking (PJRT): {:.3} ms/task",
+        compute_s / runs as f64 * 1e3
+    );
+    println!("paper: I/O dominates; compute <1 ms + radec2xy 10-20%");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn main() -> datadiffusion::Result<()> {
+    let args = Args::from_env(&["profile", "help"]);
+    let n_nodes: usize = args.num_or("nodes", 4);
+    let n_objects: u64 = args.num_or("objects", 24);
+    let n_tasks: u64 = args.num_or("tasks", 240);
+
+    println!("=== stacking end-to-end: Rust coordinator + PJRT(JAX/Pallas AOT) ===");
+    let engine = PjrtEngine::load_default()?;
+    println!(
+        "PJRT: platform={}, stack variants n={:?}, ROI {:?}",
+        engine.platform(),
+        engine.stack_depths(),
+        engine.roi_shape()
+    );
+
+    // Numerics gate: PJRT output vs the pure-jnp oracle.
+    let max_err = verify_golden(&engine)?;
+    println!("golden check: max |pjrt - oracle| = {max_err:.2e} (gate: < 1e-2 of pixel scale)");
+    assert!(max_err < 1e-2, "PJRT numerics diverged from the oracle");
+
+    if args.flag("profile") {
+        profile_phases(&engine);
+    }
+
+    // Locality sweep: same task count, varying objects-per-file re-use.
+    let (h, w) = engine.roi_shape();
+    let root = std::env::temp_dir().join("dd_e2e");
+    println!(
+        "\n{:>9} {:>10} {:>8} {:>8} {:>8} {:>9} {:>11} {:>11} {:>11}",
+        "workload", "time/task", "hit%", "ideal%", "c2c", "gpfs", "local B", "c2c B", "gpfs B"
+    );
+    for &locality in &[1u64, 3, 8, 30] {
+        for caching in [true, false] {
+            let files = (n_tasks / locality).clamp(1, n_objects);
+            let _ = std::fs::remove_dir_all(&root);
+            let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Gz)?;
+            for i in 0..files {
+                store.populate(ObjectId(i), h * w)?;
+            }
+            let mut cfg = Config::with_nodes(n_nodes);
+            cfg.scheduler.policy = if caching {
+                DispatchPolicy::MaxComputeUtil
+            } else {
+                DispatchPolicy::FirstAvailable
+            };
+            let depth = locality.min(32) as u32;
+            let tasks: Vec<Task> = (0..n_tasks)
+                .map(|i| Task::stacking(TaskId(i), ObjectId(i % files), depth, 0))
+                .collect();
+            let out =
+                LiveCluster::new(cfg, store, root.join("work"), Some(artifacts_dir())).run(tasks)?;
+            let m = &out.metrics;
+            let label = if caching {
+                format!("DD L={locality}")
+            } else {
+                format!("GPFS L={locality}")
+            };
+            println!(
+                "{label:>9} {:>10} {:>7.1}% {:>7.1}% {:>8} {:>9} {:>11} {:>11} {:>11}",
+                fmt_secs(out.makespan_s / m.tasks_done.max(1) as f64),
+                m.local_hit_ratio() * 100.0,
+                astro::ideal_hit_ratio(locality as f64) * 100.0,
+                m.peer_hits,
+                m.gpfs_misses,
+                fmt_bytes(m.local_bytes),
+                fmt_bytes(m.c2c_bytes),
+                fmt_bytes(m.gpfs_bytes),
+            );
+        }
+    }
+    println!(
+        "\nheadline: with locality, data diffusion serves inputs from executor caches\n\
+         (hit%% -> ideal%%) and the load on persistent storage collapses, while the\n\
+         GPFS baseline re-reads every byte — the paper's scaling argument, live,\n\
+         with real PJRT stacking numerics verified against the JAX oracle."
+    );
+    let _ = std::fs::remove_dir_all(root);
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT bridge: lower the L2 jax graphs to HLO text for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (``make artifacts``):
+
+  artifacts/stack_n<N>.hlo.txt     one per stack-depth variant
+  artifacts/radec2xy_m<M>.hlo.txt  coordinate-transform artifact
+  artifacts/manifest.tsv           machine-readable index for Rust
+  artifacts/golden_stack.tsv       golden numerics for the Rust runtime test
+
+The manifest is TSV (not JSON) because the Rust side parses it with the
+std library only — no serde in this offline environment.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+# M variants for the radec2xy artifact (objects per task batch).
+RADEC_VARIANTS = (128,)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stack(n: int) -> str:
+    """Lower ``stack_object`` for stack depth ``n``."""
+    h, w = model.ROI_H, model.ROI_W
+    args = (
+        jax.ShapeDtypeStruct((n, h, w), jnp.int16),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(model.stack_object).lower(*args))
+
+
+def lower_radec2xy(m: int) -> str:
+    """Lower ``radec2xy`` for batch size ``m``."""
+    args = (
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(model.radec2xy).lower(*args))
+
+
+def golden_stack_fixture(n: int = 4, h: int = None, w: int = None) -> str:
+    """Deterministic input/output pairs for the Rust runtime integration test.
+
+    Produces a TSV with the flattened inputs and the *reference* (pure-jnp)
+    output so Rust can verify its PJRT execution end-to-end without Python
+    at test time. Uses a small ROI variant? No — uses the real artifact
+    shape so the same HLO file is exercised.
+    """
+    h = h or model.ROI_H
+    w = w or model.ROI_W
+    key = jax.random.PRNGKey(20080610)  # paper's publication year/month
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    raw = jax.random.randint(k1, (n, h, w), 0, 4096, dtype=jnp.int16)
+    sky = jax.random.uniform(k2, (n,), jnp.float32, 10.0, 100.0)
+    cal = jax.random.uniform(k3, (n,), jnp.float32, 0.5, 2.0)
+    shifts = jax.random.uniform(k4, (n, 2), jnp.float32, 0.0, 1.0)
+    weights = jnp.ones((n,), jnp.float32)
+    out = ref.stack_ref(raw.astype(jnp.float32), sky, cal, shifts, weights)
+
+    def row(name, arr):
+        flat = jnp.ravel(arr)
+        return name + "\t" + " ".join(repr(float(v)) for v in flat)
+
+    lines = [
+        f"# golden fixture for stack_n{n} ({h}x{w}); inputs + ref output",
+        f"shape\t{n} {h} {w}",
+        row("raw", raw),
+        row("sky", sky),
+        row("cal", cal),
+        row("shifts", shifts),
+        row("weights", weights),
+        row("output", out),
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(str(n) for n in model.STACK_VARIANTS),
+        help="comma-separated stack-depth variants to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []  # kind, name, path, params...
+
+    for n in (int(s) for s in args.variants.split(",")):
+        name = f"stack_n{n}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_stack(n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_rows.append(
+            ("stack", name, f"{name}.hlo.txt", f"n={n}", f"h={model.ROI_H}", f"w={model.ROI_W}")
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for m in RADEC_VARIANTS:
+        name = f"radec2xy_m{m}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_radec2xy(m)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_rows.append(("radec2xy", name, f"{name}.hlo.txt", f"m={m}"))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    golden_n = 4
+    golden_path = os.path.join(args.out_dir, "golden_stack.tsv")
+    with open(golden_path, "w") as f:
+        f.write(golden_stack_fixture(golden_n))
+    print(f"wrote {golden_path}")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest_path, "w") as f:
+        f.write("# kind\tname\tfile\tparams...\n")
+        for row in manifest_rows:
+            f.write("\t".join(row) + "\n")
+    print(f"wrote {manifest_path} ({len(manifest_rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Layer-2 JAX model: the image-stacking compute graph.
+
+The paper's stacking application (§5) processes, per task, a stack of image
+cutouts belonging to one sky object: convert raw SHORT pixels, calibrate,
+sub-pixel-shift, and coadd (``stack_pallas``), plus the ``radec2xy``
+coordinate transform used to locate each object on its source images.
+
+These functions are **build-time only**: ``aot.py`` lowers them once to HLO
+text under ``artifacts/`` and the Rust runtime (``rust/src/runtime``)
+executes the artifacts via PJRT. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.stacking import stack_pallas
+
+__all__ = ["stack_object", "radec2xy", "STACK_VARIANTS", "ROI_H", "ROI_W"]
+
+# Fixed ROI geometry, matching the paper's profiling setup (§5.2: "1000
+# objects of 100x100 pixels").
+ROI_H = 100
+ROI_W = 100
+
+# AOT stack-depth variants. The Rust runtime picks the smallest variant
+# >= the task's stack depth and zero-weights the padded slots (Table 2
+# localities range 1..30, so 32 covers every workload in the paper).
+STACK_VARIANTS = (1, 2, 4, 8, 16, 32)
+
+
+def stack_object(
+    raw_short: jnp.ndarray,
+    sky: jnp.ndarray,
+    cal: jnp.ndarray,
+    shifts: jnp.ndarray,
+    weights: jnp.ndarray,
+) -> tuple[jnp.ndarray]:
+    """Full per-object stacking graph.
+
+    Mirrors the paper's phase breakdown (§5.2): *convertArray* (SHORT →
+    float), then the fused Pallas kernel for *calibration + interpolation +
+    doStacking*. (*open/readHDU/getTile* are I/O phases owned by the Rust
+    executor; *radec2xy* is a separate artifact.)
+
+    Args:
+      raw_short: ``[N, H, W]`` int16 raw pixels as read from the file.
+      sky:       ``[N]`` float32 sky levels.
+      cal:       ``[N]`` float32 calibration gains.
+      shifts:    ``[N, 2]`` float32 sub-pixel offsets.
+      weights:   ``[N]`` float32 coadd weights (0 ⇒ padded slot).
+
+    Returns:
+      1-tuple of ``[H, W]`` float32 stacked image (tuple because the AOT
+      bridge lowers with ``return_tuple=True``; see ``aot.py``).
+    """
+    # convertArray: SHORT -> float (the paper converts to DOUBLE; we stack
+    # in f32 — the XLA CPU backend computes the same graph and the oracle
+    # uses the same dtype, so the comparison is dtype-consistent).
+    raw = raw_short.astype(jnp.float32)
+    return (stack_pallas(raw, sky, cal, shifts, weights),)
+
+
+def radec2xy(
+    ra: jnp.ndarray,
+    dec: jnp.ndarray,
+    ra0: jnp.ndarray,
+    dec0: jnp.ndarray,
+    scale: jnp.ndarray,
+) -> tuple[jnp.ndarray]:
+    """Gnomonic projection of ``M`` object coordinates to pixel (x, y).
+
+    The paper's *radec2xy* phase. Kept as its own artifact because the Rust
+    executor calls it once per task batch, before any file I/O.
+
+    Args:
+      ra, dec: ``[M]`` float32 coordinates in radians.
+      ra0, dec0, scale: scalars — tangent point and pixels-per-radian.
+
+    Returns:
+      1-tuple of ``[M, 2]`` float32 pixel coordinates.
+    """
+    cos_c = jnp.sin(dec0) * jnp.sin(dec) + jnp.cos(dec0) * jnp.cos(dec) * jnp.cos(ra - ra0)
+    x = jnp.cos(dec) * jnp.sin(ra - ra0) / cos_c
+    y = (jnp.cos(dec0) * jnp.sin(dec) - jnp.sin(dec0) * jnp.cos(dec) * jnp.cos(ra - ra0)) / cos_c
+    return (jnp.stack([x * scale, y * scale], axis=-1),)

@@ -1,0 +1,57 @@
+"""L2 model semantics: stack_object and radec2xy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import radec2xy_ref, stack_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_stack_object_converts_short_and_matches_ref():
+    rng = np.random.default_rng(7)
+    n, h, w = 4, model.ROI_H, model.ROI_W
+    raw_short = jnp.asarray(rng.integers(0, 4096, size=(n, h, w), dtype=np.int16))
+    sky = jnp.asarray(rng.uniform(0, 100, (n,)).astype(np.float32))
+    cal = jnp.asarray(rng.uniform(0.5, 2, (n,)).astype(np.float32))
+    shifts = jnp.asarray(rng.uniform(0, 1, (n, 2)).astype(np.float32))
+    weights = jnp.ones((n,), jnp.float32)
+    (out,) = model.stack_object(raw_short, sky, cal, shifts, weights)
+    want = stack_ref(raw_short.astype(jnp.float32), sky, cal, shifts, weights)
+    assert out.shape == (h, w)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_stack_variants_cover_table2_localities():
+    """Variants must cover stack depths up to Table 2's max locality (30)."""
+    assert max(model.STACK_VARIANTS) >= 30
+    assert min(model.STACK_VARIANTS) == 1
+    assert list(model.STACK_VARIANTS) == sorted(model.STACK_VARIANTS)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 64))
+def test_radec2xy_matches_ref(seed, m):
+    rng = np.random.default_rng(seed)
+    ra = jnp.asarray(rng.uniform(0, 0.3, (m,)).astype(np.float32))
+    dec = jnp.asarray(rng.uniform(-0.3, 0.3, (m,)).astype(np.float32))
+    ra0 = jnp.float32(0.15)
+    dec0 = jnp.float32(0.0)
+    scale = jnp.float32(1e4)
+    (got,) = model.radec2xy(ra, dec, ra0, dec0, scale)
+    want = radec2xy_ref(ra, dec, ra0, dec0, scale)
+    assert got.shape == (m, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_radec2xy_tangent_point_maps_to_origin():
+    (out,) = model.radec2xy(
+        jnp.asarray([0.2], jnp.float32), jnp.asarray([0.1], jnp.float32),
+        jnp.float32(0.2), jnp.float32(0.1), jnp.float32(1e4))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-3)

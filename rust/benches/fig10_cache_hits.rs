@@ -1,0 +1,53 @@
+//! Figure 10: cache-hit performance of the data-aware scheduler at 128
+//! CPUs, localities 1–30, vs the ideal ratio 1 − 1/locality.
+//!
+//! Paper claim: "the data-aware scheduler can get within 90% of the
+//! ideal cache hit ratios in all cases."
+
+use datadiffusion::analysis::figures::{self, StackConfig};
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::{results_dir, CsvWriter};
+use datadiffusion::workloads::astro;
+
+fn main() {
+    bench_header(
+        "Figure 10: data-aware scheduler cache-hit ratio vs ideal, 128 CPUs",
+        "measured within 90% of ideal (1 - 1/locality) for all workloads",
+    );
+    let scale = figures::env_scale();
+    println!("workload scale: {scale} (DD_SCALE to change; 1.0 = full Table 2)\n");
+    let mut csv = CsvWriter::new(
+        results_dir().join("fig10_cache_hits.csv"),
+        &["locality", "ideal_hit", "measured_local_hit", "measured_any_hit", "fraction_of_ideal"],
+    );
+    println!(
+        "{:>8} {:>10} {:>14} {:>16} {:>16}",
+        "locality", "ideal", "local hits", "local+c2c hits", "% of ideal"
+    );
+    let mut worst: f64 = f64::INFINITY;
+    for row in astro::TABLE2 {
+        let out = figures::run_stacking(128, row, StackConfig::DiffusionGz, scale, 20080610);
+        let ideal = astro::ideal_hit_ratio(row.locality);
+        let local = out.metrics.local_hit_ratio();
+        let any = out.metrics.any_hit_ratio();
+        let frac = if ideal > 0.0 { local / ideal } else { 1.0 };
+        if ideal > 0.0 {
+            worst = worst.min(frac);
+        }
+        println!(
+            "{:>8} {:>9.1}% {:>13.1}% {:>15.1}% {:>15.1}%",
+            row.locality,
+            ideal * 100.0,
+            local * 100.0,
+            any * 100.0,
+            frac * 100.0
+        );
+        csv.rowf(&[&row.locality, &ideal, &local, &any, &frac]);
+    }
+    let path = csv.finish().expect("write csv");
+    println!(
+        "\nshape: worst fraction of ideal = {:.1}% (paper: >=90% — use DD_SCALE=1.0 for the full workload)",
+        worst * 100.0
+    );
+    println!("wrote {}", path.display());
+}

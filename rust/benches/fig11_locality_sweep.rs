@@ -1,0 +1,55 @@
+//! Figure 11: stacking time per stack per CPU at 128 CPUs as data
+//! locality varies 1–30, data diffusion vs GPFS, plus the single-node
+//! ideal.
+//!
+//! Paper shape: GPFS improves somewhat with locality but stays far from
+//! ideal; data diffusion approaches the ideal once locality exceeds ~10.
+
+use datadiffusion::analysis::figures;
+use datadiffusion::analysis::model;
+use datadiffusion::config::presets;
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::{results_dir, CsvWriter};
+use datadiffusion::util::units::fmt_secs;
+
+fn main() {
+    bench_header(
+        "Figure 11: time/stack/CPU vs locality (1-30), 128 CPUs",
+        "DD approaches the ideal beyond locality ~10; GPFS stays far above it",
+    );
+    let scale = figures::env_scale();
+    println!("workload scale: {scale} (DD_SCALE to change)\n");
+    let rows = figures::fig11_sweep(128, scale);
+    let cfg = presets::stacking(128);
+    let ideal = model::ideal_stack_time_s(&cfg, true);
+    let mut csv = CsvWriter::new(
+        results_dir().join("fig11_locality_sweep.csv"),
+        &["config", "locality", "time_per_stack_s", "ideal_s"],
+    );
+    println!("{:<24} {:>8} {:>16} {:>12}", "config", "locality", "time/stack/cpu", "ideal");
+    for r in &rows {
+        println!(
+            "{:<24} {:>8} {:>16} {:>12}",
+            r.config,
+            r.locality,
+            fmt_secs(r.time_per_stack_s),
+            fmt_secs(ideal)
+        );
+        csv.rowf(&[&r.config, &r.locality, &r.time_per_stack_s, &ideal]);
+    }
+    let path = csv.finish().expect("write csv");
+
+    let get = |config: &str, loc: f64| {
+        rows.iter()
+            .find(|r| r.config == config && (r.locality - loc).abs() < 1e-9)
+            .map(|r| r.time_per_stack_s)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "\nshape: at locality 30, DD(GZ) is {:.1}x ideal (paper: close to ideal) \
+         while GPFS(GZ) is {:.1}x ideal",
+        get("Data Diffusion (GZ)", 30.0) / ideal,
+        get("GPFS (GZ)", 30.0) / ideal
+    );
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,52 @@
+//! Figure 8: stacking performance at LOW data locality (1.38), 2–128
+//! CPUs, data diffusion vs GPFS, GZ vs FIT.
+//!
+//! Paper shape: with locality this low, data diffusion and GPFS perform
+//! similarly (most data still comes from persistent storage on the cold
+//! pass), with diffusion pulling ahead as CPUs grow; uncompressed is
+//! better at small CPU counts, compressed wins at scale (GPFS saturates
+//! at ~16 CPUs for FIT, ~128 for GZ).
+
+use datadiffusion::analysis::figures;
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::{results_dir, CsvWriter};
+use datadiffusion::util::units::fmt_secs;
+
+fn main() {
+    bench_header(
+        "Figure 8: time/stack/CPU at locality 1.38, 2-128 CPUs",
+        "DD ≈ GPFS at low locality, growing advantage with CPUs; GZ beats FIT at scale",
+    );
+    let scale = figures::env_scale();
+    let cpus = [2usize, 4, 8, 16, 32, 64, 128];
+    let rows = figures::fig8_fig9(1.38, &cpus, scale);
+    let mut csv = CsvWriter::new(
+        results_dir().join("fig8_locality_low.csv"),
+        &["config", "cpus", "time_per_stack_s", "hit_ratio"],
+    );
+    println!("workload scale: {scale} (DD_SCALE to change)\n");
+    println!("{:<24} {:>6} {:>16} {:>8}", "config", "cpus", "time/stack/cpu", "hit%");
+    for r in &rows {
+        println!(
+            "{:<24} {:>6} {:>16} {:>7.1}%",
+            r.config,
+            r.cpus,
+            fmt_secs(r.time_per_stack_s),
+            r.hit_ratio * 100.0
+        );
+        csv.rowf(&[&r.config, &r.cpus, &r.time_per_stack_s, &r.hit_ratio]);
+    }
+    let path = csv.finish().expect("write csv");
+
+    let get = |config: &str, cpus: usize| {
+        rows.iter()
+            .find(|r| r.config == config && r.cpus == cpus)
+            .map(|r| r.time_per_stack_s)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "\nshape: at 128 CPUs, DD(GZ)/GPFS(GZ) time ratio = {:.2} (paper: <1, modest gap)",
+        get("Data Diffusion (GZ)", 128) / get("GPFS (GZ)", 128)
+    );
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,55 @@
+//! Figure 9: stacking performance at HIGH data locality (30), 2–128
+//! CPUs, data diffusion vs GPFS, GZ vs FIT.
+//!
+//! Paper shape: data diffusion shows near-ideal speedup (time/stack/CPU
+//! roughly flat as CPUs grow) in both formats, while GPFS behaves as in
+//! Figure 8 (degrading past its saturation point).
+
+use datadiffusion::analysis::figures;
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::{results_dir, CsvWriter};
+use datadiffusion::util::units::fmt_secs;
+
+fn main() {
+    bench_header(
+        "Figure 9: time/stack/CPU at locality 30, 2-128 CPUs",
+        "DD ≈ flat (near-ideal speedup); GPFS degrades past saturation",
+    );
+    let scale = figures::env_scale();
+    let cpus = [2usize, 4, 8, 16, 32, 64, 128];
+    let rows = figures::fig8_fig9(30.0, &cpus, scale);
+    let mut csv = CsvWriter::new(
+        results_dir().join("fig9_locality_high.csv"),
+        &["config", "cpus", "time_per_stack_s", "hit_ratio"],
+    );
+    println!("workload scale: {scale} (DD_SCALE to change)\n");
+    println!("{:<24} {:>6} {:>16} {:>8}", "config", "cpus", "time/stack/cpu", "hit%");
+    for r in &rows {
+        println!(
+            "{:<24} {:>6} {:>16} {:>7.1}%",
+            r.config,
+            r.cpus,
+            fmt_secs(r.time_per_stack_s),
+            r.hit_ratio * 100.0
+        );
+        csv.rowf(&[&r.config, &r.cpus, &r.time_per_stack_s, &r.hit_ratio]);
+    }
+    let path = csv.finish().expect("write csv");
+
+    let get = |config: &str, cpus: usize| {
+        rows.iter()
+            .find(|r| r.config == config && r.cpus == cpus)
+            .map(|r| r.time_per_stack_s)
+            .unwrap_or(f64::NAN)
+    };
+    let dd2 = get("Data Diffusion (GZ)", 2);
+    let dd128 = get("Data Diffusion (GZ)", 128);
+    let gpfs128 = get("GPFS (FIT)", 128);
+    println!(
+        "\nshape: DD(GZ) 128-vs-2 CPU degradation = {:.2}x (paper: ~flat); \
+         DD(GZ) beats GPFS(FIT) at 128 CPUs by {:.1}x",
+        dd128 / dd2,
+        gpfs128 / dd128
+    );
+    println!("wrote {}", path.display());
+}

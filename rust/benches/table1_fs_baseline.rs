@@ -1,0 +1,115 @@
+//! Table 1 + §4.2 file-system baseline study.
+//!
+//! Reprints the testbed (Table 1) and validates the storage substrate
+//! against the paper's measured envelopes:
+//!
+//! * GPFS read tops out at ~3.4 Gb/s (saturated by ~8 clients);
+//! * GPFS read+write tops out at ~1.1 Gb/s;
+//! * aggregate local-disk read scales linearly (~76 Gb/s at 162 nodes);
+//! * local read+write ~25 Gb/s at 162 nodes.
+
+use datadiffusion::config::{presets, Config};
+use datadiffusion::sim::flownet::FlowNetwork;
+use datadiffusion::storage::testbed::{SimTestbed, TransferKind};
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::{results_dir, CsvWriter};
+use datadiffusion::util::units::{fmt_bps, MB};
+
+/// Measure steady-state aggregate bandwidth with `n` concurrent flows of
+/// one kind (plus optional write leg).
+fn aggregate(cfg: &Config, n: usize, rw: bool, local: bool) -> f64 {
+    let mut tb = SimTestbed::new(cfg);
+    let mut flows = Vec::new();
+    for node in 0..n {
+        let read_kind = if local {
+            TransferKind::LocalRead { node }
+        } else {
+            TransferKind::GpfsRead { node }
+        };
+        flows.push(tb.net.start_flow(0.0, tb.resources(read_kind), 100 * MB));
+        if rw {
+            let write_kind = if local {
+                TransferKind::LocalWrite { node }
+            } else {
+                TransferKind::GpfsWrite { node }
+            };
+            flows.push(tb.net.start_flow(0.0, tb.resources(write_kind), 100 * MB));
+        }
+    }
+    flows.iter().map(|&f| tb.net.rate(f)).sum()
+}
+
+fn main() {
+    bench_header(
+        "Table 1 testbed + §4.2 file-system baselines",
+        "GPFS read ~3.4Gb/s (sat. at 8 nodes); r+w ~1.1Gb/s; local read ~76Gb/s @162 nodes",
+    );
+    println!("Table 1 platforms:");
+    for p in presets::TABLE1 {
+        println!(
+            "  {:<12} {:>3} nodes | {:<22} | {:>4} | {}",
+            p.name, p.nodes, p.processors, p.memory, p.network
+        );
+    }
+
+    let mut csv = CsvWriter::new(
+        results_dir().join("table1_fs_baseline.csv"),
+        &["nodes", "gpfs_read_mbps", "gpfs_rw_mbps", "local_read_mbps", "local_rw_mbps"],
+    );
+    println!(
+        "\n{:>6} {:>14} {:>14} {:>14} {:>14}",
+        "nodes", "GPFS read", "GPFS r+w", "local read", "local r+w"
+    );
+    for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 162] {
+        let cfg = Config::with_nodes(n);
+        let gr = aggregate(&cfg, n, false, false);
+        let grw = aggregate(&cfg, n, true, false);
+        let lr = aggregate(&cfg, n, false, true);
+        let lrw = aggregate(&cfg, n, true, true);
+        println!(
+            "{n:>6} {:>14} {:>14} {:>14} {:>14}",
+            fmt_bps(gr),
+            fmt_bps(grw),
+            fmt_bps(lr),
+            fmt_bps(lrw)
+        );
+        csv.rowf(&[&n, &(gr / 1e6), &(grw / 1e6), &(lr / 1e6), &(lrw / 1e6)]);
+    }
+    let path = csv.finish().expect("write csv");
+
+    // Shape checks against the paper's §4.2 numbers.
+    let cfg = Config::with_nodes(162);
+    let gpfs8 = aggregate(&Config::with_nodes(8), 8, false, false);
+    let gpfs64 = aggregate(&Config::with_nodes(64), 64, false, false);
+    let local162 = aggregate(&cfg, 162, false, true);
+    println!(
+        "\nshape: GPFS read saturation 8->64 nodes gain = {:.1}% (paper: <6%)",
+        (gpfs64 / gpfs8 - 1.0) * 100.0
+    );
+    println!(
+        "shape: local/GPFS read ratio at 162 nodes = {:.0}x (paper: ~22x)",
+        local162 / gpfs64
+    );
+
+    // Flow-network micro-throughput (supports the sim-speed target).
+    let t0 = std::time::Instant::now();
+    let mut net = FlowNetwork::new();
+    let r = net.add_resource(1e9);
+    let mut completions = 0u64;
+    for i in 0..20_000u64 {
+        let f = net.start_flow(i as f64, vec![r], 1_000);
+        if let Some((t, id)) = net.next_completion(i as f64) {
+            net.remove_flow(t, id);
+            completions += 1;
+        }
+        let _ = f;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nflownet: {} start/complete cycles in {:.3}s ({:.0}/s)",
+        completions,
+        dt,
+        completions as f64 / dt
+    );
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,10 @@
+//! Figure/table regeneration harness.
+//!
+//! * [`model`] — the analytic "Model (local disk)" / "Model (persistent
+//!   storage)" envelope lines the paper plots alongside measurements.
+//! * [`figures`] — one runner per evaluation figure; each returns plain
+//!   row structs that the `cargo bench` targets print and write as CSV
+//!   under `results/`.
+
+pub mod figures;
+pub mod model;

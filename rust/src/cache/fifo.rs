@@ -1,0 +1,83 @@
+//! FIFO eviction: evict in insertion order, ignoring accesses.
+
+use std::collections::{HashSet, VecDeque};
+
+use super::policy::PolicyCore;
+use crate::storage::object::ObjectId;
+
+/// First-in-first-out policy state.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    order: VecDeque<ObjectId>,
+    resident: HashSet<ObjectId>,
+}
+
+impl Fifo {
+    /// Empty FIFO state.
+    pub fn new() -> Self {
+        Fifo::default()
+    }
+}
+
+impl PolicyCore for Fifo {
+    fn on_insert(&mut self, id: ObjectId) {
+        if self.resident.insert(id) {
+            self.order.push_back(id);
+        }
+    }
+
+    fn on_access(&mut self, _id: ObjectId) {
+        // FIFO ignores accesses by definition.
+    }
+
+    fn on_remove(&mut self, id: ObjectId) {
+        self.resident.remove(&id);
+        // Lazy removal: stale ids are skipped in `victim`.
+    }
+
+    fn victim(&mut self) -> Option<ObjectId> {
+        while let Some(&front) = self.order.front() {
+            if self.resident.contains(&front) {
+                return Some(front);
+            }
+            self.order.pop_front();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_in_insert_order_despite_access() {
+        let mut p = Fifo::new();
+        p.on_insert(ObjectId(1));
+        p.on_insert(ObjectId(2));
+        p.on_access(ObjectId(1)); // must not matter
+        assert_eq!(p.victim(), Some(ObjectId(1)));
+        p.on_remove(ObjectId(1));
+        assert_eq!(p.victim(), Some(ObjectId(2)));
+    }
+
+    #[test]
+    fn out_of_order_removal_skipped() {
+        let mut p = Fifo::new();
+        p.on_insert(ObjectId(1));
+        p.on_insert(ObjectId(2));
+        p.on_insert(ObjectId(3));
+        p.on_remove(ObjectId(2));
+        p.on_remove(ObjectId(1));
+        assert_eq!(p.victim(), Some(ObjectId(3)));
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate() {
+        let mut p = Fifo::new();
+        p.on_insert(ObjectId(1));
+        p.on_insert(ObjectId(1));
+        p.on_remove(ObjectId(1));
+        assert_eq!(p.victim(), None);
+    }
+}

@@ -1,0 +1,21 @@
+//! Per-executor data caches (§3.2.2).
+//!
+//! Each executor manages its own cache with a local eviction policy and
+//! reports content changes to the dispatcher's central index. The paper
+//! implements four classic policies — Random, FIFO, LRU, LFU — and runs
+//! all experiments with LRU.
+//!
+//! The cache tracks object *metadata* (ids and sizes); actual bytes live
+//! on local disk (live mode) or are implicit (sim mode). Capacity is in
+//! bytes, eviction returns the evicted ids so the executor can delete the
+//! files and notify the index.
+
+pub mod fifo;
+pub mod lfu;
+pub mod lru;
+pub mod policy;
+pub mod random;
+pub mod store;
+
+pub use policy::EvictionPolicy;
+pub use store::{CacheEvent, DataCache};

@@ -1,0 +1,71 @@
+//! Eviction-policy selection and the internal policy interface.
+
+use crate::storage::object::ObjectId;
+
+/// Cache eviction policy (§3.2.2: "We implement four well-known cache
+/// eviction policies: Random, FIFO, LRU, and LFU").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict a uniformly random resident object.
+    Random,
+    /// Evict the oldest-inserted object.
+    Fifo,
+    /// Evict the least-recently-used object (the paper's default).
+    Lru,
+    /// Evict the least-frequently-used object (ties: least recent).
+    Lfu,
+}
+
+impl EvictionPolicy {
+    /// Parse from config/CLI text.
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Some(EvictionPolicy::Random),
+            "fifo" => Some(EvictionPolicy::Fifo),
+            "lru" => Some(EvictionPolicy::Lru),
+            "lfu" => Some(EvictionPolicy::Lfu),
+            _ => None,
+        }
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Random => "random",
+            EvictionPolicy::Fifo => "fifo",
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::Lfu => "lfu",
+        }
+    }
+}
+
+/// Internal interface each policy implements. The store calls these on
+/// every mutation; `victim` must return a currently resident object.
+pub(crate) trait PolicyCore {
+    /// Object inserted into the cache.
+    fn on_insert(&mut self, id: ObjectId);
+    /// Resident object accessed (cache hit).
+    fn on_access(&mut self, id: ObjectId);
+    /// Object left the cache (evicted or invalidated).
+    fn on_remove(&mut self, id: ObjectId);
+    /// Choose the next victim among resident objects.
+    fn victim(&mut self) -> Option<ObjectId>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        for (s, p) in [
+            ("random", EvictionPolicy::Random),
+            ("FIFO", EvictionPolicy::Fifo),
+            ("Lru", EvictionPolicy::Lru),
+            ("lfu", EvictionPolicy::Lfu),
+        ] {
+            assert_eq!(EvictionPolicy::parse(s), Some(p));
+        }
+        assert_eq!(EvictionPolicy::parse("mru"), None);
+    }
+}

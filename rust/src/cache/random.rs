@@ -1,0 +1,105 @@
+//! Random eviction: evict a uniformly random resident object.
+
+use std::collections::HashMap;
+
+use super::policy::PolicyCore;
+use crate::storage::object::ObjectId;
+use crate::util::rng::Rng;
+
+/// Random policy state: a swap-remove vector for O(1) uniform sampling.
+#[derive(Debug)]
+pub struct Random {
+    ids: Vec<ObjectId>,
+    pos: HashMap<ObjectId, usize>,
+    rng: Rng,
+}
+
+impl Random {
+    /// Random policy with a deterministic seed (experiments must replay).
+    pub fn new(seed: u64) -> Self {
+        Random {
+            ids: Vec::new(),
+            pos: HashMap::new(),
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl PolicyCore for Random {
+    fn on_insert(&mut self, id: ObjectId) {
+        if !self.pos.contains_key(&id) {
+            self.pos.insert(id, self.ids.len());
+            self.ids.push(id);
+        }
+    }
+
+    fn on_access(&mut self, _id: ObjectId) {
+        // Random ignores accesses.
+    }
+
+    fn on_remove(&mut self, id: ObjectId) {
+        if let Some(i) = self.pos.remove(&id) {
+            let last = self.ids.pop().unwrap();
+            if last != id {
+                self.ids[i] = last;
+                self.pos.insert(last, i);
+            }
+        }
+    }
+
+    fn victim(&mut self) -> Option<ObjectId> {
+        if self.ids.is_empty() {
+            None
+        } else {
+            Some(self.ids[self.rng.index(self.ids.len())])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victim_is_resident() {
+        let mut p = Random::new(1);
+        for i in 0..10 {
+            p.on_insert(ObjectId(i));
+        }
+        for _ in 0..100 {
+            let v = p.victim().unwrap();
+            assert!(v.0 < 10);
+        }
+    }
+
+    #[test]
+    fn removal_maintains_sampling_set() {
+        let mut p = Random::new(2);
+        for i in 0..5 {
+            p.on_insert(ObjectId(i));
+        }
+        for i in 0..4 {
+            p.on_remove(ObjectId(i));
+        }
+        for _ in 0..20 {
+            assert_eq!(p.victim(), Some(ObjectId(4)));
+        }
+        p.on_remove(ObjectId(4));
+        assert_eq!(p.victim(), None);
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut p = Random::new(3);
+        for i in 0..4 {
+            p.on_insert(ObjectId(i));
+        }
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[p.victim().unwrap().0 as usize] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "counts={counts:?}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! The per-executor cache store: capacity accounting + policy dispatch.
+//!
+//! Tracks resident objects and sizes; on insert, evicts per the configured
+//! policy until the new object fits. Emits [`CacheEvent`]s so the executor
+//! can mirror changes to local disk (live mode) and notify the central
+//! index (loose coherence, §3.2.1).
+
+use crate::util::fxhash::FxHashMap;
+
+use super::fifo::Fifo;
+use super::lfu::Lfu;
+use super::lru::Lru;
+use super::policy::{EvictionPolicy, PolicyCore};
+use super::random::Random;
+use crate::storage::object::ObjectId;
+
+/// A change to cache contents, to be reported to the index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// Object became resident.
+    Inserted(ObjectId),
+    /// Object was evicted to make room.
+    Evicted(ObjectId),
+}
+
+enum Policy {
+    Random(Random),
+    Fifo(Fifo),
+    Lru(Lru),
+    Lfu(Lfu),
+}
+
+impl Policy {
+    fn core(&mut self) -> &mut dyn PolicyCore {
+        match self {
+            Policy::Random(p) => p,
+            Policy::Fifo(p) => p,
+            Policy::Lru(p) => p,
+            Policy::Lfu(p) => p,
+        }
+    }
+}
+
+/// A bounded object cache with pluggable eviction.
+pub struct DataCache {
+    policy: Policy,
+    resident: FxHashMap<ObjectId, u64>,
+    capacity: u64,
+    used: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl DataCache {
+    /// Create a cache with `capacity` bytes and the given policy. The
+    /// seed only matters for [`EvictionPolicy::Random`].
+    pub fn new(capacity: u64, policy: EvictionPolicy, seed: u64) -> Self {
+        let policy = match policy {
+            EvictionPolicy::Random => Policy::Random(Random::new(seed)),
+            EvictionPolicy::Fifo => Policy::Fifo(Fifo::new()),
+            EvictionPolicy::Lru => Policy::Lru(Lru::new()),
+            EvictionPolicy::Lfu => Policy::Lfu(Lfu::new()),
+        };
+        DataCache {
+            policy,
+            resident: FxHashMap::default(),
+            capacity,
+            used: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up an object; counts a hit or miss and updates recency state.
+    pub fn access(&mut self, id: ObjectId) -> bool {
+        if self.resident.contains_key(&id) {
+            self.hits += 1;
+            self.policy.core().on_access(id);
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Residency check without touching hit/miss/recency state (for
+    /// scheduling decisions that shouldn't perturb the cache).
+    pub fn contains(&self, id: ObjectId) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    /// Insert an object of `bytes`, evicting as needed. Returns the event
+    /// list: zero or more `Evicted` followed by `Inserted` (empty if the
+    /// object can never fit, i.e. `bytes > capacity`).
+    pub fn insert(&mut self, id: ObjectId, bytes: u64) -> Vec<CacheEvent> {
+        let mut events = Vec::new();
+        if self.resident.contains_key(&id) {
+            // Refresh recency; no size change assumed (objects immutable —
+            // §3.2.2 "data is not modified after initial creation").
+            self.policy.core().on_access(id);
+            return events;
+        }
+        if bytes > self.capacity {
+            // Cannot ever fit; the executor will stream it without caching.
+            return events;
+        }
+        while self.used + bytes > self.capacity {
+            let victim = self
+                .policy
+                .core()
+                .victim()
+                .expect("used > 0 implies a victim exists");
+            self.remove(victim);
+            self.evictions += 1;
+            events.push(CacheEvent::Evicted(victim));
+        }
+        self.resident.insert(id, bytes);
+        self.used += bytes;
+        self.policy.core().on_insert(id);
+        events.push(CacheEvent::Inserted(id));
+        events
+    }
+
+    /// Remove an object outright (e.g. executor deallocation).
+    pub fn remove(&mut self, id: ObjectId) -> bool {
+        if let Some(bytes) = self.resident.remove(&id) {
+            self.used -= bytes;
+            self.policy.core().on_remove(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Resident object count.
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    /// Bytes in use.
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    /// (hits, misses, evictions) counters.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.hits, self.misses, self.evictions)
+    }
+
+    /// Iterate resident ids (unspecified order).
+    pub fn ids(&self) -> impl Iterator<Item = ObjectId> + '_ {
+        self.resident.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(cap: u64, policy: EvictionPolicy) -> DataCache {
+        DataCache::new(cap, policy, 7)
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        for policy in [
+            EvictionPolicy::Random,
+            EvictionPolicy::Fifo,
+            EvictionPolicy::Lru,
+            EvictionPolicy::Lfu,
+        ] {
+            let mut c = cache(100, policy);
+            for i in 0..50 {
+                c.insert(ObjectId(i), 30);
+                assert!(
+                    c.used_bytes() <= 100,
+                    "{policy:?} exceeded capacity: {}",
+                    c.used_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lru_semantics_end_to_end() {
+        let mut c = cache(3, EvictionPolicy::Lru);
+        c.insert(ObjectId(1), 1);
+        c.insert(ObjectId(2), 1);
+        c.insert(ObjectId(3), 1);
+        assert!(c.access(ObjectId(1))); // 1 now MRU
+        let ev = c.insert(ObjectId(4), 1);
+        assert_eq!(
+            ev,
+            vec![
+                CacheEvent::Evicted(ObjectId(2)),
+                CacheEvent::Inserted(ObjectId(4))
+            ]
+        );
+        assert!(c.contains(ObjectId(1)));
+        assert!(!c.contains(ObjectId(2)));
+    }
+
+    #[test]
+    fn oversized_object_rejected() {
+        let mut c = cache(100, EvictionPolicy::Lru);
+        c.insert(ObjectId(1), 50);
+        let ev = c.insert(ObjectId(2), 101);
+        assert!(ev.is_empty());
+        assert!(c.contains(ObjectId(1)), "resident data must survive");
+        assert_eq!(c.used_bytes(), 50);
+    }
+
+    #[test]
+    fn multi_eviction_for_large_insert() {
+        let mut c = cache(100, EvictionPolicy::Fifo);
+        for i in 0..4 {
+            c.insert(ObjectId(i), 25);
+        }
+        let ev = c.insert(ObjectId(99), 75);
+        let evicted = ev
+            .iter()
+            .filter(|e| matches!(e, CacheEvent::Evicted(_)))
+            .count();
+        assert_eq!(evicted, 3);
+        assert_eq!(c.used_bytes(), 25 + 75);
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = cache(10, EvictionPolicy::Lru);
+        assert!(!c.access(ObjectId(1)));
+        c.insert(ObjectId(1), 1);
+        assert!(c.access(ObjectId(1)));
+        assert!(c.access(ObjectId(1)));
+        let (h, m, e) = c.stats();
+        assert_eq!((h, m, e), (2, 1, 0));
+    }
+
+    #[test]
+    fn reinsert_is_noop_event_wise() {
+        let mut c = cache(10, EvictionPolicy::Lru);
+        c.insert(ObjectId(1), 5);
+        let ev = c.insert(ObjectId(1), 5);
+        assert!(ev.is_empty());
+        assert_eq!(c.used_bytes(), 5);
+    }
+}

@@ -1,0 +1,378 @@
+//! Configuration system.
+//!
+//! A single [`Config`] describes everything an experiment needs: the
+//! (simulated) testbed, the storage substrate calibration, cache and
+//! scheduler policies, the dynamic resource provisioner, and application
+//! cost constants. Configs are built from presets (`presets.rs`) and can
+//! be overridden from a TOML-subset file (`parse.rs`) or programmatically.
+//!
+//! All bandwidth calibration constants default to the values the paper
+//! *measured* on the ANL/UC TeraGrid testbed (§4.2), so simulations
+//! reproduce the paper's contention shapes out of the box.
+
+pub mod parse;
+pub mod presets;
+
+use crate::cache::policy::EvictionPolicy;
+use crate::error::Result;
+use crate::scheduler::DispatchPolicy;
+use crate::util::units::{gbps, mbps, BitsPerSec, GB, MB};
+
+/// Testbed description (Table 1 analog).
+#[derive(Debug, Clone)]
+pub struct TestbedConfig {
+    /// Number of executor nodes available for provisioning.
+    pub nodes: usize,
+    /// CPUs per node actually used for task execution (the paper maps one
+    /// executor per node in §4 and per CPU in §5's 128-CPU runs).
+    pub cpus_per_node: usize,
+    /// Per-node NIC bandwidth (full duplex, each direction).
+    pub nic_bps: BitsPerSec,
+    /// Dispatcher ⇄ executor one-way message latency, seconds (§4.1: 1–2 ms).
+    pub net_latency_s: f64,
+}
+
+impl Default for TestbedConfig {
+    fn default() -> Self {
+        TestbedConfig {
+            nodes: 64,
+            cpus_per_node: 1,
+            nic_bps: gbps(1.0),
+            net_latency_s: 0.0015,
+        }
+    }
+}
+
+/// Shared ("persistent storage", GPFS-like) file system calibration.
+///
+/// Defaults reproduce the paper's measured envelopes (§4.2): read tops out
+/// at 3.4 Gb/s, read+write at 1.1 Gb/s aggregate, saturation at ~8 client
+/// nodes (there are 8 I/O servers), and a metadata server whose op costs
+/// throttle small-file and wrapper-style workloads (~21 tasks/s cap for
+/// the mkdir+symlink+rmdir wrapper across 64 nodes).
+#[derive(Debug, Clone)]
+pub struct SharedFsConfig {
+    /// Number of I/O servers (saturation point in client count).
+    pub io_servers: usize,
+    /// Aggregate read capacity across all I/O servers.
+    pub read_cap_bps: BitsPerSec,
+    /// Aggregate write capacity (calibrated so mixed read+write workloads
+    /// land at the paper's 1.1 Gb/s combined).
+    pub write_cap_bps: BitsPerSec,
+    /// Per-client share cap: one client cannot exceed this from the shared
+    /// FS even when alone (its NIC typically binds first).
+    pub per_client_cap_bps: BitsPerSec,
+    /// Metadata service time for a plain open/create, seconds. Cheap:
+    /// GPFS resolves opens in a few ms even under load.
+    pub meta_op_s: f64,
+    /// Metadata ops per plain file open (open + stat).
+    pub meta_ops_open: u32,
+    /// Service time for a *directory-mutating* wrapper op (mkdir /
+    /// symlink / rmdir on a shared directory), seconds. Expensive: these
+    /// serialize on the directory's metadata and are what cap the §4.3
+    /// wrapper configuration at ~21 tasks/s across 64 nodes.
+    pub wrapper_op_s: f64,
+    /// Wrapper ops per task (mkdir + symlink before, rmdir after).
+    pub meta_ops_wrapper: u32,
+}
+
+impl Default for SharedFsConfig {
+    fn default() -> Self {
+        SharedFsConfig {
+            io_servers: 8,
+            read_cap_bps: gbps(3.4),
+            write_cap_bps: gbps(0.66),
+            per_client_cap_bps: gbps(1.0),
+            meta_op_s: 0.004,
+            meta_ops_open: 1,
+            wrapper_op_s: 0.015,
+            meta_ops_wrapper: 3,
+        }
+    }
+}
+
+/// Per-node local disk calibration.
+///
+/// The paper measures aggregate local-disk read at 76 Gb/s and read+write
+/// at 25 Gb/s across 162 nodes (§4.2) — i.e. ~470 Mb/s read and ~230 Mb/s
+/// write per node, scaling linearly because disks are private.
+#[derive(Debug, Clone)]
+pub struct LocalDiskConfig {
+    /// Per-node sequential read bandwidth.
+    pub read_bps: BitsPerSec,
+    /// Per-node sequential write bandwidth.
+    pub write_bps: BitsPerSec,
+    /// Fixed per-file access overhead (local FS metadata), seconds.
+    pub open_s: f64,
+}
+
+impl Default for LocalDiskConfig {
+    fn default() -> Self {
+        LocalDiskConfig {
+            read_bps: mbps(470.0),
+            write_bps: mbps(230.0),
+            open_s: 0.0005,
+        }
+    }
+}
+
+/// Executor data-cache configuration.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Per-executor cache capacity in bytes (local disk space dedicated to
+    /// diffused data).
+    pub capacity_bytes: u64,
+    /// Eviction policy (paper implements Random/FIFO/LRU/LFU; experiments
+    /// use LRU).
+    pub policy: EvictionPolicy,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity_bytes: 50 * GB,
+            policy: EvictionPolicy::Lru,
+        }
+    }
+}
+
+/// Dispatcher / scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Task dispatch policy (§3.2.2).
+    pub policy: DispatchPolicy,
+    /// Whether executors run tasks through the sandbox wrapper
+    /// (configuration (4) in §4.3: mkdir+symlink+rmdir on persistent
+    /// storage around every task).
+    pub wrapper: bool,
+    /// Max tasks dispatched per executor CPU before it must report back
+    /// (1 = paper's model: one outstanding task per CPU).
+    pub tasks_per_cpu: usize,
+    /// Wait-queue scan window for the data-aware matcher: when an
+    /// executor frees up, up to this many queued tasks are examined for
+    /// one whose data is cached there. §3.2.3's 2.1 ms decision budget at
+    /// ~1 µs/lookup supports windows in the thousands.
+    pub window: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: DispatchPolicy::MaxComputeUtil,
+            wrapper: false,
+            tasks_per_cpu: 1,
+            window: 2048,
+        }
+    }
+}
+
+/// Dynamic resource provisioner configuration (§3.1).
+#[derive(Debug, Clone)]
+pub struct ProvisionerConfig {
+    /// Allocation policy.
+    pub policy: crate::provisioner::policy::AllocationPolicy,
+    /// Lower bound on allocated executors.
+    pub min_executors: usize,
+    /// Upper bound on allocated executors.
+    pub max_executors: usize,
+    /// Batch-scheduler allocation latency (GRAM4 + LRM), seconds.
+    pub allocation_latency_s: f64,
+    /// Idle time after which an executor is released, seconds.
+    pub idle_release_s: f64,
+    /// Wait-queue length per idle executor that triggers growth.
+    pub queue_per_executor: usize,
+}
+
+impl Default for ProvisionerConfig {
+    fn default() -> Self {
+        ProvisionerConfig {
+            policy: crate::provisioner::policy::AllocationPolicy::AllAtOnce,
+            min_executors: 0,
+            max_executors: 64,
+            allocation_latency_s: 40.0,
+            idle_release_s: 60.0,
+            queue_per_executor: 4,
+        }
+    }
+}
+
+/// Application (image stacking) cost calibration, from §5.2 / Fig 7.
+///
+/// Compute costs are per stacking *task*; in live mode the real PJRT
+/// kernel is used instead and these constants only matter for sim mode.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Compressed (GZ) file size — 2 MB in SDSS DR5.
+    pub gz_bytes: u64,
+    /// Uncompressed (FIT) file size — 6 MB.
+    pub fit_bytes: u64,
+    /// CPU time to uncompress one GZ file, seconds (Fig 7: GZ roughly
+    /// doubles CPU time; decompression of 2 MB→6 MB on 2008 hardware).
+    pub decompress_s: f64,
+    /// CPU time for radec2xy per object (Fig 7: 10–20% of total).
+    pub radec2xy_s: f64,
+    /// CPU time for calibration+interpolation+doStacking per object
+    /// (Fig 7: < 1 ms in all cases).
+    pub stack_compute_s: f64,
+    /// Bytes of a cutout/ROI actually read per object from an open file
+    /// (readHDU+getTile reads the image HDU).
+    pub roi_read_bytes: u64,
+    /// Bytes written out per stacking (the stacked image).
+    pub output_bytes: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            gz_bytes: 2 * MB,
+            fit_bytes: 6 * MB,
+            decompress_s: 0.140,
+            radec2xy_s: 0.020,
+            stack_compute_s: 0.001,
+            roi_read_bytes: 40_000, // 100x100 px ROI, 2 B/px, headers
+            output_bytes: 40_000,
+        }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Testbed (Table 1 analog).
+    pub testbed: TestbedConfig,
+    /// Shared persistent storage (GPFS model).
+    pub shared_fs: SharedFsConfig,
+    /// Per-node local disk model.
+    pub local_disk: LocalDiskConfig,
+    /// Executor cache settings.
+    pub cache: CacheConfig,
+    /// Dispatch policy settings.
+    pub scheduler: SchedulerConfig,
+    /// Dynamic resource provisioning settings.
+    pub provisioner: ProvisionerConfig,
+    /// Stacking application constants.
+    pub app: AppConfig,
+    /// Master RNG seed for workload generation and tie-breaking.
+    pub seed: u64,
+}
+
+impl Config {
+    /// Paper-calibrated default config with `nodes` executors.
+    pub fn with_nodes(nodes: usize) -> Config {
+        let mut c = Config::default();
+        c.testbed.nodes = nodes;
+        c.provisioner.max_executors = nodes;
+        c
+    }
+
+    /// Apply overrides from a TOML-subset document.
+    ///
+    /// Key names follow the struct paths, e.g. `testbed.nodes = 64`,
+    /// `shared_fs.read_cap_gbps = 3.4`, `cache.policy = "lru"`,
+    /// `scheduler.policy = "max-compute-util"`.
+    pub fn apply_doc(&mut self, doc: &parse::Doc) -> Result<()> {
+        let t = &mut self.testbed;
+        t.nodes = doc.num_or("testbed.nodes", t.nodes as f64) as usize;
+        t.cpus_per_node = doc.num_or("testbed.cpus_per_node", t.cpus_per_node as f64) as usize;
+        t.nic_bps = gbps(doc.num_or("testbed.nic_gbps", t.nic_bps / 1e9));
+        t.net_latency_s = doc.num_or("testbed.net_latency_s", t.net_latency_s);
+
+        let s = &mut self.shared_fs;
+        s.io_servers = doc.num_or("shared_fs.io_servers", s.io_servers as f64) as usize;
+        s.read_cap_bps = gbps(doc.num_or("shared_fs.read_cap_gbps", s.read_cap_bps / 1e9));
+        s.write_cap_bps = gbps(doc.num_or("shared_fs.write_cap_gbps", s.write_cap_bps / 1e9));
+        s.per_client_cap_bps =
+            gbps(doc.num_or("shared_fs.per_client_cap_gbps", s.per_client_cap_bps / 1e9));
+        s.meta_op_s = doc.num_or("shared_fs.meta_op_s", s.meta_op_s);
+
+        let d = &mut self.local_disk;
+        d.read_bps = mbps(doc.num_or("local_disk.read_mbps", d.read_bps / 1e6));
+        d.write_bps = mbps(doc.num_or("local_disk.write_mbps", d.write_bps / 1e6));
+        d.open_s = doc.num_or("local_disk.open_s", d.open_s);
+
+        let c = &mut self.cache;
+        c.capacity_bytes =
+            doc.num_or("cache.capacity_gb", c.capacity_bytes as f64 / 1e9) as u64 * GB;
+        if let Some(parse::Value::Str(p)) = doc.get("cache.policy") {
+            c.policy = EvictionPolicy::parse(p)
+                .ok_or_else(|| crate::error::Error::Config(format!("bad cache.policy {p:?}")))?;
+        }
+
+        if let Some(parse::Value::Str(p)) = doc.get("scheduler.policy") {
+            self.scheduler.policy = DispatchPolicy::parse(p).ok_or_else(|| {
+                crate::error::Error::Config(format!("bad scheduler.policy {p:?}"))
+            })?;
+        }
+        self.scheduler.wrapper = doc.bool_or("scheduler.wrapper", self.scheduler.wrapper);
+
+        let p = &mut self.provisioner;
+        p.min_executors = doc.num_or("provisioner.min_executors", p.min_executors as f64) as usize;
+        p.max_executors = doc.num_or("provisioner.max_executors", p.max_executors as f64) as usize;
+        p.allocation_latency_s =
+            doc.num_or("provisioner.allocation_latency_s", p.allocation_latency_s);
+        p.idle_release_s = doc.num_or("provisioner.idle_release_s", p.idle_release_s);
+
+        self.seed = doc.num_or("seed", self.seed as f64) as u64;
+        Ok(())
+    }
+
+    /// Load a config file on top of the defaults.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = parse::Doc::parse(&text)?;
+        let mut cfg = Config::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_calibration() {
+        let c = Config::default();
+        assert_eq!(c.shared_fs.io_servers, 8);
+        assert!((c.shared_fs.read_cap_bps - 3.4e9).abs() < 1.0);
+        assert_eq!(c.app.gz_bytes, 2 * MB);
+        assert_eq!(c.app.fit_bytes, 6 * MB);
+        assert_eq!(c.cache.policy, EvictionPolicy::Lru);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = parse::Doc::parse(
+            r#"
+seed = 99
+[testbed]
+nodes = 128
+nic_gbps = 10
+[shared_fs]
+read_cap_gbps = 6.8
+[cache]
+policy = "lfu"
+[scheduler]
+policy = "first-available"
+wrapper = true
+"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.testbed.nodes, 128);
+        assert!((c.testbed.nic_bps - 10e9).abs() < 1.0);
+        assert!((c.shared_fs.read_cap_bps - 6.8e9).abs() < 1.0);
+        assert_eq!(c.cache.policy, EvictionPolicy::Lfu);
+        assert_eq!(c.scheduler.policy, DispatchPolicy::FirstAvailable);
+        assert!(c.scheduler.wrapper);
+        assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn bad_policy_is_config_error() {
+        let doc = parse::Doc::parse("[cache]\npolicy = \"bogus\"").unwrap();
+        let mut c = Config::default();
+        assert!(c.apply_doc(&doc).is_err());
+    }
+}

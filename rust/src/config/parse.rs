@@ -1,0 +1,204 @@
+//! Hand-rolled TOML-subset parser (no `serde`/`toml` offline).
+//!
+//! Supports the subset our config files use:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = 3.4          # number
+//! name = "gpfs"      # string
+//! flag = true        # bool
+//! sizes = [1, 2, 3]  # number list
+//! ```
+//!
+//! Nested tables use dotted section headers (`[storage.gpfs]`). Values are
+//! stored flat as `"section.key" -> Value`, which keeps lookup trivial and
+//! is all the config layer needs.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or list value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Float or integer (stored as f64; config consumers convert).
+    Num(f64),
+    /// Quoted string.
+    Str(String),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous numeric list.
+    List(Vec<f64>),
+}
+
+/// Flat key → value document.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let key = key.trim();
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim())
+                .ok_or_else(|| Error::Config(format!("line {}: bad value {val:?}", lineno + 1)))?;
+            map.insert(full, value);
+        }
+        Ok(Doc { map })
+    }
+
+    /// Look up a raw value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// Numeric value or default.
+    pub fn num_or(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Num(n)) => *n,
+            _ => default,
+        }
+    }
+
+    /// String value or default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// Bool value or default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Numeric list or default.
+    pub fn list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.map.get(key) {
+            Some(Value::List(v)) => v.clone(),
+            Some(Value::Num(n)) => vec![*n],
+            _ => default.to_vec(),
+        }
+    }
+
+    /// All keys (for validation / unknown-key warnings).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string would break this; our configs don't put
+    // `#` in strings, and the parser documents that restriction.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"')?;
+        return Some(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')?;
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(part.parse().ok()?);
+        }
+        return Some(Value::List(out));
+    }
+    s.parse().ok().map(Value::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+root = 1
+[storage]
+gpfs_read_gbps = 3.4   # paper §4.2
+name = "gpfs"
+enabled = true
+[storage.meta]
+ops = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.num_or("root", 0.0), 1.0);
+        assert_eq!(doc.num_or("storage.gpfs_read_gbps", 0.0), 3.4);
+        assert_eq!(doc.str_or("storage.name", ""), "gpfs");
+        assert!(doc.bool_or("storage.enabled", false));
+        assert_eq!(doc.list_or("storage.meta.ops", &[]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.num_or("nope", 7.0), 7.0);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+        assert!(!doc.bool_or("nope", false));
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("keyonly").is_err());
+        assert!(Doc::parse("k = @bogus@").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+}

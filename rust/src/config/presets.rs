@@ -1,0 +1,101 @@
+//! Named presets reproducing the paper's experimental setups.
+
+use super::Config;
+use crate::scheduler::DispatchPolicy;
+
+/// Table 1 platform descriptions, for reference and for the testbed bench.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    /// Cluster name as in Table 1.
+    pub name: &'static str,
+    /// Node count.
+    pub nodes: usize,
+    /// Processor description.
+    pub processors: &'static str,
+    /// Memory per node.
+    pub memory: &'static str,
+    /// Network.
+    pub network: &'static str,
+}
+
+/// The paper's Table 1.
+pub const TABLE1: &[Platform] = &[
+    Platform {
+        name: "TG_ANL_IA32",
+        nodes: 98,
+        processors: "Dual Xeon 2.4 GHz",
+        memory: "4GB",
+        network: "1Gb/s",
+    },
+    Platform {
+        name: "TG_ANL_IA64",
+        nodes: 64,
+        processors: "Dual Itanium 1.3 GHz",
+        memory: "4GB",
+        network: "1Gb/s",
+    },
+    Platform {
+        name: "UC_x64",
+        nodes: 1,
+        processors: "Dual Xeon 3GHz w/ HT",
+        memory: "2GB",
+        network: "100Mb/s",
+    },
+];
+
+/// Total executor nodes in the two compute clusters (98 + 64).
+pub const TOTAL_TG_NODES: usize = 162;
+
+/// §4 micro-benchmark testbed: up to 64 executor nodes, GPFS persistent
+/// storage, one executor per node.
+pub fn microbench(nodes: usize) -> Config {
+    let mut c = Config::with_nodes(nodes);
+    c.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+    c
+}
+
+/// §5 stacking-application testbed: up to 128 CPUs (64 dual-CPU nodes),
+/// max-compute-util + LRU caching for data diffusion runs.
+pub fn stacking(cpus: usize) -> Config {
+    // The paper uses up to 128 CPUs on dual-CPU nodes.
+    let nodes = cpus.div_ceil(2);
+    let mut c = Config::with_nodes(nodes);
+    c.testbed.cpus_per_node = if cpus >= 2 { 2 } else { 1 };
+    c.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+    c
+}
+
+/// §5 GPFS baseline: no caching, location-unaware dispatch
+/// ("next-available ... no caching").
+pub fn stacking_gpfs_baseline(cpus: usize) -> Config {
+    let mut c = stacking(cpus);
+    c.scheduler.policy = DispatchPolicy::FirstAvailable;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        assert_eq!(TABLE1.len(), 3);
+        assert_eq!(TABLE1[0].nodes + TABLE1[1].nodes, TOTAL_TG_NODES);
+    }
+
+    #[test]
+    fn stacking_preset_cpu_mapping() {
+        let c = stacking(128);
+        assert_eq!(c.testbed.nodes, 64);
+        assert_eq!(c.testbed.cpus_per_node, 2);
+        let c1 = stacking(1);
+        assert_eq!(c1.testbed.nodes, 1);
+        assert_eq!(c1.testbed.cpus_per_node, 1);
+    }
+
+    #[test]
+    fn baseline_is_location_unaware() {
+        let c = stacking_gpfs_baseline(64);
+        assert_eq!(c.scheduler.policy, DispatchPolicy::FirstAvailable);
+    }
+}

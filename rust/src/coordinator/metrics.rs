@@ -1,0 +1,183 @@
+//! Experiment metrics: byte accounting by source, cache statistics,
+//! task latencies, and aggregate throughput.
+//!
+//! Figures 10–13 are direct readouts of this structure: cache-hit ratio
+//! (Fig 10), time per stack (Fig 8/9/11), aggregate I/O throughput split
+//! into local / cache-to-cache / GPFS (Fig 12), and per-task data
+//! movement by source (Fig 13).
+
+use crate::util::stats::Summary;
+
+/// Where bytes came from (the three arrows in the architecture figure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ByteSource {
+    /// Node-local cache (disk read on the executor itself).
+    Local,
+    /// Peer executor cache (GridFTP-style cache-to-cache transfer).
+    CacheToCache,
+    /// Persistent storage (GPFS) read.
+    Gpfs,
+    /// Persistent storage (GPFS) write (task outputs).
+    GpfsWrite,
+}
+
+/// Mutable experiment counters.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Bytes read from the executor's own cache.
+    pub local_bytes: u64,
+    /// Bytes fetched from peer caches.
+    pub c2c_bytes: u64,
+    /// Bytes read from persistent storage.
+    pub gpfs_bytes: u64,
+    /// Bytes written to persistent storage.
+    pub gpfs_write_bytes: u64,
+    /// Cache hits (input resolved from own cache).
+    pub cache_hits: u64,
+    /// Cache misses served by a peer executor.
+    pub peer_hits: u64,
+    /// Cache misses served by persistent storage.
+    pub gpfs_misses: u64,
+    /// Tasks completed.
+    pub tasks_done: u64,
+    /// Tasks dispatched (should equal tasks_done at quiesce).
+    pub tasks_dispatched: u64,
+    /// Per-task end-to-end latency (submit → complete), seconds.
+    pub task_latency: Summary,
+    /// Per-task execution span (dispatch → complete), seconds.
+    pub exec_latency: Summary,
+    /// Time the first task was dispatched (experiment start).
+    pub t_start: f64,
+    /// Time the last task completed (experiment end).
+    pub t_end: f64,
+}
+
+impl Metrics {
+    /// Fresh counters.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Record bytes moved from a source.
+    pub fn add_bytes(&mut self, source: ByteSource, bytes: u64) {
+        match source {
+            ByteSource::Local => self.local_bytes += bytes,
+            ByteSource::CacheToCache => self.c2c_bytes += bytes,
+            ByteSource::Gpfs => self.gpfs_bytes += bytes,
+            ByteSource::GpfsWrite => self.gpfs_write_bytes += bytes,
+        }
+    }
+
+    /// Record how one input was resolved.
+    pub fn add_resolution(&mut self, source: ByteSource) {
+        match source {
+            ByteSource::Local => self.cache_hits += 1,
+            ByteSource::CacheToCache => self.peer_hits += 1,
+            ByteSource::Gpfs => self.gpfs_misses += 1,
+            ByteSource::GpfsWrite => {}
+        }
+    }
+
+    /// Cache-hit ratio counting only *local* hits (the paper's Fig 10
+    /// metric: fraction of accesses served by the executor's own cache).
+    pub fn local_hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.peer_hits + self.gpfs_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Hit ratio counting local + cache-to-cache (any cached copy).
+    pub fn any_hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.peer_hits + self.gpfs_misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.cache_hits + self.peer_hits) as f64 / total as f64
+        }
+    }
+
+    /// Experiment wall-clock span, seconds.
+    pub fn span_secs(&self) -> f64 {
+        (self.t_end - self.t_start).max(0.0)
+    }
+
+    /// Total bytes read from any source.
+    pub fn total_read_bytes(&self) -> u64 {
+        self.local_bytes + self.c2c_bytes + self.gpfs_bytes
+    }
+
+    /// Aggregate read throughput over the experiment span, bits/sec.
+    pub fn read_throughput_bps(&self) -> f64 {
+        crate::util::units::throughput_bps(self.total_read_bytes(), self.span_secs())
+    }
+
+    /// Aggregate read+write throughput over the span, bits/sec.
+    pub fn rw_throughput_bps(&self) -> f64 {
+        crate::util::units::throughput_bps(
+            self.total_read_bytes() + self.gpfs_write_bytes,
+            self.span_secs(),
+        )
+    }
+
+    /// Tasks per second over the experiment span.
+    pub fn task_rate(&self) -> f64 {
+        let span = self.span_secs();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.tasks_done as f64 / span
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting_by_source() {
+        let mut m = Metrics::new();
+        m.add_bytes(ByteSource::Local, 100);
+        m.add_bytes(ByteSource::CacheToCache, 50);
+        m.add_bytes(ByteSource::Gpfs, 25);
+        m.add_bytes(ByteSource::GpfsWrite, 10);
+        assert_eq!(m.total_read_bytes(), 175);
+        assert_eq!(m.gpfs_write_bytes, 10);
+    }
+
+    #[test]
+    fn hit_ratios() {
+        let mut m = Metrics::new();
+        for _ in 0..6 {
+            m.add_resolution(ByteSource::Local);
+        }
+        for _ in 0..2 {
+            m.add_resolution(ByteSource::CacheToCache);
+        }
+        for _ in 0..2 {
+            m.add_resolution(ByteSource::Gpfs);
+        }
+        assert!((m.local_hit_ratio() - 0.6).abs() < 1e-12);
+        assert!((m.any_hit_ratio() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_over_span() {
+        let mut m = Metrics::new();
+        m.t_start = 10.0;
+        m.t_end = 18.0;
+        m.add_bytes(ByteSource::Gpfs, 1_000_000_000);
+        // 1 GB in 8 s = 1 Gb/s.
+        assert!((m.read_throughput_bps() - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_ratios_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.local_hit_ratio(), 0.0);
+        assert_eq!(m.task_rate(), 0.0);
+    }
+}

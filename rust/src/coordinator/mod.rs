@@ -1,0 +1,20 @@
+//! The Falkon coordinator extended with data diffusion.
+//!
+//! * [`task`] — the task model (micro-benchmark and stacking tasks).
+//! * [`core`] — the dispatcher core: wait queue, executor slots, central
+//!   index, and the data-aware dispatch loop. Pure synchronous state
+//!   shared by both execution drivers.
+//! * [`metrics`] — experiment counters (bytes by source, hit ratios,
+//!   latencies) that the figures read out.
+//!
+//! Execution drivers live in [`crate::driver`]: `sim` replays workloads
+//! over the discrete-event testbed; `live` runs real executor threads
+//! with real files and PJRT compute.
+
+pub mod core;
+pub mod metrics;
+pub mod task;
+
+pub use self::core::{DispatchOrder, FalkonCore};
+pub use metrics::{ByteSource, Metrics};
+pub use task::{Task, TaskId, TaskKind};

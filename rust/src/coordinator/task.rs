@@ -1,0 +1,102 @@
+//! Task model.
+//!
+//! A task names the data objects it needs, the work it performs, and how
+//! many bytes it writes back. The two kinds mirror the paper's two
+//! evaluation campaigns: synthetic read/read+write micro-benchmark tasks
+//! (§4.3) and image-stacking tasks (§5).
+
+use crate::storage::object::ObjectId;
+
+/// Globally unique task identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task{}", self.0)
+    }
+}
+
+/// What a task computes once its data is local.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskKind {
+    /// Micro-benchmark task: `cpu_s` seconds of compute (usually ~0).
+    Synthetic {
+        /// Pure CPU time, seconds.
+        cpu_s: f64,
+    },
+    /// Image stacking: extract an ROI from the input file and coadd.
+    /// `stack_depth` is the number of cutouts the logical stacking
+    /// combines (= workload locality; affects only the PJRT variant
+    /// chosen in live mode — sim mode charges the calibrated constant).
+    Stack {
+        /// Cutouts per stacking operation.
+        stack_depth: u32,
+    },
+}
+
+/// A unit of dispatchable work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Unique id (submission order).
+    pub id: TaskId,
+    /// Data objects (files) the task reads.
+    pub inputs: Vec<ObjectId>,
+    /// Bytes written back to persistent storage (0 = nothing).
+    pub output_bytes: u64,
+    /// The compute performed.
+    pub kind: TaskKind,
+}
+
+impl Task {
+    /// A data-only task (no compute, no output) over the given inputs —
+    /// the §4.3 "read" micro-benchmark shape.
+    pub fn with_inputs(id: TaskId, inputs: Vec<ObjectId>) -> Task {
+        Task {
+            id,
+            inputs,
+            output_bytes: 0,
+            kind: TaskKind::Synthetic { cpu_s: 0.0 },
+        }
+    }
+
+    /// A read+write micro-benchmark task.
+    pub fn read_write(id: TaskId, input: ObjectId, output_bytes: u64) -> Task {
+        Task {
+            id,
+            inputs: vec![input],
+            output_bytes,
+            kind: TaskKind::Synthetic { cpu_s: 0.0 },
+        }
+    }
+
+    /// An image-stacking task over one file.
+    pub fn stacking(id: TaskId, file: ObjectId, stack_depth: u32, output_bytes: u64) -> Task {
+        Task {
+            id,
+            inputs: vec![file],
+            output_bytes,
+            kind: TaskKind::Stack { stack_depth },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let t = Task::with_inputs(TaskId(1), vec![ObjectId(5)]);
+        assert_eq!(t.output_bytes, 0);
+        let t = Task::read_write(TaskId(2), ObjectId(5), 100);
+        assert_eq!(t.output_bytes, 100);
+        let t = Task::stacking(TaskId(3), ObjectId(5), 30, 40_000);
+        assert!(matches!(t.kind, TaskKind::Stack { stack_depth: 30 }));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(TaskId(7).to_string(), "task7");
+    }
+}

@@ -1,0 +1,18 @@
+//! Execution drivers.
+//!
+//! * [`sim`] — replays a workload through [`crate::coordinator::FalkonCore`]
+//!   over the simulated testbed (discrete events + fair-share flows).
+//!   All figure benches use this driver at paper scale (64 nodes / 128
+//!   CPUs / 100K tasks).
+//! * [`live`] — real executor threads, real files on disk, real gzip and
+//!   real PJRT stacking compute. Used by the end-to-end example and
+//!   integration tests.
+//!
+//! Both drivers run the *same* dispatcher core, cache implementation and
+//! central index — the substitution (DESIGN.md §3) swaps only the I/O
+//! substrate.
+
+pub mod live;
+pub mod sim;
+
+pub use sim::{SimDriver, SimOutcome, SimWorkloadSpec};

@@ -1,0 +1,789 @@
+//! Simulated execution driver.
+//!
+//! Replays a workload through the dispatcher core over the simulated
+//! testbed. Every §4/§5 figure bench is a [`SimDriver`] run with the
+//! right [`SimWorkloadSpec`]; the contention physics (GPFS saturation,
+//! NIC limits, metadata queueing, linear local-disk scaling) come from
+//! [`crate::storage::testbed::SimTestbed`].
+//!
+//! ## Task lifecycle (one executor CPU)
+//!
+//! ```text
+//! dispatch ─▸ dispatcher-service + net latency ─▸ [wrapper pre-ops]
+//!   ─▸ per input: own-cache? local-read-flow
+//!               : peer-hint?  cache-to-cache flow  (then cache insert)
+//!               : GPFS        meta-open, GPFS flow (then decompress if GZ,
+//!                                                   cache insert if caching)
+//!   ─▸ compute delay ─▸ [output write flow] ─▸ [wrapper post-op]
+//!   ─▸ report completion + cache events to the dispatcher
+//! ```
+//!
+//! Cache-content changes are reported to the central index **at task
+//! completion** ("loosely coherent", §3.2.1) — the index can briefly lag
+//! the caches, which is exactly why measured hit ratios land slightly
+//! under ideal in Fig 10.
+
+
+use crate::cache::store::{CacheEvent, DataCache};
+use crate::config::Config;
+use crate::coordinator::core::{DispatchOrder, FalkonCore};
+use crate::coordinator::metrics::{ByteSource, Metrics};
+use crate::coordinator::task::{Task, TaskId, TaskKind};
+use crate::index::central::ExecutorId;
+use crate::scheduler::decision::LocationHints;
+use crate::sim::engine::{Engine, EventQueue, World};
+use crate::sim::flownet::FlowId;
+use crate::sim::server::FifoServer;
+use crate::util::fxhash::FxHashMap;
+use crate::storage::object::{Catalog, DataFormat, ObjectId};
+use crate::storage::testbed::{SimTestbed, TransferKind};
+
+/// Dispatcher service rate (tasks/s) — §3.1: Falkon dispatches at
+/// ~3800 tasks/s on the paper's service host.
+const DISPATCH_RATE: f64 = 3800.0;
+
+/// Workload description for a simulated run.
+#[derive(Debug, Clone)]
+pub struct SimWorkloadSpec {
+    /// (arrival time, task) pairs; arrival times need not be sorted.
+    pub tasks: Vec<(f64, Task)>,
+    /// Data diffusion on (caching + peer fetches) or off (every access
+    /// goes to persistent storage — configurations (3)/(4) and the §5
+    /// GPFS baseline).
+    pub caching: bool,
+    /// Stored data format: GZ pays decompression on GPFS fetches and
+    /// expands in cache; FIT moves more bytes but computes directly.
+    pub format: DataFormat,
+    /// Cached (uncompressed) size = stored size × expansion. 1.0 for
+    /// already-uncompressed data; 3.0 for SDSS GZ (2 MB → 6 MB).
+    pub expansion: f64,
+    /// Pre-warm: (executor, object) pairs resident in caches before the
+    /// clock starts (the 100%-locality micro-benchmarks).
+    pub prewarm: Vec<(ExecutorId, ObjectId)>,
+}
+
+impl SimWorkloadSpec {
+    /// A plain uncompressed workload with caching on.
+    pub fn new(tasks: Vec<(f64, Task)>) -> Self {
+        SimWorkloadSpec {
+            tasks,
+            caching: true,
+            format: DataFormat::Fit,
+            expansion: 1.0,
+            prewarm: Vec::new(),
+        }
+    }
+}
+
+/// What one simulated run produced.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Experiment metrics (bytes by source, hit ratios, latencies).
+    pub metrics: Metrics,
+    /// Simulated makespan (first dispatch → last completion), seconds.
+    pub makespan_s: f64,
+    /// DES events processed (sim-engine throughput diagnostics).
+    pub events: u64,
+    /// Wall-clock seconds the simulation itself took.
+    pub wall_s: f64,
+}
+
+impl SimOutcome {
+    /// Time per task per CPU — the paper's normalized §5 metric ("time
+    /// per stack per CPU": with perfect scalability it stays constant as
+    /// CPUs grow).
+    pub fn time_per_task_per_cpu(&self, cpus: usize) -> f64 {
+        if self.metrics.tasks_done == 0 {
+            return f64::NAN;
+        }
+        self.makespan_s * cpus as f64 / self.metrics.tasks_done as f64
+    }
+}
+
+/// Events of the simulation world.
+#[derive(Debug)]
+enum Ev {
+    /// Task with this index arrives at the dispatcher.
+    Arrive(u32),
+    /// Run the dispatch loop.
+    Dispatch,
+    /// A dispatched task reaches its executor (run id).
+    AtExecutor(u64),
+    /// Generic continuation after a timed phase (run id).
+    Step(u64),
+    /// Flow-completion check (validity-stamped with a version).
+    FlowCheck(u64),
+}
+
+/// Why a flow was started (continuation tag).
+#[derive(Debug, Clone, Copy)]
+enum FlowPurpose {
+    FetchLocal,
+    FetchPeer,
+    FetchGpfs,
+    WriteLocal,
+    WriteGpfs,
+}
+
+/// Per-task pipeline phase. `Step(rid)` events drive transitions; flow
+/// completions are delivered separately through [`SimWorld::flow_done`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// Waiting for wrapper pre-ops (or skipping them).
+    Start,
+    /// Resolving the next input.
+    Fetch,
+    /// Waiting for the GPFS metadata open of the current input.
+    GpfsOpen,
+    /// A data flow is in flight for the current input / output.
+    AwaitFlow,
+    /// CPU decompression of the just-fetched GZ input.
+    Decompress,
+    /// Compute finished; decide how (whether) to write the output.
+    OutputStart,
+    /// Waiting for the GPFS metadata create before the output write.
+    OutputOpen,
+    /// Waiting for the wrapper post-op.
+    WrapperPost,
+}
+
+struct Running {
+    task: Task,
+    exec: ExecutorId,
+    hints: LocationHints,
+    t_submit: f64,
+    t_dispatch: f64,
+    next_input: usize,
+    phase: Phase,
+    /// Cache updates buffered until completion (loose coherence).
+    events: Vec<CacheEvent>,
+}
+
+struct SimWorld {
+    cfg: Config,
+    caching: bool,
+    format: DataFormat,
+    expansion: f64,
+    core: FalkonCore,
+    testbed: SimTestbed,
+    caches: Vec<DataCache>,
+    metrics: Metrics,
+    dispatch_server: FifoServer,
+    pending_tasks: Vec<Option<Task>>,
+    runs: FxHashMap<u64, Running>,
+    next_run: u64,
+    flow_map: FxHashMap<FlowId, (u64, FlowPurpose)>,
+    flow_version: u64,
+    submit_times: FxHashMap<TaskId, f64>,
+    first_dispatch: Option<f64>,
+}
+
+impl SimWorld {
+    /// Cached (post-expansion) size of an object.
+    fn cached_size(&self, obj: ObjectId) -> u64 {
+        let stored = self.core.catalog().size(obj).unwrap_or(1);
+        (stored as f64 * self.expansion).ceil() as u64
+    }
+
+    fn stored_size(&self, obj: ObjectId) -> u64 {
+        self.core.catalog().size(obj).unwrap_or(1)
+    }
+
+    /// The local open constant expressed as equivalent disk-read bytes at
+    /// the configured rate, so small cached files still cost ~open_s.
+    fn local_open_equiv_bytes(&self) -> u64 {
+        (self.cfg.local_disk.open_s * self.cfg.local_disk.read_bps / 8.0) as u64
+    }
+
+    /// Start a flow for run `rid` and refresh the completion check.
+    fn start_flow(
+        &mut self,
+        now: f64,
+        rid: u64,
+        kind: TransferKind,
+        bytes: u64,
+        purpose: FlowPurpose,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let rs = self.testbed.resources(kind);
+        let fid = self.testbed.net.start_flow(now, rs, bytes);
+        self.flow_map.insert(fid, (rid, purpose));
+        self.reschedule_flow_check(now, q);
+    }
+
+    fn reschedule_flow_check(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        self.flow_version += 1;
+        if let Some((t, _)) = self.testbed.net.next_completion(now) {
+            q.at(t, Ev::FlowCheck(self.flow_version));
+        }
+    }
+
+    /// Handle flow completions that are due at `now`.
+    fn flow_check(&mut self, now: f64, version: u64, q: &mut EventQueue<Ev>) {
+        if version != self.flow_version {
+            return; // stale check; a newer one is scheduled
+        }
+        self.testbed.net.advance_to(now);
+        loop {
+            match self.testbed.net.next_completion(now) {
+                Some((t, fid)) if t <= now + 1e-9 => {
+                    self.testbed.net.remove_flow(now, fid);
+                    if let Some((rid, purpose)) = self.flow_map.remove(&fid) {
+                        self.flow_done(now, rid, purpose, q);
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.reschedule_flow_check(now, q);
+    }
+
+    /// Process the dispatch orders produced by the core.
+    fn execute_orders(&mut self, now: f64, orders: Vec<DispatchOrder>, q: &mut EventQueue<Ev>) {
+        for order in orders {
+            if self.first_dispatch.is_none() {
+                self.first_dispatch = Some(now);
+                self.metrics.t_start = now;
+            }
+            self.metrics.tasks_dispatched += 1;
+            // The dispatcher is a serial service (§3.1: ~3800 tasks/s),
+            // then the 1–2 ms network hop to the executor.
+            let t_out = self.dispatch_server.submit(now, 1);
+            let rid = self.next_run;
+            self.next_run += 1;
+            self.runs.insert(
+                rid,
+                Running {
+                    t_submit: self.submit_times.remove(&order.task.id).unwrap_or(now),
+                    t_dispatch: now,
+                    task: order.task,
+                    exec: order.executor,
+                    hints: order.hints,
+                    next_input: 0,
+                    phase: Phase::Start,
+                    events: Vec::new(),
+                },
+            );
+            q.at(t_out + self.cfg.testbed.net_latency_s, Ev::AtExecutor(rid));
+        }
+    }
+
+    /// A timed phase for run `rid` elapsed: advance its state machine.
+    fn step(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        let Some(run) = self.runs.get(&rid) else {
+            return;
+        };
+        match run.phase {
+            Phase::Start => {
+                if self.cfg.scheduler.wrapper {
+                    // mkdir + symlink on persistent storage before work.
+                    let pre = self.cfg.shared_fs.meta_ops_wrapper.saturating_sub(1).max(1);
+                    let done = self
+                        .testbed
+                        .metadata
+                        .submit_secs(now, pre as f64 * self.cfg.shared_fs.wrapper_op_s);
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::Fetch;
+                    q.at(done, Ev::Step(rid));
+                } else {
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::Fetch;
+                    self.step(now, rid, q);
+                }
+            }
+            Phase::Fetch => self.fetch_next_input(now, rid, q),
+            Phase::GpfsOpen => {
+                // Metadata open done; start the GPFS data transfer.
+                let run = self.runs.get_mut(&rid).unwrap();
+                let obj = run.task.inputs[run.next_input];
+                let node = run.exec;
+                run.phase = Phase::AwaitFlow;
+                let bytes = self.stored_size(obj);
+                let kind = if self.caching {
+                    TransferKind::GpfsReadCached { node }
+                } else {
+                    TransferKind::GpfsRead { node }
+                };
+                self.start_flow(now, rid, kind, bytes, FlowPurpose::FetchGpfs, q);
+            }
+            Phase::AwaitFlow => {
+                debug_assert!(false, "AwaitFlow must resolve via flow_done");
+            }
+            Phase::Decompress => {
+                // CPU decompression finished: object (now uncompressed)
+                // enters the cache and the fetch loop continues.
+                self.finish_input_fetch(now, rid, ByteSource::Gpfs, q);
+            }
+            Phase::OutputStart => {
+                let run = self.runs.get(&rid).unwrap();
+                let bytes = run.task.output_bytes;
+                let node = run.exec;
+                if bytes == 0 {
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                    self.step(now, rid, q);
+                } else if self.caching {
+                    // Diffused outputs land on local disk.
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                    self.start_flow(
+                        now,
+                        rid,
+                        TransferKind::LocalWrite { node },
+                        bytes,
+                        FlowPurpose::WriteLocal,
+                        q,
+                    );
+                } else {
+                    // GPFS output: metadata create, then the data flow.
+                    let done = self
+                        .testbed
+                        .metadata
+                        .submit(now, self.cfg.shared_fs.meta_ops_open);
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::OutputOpen;
+                    q.at(done, Ev::Step(rid));
+                }
+            }
+            Phase::OutputOpen => {
+                // Output create done; start the GPFS write flow.
+                let run = self.runs.get_mut(&rid).unwrap();
+                let bytes = run.task.output_bytes;
+                let node = run.exec;
+                run.phase = Phase::AwaitFlow;
+                self.start_flow(
+                    now,
+                    rid,
+                    TransferKind::GpfsWrite { node },
+                    bytes,
+                    FlowPurpose::WriteGpfs,
+                    q,
+                );
+            }
+            Phase::WrapperPost => self.complete_run(now, rid, q),
+        }
+    }
+
+    /// Resolve the next input of run `rid`, or move on to compute.
+    fn fetch_next_input(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        let run = self.runs.get(&rid).unwrap();
+        if run.next_input >= run.task.inputs.len() {
+            return self.start_compute(now, rid, q);
+        }
+        let obj = run.task.inputs[run.next_input];
+        let exec = run.exec;
+
+        if self.caching && self.caches[exec].access(obj) {
+            // Own cache: local disk read of the (uncompressed) object.
+            // (The sub-millisecond local-FS open constant is charged as
+            // part of the flow; it is negligible against transfer times
+            // and — unlike GPFS opens — contends with nothing.)
+            let bytes = self.cached_size(obj) + self.local_open_equiv_bytes();
+            self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+            self.start_flow(
+                now,
+                rid,
+                TransferKind::LocalRead { node: exec },
+                bytes,
+                FlowPurpose::FetchLocal,
+                q,
+            );
+            return;
+        }
+
+        if self.caching {
+            // Peer hint: find a hinted executor that still holds it.
+            let peer = run
+                .hints
+                .get(&obj)
+                .and_then(|locs| {
+                    locs.iter()
+                        .find(|&&p| p != exec && p < self.caches.len() && self.caches[p].contains(obj))
+                })
+                .copied();
+            if let Some(src) = peer {
+                let bytes = self.cached_size(obj);
+                self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                self.start_flow(
+                    now,
+                    rid,
+                    TransferKind::Peer { src, dst: exec },
+                    bytes,
+                    FlowPurpose::FetchPeer,
+                    q,
+                );
+                return;
+            }
+        }
+
+        // Persistent storage: metadata open, then the data flow.
+        let done = self
+            .testbed
+            .metadata
+            .submit(now, self.cfg.shared_fs.meta_ops_open);
+        self.runs.get_mut(&rid).unwrap().phase = Phase::GpfsOpen;
+        q.at(done, Ev::Step(rid));
+    }
+
+    /// A data flow for run `rid` completed.
+    fn flow_done(&mut self, now: f64, rid: u64, purpose: FlowPurpose, q: &mut EventQueue<Ev>) {
+        let run = self.runs.get(&rid).unwrap();
+        match purpose {
+            FlowPurpose::FetchLocal => {
+                let obj = run.task.inputs[run.next_input];
+                let bytes = self.cached_size(obj);
+                self.metrics.add_bytes(ByteSource::Local, bytes);
+                self.finish_input_fetch(now, rid, ByteSource::Local, q);
+            }
+            FlowPurpose::FetchPeer => {
+                let obj = run.task.inputs[run.next_input];
+                let bytes = self.cached_size(obj);
+                self.metrics.add_bytes(ByteSource::CacheToCache, bytes);
+                self.finish_input_fetch(now, rid, ByteSource::CacheToCache, q);
+            }
+            FlowPurpose::FetchGpfs => {
+                let obj = run.task.inputs[run.next_input];
+                let bytes = self.stored_size(obj);
+                self.metrics.add_bytes(ByteSource::Gpfs, bytes);
+                if self.format == DataFormat::Gz && self.cfg.app.decompress_s > 0.0 {
+                    // CPU decompression before the data is usable.
+                    self.runs.get_mut(&rid).unwrap().phase = Phase::Decompress;
+                    q.after(self.cfg.app.decompress_s, Ev::Step(rid));
+                } else {
+                    self.finish_input_fetch(now, rid, ByteSource::Gpfs, q);
+                }
+            }
+            FlowPurpose::WriteLocal => {
+                let bytes = run.task.output_bytes;
+                // Local outputs are still new bytes written on the node;
+                // account them as local traffic.
+                self.metrics.add_bytes(ByteSource::Local, bytes);
+                self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                self.after_output(now, rid, q);
+            }
+            FlowPurpose::WriteGpfs => {
+                let bytes = run.task.output_bytes;
+                self.metrics.add_bytes(ByteSource::GpfsWrite, bytes);
+                self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                self.after_output(now, rid, q);
+            }
+        }
+    }
+
+    /// Input resolved (from `source`); update cache + metrics, continue.
+    fn finish_input_fetch(
+        &mut self,
+        now: f64,
+        rid: u64,
+        source: ByteSource,
+        q: &mut EventQueue<Ev>,
+    ) {
+        self.metrics.add_resolution(source);
+        let run = self.runs.get(&rid).unwrap();
+        let obj = run.task.inputs[run.next_input];
+        let exec = run.exec;
+        if self.caching && source != ByteSource::Local {
+            // New object on this node (cached uncompressed).
+            let bytes = self.cached_size(obj);
+            let events = self.caches[exec].insert(obj, bytes);
+            self.runs.get_mut(&rid).unwrap().events.extend(events);
+        }
+        let run = self.runs.get_mut(&rid).unwrap();
+        run.next_input += 1;
+        run.phase = Phase::Fetch;
+        self.fetch_next_input(now, rid, q);
+    }
+
+    /// All inputs resolved: run the compute, then move to output.
+    fn start_compute(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        let run = self.runs.get_mut(&rid).unwrap();
+        let cpu = match run.task.kind {
+            TaskKind::Synthetic { cpu_s } => cpu_s,
+            TaskKind::Stack { .. } => self.cfg.app.radec2xy_s + self.cfg.app.stack_compute_s,
+        };
+        run.phase = Phase::OutputStart;
+        if cpu > 0.0 {
+            q.after(cpu, Ev::Step(rid));
+        } else {
+            self.step(now, rid, q);
+        }
+    }
+
+    /// Output written (or skipped): wrapper post-op then completion.
+    fn after_output(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        if self.cfg.scheduler.wrapper {
+            // rmdir of the sandbox directory on persistent storage.
+            let done = self
+                .testbed
+                .metadata
+                .submit_secs(now, self.cfg.shared_fs.wrapper_op_s);
+            q.at(done, Ev::Step(rid));
+        } else {
+            self.complete_run(now, rid, q);
+        }
+    }
+
+    /// Task finished on its executor: report to the dispatcher.
+    fn complete_run(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        let run = self.runs.remove(&rid).unwrap();
+        self.metrics.tasks_done += 1;
+        self.metrics.task_latency.add(now - run.t_submit);
+        self.metrics.exec_latency.add(now - run.t_dispatch);
+        self.metrics.t_end = now;
+        self.core.on_task_complete(run.exec, run.task.id, &run.events);
+        q.after(self.cfg.testbed.net_latency_s, Ev::Dispatch);
+    }
+}
+
+impl World for SimWorld {
+    type Event = Ev;
+
+    fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
+        match ev {
+            Ev::Arrive(i) => {
+                if let Some(task) = self.pending_tasks[i as usize].take() {
+                    self.submit_times.insert(task.id, now);
+                    self.core.submit(task);
+                    let orders = self.core.try_dispatch();
+                    self.execute_orders(now, orders, q);
+                }
+            }
+            Ev::Dispatch => {
+                let orders = self.core.try_dispatch();
+                self.execute_orders(now, orders, q);
+            }
+            Ev::AtExecutor(rid) => self.step(now, rid, q),
+            Ev::Step(rid) => self.step(now, rid, q),
+            Ev::FlowCheck(v) => self.flow_check(now, v, q),
+        }
+    }
+}
+
+/// Drives one simulated experiment.
+pub struct SimDriver {
+    cfg: Config,
+    spec: SimWorkloadSpec,
+    catalog: Catalog,
+}
+
+impl SimDriver {
+    /// Build a driver from a config, workload spec, and object catalog
+    /// (stored sizes of every object the workload references).
+    pub fn new(cfg: Config, spec: SimWorkloadSpec, catalog: Catalog) -> SimDriver {
+        SimDriver { cfg, spec, catalog }
+    }
+
+    /// Run to completion and return the outcome.
+    pub fn run(self) -> SimOutcome {
+        let t0 = std::time::Instant::now();
+        let SimDriver { cfg, spec, catalog } = self;
+
+        let mut core = FalkonCore::new(&cfg.scheduler, catalog);
+        let nodes = cfg.testbed.nodes;
+        let capacity = cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu;
+        for e in 0..nodes {
+            core.register_executor_with(e, capacity);
+        }
+
+        let mut caches: Vec<DataCache> = (0..nodes)
+            .map(|e| {
+                DataCache::new(
+                    cfg.cache.capacity_bytes,
+                    cfg.cache.policy,
+                    cfg.seed ^ (e as u64).wrapping_mul(0x9E37_79B9),
+                )
+            })
+            .collect();
+
+        // Pre-warm caches + index (100%-locality configurations).
+        let expansion = spec.expansion;
+        for &(exec, obj) in &spec.prewarm {
+            let stored = core.catalog().size(obj).unwrap_or(1);
+            let bytes = (stored as f64 * expansion).ceil() as u64;
+            let events = caches[exec].insert(obj, bytes);
+            core.apply_cache_events(exec, &events);
+        }
+
+        let testbed = SimTestbed::new(&cfg);
+        let caching = spec.caching;
+        let format = spec.format;
+        let arrivals: Vec<(f64, u32)> = spec
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, (t, _))| (*t, i as u32))
+            .collect();
+        let pending_tasks: Vec<Option<Task>> =
+            spec.tasks.iter().map(|(_, t)| Some(t.clone())).collect();
+
+        let world = SimWorld {
+            cfg,
+            caching,
+            format,
+            expansion,
+            core,
+            testbed,
+            caches,
+            metrics: Metrics::new(),
+            dispatch_server: FifoServer::new(1.0 / DISPATCH_RATE),
+            pending_tasks,
+            runs: FxHashMap::default(),
+            next_run: 0,
+            flow_map: FxHashMap::default(),
+            flow_version: 0,
+            submit_times: FxHashMap::default(),
+            first_dispatch: None,
+        };
+
+        let mut engine = Engine::new(world);
+        for (t, i) in arrivals {
+            engine.schedule(t, Ev::Arrive(i));
+        }
+        let end = engine.run();
+        let metrics = engine.world.metrics.clone();
+        let makespan = (metrics.t_end - metrics.t_start).max(0.0);
+        debug_assert!(
+            engine.world.runs.is_empty(),
+            "tasks stuck in flight at quiesce"
+        );
+        let _ = end;
+        SimOutcome {
+            metrics,
+            makespan_s: makespan,
+            events: engine.events_processed(),
+            wall_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::DispatchPolicy;
+    use crate::util::units::MB;
+
+    fn catalog(n: u64, bytes: u64) -> Catalog {
+        let mut c = Catalog::new();
+        for i in 0..n {
+            c.insert(ObjectId(i), bytes);
+        }
+        c
+    }
+
+    fn read_tasks(n: u64) -> Vec<(f64, Task)> {
+        (0..n)
+            .map(|i| (0.0, Task::with_inputs(TaskId(i), vec![ObjectId(i)])))
+            .collect()
+    }
+
+    #[test]
+    fn all_tasks_complete_exactly_once() {
+        let cfg = Config::with_nodes(4);
+        let spec = SimWorkloadSpec::new(read_tasks(50));
+        let out = SimDriver::new(cfg, spec, catalog(50, MB)).run();
+        assert_eq!(out.metrics.tasks_done, 50);
+        assert_eq!(out.metrics.tasks_dispatched, 50);
+        assert!(out.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn cold_unique_objects_all_miss_to_gpfs() {
+        let cfg = Config::with_nodes(4);
+        let spec = SimWorkloadSpec::new(read_tasks(20));
+        let out = SimDriver::new(cfg, spec, catalog(20, MB)).run();
+        assert_eq!(out.metrics.gpfs_misses, 20);
+        assert_eq!(out.metrics.cache_hits, 0);
+        assert_eq!(out.metrics.gpfs_bytes, 20 * MB);
+    }
+
+    #[test]
+    fn repeated_object_hits_cache_with_data_aware_policy() {
+        let mut cfg = Config::with_nodes(4);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        // 40 sequential tasks over the same object: first misses, the
+        // rest should be routed back to the cache holder.
+        let tasks: Vec<(f64, Task)> = (0..40)
+            .map(|i| {
+                (
+                    i as f64 * 10.0, // spaced: strictly sequential
+                    Task::with_inputs(TaskId(i), vec![ObjectId(0)]),
+                )
+            })
+            .collect();
+        let spec = SimWorkloadSpec::new(tasks);
+        let out = SimDriver::new(cfg, spec, catalog(1, MB)).run();
+        assert_eq!(out.metrics.gpfs_misses, 1, "only the cold miss");
+        assert_eq!(out.metrics.cache_hits, 39);
+        assert_eq!(out.metrics.gpfs_bytes, MB);
+    }
+
+    #[test]
+    fn caching_off_always_goes_to_gpfs() {
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::FirstAvailable;
+        let tasks: Vec<(f64, Task)> = (0..10)
+            .map(|i| (0.0, Task::with_inputs(TaskId(i), vec![ObjectId(0)])))
+            .collect();
+        let mut spec = SimWorkloadSpec::new(tasks);
+        spec.caching = false;
+        let out = SimDriver::new(cfg, spec, catalog(1, MB)).run();
+        assert_eq!(out.metrics.gpfs_misses, 10);
+        assert_eq!(out.metrics.cache_hits, 0);
+        assert_eq!(out.metrics.gpfs_bytes, 10 * MB);
+    }
+
+    #[test]
+    fn prewarm_gives_full_locality() {
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        let mut spec = SimWorkloadSpec::new(
+            (0..10u64)
+                .map(|i| {
+                    (
+                        i as f64, // sequential
+                        Task::with_inputs(TaskId(i), vec![ObjectId(i % 2)]),
+                    )
+                })
+                .collect(),
+        );
+        spec.prewarm = vec![(0, ObjectId(0)), (1, ObjectId(1))];
+        let out = SimDriver::new(cfg, spec, catalog(2, MB)).run();
+        assert_eq!(out.metrics.gpfs_misses, 0, "warm caches: no GPFS reads");
+        assert_eq!(out.metrics.cache_hits + out.metrics.peer_hits, 10);
+    }
+
+    #[test]
+    fn gz_pays_decompression_and_expands() {
+        let mut cfg = Config::with_nodes(1);
+        cfg.app.decompress_s = 0.5;
+        let mut spec = SimWorkloadSpec::new(read_tasks(2));
+        spec.format = DataFormat::Gz;
+        spec.expansion = 3.0;
+        let out = SimDriver::new(cfg.clone(), spec, catalog(2, 2 * MB)).run();
+        // 2 sequential tasks, each: GPFS fetch (2 MB) + 0.5 s decompress.
+        assert!(out.makespan_s > 1.0, "decompression must be charged");
+        assert_eq!(out.metrics.gpfs_bytes, 4 * MB);
+    }
+
+    #[test]
+    fn read_write_accounts_gpfs_writes_when_uncached() {
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::FirstAvailable;
+        let tasks: Vec<(f64, Task)> = (0..5)
+            .map(|i| (0.0, Task::read_write(TaskId(i), ObjectId(i), MB)))
+            .collect();
+        let mut spec = SimWorkloadSpec::new(tasks);
+        spec.caching = false;
+        let out = SimDriver::new(cfg, spec, catalog(5, MB)).run();
+        assert_eq!(out.metrics.gpfs_write_bytes, 5 * MB);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let cfg = Config::with_nodes(8);
+            let spec = SimWorkloadSpec::new(read_tasks(64));
+            SimDriver::new(cfg, spec, catalog(64, MB)).run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.metrics.tasks_done, b.metrics.tasks_done);
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+        assert_eq!(a.events, b.events);
+    }
+}

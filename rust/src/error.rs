@@ -1,0 +1,51 @@
+//! Crate-wide error types.
+//!
+//! Coarse-grained by subsystem; everything converges to [`Error`] at the
+//! public API boundary. Internal modules may use more specific enums.
+
+use thiserror::Error;
+
+/// Top-level error type for the data-diffusion library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / preset problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A referenced data object is unknown to the persistent store.
+    #[error("unknown data object: {0}")]
+    UnknownObject(String),
+
+    /// Executor-side failure (fetch, cache, execute).
+    #[error("executor {executor} failed: {msg}")]
+    Executor { executor: usize, msg: String },
+
+    /// The PJRT runtime failed to load or execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Workload generation / trace parsing problems.
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    /// Live-mode filesystem failures.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Coordinator protocol violation (e.g. completion for unknown task).
+    #[error("protocol error: {0}")]
+    Protocol(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,71 @@
+//! Per-executor local index (§3.2.1).
+//!
+//! "each executor maintains a local index to record the location of its
+//! cached data objects" — in live mode this maps object ids to cache-file
+//! paths; in sim mode it mirrors the cache's resident set. Kept separate
+//! from [`crate::cache::DataCache`] because the cache owns *policy* while
+//! the index owns *location* (path on local disk).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::storage::object::ObjectId;
+
+/// Local object → path index.
+#[derive(Debug, Default)]
+pub struct LocalIndex {
+    paths: HashMap<ObjectId, PathBuf>,
+}
+
+impl LocalIndex {
+    /// Empty index.
+    pub fn new() -> Self {
+        LocalIndex::default()
+    }
+
+    /// Record where an object lives on local disk.
+    pub fn insert(&mut self, obj: ObjectId, path: PathBuf) {
+        self.paths.insert(obj, path);
+    }
+
+    /// Forget an object (after eviction).
+    pub fn remove(&mut self, obj: ObjectId) -> Option<PathBuf> {
+        self.paths.remove(&obj)
+    }
+
+    /// Local path of a cached object.
+    pub fn get(&self, obj: ObjectId) -> Option<&PathBuf> {
+        self.paths.get(&obj)
+    }
+
+    /// Number of indexed objects.
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Whether the index is empty.
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut idx = LocalIndex::new();
+        idx.insert(ObjectId(1), PathBuf::from("/cache/obj1.fits"));
+        assert_eq!(
+            idx.get(ObjectId(1)),
+            Some(&PathBuf::from("/cache/obj1.fits"))
+        );
+        assert_eq!(
+            idx.remove(ObjectId(1)),
+            Some(PathBuf::from("/cache/obj1.fits"))
+        );
+        assert!(idx.get(ObjectId(1)).is_none());
+        assert!(idx.is_empty());
+    }
+}

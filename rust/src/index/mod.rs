@@ -1,0 +1,20 @@
+//! Cache-location indices (§3.2.1, §3.2.3).
+//!
+//! * [`central`] — the dispatcher's centralized in-memory index mapping
+//!   every cached data object to the executors holding it. The paper
+//!   argues (Fig 2) this beats a distributed index until ~32K nodes.
+//! * [`local`] — the per-executor local index over its own cache.
+//! * [`prls`] — the analytic P-RLS (peer-to-peer replica location
+//!   service) model from Chervenak et al.'s measurements, used to
+//!   regenerate Figure 2's comparison.
+//! * [`dht`] — a Chord ring (consistent hashing + finger-table routing)
+//!   with measured hop counts, the paper's other distributed-index
+//!   candidate.
+
+pub mod central;
+pub mod dht;
+pub mod local;
+pub mod prls;
+
+pub use central::CentralIndex;
+pub use local::LocalIndex;

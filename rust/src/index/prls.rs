@@ -1,0 +1,120 @@
+//! Analytic P-RLS model for the Figure 2 comparison.
+//!
+//! The paper compares its centralized in-memory index against the
+//! peer-to-peer replica location service measured by Chervenak et al.
+//! [35]: lookup latency grows from 0.5 ms at 1 node to ~3 ms at 15 nodes,
+//! and they extrapolate with a logarithmic best fit. Aggregate throughput
+//! is `nodes / latency(nodes)` (each node serves lookups at `1/latency`).
+//!
+//! The paper's conclusion — P-RLS needs >32K nodes to match the ~4.18M
+//! lookups/s of one in-memory hash table — is exactly what
+//! [`crossover_nodes`] computes, given our *measured* hash-table rate
+//! (see `rust/benches/fig2_index.rs`).
+
+/// Chervenak et al.'s measured (nodes, latency-seconds) datapoints,
+/// as read off the paper's description: 0.5 ms at 1 node rising to
+/// ~3 ms at 15 nodes.
+pub const MEASURED: &[(u32, f64)] = &[
+    (1, 0.00050),
+    (2, 0.00091),
+    (3, 0.00124),
+    (4, 0.00147),
+    (5, 0.00165),
+    (6, 0.00180),
+    (7, 0.00193),
+    (8, 0.00204),
+    (9, 0.00214),
+    (10, 0.00223),
+    (11, 0.00231),
+    (12, 0.00238),
+    (13, 0.00245),
+    (14, 0.00251),
+    (15, 0.00300),
+];
+
+/// Logarithmic model `latency(n) = a + b·ln(n)` fit to [`MEASURED`] by
+/// least squares.
+#[derive(Debug, Clone, Copy)]
+pub struct PrlsModel {
+    /// Intercept (latency at 1 node), seconds.
+    pub a: f64,
+    /// Log coefficient, seconds per ln(node).
+    pub b: f64,
+}
+
+impl PrlsModel {
+    /// Least-squares fit of `lat = a + b ln(n)` to the measured points.
+    pub fn fit() -> PrlsModel {
+        let n = MEASURED.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+        for &(nodes, lat) in MEASURED {
+            let x = (nodes as f64).ln();
+            sx += x;
+            sy += lat;
+            sxx += x * x;
+            sxy += x * lat;
+        }
+        let b = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        let a = (sy - b * sx) / n;
+        PrlsModel { a, b }
+    }
+
+    /// Predicted lookup latency (seconds) at `nodes` nodes.
+    pub fn latency(&self, nodes: u64) -> f64 {
+        self.a + self.b * (nodes.max(1) as f64).ln()
+    }
+
+    /// Predicted aggregate throughput (lookups/s): every node resolves
+    /// lookups at `1/latency`.
+    pub fn aggregate_throughput(&self, nodes: u64) -> f64 {
+        nodes as f64 / self.latency(nodes)
+    }
+
+    /// Smallest power-of-two node count whose aggregate P-RLS throughput
+    /// exceeds `central_rate` (lookups/s), scanning up to 2^30.
+    pub fn crossover_nodes(&self, central_rate: f64) -> Option<u64> {
+        for exp in 0..=30 {
+            let n = 1u64 << exp;
+            if self.aggregate_throughput(n) >= central_rate {
+                return Some(n);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_matches_endpoints() {
+        let m = PrlsModel::fit();
+        // Paper quotes 0.5 ms at 1 node and ~3 ms at 15 nodes.
+        assert!((m.latency(1) - 0.0005).abs() < 3e-4, "a={}", m.a);
+        assert!((m.latency(15) - 0.003).abs() < 5e-4);
+        // And "from 0.5 ms with 1 node to 15 ms with 1M nodes".
+        let lat_1m = m.latency(1_000_000);
+        assert!((0.008..0.020).contains(&lat_1m), "lat(1M)={lat_1m}");
+    }
+
+    #[test]
+    fn throughput_grows_with_nodes() {
+        let m = PrlsModel::fit();
+        assert!(m.aggregate_throughput(16) > m.aggregate_throughput(1));
+        assert!(m.aggregate_throughput(1 << 20) > m.aggregate_throughput(1 << 10));
+    }
+
+    #[test]
+    fn paper_crossover_reproduced() {
+        // Paper: "P-RLS would need more than 32K nodes to achieve an
+        // aggregate throughput similar to that of an in-memory hash
+        // table, which is 4.18M lookups/sec".
+        let m = PrlsModel::fit();
+        let crossover = m.crossover_nodes(4.18e6).unwrap();
+        assert!(
+            crossover > 32_768 && crossover <= 131_072,
+            "crossover={crossover}"
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! # Data Diffusion
+//!
+//! A production-quality reproduction of **"Accelerating Large-Scale Data
+//! Exploration through Data Diffusion"** (Raicu, Zhao, Foster, Szalay;
+//! 2008) — dynamic resource provisioning + per-executor data caching +
+//! data-aware task scheduling, in the three-layer Rust / JAX / Pallas
+//! architecture:
+//!
+//! * **Layer 3 (this crate)** — the Falkon-style coordinator: wait queue,
+//!   dispatcher with the paper's four scheduling policies, centralized
+//!   cache-location index, executor caches (Random/FIFO/LRU/LFU), dynamic
+//!   resource provisioner, and the simulated + live execution substrates.
+//! * **Layer 2 (`python/compile/model.py`)** — the astronomy image
+//!   stacking compute graph in JAX, AOT-lowered to HLO text once at build
+//!   time.
+//! * **Layer 1 (`python/compile/kernels/stacking.py`)** — the
+//!   calibrate + shift + coadd hot loop as a Pallas kernel.
+//!
+//! The Rust binary executes the AOT artifacts through PJRT
+//! ([`runtime`]); Python never runs on the request path.
+//!
+//! ## Map
+//!
+//! | Paper section | Module |
+//! |---|---|
+//! | §3.1 Falkon dispatcher | [`coordinator`] |
+//! | §3.2.2 eviction + dispatch policies | [`cache`], [`scheduler`] |
+//! | §3.2.3 centralized index, P-RLS | [`index`] |
+//! | DRP | [`provisioner`] |
+//! | §4 testbed + storage | [`storage`], [`sim`] |
+//! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
+//! | §5 stacking application | [`workloads::astro`], [`runtime`] |
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod driver;
+pub mod error;
+pub mod index;
+pub mod provisioner;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workloads;
+
+pub use config::Config;
+pub use error::{Error, Result};

@@ -1,0 +1,304 @@
+//! `falkon` — the data-diffusion CLI.
+//!
+//! Subcommands:
+//!
+//! * `falkon sim`   — run a simulated experiment (micro-benchmark or
+//!   stacking workload) and print the metrics.
+//! * `falkon live`  — run a live mini-cluster on real files (and real
+//!   PJRT stacking when artifacts are present).
+//! * `falkon sweep` — regenerate a figure's data series (same runners the
+//!   benches use).
+//! * `falkon info`  — show config defaults, Table 1/2 presets, artifact
+//!   manifest status.
+
+use datadiffusion::analysis::figures;
+use datadiffusion::config::{presets, Config};
+use datadiffusion::coordinator::task::{Task, TaskId};
+use datadiffusion::driver::live::LiveCluster;
+use datadiffusion::driver::sim::SimDriver;
+use datadiffusion::runtime::{artifacts_dir, Manifest};
+use datadiffusion::scheduler::DispatchPolicy;
+use datadiffusion::storage::live::LiveStore;
+use datadiffusion::storage::object::{DataFormat, ObjectId};
+use datadiffusion::util::cli::{help_if_requested, Args, OptSpec};
+use datadiffusion::util::units::{fmt_bps, fmt_bytes, fmt_secs};
+use datadiffusion::workloads::astro;
+
+fn main() {
+    datadiffusion::util::logging::init();
+    let args = Args::from_env(&["help", "read-write", "no-caching", "gz"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let specs = [
+        OptSpec { name: "cpus", value: "N", help: "CPU count (stacking sims)", default: "128" },
+        OptSpec { name: "nodes", value: "N", help: "node count (micro/live)", default: "4" },
+        OptSpec { name: "locality", value: "L", help: "Table 2 data locality", default: "30" },
+        OptSpec { name: "scale", value: "F", help: "workload scale (0,1]", default: "0.02" },
+        OptSpec { name: "policy", value: "NAME", help: "dispatch policy", default: "max-compute-util" },
+        OptSpec { name: "tasks", value: "N", help: "task count (live)", default: "64" },
+        OptSpec { name: "objects", value: "N", help: "distinct objects (live)", default: "16" },
+        OptSpec { name: "workdir", value: "DIR", help: "live-mode working dir", default: "/tmp/falkon-live" },
+        OptSpec { name: "figure", value: "N", help: "figure to sweep (3,4,5,8,9,10,11,12,13)", default: "11" },
+        OptSpec { name: "config", value: "FILE", help: "TOML config (see configs/)", default: "" },
+        OptSpec { name: "gz", value: "", help: "compressed (GZ) store format", default: "" },
+        OptSpec { name: "read-write", value: "", help: "read+write variant", default: "" },
+        OptSpec { name: "no-caching", value: "", help: "disable data diffusion", default: "" },
+    ];
+    help_if_requested(&args, "falkon", "data diffusion coordinator", &specs);
+
+    let code = match cmd {
+        "sim" => cmd_sim(&args),
+        "live" => cmd_live(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("usage: falkon <sim|live|sweep|info> [--help]");
+            if !other.is_empty() {
+                eprintln!("unknown subcommand: {other}");
+            }
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    let cpus: usize = args.num_or("cpus", 128);
+    let locality: f64 = args.num_or("locality", 30.0);
+    let scale: f64 = args.num_or("scale", 0.02);
+    let caching = !args.flag("no-caching");
+    let format = if args.flag("gz") { DataFormat::Gz } else { DataFormat::Fit };
+
+    let mut cfg = if caching {
+        presets::stacking(cpus)
+    } else {
+        presets::stacking_gpfs_baseline(cpus)
+    };
+    // A config file (e.g. configs/paper_testbed.toml) overrides presets.
+    if let Some(path) = args.get("config") {
+        match Config::from_file(path) {
+            Ok(file_cfg) => cfg = file_cfg,
+            Err(e) => {
+                eprintln!("error loading {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    let row = astro::row_for_locality(locality);
+    let w = astro::generate(&cfg, row, format, caching, scale, cfg.seed);
+    println!(
+        "sim: locality {} | {} objects over {} files | {} CPUs | {} | caching={}",
+        row.locality,
+        w.objects,
+        w.files,
+        cpus,
+        format.label(),
+        caching
+    );
+    let out = SimDriver::new(cfg, w.spec, w.catalog).run();
+    print_outcome_common(
+        out.metrics.tasks_done,
+        out.makespan_s,
+        out.time_per_task_per_cpu(cpus),
+        &out.metrics,
+    );
+    println!(
+        "  sim-engine: {} events in {} ({:.0} ev/s)",
+        out.events,
+        fmt_secs(out.wall_s),
+        out.events as f64 / out.wall_s.max(1e-9)
+    );
+    0
+}
+
+fn cmd_live(args: &Args) -> i32 {
+    let nodes: usize = args.num_or("nodes", 4);
+    let n_tasks: u64 = args.num_or("tasks", 64);
+    let n_objects: u64 = args.num_or("objects", 16);
+    let workdir = std::path::PathBuf::from(args.str_or("workdir", "/tmp/falkon-live"));
+    let format = if args.flag("gz") { DataFormat::Gz } else { DataFormat::Fit };
+    let policy = DispatchPolicy::parse(&args.str_or("policy", "max-compute-util"))
+        .unwrap_or(DispatchPolicy::MaxComputeUtil);
+
+    let _ = std::fs::remove_dir_all(&workdir);
+    let mut store = match LiveStore::create(workdir.join("gpfs"), format) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    for i in 0..n_objects {
+        if let Err(e) = store.populate(ObjectId(i), 100 * 100) {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    }
+
+    // Verify the artifact manifest loads before wiring PJRT in.
+    let artifacts = match Manifest::load(&artifacts_dir()) {
+        Ok(m) => {
+            println!("artifacts: {} entries in {}", m.artifacts.len(), artifacts_dir().display());
+            Some(artifacts_dir())
+        }
+        Err(e) => {
+            eprintln!("note: running without PJRT compute ({e})");
+            None
+        }
+    };
+    let depth = if artifacts.is_some() { 8 } else { 1 };
+    let tasks: Vec<Task> = (0..n_tasks)
+        .map(|i| Task::stacking(TaskId(i), ObjectId(i % n_objects), depth, 4 * 100 * 100))
+        .collect();
+
+    let mut cfg = Config::with_nodes(nodes);
+    cfg.scheduler.policy = policy;
+    println!(
+        "live: {nodes} executors | {n_tasks} stacking tasks over {n_objects} objects | {} | {}",
+        format.label(),
+        policy.label()
+    );
+    match LiveCluster::new(cfg, store, workdir.join("work"), artifacts).run(tasks) {
+        Ok(out) => {
+            print_outcome_common(
+                out.metrics.tasks_done,
+                out.makespan_s,
+                out.makespan_s * nodes as f64 / out.metrics.tasks_done.max(1) as f64,
+                &out.metrics,
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let fig: u32 = args.num_or("figure", 11);
+    let scale: f64 = args.num_or("scale", figures::env_scale());
+    match fig {
+        3 | 4 => {
+            let rw = fig == 4;
+            let rows = figures::fig3_fig4(rw, &[1, 2, 4, 8, 16, 32, 64], figures::env_tpn());
+            println!("{:<48} {:>6} {:>14}", "config", "nodes", "throughput");
+            for r in rows {
+                println!("{:<48} {:>6} {:>14}", r.config, r.nodes, fmt_bps(r.bps));
+            }
+        }
+        5 => {
+            let rows = figures::fig5(&datadiffusion::workloads::microbench::FILE_SIZES, figures::env_tpn());
+            println!("{:<44} {:>4} {:>10} {:>14} {:>10}", "config", "rw", "size", "throughput", "tasks/s");
+            for r in rows {
+                println!(
+                    "{:<44} {:>4} {:>10} {:>14} {:>10.1}",
+                    r.config,
+                    if r.read_write { "rw" } else { "r" },
+                    fmt_bytes(r.file_bytes),
+                    fmt_bps(r.bps),
+                    r.tasks_per_s
+                );
+            }
+        }
+        8 | 9 => {
+            let loc = if fig == 8 { 1.38 } else { 30.0 };
+            let rows = figures::fig8_fig9(loc, &[2, 4, 8, 16, 32, 64, 128], scale);
+            println!("{:<24} {:>6} {:>16} {:>10}", "config", "cpus", "time/stack/cpu", "hit%");
+            for r in rows {
+                println!(
+                    "{:<24} {:>6} {:>16} {:>9.1}%",
+                    r.config,
+                    r.cpus,
+                    fmt_secs(r.time_per_stack_s),
+                    r.hit_ratio * 100.0
+                );
+            }
+        }
+        10 | 11 | 12 | 13 => {
+            let rows = figures::fig11_sweep(128, scale);
+            println!(
+                "{:<24} {:>8} {:>14} {:>8} {:>8} {:>12} {:>12} {:>12}",
+                "config", "locality", "time/stack", "hit%", "ideal%", "local", "c2c", "gpfs"
+            );
+            for r in rows {
+                let m = &r.outcome.metrics;
+                println!(
+                    "{:<24} {:>8} {:>14} {:>7.1}% {:>7.1}% {:>12} {:>12} {:>12}",
+                    r.config,
+                    r.locality,
+                    fmt_secs(r.time_per_stack_s),
+                    r.hit_ratio * 100.0,
+                    astro::ideal_hit_ratio(r.locality) * 100.0,
+                    fmt_bytes(m.local_bytes),
+                    fmt_bytes(m.c2c_bytes),
+                    fmt_bytes(m.gpfs_bytes),
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown figure {other}; supported: 3,4,5,8,9,10,11,12,13");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("Table 1 testbed presets:");
+    for p in presets::TABLE1 {
+        println!(
+            "  {:<12} {:>3} nodes | {:<22} | {} | {}",
+            p.name, p.nodes, p.processors, p.memory, p.network
+        );
+    }
+    println!("\nTable 2 workloads:");
+    for row in astro::TABLE2 {
+        println!(
+            "  locality {:>5}: {:>7} objects in {:>7} files (ideal hit ratio {:>5.1}%)",
+            row.locality,
+            row.objects,
+            row.files,
+            astro::ideal_hit_ratio(row.locality) * 100.0
+        );
+    }
+    let dir = artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("\nartifacts ({}):", dir.display());
+            for a in &m.artifacts {
+                println!("  {:<16} {:?} {}", a.name, a.kind, a.path.display());
+            }
+        }
+        Err(e) => println!("\nartifacts: {e}"),
+    }
+    0
+}
+
+fn print_outcome_common(
+    tasks: u64,
+    makespan: f64,
+    per_task_cpu: f64,
+    m: &datadiffusion::coordinator::metrics::Metrics,
+) {
+    println!("  tasks: {tasks} | makespan {} | time/task/cpu {}", fmt_secs(makespan), fmt_secs(per_task_cpu));
+    println!(
+        "  hits: local {} ({:.1}%), cache-to-cache {}, persistent {}",
+        m.cache_hits,
+        m.local_hit_ratio() * 100.0,
+        m.peer_hits,
+        m.gpfs_misses
+    );
+    println!(
+        "  bytes: local {} | c2c {} | GPFS read {} | GPFS write {}",
+        fmt_bytes(m.local_bytes),
+        fmt_bytes(m.c2c_bytes),
+        fmt_bytes(m.gpfs_bytes),
+        fmt_bytes(m.gpfs_write_bytes)
+    );
+    println!(
+        "  aggregate: read {} | read+write {} | {:.1} tasks/s",
+        fmt_bps(m.read_throughput_bps()),
+        fmt_bps(m.rw_throughput_bps()),
+        m.task_rate()
+    );
+}

@@ -1,0 +1,82 @@
+//! Simulated cluster provider (the GRAM4 + batch-scheduler stand-in).
+//!
+//! Allocation requests complete after a configurable latency (GRAM4 job
+//! submission + LRM scheduling were tens of seconds on the paper's
+//! testbed). The provider owns the pool of node ids and guarantees an id
+//! is never double-allocated.
+
+use std::collections::BTreeSet;
+
+/// A pending allocation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingAllocation {
+    /// When the executors come up.
+    pub ready_at: f64,
+    /// The node ids being brought up.
+    pub nodes: Vec<usize>,
+}
+
+/// Simulated GRAM4-like provider.
+#[derive(Debug)]
+pub struct ClusterProvider {
+    free: BTreeSet<usize>,
+    latency_s: f64,
+}
+
+impl ClusterProvider {
+    /// Provider over `total_nodes` nodes with the given allocation latency.
+    pub fn new(total_nodes: usize, latency_s: f64) -> Self {
+        ClusterProvider {
+            free: (0..total_nodes).collect(),
+            latency_s,
+        }
+    }
+
+    /// Nodes still available.
+    pub fn free_nodes(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Request `count` nodes at time `now`; grants as many as exist
+    /// (possibly fewer), becoming ready after the allocation latency.
+    pub fn allocate(&mut self, now: f64, count: usize) -> PendingAllocation {
+        let nodes: Vec<usize> = self.free.iter().take(count).copied().collect();
+        for n in &nodes {
+            self.free.remove(n);
+        }
+        PendingAllocation {
+            ready_at: now + self.latency_s,
+            nodes,
+        }
+    }
+
+    /// Return a node to the pool.
+    pub fn release(&mut self, node: usize) {
+        self.free.insert(node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_has_latency_and_unique_ids() {
+        let mut c = ClusterProvider::new(4, 40.0);
+        let a = c.allocate(10.0, 2);
+        assert_eq!(a.ready_at, 50.0);
+        assert_eq!(a.nodes, vec![0, 1]);
+        let b = c.allocate(10.0, 5); // only 2 left
+        assert_eq!(b.nodes, vec![2, 3]);
+        assert_eq!(c.free_nodes(), 0);
+    }
+
+    #[test]
+    fn release_recycles() {
+        let mut c = ClusterProvider::new(2, 1.0);
+        let a = c.allocate(0.0, 2);
+        c.release(a.nodes[0]);
+        let b = c.allocate(5.0, 1);
+        assert_eq!(b.nodes, vec![0]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Dynamic resource provisioner (DRP, §3.1).
+//!
+//! Manages the creation and deletion of executors: watches wait-queue
+//! pressure, requests node allocations from a (simulated GRAM4-like)
+//! cluster provider with realistic allocation latency, and releases
+//! executors that sit idle past a timeout. The paper's experiments hold
+//! the pool static ("we will address dynamic provisioning in future
+//! work") — our benches do too — but the mechanism is implemented and
+//! tested, and `examples/quickstart.rs` exercises it.
+
+pub mod cluster;
+pub mod policy;
+
+pub use cluster::ClusterProvider;
+pub use policy::AllocationPolicy;
+
+use crate::config::ProvisionerConfig;
+
+/// A provisioning decision for the driver to execute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProvisionAction {
+    /// Ask the cluster for `count` more executors.
+    Allocate {
+        /// Number of executors to request.
+        count: usize,
+    },
+    /// Release these idle executors back to the cluster.
+    Release {
+        /// Executor ids to release.
+        executors: Vec<usize>,
+    },
+}
+
+/// Tracks idle spans and produces allocate/release actions.
+#[derive(Debug)]
+pub struct Provisioner {
+    cfg: ProvisionerConfig,
+    allocated: usize,
+    pending: usize,
+    idle_since: Vec<(usize, f64)>, // (executor, idle-start time)
+}
+
+impl Provisioner {
+    /// New provisioner.
+    pub fn new(cfg: ProvisionerConfig) -> Self {
+        Provisioner {
+            cfg,
+            allocated: 0,
+            pending: 0,
+            idle_since: Vec::new(),
+        }
+    }
+
+    /// Currently allocated (live) executor count.
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Requested-but-not-yet-live executor count.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// An allocation request completed; executors are live.
+    pub fn on_allocated(&mut self, count: usize) {
+        self.pending = self.pending.saturating_sub(count);
+        self.allocated += count;
+    }
+
+    /// Executor became idle at time `now` (candidate for release).
+    pub fn note_idle(&mut self, executor: usize, now: f64) {
+        if !self.idle_since.iter().any(|&(e, _)| e == executor) {
+            self.idle_since.push((executor, now));
+        }
+    }
+
+    /// Executor got work again; cancel its idle clock.
+    pub fn note_busy(&mut self, executor: usize) {
+        self.idle_since.retain(|&(e, _)| e != executor);
+    }
+
+    /// Executor released (driver confirmed).
+    pub fn on_released(&mut self, executor: usize) {
+        self.allocated = self.allocated.saturating_sub(1);
+        self.note_busy(executor);
+    }
+
+    /// Evaluate the provisioning policy. `queued` is the current wait
+    /// queue length; `now` is the current time.
+    pub fn evaluate(&mut self, queued: usize, now: f64) -> Vec<ProvisionAction> {
+        let mut actions = Vec::new();
+
+        // Growth: queue pressure, bounded by max and in-flight requests.
+        let effective = self.allocated + self.pending;
+        let grow = self.cfg.policy.grow_by(
+            queued,
+            effective,
+            self.cfg.max_executors,
+            self.cfg.queue_per_executor,
+        );
+        if grow > 0 {
+            self.pending += grow;
+            actions.push(ProvisionAction::Allocate { count: grow });
+        }
+
+        // Shrink: idle past the timeout, but never below min_executors.
+        let min = self.cfg.min_executors;
+        let mut releasable: Vec<usize> = self
+            .idle_since
+            .iter()
+            .filter(|&&(_, t0)| now - t0 >= self.cfg.idle_release_s)
+            .map(|&(e, _)| e)
+            .collect();
+        let can_release = self.allocated.saturating_sub(min);
+        releasable.truncate(can_release);
+        if !releasable.is_empty() && queued == 0 {
+            self.idle_since.retain(|(e, _)| !releasable.contains(e));
+            actions.push(ProvisionAction::Release {
+                executors: releasable,
+            });
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProvisionerConfig;
+
+    fn cfg() -> ProvisionerConfig {
+        ProvisionerConfig {
+            policy: AllocationPolicy::Adaptive,
+            min_executors: 1,
+            max_executors: 8,
+            allocation_latency_s: 40.0,
+            idle_release_s: 60.0,
+            queue_per_executor: 2,
+        }
+    }
+
+    #[test]
+    fn grows_under_pressure() {
+        let mut p = Provisioner::new(cfg());
+        let actions = p.evaluate(10, 0.0);
+        assert_eq!(actions, vec![ProvisionAction::Allocate { count: 5 }]);
+        // Pending requests suppress duplicate growth.
+        let actions = p.evaluate(10, 1.0);
+        assert!(actions.is_empty());
+        p.on_allocated(5);
+        assert_eq!(p.allocated(), 5);
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn respects_max() {
+        let mut p = Provisioner::new(cfg());
+        let a = p.evaluate(1000, 0.0);
+        assert_eq!(a, vec![ProvisionAction::Allocate { count: 8 }]);
+    }
+
+    #[test]
+    fn releases_after_idle_timeout_only_when_quiet() {
+        let mut p = Provisioner::new(cfg());
+        p.on_allocated(3);
+        p.note_idle(0, 0.0);
+        p.note_idle(1, 0.0);
+        p.note_idle(2, 0.0);
+        // Too early.
+        assert!(p.evaluate(0, 30.0).is_empty());
+        // Past timeout: release down to min (1), i.e. 2 executors.
+        let a = p.evaluate(0, 61.0);
+        match &a[..] {
+            [ProvisionAction::Release { executors }] => assert_eq!(executors.len(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Queue pressure blocks release.
+        let mut p = Provisioner::new(cfg());
+        p.on_allocated(2);
+        p.note_idle(0, 0.0);
+        let a = p.evaluate(5, 100.0);
+        assert!(matches!(a[0], ProvisionAction::Allocate { .. }));
+    }
+
+    #[test]
+    fn busy_cancels_idle_clock() {
+        let mut p = Provisioner::new(cfg());
+        p.on_allocated(2);
+        p.note_idle(0, 0.0);
+        p.note_busy(0);
+        assert!(p.evaluate(0, 100.0).is_empty());
+    }
+}

@@ -1,0 +1,95 @@
+//! Dynamic resource provisioning policies.
+//!
+//! Falkon's DRP grows the executor pool in response to wait-queue
+//! pressure and releases executors after an idle timeout. The allocation
+//! policies mirror those described for Falkon's provisioner: one-at-a-time
+//! conservative growth, all-at-once aggressive growth, and an additive
+//! adaptive middle ground.
+
+/// How aggressively to grow the executor pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocationPolicy {
+    /// Request one executor per provisioning round.
+    OneAtATime,
+    /// Request everything up to the configured maximum immediately.
+    AllAtOnce,
+    /// Grow toward `ceil(queued / queue_per_executor)` total executors,
+    /// i.e. growth proportional to backlog (already-allocated and
+    /// in-flight requests count against the target).
+    Adaptive,
+}
+
+impl AllocationPolicy {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Option<AllocationPolicy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "one-at-a-time" => Some(AllocationPolicy::OneAtATime),
+            "all-at-once" => Some(AllocationPolicy::AllAtOnce),
+            "adaptive" => Some(AllocationPolicy::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// How many additional executors to request, given the backlog and
+    /// the remaining headroom.
+    pub fn grow_by(
+        &self,
+        queued: usize,
+        allocated: usize,
+        max: usize,
+        queue_per_executor: usize,
+    ) -> usize {
+        let headroom = max.saturating_sub(allocated);
+        if headroom == 0 || queued == 0 {
+            return 0;
+        }
+        match self {
+            AllocationPolicy::OneAtATime => 1,
+            AllocationPolicy::AllAtOnce => headroom,
+            AllocationPolicy::Adaptive => {
+                let want_total = queued.div_ceil(queue_per_executor.max(1));
+                want_total.saturating_sub(allocated).min(headroom)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_at_a_time_is_conservative() {
+        let p = AllocationPolicy::OneAtATime;
+        assert_eq!(p.grow_by(100, 0, 64, 4), 1);
+        assert_eq!(p.grow_by(100, 64, 64, 4), 0);
+        assert_eq!(p.grow_by(0, 0, 64, 4), 0);
+    }
+
+    #[test]
+    fn all_at_once_takes_headroom() {
+        let p = AllocationPolicy::AllAtOnce;
+        assert_eq!(p.grow_by(1, 10, 64, 4), 54);
+    }
+
+    #[test]
+    fn adaptive_scales_with_backlog() {
+        let p = AllocationPolicy::Adaptive;
+        assert_eq!(p.grow_by(16, 0, 64, 4), 4);
+        assert_eq!(p.grow_by(1000, 0, 64, 4), 64);
+        assert_eq!(p.grow_by(3, 0, 64, 4), 1);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            AllocationPolicy::parse("all-at-once"),
+            Some(AllocationPolicy::AllAtOnce)
+        );
+        assert_eq!(
+            AllocationPolicy::parse("one_at_a_time"),
+            Some(AllocationPolicy::OneAtATime)
+        );
+        assert_eq!(AllocationPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.tsv` alongside the
+//! HLO text files. TSV (not JSON) because this offline environment has no
+//! serde; the format is a stable two-column-plus-params contract:
+//!
+//! ```text
+//! # kind  name          file               params...
+//! stack    stack_n8     stack_n8.hlo.txt   n=8  h=100  w=100
+//! radec2xy radec2xy_m128 radec2xy_m128.hlo.txt m=128
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Artifact kind (`stack`, `radec2xy`).
+    pub kind: String,
+    /// Unique name (`stack_n8`).
+    pub name: String,
+    /// HLO text file path (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+    /// Key=value parameters (`n`, `h`, `w`, `m`, ...).
+    pub params: BTreeMap<String, u64>,
+}
+
+impl Artifact {
+    /// Numeric parameter, erroring with context if missing.
+    pub fn param(&self, key: &str) -> Result<u64> {
+        self.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Artifact(format!("artifact {} missing param {key}", self.name)))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All artifacts in manifest order.
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() < 3 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected >=3 fields",
+                    lineno + 1
+                )));
+            }
+            let mut params = BTreeMap::new();
+            for kv in &fields[3..] {
+                if let Some((k, v)) = kv.split_once('=') {
+                    let v: u64 = v.parse().map_err(|_| {
+                        Error::Artifact(format!("manifest line {}: bad param {kv}", lineno + 1))
+                    })?;
+                    params.insert(k.to_string(), v);
+                }
+            }
+            artifacts.push(Artifact {
+                kind: fields[0].to_string(),
+                name: fields[1].to_string(),
+                path: dir.join(fields[2]),
+                params,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// All artifacts of a kind.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+
+    /// The stacking variant with the smallest `n >= depth` (tasks pad the
+    /// unused slots with zero weights), or the largest variant if `depth`
+    /// exceeds them all (callers then loop in chunks).
+    pub fn stack_variant(&self, depth: u32) -> Result<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        let mut largest: Option<&Artifact> = None;
+        for a in self.of_kind("stack") {
+            let n = a.param("n")?;
+            if largest.map(|l| n > l.params["n"]).unwrap_or(true) {
+                largest = Some(a);
+            }
+            if n >= depth as u64 && best.map(|b| n < b.params["n"]).unwrap_or(true) {
+                best = Some(a);
+            }
+        }
+        best.or(largest)
+            .ok_or_else(|| Error::Artifact("no stack artifacts in manifest".into()))
+    }
+}
+
+/// Default artifacts directory: `$DD_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dd_manifest_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn parses_and_selects_variants() {
+        let dir = tmp("ok");
+        write_manifest(
+            &dir,
+            "# header\nstack\tstack_n4\tstack_n4.hlo.txt\tn=4\th=100\tw=100\n\
+             stack\tstack_n16\tstack_n16.hlo.txt\tn=16\th=100\tw=100\n\
+             radec2xy\tradec2xy_m128\tradec2xy_m128.hlo.txt\tm=128\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.stack_variant(3).unwrap().name, "stack_n4");
+        assert_eq!(m.stack_variant(4).unwrap().name, "stack_n4");
+        assert_eq!(m.stack_variant(5).unwrap().name, "stack_n16");
+        // Over the largest: fall back to the largest.
+        assert_eq!(m.stack_variant(99).unwrap().name, "stack_n16");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        let dir = tmp("bad");
+        write_manifest(&dir, "stack\tonly_two_fields\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "stack\tx\tx.hlo.txt\tn=abc\n");
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,268 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file(artifacts/*.hlo.txt)` → compile →
+//! execute. Executables are compiled once per artifact and cached; the
+//! hot path is literal marshaling + `execute`.
+//!
+//! Python never runs here — the HLO text was produced once at build time
+//! by `python/compile/aot.py` (see that file for why HLO *text* is the
+//! interchange format).
+
+pub mod artifact;
+
+pub use artifact::{artifacts_dir, Artifact, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A stacking request: raw int16 cutouts plus per-image calibration.
+#[derive(Debug, Clone)]
+pub struct StackRequest {
+    /// `[n, h, w]` raw pixels, row-major.
+    pub raw: Vec<i16>,
+    /// `[n]` sky levels.
+    pub sky: Vec<f32>,
+    /// `[n]` calibration gains.
+    pub cal: Vec<f32>,
+    /// `[n, 2]` (dx, dy) sub-pixel shifts.
+    pub shifts: Vec<f32>,
+    /// `[n]` coadd weights (0 = padded slot).
+    pub weights: Vec<f32>,
+    /// Stack depth n (images actually present, before padding).
+    pub depth: usize,
+}
+
+impl StackRequest {
+    /// Validate the request against an (n, h, w) variant shape and pad
+    /// it to exactly `n` slots with zero weights.
+    fn padded(&self, n: usize, h: usize, w: usize) -> Result<StackRequest> {
+        let d = self.depth;
+        if d == 0 || d > n {
+            return Err(Error::Runtime(format!("depth {d} not in 1..={n}")));
+        }
+        let px = h * w;
+        if self.raw.len() != d * px
+            || self.sky.len() != d
+            || self.cal.len() != d
+            || self.shifts.len() != d * 2
+            || self.weights.len() != d
+        {
+            return Err(Error::Runtime(format!(
+                "stack request shape mismatch: depth {d}, roi {h}x{w}, raw {} sky {} cal {} shifts {} weights {}",
+                self.raw.len(), self.sky.len(), self.cal.len(), self.shifts.len(), self.weights.len()
+            )));
+        }
+        let mut out = self.clone();
+        out.raw.resize(n * px, 0);
+        out.sky.resize(n, 0.0);
+        out.cal.resize(n, 0.0);
+        out.shifts.resize(n * 2, 0.0);
+        out.weights.resize(n, 0.0);
+        Ok(out)
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+    h: usize,
+    w: usize,
+}
+
+struct CompiledRadec {
+    exe: xla::PjRtLoadedExecutable,
+    m: usize,
+}
+
+/// The PJRT engine: one CPU client + compiled executables per artifact.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    stacks: HashMap<String, Compiled>,
+    radec: Option<CompiledRadec>,
+}
+
+impl PjrtEngine {
+    /// Load the manifest and compile every stacking artifact eagerly, so
+    /// the request path never compiles.
+    pub fn load(dir: &Path) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut stacks = HashMap::new();
+        for a in manifest.of_kind("stack") {
+            let proto = xla::HloModuleProto::from_text_file(
+                a.path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            stacks.insert(
+                a.name.clone(),
+                Compiled {
+                    exe,
+                    n: a.param("n")? as usize,
+                    h: a.param("h")? as usize,
+                    w: a.param("w")? as usize,
+                },
+            );
+        }
+        if stacks.is_empty() {
+            return Err(Error::Artifact(
+                "manifest has no stack artifacts — run `make artifacts`".into(),
+            ));
+        }
+        // The coordinate-transform artifact (the paper's radec2xy phase).
+        let mut radec = None;
+        if let Some(a) = manifest.of_kind("radec2xy").next() {
+            let proto = xla::HloModuleProto::from_text_file(
+                a.path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            radec = Some(CompiledRadec {
+                exe: client.compile(&comp)?,
+                m: a.param("m")? as usize,
+            });
+        }
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            stacks,
+            radec,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<PjrtEngine> {
+        Self::load(&artifacts_dir())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available stack variant depths, ascending.
+    pub fn stack_depths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.stacks.values().map(|c| c.n).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// ROI geometry (h, w) of the stacking artifacts.
+    pub fn roi_shape(&self) -> (usize, usize) {
+        let c = self.stacks.values().next().expect("nonempty by load()");
+        (c.h, c.w)
+    }
+
+    /// Convert up to `m` (ra, dec) coordinates (radians) to tangent-plane
+    /// pixel (x, y) via the `radec2xy` artifact — the paper's coordinate
+    /// phase, executed before any image I/O. Inputs beyond the artifact's
+    /// batch size are processed in chunks; short batches are padded (the
+    /// projection is elementwise, so padding is inert).
+    pub fn radec2xy(
+        &self,
+        ra: &[f32],
+        dec: &[f32],
+        ra0: f32,
+        dec0: f32,
+        scale: f32,
+    ) -> Result<Vec<(f32, f32)>> {
+        if ra.len() != dec.len() {
+            return Err(Error::Runtime(format!(
+                "ra/dec length mismatch: {} vs {}",
+                ra.len(),
+                dec.len()
+            )));
+        }
+        let compiled = self
+            .radec
+            .as_ref()
+            .ok_or_else(|| Error::Artifact("no radec2xy artifact in manifest".into()))?;
+        let m = compiled.m;
+        let mut out = Vec::with_capacity(ra.len());
+        for (ra_chunk, dec_chunk) in ra.chunks(m).zip(dec.chunks(m)) {
+            let n = ra_chunk.len();
+            let mut ra_pad = ra_chunk.to_vec();
+            let mut dec_pad = dec_chunk.to_vec();
+            ra_pad.resize(m, 0.0);
+            dec_pad.resize(m, 0.0);
+            let result = compiled.exe.execute::<xla::Literal>(&[
+                xla::Literal::vec1(&ra_pad),
+                xla::Literal::vec1(&dec_pad),
+                xla::Literal::scalar(ra0),
+                xla::Literal::scalar(dec0),
+                xla::Literal::scalar(scale),
+            ])?[0][0]
+                .to_literal_sync()?;
+            let xy = result.to_tuple1()?.to_vec::<f32>()?;
+            for i in 0..n {
+                out.push((xy[i * 2], xy[i * 2 + 1]));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute one stacking: picks the smallest variant that fits the
+    /// request depth, pads, marshals, runs on PJRT, returns the `[h*w]`
+    /// stacked image.
+    pub fn stack(&self, req: &StackRequest) -> Result<Vec<f32>> {
+        let variant = self.manifest.stack_variant(req.depth as u32)?;
+        let compiled = self
+            .stacks
+            .get(&variant.name)
+            .ok_or_else(|| Error::Artifact(format!("uncompiled variant {}", variant.name)))?;
+        let (n, h, w) = (compiled.n, compiled.h, compiled.w);
+        let padded = req.padded(n, h, w)?;
+
+        // Raw int16 pixels go in as an S16 literal built from bytes (the
+        // xla crate has no i16 NativeType, but supports S16 array data).
+        let raw_bytes: Vec<u8> = padded.raw.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let raw = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S16,
+            &[n, h, w],
+            &raw_bytes,
+        )?;
+        let sky = xla::Literal::vec1(&padded.sky);
+        let cal = xla::Literal::vec1(&padded.cal);
+        let shifts = xla::Literal::vec1(&padded.shifts).reshape(&[n as i64, 2])?;
+        let weights = xla::Literal::vec1(&padded.weights);
+
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&[raw, sky, cal, shifts, weights])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_validates_shapes() {
+        let req = StackRequest {
+            raw: vec![0; 2 * 4],
+            sky: vec![0.0; 2],
+            cal: vec![1.0; 2],
+            shifts: vec![0.0; 4],
+            weights: vec![1.0; 2],
+            depth: 2,
+        };
+        let p = req.padded(4, 2, 2).unwrap();
+        assert_eq!(p.raw.len(), 16);
+        assert_eq!(p.weights, vec![1.0, 1.0, 0.0, 0.0]);
+        assert!(req.padded(1, 2, 2).is_err(), "depth beyond variant");
+        let mut bad = req.clone();
+        bad.sky.pop();
+        assert!(bad.padded(4, 2, 2).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Scheduling decision types and the read-only view policies consume.
+
+use std::collections::HashMap;
+
+use crate::coordinator::task::Task;
+use crate::index::central::{CentralIndex, ExecutorId};
+use crate::storage::object::{Catalog, ObjectId};
+
+/// Per-object location hints shipped with a dispatched task, so the
+/// executor can fetch from a peer cache without further index lookups
+/// (§3.2.2: "the centralized scheduler includes the necessary information
+/// to locate needed data ... without further lookups incurred at the
+/// executors").
+pub type LocationHints = HashMap<ObjectId, Vec<ExecutorId>>;
+
+/// What the dispatcher decided to do with one task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Send the task to `executor` now, with the given data-location hints
+    /// (empty for location-unaware policies).
+    Dispatch {
+        /// Chosen executor.
+        executor: ExecutorId,
+        /// Object → peer locations map (may be empty).
+        hints: LocationHints,
+    },
+    /// The best executor is busy; hold the task until it reports back
+    /// (max-cache-hit only).
+    Delay {
+        /// The busy executor worth waiting for.
+        executor: ExecutorId,
+    },
+    /// No executor can take the task right now (all busy / none allocated).
+    NoExecutor,
+}
+
+/// Read-only scheduler inputs.
+pub struct SchedView<'a> {
+    /// Idle executors, in ascending id order (determinism).
+    pub idle: &'a [ExecutorId],
+    /// All registered executors (idle + busy), ascending.
+    pub all: &'a [ExecutorId],
+    /// The central cache-location index.
+    pub index: &'a CentralIndex,
+    /// Object size catalog (policies weigh *bytes*, not object counts,
+    /// when sizes differ; with uniform sizes this reduces to counts).
+    pub catalog: &'a Catalog,
+}
+
+impl<'a> SchedView<'a> {
+    /// Total cached bytes executor `e` holds out of `task`'s needs.
+    pub fn cached_bytes(&self, task: &Task, e: ExecutorId) -> u64 {
+        task.inputs
+            .iter()
+            .filter(|&&obj| self.index.holds(e, obj))
+            .map(|&obj| self.catalog.size(obj).unwrap_or(1))
+            .sum()
+    }
+
+    /// Build location hints for every input of `task`.
+    pub fn hints_for(&self, task: &Task) -> LocationHints {
+        let mut hints = LocationHints::new();
+        for &obj in &task.inputs {
+            let locs = self.index.locations(obj);
+            if !locs.is_empty() {
+                hints.insert(obj, locs.to_vec());
+            }
+        }
+        hints
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+
+    fn setup() -> (CentralIndex, Catalog) {
+        let mut idx = CentralIndex::new();
+        let mut cat = Catalog::new();
+        cat.insert(ObjectId(1), 100);
+        cat.insert(ObjectId(2), 50);
+        cat.insert(ObjectId(3), 10);
+        idx.insert(ObjectId(1), 0);
+        idx.insert(ObjectId(2), 0);
+        idx.insert(ObjectId(2), 1);
+        (idx, cat)
+    }
+
+    #[test]
+    fn cached_bytes_weighs_sizes() {
+        let (idx, cat) = setup();
+        let view = SchedView {
+            idle: &[0, 1],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1), ObjectId(2), ObjectId(3)]);
+        assert_eq!(view.cached_bytes(&task, 0), 150);
+        assert_eq!(view.cached_bytes(&task, 1), 50);
+        assert_eq!(view.cached_bytes(&task, 9), 0);
+    }
+
+    #[test]
+    fn hints_cover_only_located_objects() {
+        let (idx, cat) = setup();
+        let view = SchedView {
+            idle: &[0],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1), ObjectId(3)]);
+        let hints = view.hints_for(&task);
+        assert_eq!(hints.get(&ObjectId(1)), Some(&vec![0]));
+        assert!(!hints.contains_key(&ObjectId(3)));
+    }
+}

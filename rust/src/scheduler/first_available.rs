@@ -1,0 +1,64 @@
+//! `first-available`: location-unaware dispatch, no hints.
+//!
+//! "ignores data location information ... simply chooses the first
+//! available executor, and furthermore provides the executor with no
+//! information concerning the location of data objects needed by the
+//! task. Thus, the executor must fetch all data needed by a task from
+//! persistent storage on every access."
+
+use super::decision::{Decision, LocationHints, SchedView};
+use crate::coordinator::task::Task;
+
+/// Decide per the first-available policy.
+pub fn decide(_task: &Task, view: &SchedView) -> Decision {
+    match view.idle.first() {
+        Some(&executor) => Decision::Dispatch {
+            executor,
+            hints: LocationHints::new(),
+        },
+        None => Decision::NoExecutor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+    use crate::index::central::CentralIndex;
+    use crate::storage::object::{Catalog, ObjectId};
+
+    #[test]
+    fn picks_first_idle_without_hints() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 5); // data lives on 5, but policy ignores it
+        let cat = Catalog::new();
+        let view = SchedView {
+            idle: &[2, 5],
+            all: &[0, 1, 2, 5],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, hints } => {
+                assert_eq!(executor, 2);
+                assert!(hints.is_empty(), "first-available must not ship hints");
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_idle_executor() {
+        let idx = CentralIndex::new();
+        let cat = Catalog::new();
+        let view = SchedView {
+            idle: &[],
+            all: &[0],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![]);
+        assert_eq!(decide(&task, &view), Decision::NoExecutor);
+    }
+}

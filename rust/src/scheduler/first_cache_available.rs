@@ -1,0 +1,50 @@
+//! `first-cache-available`: location-unaware executor choice, but the
+//! dispatcher performs index lookups and ships location hints with the
+//! task, so the executor can fetch from its own cache or a peer instead
+//! of persistent storage.
+
+use super::decision::{Decision, SchedView};
+use crate::coordinator::task::Task;
+
+/// Decide per the first-cache-available policy.
+pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    match view.idle.first() {
+        Some(&executor) => Decision::Dispatch {
+            executor,
+            hints: view.hints_for(task),
+        },
+        None => Decision::NoExecutor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+    use crate::index::central::CentralIndex;
+    use crate::storage::object::{Catalog, ObjectId};
+
+    #[test]
+    fn ships_hints_but_keeps_fifo_choice() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 5);
+        let mut cat = Catalog::new();
+        cat.insert(ObjectId(1), 10);
+        let view = SchedView {
+            idle: &[2, 5],
+            all: &[2, 5],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, hints } => {
+                // Still the *first* idle executor, not the data-holder...
+                assert_eq!(executor, 2);
+                // ...but with the peer location attached.
+                assert_eq!(hints.get(&ObjectId(1)), Some(&vec![5]));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+}

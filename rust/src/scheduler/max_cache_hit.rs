@@ -1,0 +1,110 @@
+//! `max-cache-hit`: dispatch to the executor holding the most needed
+//! data, **even if busy** — in that case dispatch is delayed until it
+//! becomes available. Maximizes cache reuse at the risk of load imbalance
+//! (§3.2.2).
+
+use super::decision::{Decision, SchedView};
+use crate::coordinator::task::Task;
+
+/// Decide per the max-cache-hit policy.
+pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    // Best over ALL executors (busy included), by cached bytes; ties go to
+    // the lower id for determinism.
+    let best = view
+        .all
+        .iter()
+        .map(|&e| (view.cached_bytes(task, e), e))
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
+        .map(|(bytes, e)| (e, bytes));
+
+    match best {
+        Some((e, bytes)) if bytes > 0 => {
+            if view.idle.binary_search(&e).is_ok() {
+                Decision::Dispatch {
+                    executor: e,
+                    hints: view.hints_for(task),
+                }
+            } else {
+                Decision::Delay { executor: e }
+            }
+        }
+        // Nothing cached anywhere: fall back to first idle executor.
+        _ => match view.idle.first() {
+            Some(&executor) => Decision::Dispatch {
+                executor,
+                hints: view.hints_for(task),
+            },
+            None => Decision::NoExecutor,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+    use crate::index::central::CentralIndex;
+    use crate::storage::object::{Catalog, ObjectId};
+
+    fn catalog() -> Catalog {
+        let mut cat = Catalog::new();
+        for i in 1..=4 {
+            cat.insert(ObjectId(i), 10);
+        }
+        cat
+    }
+
+    #[test]
+    fn waits_for_busy_best_executor() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 3);
+        idx.insert(ObjectId(2), 3); // executor 3 holds both inputs...
+        let cat = catalog();
+        let view = SchedView {
+            idle: &[0, 1], // ...but is busy
+            all: &[0, 1, 3],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1), ObjectId(2)]);
+        assert_eq!(decide(&task, &view), Decision::Delay { executor: 3 });
+    }
+
+    #[test]
+    fn dispatches_to_best_when_idle() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 1);
+        let cat = catalog();
+        let view = SchedView {
+            idle: &[0, 1],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, hints } => {
+                assert_eq!(executor, 1);
+                assert_eq!(hints.get(&ObjectId(1)), Some(&vec![1]));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn falls_back_to_first_idle_when_nothing_cached() {
+        let idx = CentralIndex::new();
+        let cat = catalog();
+        let view = SchedView {
+            idle: &[4, 7],
+            all: &[4, 7],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, .. } => assert_eq!(executor, 4),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+}

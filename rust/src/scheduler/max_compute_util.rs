@@ -1,0 +1,109 @@
+//! `max-compute-util`: always dispatch to an *available* executor; among
+//! the idle candidates pick the one holding the most needed data. Keeps
+//! CPUs busy (no delays) while still exploiting locality (§3.2.2). This
+//! is the policy the paper uses for all §5 data-diffusion experiments.
+
+use super::decision::{Decision, SchedView};
+use crate::coordinator::task::Task;
+
+/// Decide per the max-compute-util policy.
+pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    let best = view
+        .idle
+        .iter()
+        .map(|&e| (view.cached_bytes(task, e), e))
+        // Max bytes; ties to the lower executor id for determinism.
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+
+    match best {
+        Some((_, executor)) => Decision::Dispatch {
+            executor,
+            hints: view.hints_for(task),
+        },
+        None => Decision::NoExecutor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+    use crate::index::central::CentralIndex;
+    use crate::storage::object::{Catalog, ObjectId};
+
+    #[test]
+    fn prefers_idle_executor_with_most_bytes() {
+        let mut idx = CentralIndex::new();
+        let mut cat = Catalog::new();
+        cat.insert(ObjectId(1), 100);
+        cat.insert(ObjectId(2), 1);
+        idx.insert(ObjectId(1), 2); // 100 bytes on exec 2
+        idx.insert(ObjectId(2), 0); // 1 byte on exec 0
+        let view = SchedView {
+            idle: &[0, 2],
+            all: &[0, 2],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1), ObjectId(2)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, .. } => assert_eq!(executor, 2),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn never_delays_for_busy_holder() {
+        let mut idx = CentralIndex::new();
+        let mut cat = Catalog::new();
+        cat.insert(ObjectId(1), 100);
+        idx.insert(ObjectId(1), 9); // best holder is NOT idle
+        let view = SchedView {
+            idle: &[0],
+            all: &[0, 9],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            // Must dispatch to an idle executor (0), with a hint pointing
+            // at executor 9's cache for a peer fetch.
+            Decision::Dispatch { executor, hints } => {
+                assert_eq!(executor, 0);
+                assert_eq!(hints.get(&ObjectId(1)), Some(&vec![9]));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_idle_means_no_executor() {
+        let idx = CentralIndex::new();
+        let cat = Catalog::new();
+        let view = SchedView {
+            idle: &[],
+            all: &[1, 2],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![]);
+        assert_eq!(decide(&task, &view), Decision::NoExecutor);
+    }
+
+    #[test]
+    fn deterministic_tie_break_low_id() {
+        let idx = CentralIndex::new();
+        let cat = Catalog::new();
+        let view = SchedView {
+            idle: &[3, 5, 8],
+            all: &[3, 5, 8],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, .. } => assert_eq!(executor, 3),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Data-aware task dispatch (§3.2.2).
+//!
+//! Four policies, exactly as the paper defines them:
+//!
+//! * [`DispatchPolicy::FirstAvailable`] — ignore data location entirely;
+//!   the executor gets no hints and must read everything from persistent
+//!   storage.
+//! * [`DispatchPolicy::FirstCacheAvailable`] — same executor choice, but
+//!   the dispatcher looks up each needed object and ships location hints,
+//!   so the executor can fetch from its own cache / a peer / GPFS.
+//! * [`DispatchPolicy::MaxCacheHit`] — send the task to the executor with
+//!   the most needed data **even if it is busy** (dispatch is delayed
+//!   until it frees up) — maximal cache reuse, possible load imbalance.
+//! * [`DispatchPolicy::MaxComputeUtil`] — among **available** executors,
+//!   pick the one with the most needed bytes; never delays.
+//!
+//! The decision function is pure — it reads a [`SchedView`] and returns a
+//! [`Decision`] — so it is shared verbatim by the simulated and live
+//! drivers and is directly property-testable.
+
+pub mod decision;
+pub mod first_available;
+pub mod first_cache_available;
+pub mod max_cache_hit;
+pub mod max_compute_util;
+pub mod queue;
+
+pub use decision::{Decision, LocationHints, SchedView};
+pub use queue::WaitQueue;
+
+use crate::coordinator::task::Task;
+
+/// Task dispatch policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Location-unaware, no hints (configuration (3) in §4.3).
+    FirstAvailable,
+    /// Location-unaware choice with location hints (configuration (5)/(6)).
+    FirstCacheAvailable,
+    /// Most cached data wins, may delay behind a busy executor.
+    MaxCacheHit,
+    /// Most cached data among idle executors (configuration (7)/(8)).
+    MaxComputeUtil,
+}
+
+impl DispatchPolicy {
+    /// Parse from config/CLI text (paper naming, kebab-case).
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "first-available" => Some(DispatchPolicy::FirstAvailable),
+            "first-cache-available" => Some(DispatchPolicy::FirstCacheAvailable),
+            "max-cache-hit" => Some(DispatchPolicy::MaxCacheHit),
+            "max-compute-util" => Some(DispatchPolicy::MaxComputeUtil),
+            _ => None,
+        }
+    }
+
+    /// Display label (paper naming).
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::FirstAvailable => "first-available",
+            DispatchPolicy::FirstCacheAvailable => "first-cache-available",
+            DispatchPolicy::MaxCacheHit => "max-cache-hit",
+            DispatchPolicy::MaxComputeUtil => "max-compute-util",
+        }
+    }
+
+    /// Whether this policy consults the central index at all.
+    pub fn is_data_aware(&self) -> bool {
+        !matches!(self, DispatchPolicy::FirstAvailable)
+    }
+
+    /// Make a dispatch decision for `task` given the current view.
+    pub fn decide(&self, task: &Task, view: &SchedView) -> Decision {
+        match self {
+            DispatchPolicy::FirstAvailable => first_available::decide(task, view),
+            DispatchPolicy::FirstCacheAvailable => first_cache_available::decide(task, view),
+            DispatchPolicy::MaxCacheHit => max_cache_hit::decide(task, view),
+            DispatchPolicy::MaxComputeUtil => max_compute_util::decide(task, view),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_names() {
+        assert_eq!(
+            DispatchPolicy::parse("first-available"),
+            Some(DispatchPolicy::FirstAvailable)
+        );
+        assert_eq!(
+            DispatchPolicy::parse("max_compute_util"),
+            Some(DispatchPolicy::MaxComputeUtil)
+        );
+        assert_eq!(DispatchPolicy::parse("round-robin"), None);
+    }
+
+    #[test]
+    fn data_awareness_classification() {
+        assert!(!DispatchPolicy::FirstAvailable.is_data_aware());
+        assert!(DispatchPolicy::FirstCacheAvailable.is_data_aware());
+        assert!(DispatchPolicy::MaxCacheHit.is_data_aware());
+        assert!(DispatchPolicy::MaxComputeUtil.is_data_aware());
+    }
+}

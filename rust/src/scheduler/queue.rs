@@ -1,0 +1,158 @@
+//! The dispatcher's wait queue, including max-cache-hit delayed tasks.
+//!
+//! Plain FIFO for incoming tasks, plus a parking area for tasks that
+//! max-cache-hit chose to delay behind a specific busy executor. When
+//! that executor reports back, its parked tasks re-enter consideration
+//! ahead of the FIFO (they were admitted earlier).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::task::Task;
+use crate::index::central::ExecutorId;
+
+/// Wait queue with executor-parked delays.
+#[derive(Debug, Default)]
+pub struct WaitQueue {
+    fifo: VecDeque<Task>,
+    parked: HashMap<ExecutorId, VecDeque<Task>>,
+    parked_count: usize,
+    peak: usize,
+}
+
+impl WaitQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        WaitQueue::default()
+    }
+
+    /// Enqueue a freshly submitted task.
+    pub fn push(&mut self, task: Task) {
+        self.fifo.push_back(task);
+        self.peak = self.peak.max(self.len());
+    }
+
+    /// Put a task back at the *front* (a dispatch attempt found no
+    /// executor; preserves FIFO order for the next attempt).
+    pub fn push_front(&mut self, task: Task) {
+        self.fifo.push_front(task);
+    }
+
+    /// Park a task waiting for a specific busy executor.
+    pub fn park(&mut self, executor: ExecutorId, task: Task) {
+        self.parked.entry(executor).or_default().push_back(task);
+        self.parked_count += 1;
+        self.peak = self.peak.max(self.len());
+    }
+
+    /// Executor became available: release its parked tasks (FIFO among
+    /// themselves) to the front of the queue.
+    pub fn release(&mut self, executor: ExecutorId) {
+        if let Some(mut tasks) = self.parked.remove(&executor) {
+            self.parked_count -= tasks.len();
+            while let Some(t) = tasks.pop_back() {
+                self.fifo.push_front(t);
+            }
+        }
+    }
+
+    /// Next task to consider for dispatch.
+    pub fn pop(&mut self) -> Option<Task> {
+        self.fifo.pop_front()
+    }
+
+    /// Iterate the ready (non-parked) tasks in FIFO order, for the
+    /// data-aware matcher's window scan.
+    pub fn iter_ready(&self) -> impl Iterator<Item = &Task> {
+        self.fifo.iter()
+    }
+
+    /// Remove the ready task at FIFO position `pos` (0 = front).
+    pub fn remove_ready_at(&mut self, pos: usize) -> Option<Task> {
+        self.fifo.remove(pos)
+    }
+
+    /// Tasks waiting (FIFO + parked).
+    pub fn len(&self) -> usize {
+        self.fifo.len() + self.parked_count
+    }
+
+    /// Whether nothing is waiting anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tasks immediately dispatchable (not parked).
+    pub fn ready_len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// High-water mark (drives the provisioner).
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Task, TaskId};
+
+    fn task(id: u64) -> Task {
+        Task::with_inputs(TaskId(id), vec![])
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = WaitQueue::new();
+        q.push(task(1));
+        q.push(task(2));
+        assert_eq!(q.pop().unwrap().id, TaskId(1));
+        assert_eq!(q.pop().unwrap().id, TaskId(2));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn park_and_release_preserves_order() {
+        let mut q = WaitQueue::new();
+        q.push(task(10));
+        q.park(7, task(1));
+        q.park(7, task(2));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.ready_len(), 1);
+        q.release(7);
+        // Parked tasks jump the FIFO, in their own admission order.
+        assert_eq!(q.pop().unwrap().id, TaskId(1));
+        assert_eq!(q.pop().unwrap().id, TaskId(2));
+        assert_eq!(q.pop().unwrap().id, TaskId(10));
+    }
+
+    #[test]
+    fn push_front_requeues() {
+        let mut q = WaitQueue::new();
+        q.push(task(1));
+        q.push(task(2));
+        let t = q.pop().unwrap();
+        q.push_front(t);
+        assert_eq!(q.pop().unwrap().id, TaskId(1));
+    }
+
+    #[test]
+    fn release_unknown_executor_is_noop() {
+        let mut q = WaitQueue::new();
+        q.release(99);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut q = WaitQueue::new();
+        for i in 0..5 {
+            q.push(task(i));
+        }
+        for _ in 0..5 {
+            q.pop();
+        }
+        assert_eq!(q.peak(), 5);
+        assert!(q.is_empty());
+    }
+}

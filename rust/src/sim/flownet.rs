@@ -1,0 +1,432 @@
+//! Fluid flow network with max-min fair sharing.
+//!
+//! Models every byte movement in the simulated system. A **resource** is a
+//! capacity in bits/sec (GPFS aggregate read pool, a node's NIC-in, a
+//! node's disk, ...). A **flow** is a transfer of `bytes` across a *set*
+//! of resources; its instantaneous rate is bound by all of them.
+//!
+//! Rates follow **max-min fairness** computed by progressive filling:
+//! repeatedly find the bottleneck resource (smallest fair share), freeze
+//! the rates of the flows it carries, remove them, repeat. This is the
+//! standard fluid approximation for TCP-like sharing and is what makes
+//! GPFS saturate at its aggregate cap while local-disk flows scale
+//! linearly (each node's disk is a private resource).
+//!
+//! The driver couples this to the DES by asking for the next completion
+//! time after every membership change and re-scheduling its completion
+//! event (with a version counter to invalidate stale events).
+//!
+//! Storage is a **slab** (`Vec<Option<Flow>>` + free list): flow churn is
+//! the hottest operation in big simulations and profiling showed hash
+//! lookups inside the rate recomputation dominating wall time. Slab
+//! indexing is branch-cheap and the iteration order is deterministic.
+
+/// Identifies a capacity resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub u32);
+
+/// Identifies an active flow: `(generation << 32) | slot`. Generations
+/// make stale ids detectable after slot reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+impl FlowId {
+    #[inline]
+    fn slot(self) -> usize {
+        (self.0 & 0xFFFF_FFFF) as usize
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Resource {
+    capacity_bps: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    id: FlowId,
+    resources: Vec<ResourceId>,
+    remaining_bits: f64,
+    rate_bps: f64,
+}
+
+/// The flow network. Time is advanced explicitly by the caller.
+#[derive(Debug, Default)]
+pub struct FlowNetwork {
+    resources: Vec<Resource>,
+    slots: Vec<Option<Flow>>,
+    free: Vec<u32>,
+    active: usize,
+    next_gen: u32,
+    last_advance: f64,
+    rates_dirty: bool,
+    // Scratch buffers reused across recomputes.
+    scratch_cap: Vec<f64>,
+    scratch_count: Vec<u32>,
+    scratch_unfixed: Vec<u32>,
+    scratch_loaded: Vec<u32>,
+}
+
+impl FlowNetwork {
+    /// Empty network.
+    pub fn new() -> Self {
+        FlowNetwork::default()
+    }
+
+    /// Register a resource with the given capacity (bits/sec).
+    pub fn add_resource(&mut self, capacity_bps: f64) -> ResourceId {
+        assert!(capacity_bps > 0.0, "resource capacity must be positive");
+        self.resources.push(Resource { capacity_bps });
+        ResourceId((self.resources.len() - 1) as u32)
+    }
+
+    /// Change a resource's capacity (e.g. provisioned bandwidth changes).
+    pub fn set_capacity(&mut self, r: ResourceId, capacity_bps: f64) {
+        self.resources[r.0 as usize].capacity_bps = capacity_bps;
+        self.rates_dirty = true;
+    }
+
+    /// Start a flow of `bytes` across `resources` at time `now`. A flow
+    /// must cross at least one resource.
+    pub fn start_flow(&mut self, now: f64, resources: Vec<ResourceId>, bytes: u64) -> FlowId {
+        assert!(!resources.is_empty(), "flow needs at least one resource");
+        self.advance_to(now);
+        self.next_gen = self.next_gen.wrapping_add(1);
+        let slot = match self.free.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        let id = FlowId(((self.next_gen as u64) << 32) | slot as u64);
+        self.slots[slot] = Some(Flow {
+            id,
+            resources,
+            // A zero-byte flow (1-byte files exist in the paper's sweeps
+            // once metadata dominates) still completes immediately; keep a
+            // floor of one bit to avoid NaN rates.
+            remaining_bits: (bytes as f64 * 8.0).max(1e-9),
+            rate_bps: 0.0,
+        });
+        self.active += 1;
+        self.rates_dirty = true;
+        id
+    }
+
+    #[inline]
+    fn get(&self, id: FlowId) -> Option<&Flow> {
+        match self.slots.get(id.slot()) {
+            Some(Some(f)) if f.id == id => Some(f),
+            _ => None,
+        }
+    }
+
+    /// Progress all flows to time `now` at their current fair rates.
+    pub fn advance_to(&mut self, now: f64) {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let dt = now - self.last_advance;
+        if dt > 0.0 {
+            for flow in self.slots.iter_mut().flatten() {
+                flow.remaining_bits = (flow.remaining_bits - flow.rate_bps * dt).max(0.0);
+            }
+        }
+        if now > self.last_advance {
+            self.last_advance = now;
+        }
+    }
+
+    /// The earliest (time, flow) completion given current rates, or None
+    /// if no flows are active. Call after `advance_to(now)`.
+    pub fn next_completion(&mut self, now: f64) -> Option<(f64, FlowId)> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let mut best: Option<(f64, FlowId)> = None;
+        for flow in self.slots.iter().flatten() {
+            if flow.rate_bps <= 0.0 {
+                continue;
+            }
+            let t = now + flow.remaining_bits / flow.rate_bps;
+            match best {
+                // Tie-break on FlowId for determinism.
+                Some((bt, bid)) if t > bt || (t == bt && flow.id.0 > bid.0) => {}
+                _ => best = Some((t, flow.id)),
+            }
+        }
+        best
+    }
+
+    /// Remove a completed (or cancelled) flow. Returns remaining bytes
+    /// (0 for a clean completion).
+    pub fn remove_flow(&mut self, now: f64, id: FlowId) -> f64 {
+        self.advance_to(now);
+        let slot = id.slot();
+        let flow = match self.slots.get_mut(slot) {
+            Some(opt @ Some(_)) if opt.as_ref().unwrap().id == id => opt.take().unwrap(),
+            _ => panic!("unknown flow {id:?}"),
+        };
+        self.free.push(slot as u32);
+        self.active -= 1;
+        self.rates_dirty = true;
+        flow.remaining_bits / 8.0
+    }
+
+    /// Instantaneous rate of a flow (bits/sec), for metrics.
+    pub fn rate(&mut self, id: FlowId) -> f64 {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        self.get(id).map(|f| f.rate_bps).unwrap_or(0.0)
+    }
+
+    /// Resource set of a flow (testing / introspection).
+    pub fn flow_resources(&self, id: FlowId) -> &[ResourceId] {
+        self.get(id).map(|f| f.resources.as_slice()).unwrap_or(&[])
+    }
+
+    /// Capacity of a resource (testing / introspection).
+    pub fn capacity(&self, r: ResourceId) -> f64 {
+        self.resources[r.0 as usize].capacity_bps
+    }
+
+    /// Number of active flows.
+    pub fn active_flows(&self) -> usize {
+        self.active
+    }
+
+    /// Max-min fair rates by progressive filling.
+    ///
+    /// O(levels · (R + F)) over slab scans — no hashing, no allocation
+    /// (scratch buffers are reused), no sort (slab order is already
+    /// deterministic).
+    fn recompute_rates(&mut self) {
+        self.rates_dirty = false;
+        let nr = self.resources.len();
+        self.scratch_cap.clear();
+        self.scratch_cap
+            .extend(self.resources.iter().map(|r| r.capacity_bps));
+        self.scratch_count.clear();
+        self.scratch_count.resize(nr, 0);
+        self.scratch_unfixed.clear();
+        for (slot, flow) in self.slots.iter().enumerate() {
+            if let Some(flow) = flow {
+                self.scratch_unfixed.push(slot as u32);
+                for r in &flow.resources {
+                    self.scratch_count[r.0 as usize] += 1;
+                }
+            }
+        }
+        let cap = &mut self.scratch_cap;
+        let count = &mut self.scratch_count;
+        // Only resources actually carrying flows participate; scanning the
+        // full resource vector per level is wasted work on big testbeds
+        // (4 resources per node × 64 nodes, few of them loaded at once).
+        self.scratch_loaded.clear();
+        for i in 0..nr {
+            if count[i] > 0 {
+                self.scratch_loaded.push(i as u32);
+            }
+        }
+        let mut n_unfixed = self.scratch_unfixed.len();
+        while n_unfixed > 0 {
+            // Bottleneck: min fair share among loaded resources.
+            let mut share = f64::INFINITY;
+            let mut keep_loaded = 0usize;
+            for k in 0..self.scratch_loaded.len() {
+                let i = self.scratch_loaded[k] as usize;
+                if count[i] > 0 {
+                    self.scratch_loaded[keep_loaded] = i as u32;
+                    keep_loaded += 1;
+                    let s = cap[i] / count[i] as f64;
+                    if s < share {
+                        share = s;
+                    }
+                }
+            }
+            self.scratch_loaded.truncate(keep_loaded);
+            if !share.is_finite() {
+                for &slot in &self.scratch_unfixed[..n_unfixed] {
+                    self.slots[slot as usize].as_mut().unwrap().rate_bps = 0.0;
+                }
+                break;
+            }
+            // Freeze flows crossing a bottleneck resource at `share`,
+            // compacting survivors to the front of the scratch list.
+            let mut keep = 0usize;
+            for k in 0..n_unfixed {
+                let slot = self.scratch_unfixed[k] as usize;
+                let flow = self.slots[slot].as_mut().unwrap();
+                let bottlenecked = flow.resources.iter().any(|r| {
+                    let i = r.0 as usize;
+                    count[i] > 0 && (cap[i] / count[i] as f64) <= share + 1e-9
+                });
+                if bottlenecked {
+                    flow.rate_bps = share;
+                    for r in &flow.resources {
+                        let i = r.0 as usize;
+                        cap[i] -= share;
+                        count[i] -= 1;
+                    }
+                } else {
+                    self.scratch_unfixed[keep] = slot as u32;
+                    keep += 1;
+                }
+            }
+            debug_assert!(keep < n_unfixed, "progressive filling must shrink");
+            n_unfixed = keep;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-6;
+
+    #[test]
+    fn single_flow_gets_full_capacity() {
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(8e6); // 1 MB/s
+        let f = net.start_flow(0.0, vec![r], 1_000_000);
+        let (t, id) = net.next_completion(0.0).unwrap();
+        assert_eq!(id, f);
+        assert!((t - 1.0).abs() < EPS, "t={t}");
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(8e6);
+        let _a = net.start_flow(0.0, vec![r], 1_000_000);
+        let _b = net.start_flow(0.0, vec![r], 1_000_000);
+        // Each gets half: 2 s for both.
+        let (t, _) = net.next_completion(0.0).unwrap();
+        assert!((t - 2.0).abs() < EPS, "t={t}");
+    }
+
+    #[test]
+    fn flow_bound_by_tightest_resource() {
+        let mut net = FlowNetwork::new();
+        let wide = net.add_resource(80e6);
+        let narrow = net.add_resource(8e6);
+        let f = net.start_flow(0.0, vec![wide, narrow], 1_000_000);
+        assert!((net.rate(f) - 8e6).abs() < EPS);
+    }
+
+    #[test]
+    fn max_min_textbook_example() {
+        // Two resources: R0 cap 10, R1 cap 4 (bits/s).
+        // Flow A uses {R0}, flow B uses {R0, R1}, flow C uses {R1}.
+        // Progressive filling: R1 share = 2 -> B=C=2; then A gets 10-2=8.
+        let mut net = FlowNetwork::new();
+        let r0 = net.add_resource(10.0);
+        let r1 = net.add_resource(4.0);
+        let a = net.start_flow(0.0, vec![r0], 1000);
+        let b = net.start_flow(0.0, vec![r0, r1], 1000);
+        let c = net.start_flow(0.0, vec![r1], 1000);
+        assert!((net.rate(a) - 8.0).abs() < EPS, "a={}", net.rate(a));
+        assert!((net.rate(b) - 2.0).abs() < EPS, "b={}", net.rate(b));
+        assert!((net.rate(c) - 2.0).abs() < EPS, "c={}", net.rate(c));
+    }
+
+    #[test]
+    fn conservation_no_resource_oversubscribed() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let mut net = FlowNetwork::new();
+        let rs: Vec<ResourceId> = (0..10)
+            .map(|_| net.add_resource(rng.range_f64(1e6, 1e9)))
+            .collect();
+        let mut flows = Vec::new();
+        for _ in 0..100 {
+            let k = rng.range_u64(1, 3) as usize;
+            let mut set: Vec<ResourceId> = Vec::new();
+            for _ in 0..k {
+                let r = rs[rng.index(rs.len())];
+                if !set.contains(&r) {
+                    set.push(r);
+                }
+            }
+            flows.push(net.start_flow(0.0, set, rng.range_u64(1, 1_000_000)));
+        }
+        // Sum of rates per resource must not exceed its capacity.
+        let mut usage = vec![0.0f64; 10];
+        for &f in &flows {
+            let rate = net.rate(f);
+            assert!(rate > 0.0, "every flow must make progress");
+            for r in net.flow_resources(f).to_vec() {
+                usage[r.0 as usize] += rate;
+            }
+        }
+        for (i, u) in usage.iter().enumerate() {
+            let cap = net.capacity(ResourceId(i as u32));
+            assert!(*u <= cap * (1.0 + 1e-6), "resource {i}: {u} > {cap}");
+        }
+    }
+
+    #[test]
+    fn completion_matches_analytic_two_phase() {
+        // Flow A (2 MB) and B (1 MB) share 8 Mb/s. B finishes at t=2
+        // (rate 4 Mb/s → 8 Mbit / 4 Mbps). A then speeds up: it has
+        // 8 Mbit left at t=2, finishing at t=3.
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(8e6);
+        let a = net.start_flow(0.0, vec![r], 2_000_000);
+        let b = net.start_flow(0.0, vec![r], 1_000_000);
+        let (t1, id1) = net.next_completion(0.0).unwrap();
+        assert_eq!(id1, b);
+        assert!((t1 - 2.0).abs() < EPS);
+        let left = net.remove_flow(t1, b);
+        assert!(left.abs() < 1e-3);
+        let (t2, id2) = net.next_completion(t1).unwrap();
+        assert_eq!(id2, a);
+        assert!((t2 - 3.0).abs() < EPS, "t2={t2}");
+    }
+
+    #[test]
+    fn local_disks_scale_linearly_gpfs_saturates() {
+        // The paper's core observation as a unit test: n private disk
+        // resources aggregate n×, a shared pool stays flat.
+        for n in [8usize, 16, 64] {
+            let mut net = FlowNetwork::new();
+            let gpfs = net.add_resource(3.4e9);
+            let mut disk_flows = Vec::new();
+            let mut gpfs_flows = Vec::new();
+            for _ in 0..n {
+                let disk = net.add_resource(470e6);
+                disk_flows.push(net.start_flow(0.0, vec![disk], 100_000_000));
+                gpfs_flows.push(net.start_flow(0.0, vec![gpfs], 100_000_000));
+            }
+            let disk_agg: f64 = disk_flows.iter().map(|&f| net.rate(f)).sum();
+            let gpfs_agg: f64 = gpfs_flows.iter().map(|&f| net.rate(f)).sum();
+            assert!((disk_agg - n as f64 * 470e6).abs() < 1.0);
+            assert!((gpfs_agg - 3.4e9).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn zero_byte_flow_completes() {
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(1e6);
+        let _f = net.start_flow(0.0, vec![r], 0);
+        let (t, _) = net.next_completion(0.0).unwrap();
+        assert!(t < 1e-9);
+    }
+
+    #[test]
+    fn slot_reuse_keeps_ids_distinct() {
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(1e6);
+        let a = net.start_flow(0.0, vec![r], 100);
+        net.remove_flow(0.0, a);
+        let b = net.start_flow(0.0, vec![r], 100);
+        assert_ne!(a, b, "generation must differ after slot reuse");
+        assert_eq!(net.rate(a), 0.0, "stale id must read as inactive");
+        assert!(net.rate(b) > 0.0);
+        assert_eq!(net.active_flows(), 1);
+    }
+}

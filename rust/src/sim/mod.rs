@@ -1,0 +1,26 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's experiments run on a 162-node testbed we don't have; per
+//! the substitution rule (DESIGN.md §3) we reproduce the *contention
+//! shapes* with a discrete-event simulator:
+//!
+//! * [`engine`] — a minimal, allocation-lean DES: a time-ordered event
+//!   heap dispatching into a user `World`.
+//! * [`flownet`] — a fluid flow network with **max-min fair sharing**
+//!   (progressive filling). Every data movement in the system (GPFS read,
+//!   cache-to-cache transfer, local disk read/write) is a flow across one
+//!   or more capacity-limited resources; saturation, linear local-disk
+//!   scaling, and NIC limits all emerge from this one mechanism.
+//! * [`server`] — a FIFO service-time queue used for the GPFS metadata
+//!   server (the resource that caps small-file and wrapper workloads).
+//!
+//! The same coordinator logic (scheduler/cache/index) runs unchanged in
+//! live mode; only the substrate differs.
+
+pub mod engine;
+pub mod flownet;
+pub mod server;
+
+pub use engine::{Engine, World};
+pub use flownet::{FlowId, FlowNetwork, ResourceId};
+pub use server::FifoServer;

@@ -1,0 +1,269 @@
+//! Live storage backend: real files, real gzip.
+//!
+//! Used by the end-to-end example and the live integration tests. A
+//! directory tree plays the role of GPFS ("persistent storage"); each
+//! executor gets a private cache directory on "local disk"; peer fetches
+//! copy between cache directories (the GridFTP stand-in — same host here,
+//! but the byte movement and accounting are real).
+//!
+//! Objects are synthetic FITS-like images: a small header plus deterministic
+//! PRNG pixel data (int16), optionally gzip-compressed (the paper's GZ
+//! format). Content is derived from the `ObjectId`, so integrity can be
+//! verified after any sequence of cache hops.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+use super::object::{Catalog, DataFormat, ObjectId};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Magic prefix of the synthetic FITS-like header.
+const MAGIC: &[u8; 8] = b"DDFITS01";
+
+/// Persistent storage backed by a real directory.
+pub struct LiveStore {
+    root: PathBuf,
+    catalog: Catalog,
+    format: DataFormat,
+}
+
+impl LiveStore {
+    /// Create (or reuse) a store rooted at `root`.
+    pub fn create<P: AsRef<Path>>(root: P, format: DataFormat) -> Result<LiveStore> {
+        fs::create_dir_all(root.as_ref())?;
+        Ok(LiveStore {
+            root: root.as_ref().to_path_buf(),
+            catalog: Catalog::new(),
+            format,
+        })
+    }
+
+    /// Path of an object file.
+    pub fn path_of(&self, id: ObjectId) -> PathBuf {
+        let ext = match self.format {
+            DataFormat::Gz => "fits.gz",
+            DataFormat::Fit => "fits",
+        };
+        self.root.join(format!("{id}.{ext}"))
+    }
+
+    /// Store format.
+    pub fn format(&self) -> DataFormat {
+        self.format
+    }
+
+    /// The table of contents.
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// Generate and persist a synthetic image object of `pixels` int16
+    /// values. Returns its on-disk size.
+    pub fn populate(&mut self, id: ObjectId, pixels: usize) -> Result<u64> {
+        let raw = synth_object_bytes(id, pixels);
+        let path = self.path_of(id);
+        let bytes = match self.format {
+            DataFormat::Fit => {
+                fs::write(&path, &raw)?;
+                raw.len() as u64
+            }
+            DataFormat::Gz => {
+                let f = fs::File::create(&path)?;
+                let mut enc = GzEncoder::new(f, Compression::fast());
+                enc.write_all(&raw)?;
+                enc.finish()?;
+                fs::metadata(&path)?.len()
+            }
+        };
+        self.catalog.insert(id, bytes);
+        Ok(bytes)
+    }
+
+    /// Read an object's (decompressed) payload from persistent storage.
+    pub fn read(&self, id: ObjectId) -> Result<Vec<u8>> {
+        let path = self.path_of(id);
+        read_object_file(&path, self.format)
+    }
+
+    /// Copy the raw on-disk object file to `dst` (a cache dir path),
+    /// returning the byte count moved. This is the "fetch from persistent
+    /// storage into cache" arrow — bytes move in stored format.
+    pub fn fetch_to(&self, id: ObjectId, dst: &Path) -> Result<u64> {
+        let src = self.path_of(id);
+        if let Some(parent) = dst.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let n = fs::copy(&src, dst).map_err(|e| {
+            Error::UnknownObject(format!("{id} ({}): {e}", src.display()))
+        })?;
+        Ok(n)
+    }
+}
+
+/// Deterministic synthetic object payload: header + int16 pixels.
+pub fn synth_object_bytes(id: ObjectId, pixels: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + pixels * 2);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&id.0.to_le_bytes());
+    let mut rng = Rng::new(id.0 ^ 0xDD_DA7A);
+    let mut run = 0i16;
+    for i in 0..pixels {
+        // Smooth-ish data so gzip achieves a realistic (~3x) ratio like
+        // real sky images, rather than incompressible white noise.
+        if i % 64 == 0 {
+            run = (rng.below(512) as i16) - 256;
+        }
+        let v = run + (rng.below(16) as i16);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Read + (if needed) decompress an object file; verifies the magic.
+pub fn read_object_file(path: &Path, format: DataFormat) -> Result<Vec<u8>> {
+    let data = fs::read(path)?;
+    let raw = match format {
+        DataFormat::Fit => data,
+        DataFormat::Gz => {
+            let mut dec = GzDecoder::new(&data[..]);
+            let mut out = Vec::new();
+            dec.read_to_end(&mut out)?;
+            out
+        }
+    };
+    if raw.len() < 16 || &raw[..8] != MAGIC {
+        return Err(Error::UnknownObject(format!(
+            "corrupt object at {}",
+            path.display()
+        )));
+    }
+    Ok(raw)
+}
+
+/// Extract the int16 pixel array from a raw object payload.
+pub fn pixels_of(raw: &[u8]) -> Vec<i16> {
+    raw[16..]
+        .chunks_exact(2)
+        .map(|c| i16::from_le_bytes([c[0], c[1]]))
+        .collect()
+}
+
+/// Per-executor cache directory on "local disk".
+pub struct LiveCacheDir {
+    root: PathBuf,
+}
+
+impl LiveCacheDir {
+    /// Create the cache directory for one executor.
+    pub fn create<P: AsRef<Path>>(root: P) -> Result<LiveCacheDir> {
+        fs::create_dir_all(root.as_ref())?;
+        Ok(LiveCacheDir {
+            root: root.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Where object `id` lives in this cache.
+    pub fn path_of(&self, id: ObjectId, format: DataFormat) -> PathBuf {
+        let ext = match format {
+            DataFormat::Gz => "fits.gz",
+            DataFormat::Fit => "fits",
+        };
+        self.root.join(format!("{id}.{ext}"))
+    }
+
+    /// Remove a cached object file (eviction). Missing files are fine —
+    /// eviction may race with external cleanup.
+    pub fn evict(&self, id: ObjectId, format: DataFormat) {
+        let _ = fs::remove_file(self.path_of(id, format));
+    }
+
+    /// Copy an object to a peer cache (the cache-to-cache arrow).
+    pub fn send_to(&self, id: ObjectId, format: DataFormat, peer: &LiveCacheDir) -> Result<u64> {
+        let src = self.path_of(id, format);
+        let dst = peer.path_of(id, format);
+        Ok(fs::copy(src, dst)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dd_live_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_fit() {
+        let dir = tmpdir("fit");
+        let mut store = LiveStore::create(&dir, DataFormat::Fit).unwrap();
+        let id = ObjectId(7);
+        let n = store.populate(id, 1000).unwrap();
+        assert_eq!(n, 16 + 2000);
+        let raw = store.read(id).unwrap();
+        assert_eq!(raw, synth_object_bytes(id, 1000));
+        assert_eq!(pixels_of(&raw).len(), 1000);
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn roundtrip_gz_compresses() {
+        let dir = tmpdir("gz");
+        let mut store = LiveStore::create(&dir, DataFormat::Gz).unwrap();
+        let id = ObjectId(42);
+        let stored = store.populate(id, 10_000).unwrap();
+        // Compressible synthetic data: expect a real reduction.
+        assert!(stored < 16 + 20_000, "stored={stored}");
+        let raw = store.read(id).unwrap();
+        assert_eq!(raw, synth_object_bytes(id, 10_000));
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fetch_to_cache_and_peer_copy() {
+        let dir = tmpdir("fetch");
+        let mut store = LiveStore::create(dir.join("gpfs"), DataFormat::Fit).unwrap();
+        let id = ObjectId(3);
+        store.populate(id, 100).unwrap();
+
+        let c0 = LiveCacheDir::create(dir.join("cache0")).unwrap();
+        let c1 = LiveCacheDir::create(dir.join("cache1")).unwrap();
+        let moved = store
+            .fetch_to(id, &c0.path_of(id, DataFormat::Fit))
+            .unwrap();
+        assert_eq!(moved, 216);
+        let moved2 = c0.send_to(id, DataFormat::Fit, &c1).unwrap();
+        assert_eq!(moved2, 216);
+        let raw = read_object_file(&c1.path_of(id, DataFormat::Fit), DataFormat::Fit).unwrap();
+        assert_eq!(raw, synth_object_bytes(id, 100));
+        c1.evict(id, DataFormat::Fit);
+        assert!(!c1.path_of(id, DataFormat::Fit).exists());
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_object_detected() {
+        let dir = tmpdir("corrupt");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.fits");
+        fs::write(&p, b"not a fits file at all").unwrap();
+        assert!(read_object_file(&p, DataFormat::Fit).is_err());
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_object_is_error() {
+        let dir = tmpdir("missing");
+        let store = LiveStore::create(&dir, DataFormat::Fit).unwrap();
+        assert!(store.read(ObjectId(999)).is_err());
+        let _ = fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,19 @@
+//! Storage substrates.
+//!
+//! * [`object`] — data-object identity and the persistent-store catalog
+//!   (what exists, how big it is, compressed/uncompressed variants).
+//! * [`testbed`] — the simulated testbed's capacity resources (GPFS pools,
+//!   per-node NICs and disks, the metadata server) expressed over the
+//!   [`crate::sim::flownet`] fair-share network. Every §4/§5 experiment's
+//!   contention behaviour comes from this wiring.
+//! * [`live`] — the live backend: a real directory tree as persistent
+//!   storage, real per-executor cache directories, real gzip
+//!   (de)compression. Used by the end-to-end example and integration
+//!   tests; the coordinator code is identical in both modes.
+
+pub mod live;
+pub mod object;
+pub mod testbed;
+
+pub use object::{Catalog, DataFormat, ObjectId};
+pub use testbed::{SimTestbed, TransferKind};

@@ -1,0 +1,144 @@
+//! Data-object identity and the persistent-store catalog.
+//!
+//! The paper's unit of data management is the *file* (558,500 of them in
+//! the SDSS working set). Executors cache whole objects; the dispatcher's
+//! index maps objects to executor locations. An object may exist in a
+//! compressed (GZ, 2 MB) and an uncompressed (FIT, 6 MB) variant — the
+//! format is part of the workload configuration, not of object identity.
+
+use crate::util::fxhash::FxHashMap;
+
+/// Globally unique data-object (file) identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u64);
+
+impl std::fmt::Display for ObjectId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "obj{}", self.0)
+    }
+}
+
+/// On-disk format of the image data (§5: GZ = 2 MB compressed,
+/// FIT = 6 MB uncompressed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataFormat {
+    /// Gzip-compressed FITS (2 MB in SDSS DR5).
+    Gz,
+    /// Uncompressed FITS (6 MB).
+    Fit,
+}
+
+impl DataFormat {
+    /// Parse from CLI/config text.
+    pub fn parse(s: &str) -> Option<DataFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "gz" => Some(DataFormat::Gz),
+            "fit" | "fits" => Some(DataFormat::Fit),
+            _ => None,
+        }
+    }
+
+    /// Short label used in figures ("GZ" / "FIT").
+    pub fn label(&self) -> &'static str {
+        match self {
+            DataFormat::Gz => "GZ",
+            DataFormat::Fit => "FIT",
+        }
+    }
+}
+
+/// Catalog entry for one object.
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectMeta {
+    /// Size in bytes as stored on persistent storage (depends on the
+    /// workload's chosen format).
+    pub bytes: u64,
+}
+
+/// The persistent store's table of contents.
+///
+/// In sim mode this is the only representation of the store; in live mode
+/// it mirrors the real directory tree.
+#[derive(Debug, Default, Clone)]
+pub struct Catalog {
+    objects: FxHashMap<ObjectId, ObjectMeta>,
+    total_bytes: u64,
+}
+
+impl Catalog {
+    /// Empty catalog.
+    pub fn new() -> Self {
+        Catalog::default()
+    }
+
+    /// Register an object; replaces any previous entry with the same id.
+    pub fn insert(&mut self, id: ObjectId, bytes: u64) {
+        if let Some(old) = self.objects.insert(id, ObjectMeta { bytes }) {
+            self.total_bytes -= old.bytes;
+        }
+        self.total_bytes += bytes;
+    }
+
+    /// Metadata for an object.
+    pub fn get(&self, id: ObjectId) -> Option<ObjectMeta> {
+        self.objects.get(&id).copied()
+    }
+
+    /// Size of an object; errors formatted at the caller.
+    pub fn size(&self, id: ObjectId) -> Option<u64> {
+        self.get(id).map(|m| m.bytes)
+    }
+
+    /// Number of objects.
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Whether the catalog is empty.
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Total bytes across all objects.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Iterate over all object ids (unspecified order).
+    pub fn ids(&self) -> impl Iterator<Item = ObjectId> + '_ {
+        self.objects.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_lookup() {
+        let mut c = Catalog::new();
+        c.insert(ObjectId(1), 100);
+        c.insert(ObjectId(2), 200);
+        assert_eq!(c.size(ObjectId(1)), Some(100));
+        assert_eq!(c.size(ObjectId(3)), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.total_bytes(), 300);
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let mut c = Catalog::new();
+        c.insert(ObjectId(1), 100);
+        c.insert(ObjectId(1), 250);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total_bytes(), 250);
+    }
+
+    #[test]
+    fn format_parse_labels() {
+        assert_eq!(DataFormat::parse("gz"), Some(DataFormat::Gz));
+        assert_eq!(DataFormat::parse("FIT"), Some(DataFormat::Fit));
+        assert_eq!(DataFormat::parse("nope"), None);
+        assert_eq!(DataFormat::Gz.label(), "GZ");
+    }
+}

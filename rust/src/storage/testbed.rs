@@ -1,0 +1,187 @@
+//! Simulated testbed resources over the fair-share flow network.
+//!
+//! Wires the paper's ANL/UC testbed (Table 1 + §4.2 measurements) as
+//! capacity resources:
+//!
+//! * one aggregate **GPFS read pool** (3.4 Gb/s) and **GPFS write pool**
+//!   (calibrated so mixed read+write saturates at ~1.1 Gb/s combined) —
+//!   the 8 I/O servers are modeled as the aggregate cap, which is what
+//!   the paper's own figures resolve;
+//! * one **GPFS metadata server** (FIFO, fixed per-op cost) — the
+//!   resource that caps the wrapper configuration at ~21 tasks/s;
+//! * per node: **NIC-in / NIC-out** (1 Gb/s each) and **disk read /
+//!   disk write** pools (470 / 230 Mb/s, §4.2's 76 Gb/s / 162 nodes).
+//!
+//! Every data movement is a flow across the right set of these resources
+//! ([`TransferKind::resources`]); saturation curves, the 8-node GPFS
+//! crossover, and linear cache scaling all emerge from max-min sharing.
+
+use crate::config::Config;
+use crate::sim::flownet::{FlowNetwork, ResourceId};
+use crate::sim::server::FifoServer;
+
+/// Per-node resource handles.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeResources {
+    /// NIC ingress capacity.
+    pub nic_in: ResourceId,
+    /// NIC egress capacity.
+    pub nic_out: ResourceId,
+    /// Local disk read bandwidth.
+    pub disk_read: ResourceId,
+    /// Local disk write bandwidth.
+    pub disk_write: ResourceId,
+}
+
+/// What a transfer is, in terms the coordinator understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Read from persistent storage into node memory (no caching).
+    GpfsRead { node: usize },
+    /// Read from persistent storage and persist into the node cache
+    /// (adds the local disk-write leg).
+    GpfsReadCached { node: usize },
+    /// Write a result back to persistent storage.
+    GpfsWrite { node: usize },
+    /// Cache-to-cache fetch from a peer executor (GridFTP path).
+    Peer { src: usize, dst: usize },
+    /// Read from the node's own cache.
+    LocalRead { node: usize },
+    /// Write to the node's own cache/scratch.
+    LocalWrite { node: usize },
+}
+
+/// The wired testbed: flow network + resource handles + metadata server.
+pub struct SimTestbed {
+    /// The underlying fair-share network.
+    pub net: FlowNetwork,
+    /// GPFS aggregate read pool.
+    pub gpfs_read: ResourceId,
+    /// GPFS aggregate write pool.
+    pub gpfs_write: ResourceId,
+    /// GPFS per-client share caps (one per node) — a single client can't
+    /// pull more than ~its NIC from GPFS even when alone.
+    pub nodes: Vec<NodeResources>,
+    /// GPFS metadata server (opens, wrapper mkdir/symlink/rmdir).
+    pub metadata: FifoServer,
+}
+
+impl SimTestbed {
+    /// Build the testbed for `cfg.testbed.nodes` nodes.
+    pub fn new(cfg: &Config) -> Self {
+        let mut net = FlowNetwork::new();
+        let gpfs_read = net.add_resource(cfg.shared_fs.read_cap_bps);
+        let gpfs_write = net.add_resource(cfg.shared_fs.write_cap_bps);
+        let nodes = (0..cfg.testbed.nodes)
+            .map(|_| NodeResources {
+                nic_in: net.add_resource(cfg.testbed.nic_bps),
+                nic_out: net.add_resource(cfg.testbed.nic_bps),
+                disk_read: net.add_resource(cfg.local_disk.read_bps),
+                disk_write: net.add_resource(cfg.local_disk.write_bps),
+            })
+            .collect();
+        SimTestbed {
+            net,
+            gpfs_read,
+            gpfs_write,
+            nodes,
+            metadata: FifoServer::new(cfg.shared_fs.meta_op_s),
+        }
+    }
+
+    /// Resource set a transfer of the given kind crosses.
+    pub fn resources(&self, kind: TransferKind) -> Vec<ResourceId> {
+        match kind {
+            TransferKind::GpfsRead { node } => {
+                vec![self.gpfs_read, self.nodes[node].nic_in]
+            }
+            TransferKind::GpfsReadCached { node } => vec![
+                self.gpfs_read,
+                self.nodes[node].nic_in,
+                self.nodes[node].disk_write,
+            ],
+            TransferKind::GpfsWrite { node } => {
+                vec![self.gpfs_write, self.nodes[node].nic_out]
+            }
+            TransferKind::Peer { src, dst } => vec![
+                self.nodes[src].disk_read,
+                self.nodes[src].nic_out,
+                self.nodes[dst].nic_in,
+                self.nodes[dst].disk_write,
+            ],
+            TransferKind::LocalRead { node } => vec![self.nodes[node].disk_read],
+            TransferKind::LocalWrite { node } => vec![self.nodes[node].disk_write],
+        }
+    }
+
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::units::{gbps, MB};
+
+    fn testbed(n: usize) -> SimTestbed {
+        SimTestbed::new(&Config::with_nodes(n))
+    }
+
+    #[test]
+    fn gpfs_saturates_at_aggregate_cap() {
+        // 64 nodes all reading from GPFS: aggregate pinned at 3.4 Gb/s.
+        let mut tb = testbed(64);
+        let flows: Vec<_> = (0..64)
+            .map(|n| {
+                let rs = tb.resources(TransferKind::GpfsRead { node: n });
+                tb.net.start_flow(0.0, rs, 100 * MB)
+            })
+            .collect();
+        let agg: f64 = flows.iter().map(|&f| tb.net.rate(f)).sum();
+        assert!((agg - gbps(3.4)).abs() < 1.0, "agg={agg}");
+    }
+
+    #[test]
+    fn single_gpfs_client_is_nic_bound() {
+        // One client alone: NIC (1 Gb/s) binds before GPFS (3.4 Gb/s).
+        let mut tb = testbed(4);
+        let rs = tb.resources(TransferKind::GpfsRead { node: 0 });
+        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        assert!((tb.net.rate(f) - gbps(1.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn local_reads_scale_linearly() {
+        let mut tb = testbed(64);
+        let flows: Vec<_> = (0..64)
+            .map(|n| {
+                let rs = tb.resources(TransferKind::LocalRead { node: n });
+                tb.net.start_flow(0.0, rs, 100 * MB)
+            })
+            .collect();
+        let agg: f64 = flows.iter().map(|&f| tb.net.rate(f)).sum();
+        // 64 × 470 Mb/s ≈ 30 Gb/s — vs GPFS's fixed 3.4.
+        assert!((agg - 64.0 * 470e6).abs() < 1.0, "agg={agg}");
+    }
+
+    #[test]
+    fn peer_transfer_crosses_both_nics_and_disks() {
+        let mut tb = testbed(4);
+        let rs = tb.resources(TransferKind::Peer { src: 0, dst: 1 });
+        assert_eq!(rs.len(), 4);
+        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        // Bound by dst disk write (230 Mb/s), the tightest leg.
+        assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn cached_gpfs_read_bound_by_disk_write() {
+        let mut tb = testbed(4);
+        let rs = tb.resources(TransferKind::GpfsReadCached { node: 2 });
+        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
+    }
+}

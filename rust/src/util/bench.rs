@@ -1,0 +1,105 @@
+//! Tiny measurement harness (criterion is unavailable offline).
+//!
+//! Used by the `cargo bench` targets (`rust/benches/*`, all
+//! `harness = false`). Provides warmup + repeated timed runs with
+//! mean/stddev reporting, and a black-box to defeat optimization.
+
+use std::hint;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Result of a [`time_it`] run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Bench label.
+    pub name: String,
+    /// Per-iteration wall time statistics, in seconds.
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    /// Mean iterations/second.
+    pub fn rate(&self) -> f64 {
+        let m = self.secs.mean();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} ±{:>10}  ({:.1} iters/s, n={})",
+            self.name,
+            crate::util::units::fmt_secs(self.secs.mean()),
+            crate::util::units::fmt_secs(self.secs.stddev()),
+            self.rate(),
+            self.secs.count(),
+        )
+    }
+}
+
+/// Time `f` for `iters` measured iterations after `warmup` unmeasured ones.
+pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        secs.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        secs,
+    }
+}
+
+/// Measure the total wall time of a single run of `f` (for end-to-end
+/// simulations where one run is already statistically meaningful).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Print the standard bench header used by all figure benches.
+pub fn bench_header(title: &str, paper_expectation: &str) {
+    println!("\n=== {title} ===");
+    println!("paper: {paper_expectation}");
+    println!("{}", "-".repeat(96));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iterations() {
+        let mut calls = 0usize;
+        let r = time_it("noop", 2, 10, || {
+            calls += 1;
+            black_box(());
+        });
+        assert_eq!(calls, 12);
+        assert_eq!(r.secs.count(), 10);
+        assert!(r.secs.mean() >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Hand-rolled argument parsing (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options up front so `--help` output is
+//! consistent across the CLI, examples, and benches.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without leading dashes.
+    pub name: &'static str,
+    /// Value placeholder (`""` for boolean flags).
+    pub value: &'static str,
+    /// Help line.
+    pub help: &'static str,
+    /// Default rendered in help.
+    pub default: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    ///
+    /// `bool_flags` lists options that take no value; everything else
+    /// starting with `--` consumes the next token (or `=value`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        // Treat as a flag after all (tolerant parsing).
+                        args.flags.push(name.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        args.opts.insert(name.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric option with default; exits with a message on a
+    /// malformed value (CLI surface, not library surface).
+    pub fn num_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a number, got {v:?}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--nodes 1,2,4,8`.
+    pub fn num_list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{name} expects comma-separated numbers, got {v:?}");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render standard help text and exit if `--help` was passed.
+pub fn help_if_requested(args: &Args, bin: &str, about: &str, specs: &[OptSpec]) {
+    if !args.flag("help") {
+        return;
+    }
+    println!("{bin} — {about}\n");
+    println!("USAGE: {bin} [OPTIONS]\n");
+    for s in specs {
+        let lhs = if s.value.is_empty() {
+            format!("--{}", s.name)
+        } else {
+            format!("--{} <{}>", s.name, s.value)
+        };
+        let def = if s.default.is_empty() {
+            String::new()
+        } else {
+            format!(" [default: {}]", s.default)
+        };
+        println!("  {lhs:28} {}{def}", s.help);
+    }
+    std::process::exit(0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["--nodes", "64", "--policy=lru"], &[]);
+        assert_eq!(a.get("nodes"), Some("64"));
+        assert_eq!(a.get("policy"), Some("lru"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["run", "--verbose", "trace.tsv"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "trace.tsv"]);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse(&["--n", "5"], &[]);
+        assert_eq!(a.num_or("n", 0u32), 5);
+        assert_eq!(a.num_or("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn num_lists() {
+        let a = parse(&["--nodes", "1,2,4"], &[]);
+        assert_eq!(a.num_list_or("nodes", &[9usize]), vec![1, 2, 4]);
+        assert_eq!(a.num_list_or("other", &[9usize]), vec![9]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--dry-run", "--nodes", "2"], &[]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("nodes"), Some("2"));
+    }
+}

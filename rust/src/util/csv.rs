@@ -1,0 +1,92 @@
+//! Minimal CSV writing for bench/figure output.
+//!
+//! Every figure bench writes both a human-readable table to stdout and a
+//! CSV under `results/` so plots can be regenerated externally. No quoting
+//! support is needed — all our fields are numbers and simple identifiers.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A CSV file under construction.
+pub struct CsvWriter {
+    path: PathBuf,
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Start a CSV with the given header columns.
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        CsvWriter {
+            path: path.as_ref().to_path_buf(),
+            buf,
+            cols: header.len(),
+        }
+    }
+
+    /// Append one row; panics if the column count mismatches the header
+    /// (a bench bug we want loudly, not silently).
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "CSV row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        self.buf.push_str(&fields.join(","));
+        self.buf.push('\n');
+    }
+
+    /// Convenience: format anything Display into a row.
+    pub fn rowf(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v);
+    }
+
+    /// Write the file (creating parent directories) and return its path.
+    pub fn finish(self) -> std::io::Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())?;
+        Ok(self.path)
+    }
+}
+
+/// Default output directory for bench results.
+pub fn results_dir() -> PathBuf {
+    std::env::var("DD_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dd_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.rowf(&[&1, &2.5]);
+        w.rowf(&[&"x", &"y"]);
+        let p = w.finish().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,y\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV row")]
+    fn panics_on_column_mismatch() {
+        let mut w = CsvWriter::new("/tmp/never.csv", &["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+}

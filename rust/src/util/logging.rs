@@ -1,0 +1,63 @@
+//! Minimal `log` backend: stderr logger with env-controlled level.
+//!
+//! `DD_LOG=debug cargo run ...` — levels: error, warn, info, debug, trace.
+//! Kept deliberately tiny; the offline environment has no `env_logger`.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; safe to call repeatedly (later calls no-op).
+pub fn init() {
+    let level = match std::env::var("DD_LOG").as_deref() {
+        Ok("trace") => Level::Trace,
+        Ok("debug") => Level::Debug,
+        Ok("info") => Level::Info,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Warn,
+    };
+    START.get_or_init(Instant::now);
+    let logger = Box::new(StderrLogger { max: level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

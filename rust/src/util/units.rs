@@ -1,0 +1,148 @@
+//! Byte / bandwidth / time units and human-readable formatting.
+//!
+//! The paper mixes units freely (Mb/s, Gb/s, MB, GB, tasks/sec); all
+//! internal accounting here is in **bytes** and **bits-per-second** with
+//! explicit conversion helpers so calibration constants in
+//! [`crate::config`] can be written the way the paper quotes them.
+
+/// Bits per second — the unit the paper quotes bandwidth in.
+pub type BitsPerSec = f64;
+
+/// One kilobyte (decimal, as used for file sizes in the paper).
+pub const KB: u64 = 1_000;
+/// One megabyte.
+pub const MB: u64 = 1_000_000;
+/// One gigabyte.
+pub const GB: u64 = 1_000_000_000;
+
+/// Convert Mb/s (megabits per second) to bits per second.
+#[inline]
+pub const fn mbps(v: f64) -> BitsPerSec {
+    v * 1e6
+}
+
+/// Convert Gb/s (gigabits per second) to bits per second.
+#[inline]
+pub const fn gbps(v: f64) -> BitsPerSec {
+    v * 1e9
+}
+
+/// Seconds needed to move `bytes` at `rate` bits/sec.
+#[inline]
+pub fn transfer_secs(bytes: u64, rate: BitsPerSec) -> f64 {
+    if rate <= 0.0 {
+        return f64::INFINITY;
+    }
+    (bytes as f64 * 8.0) / rate
+}
+
+/// Aggregate throughput in bits/sec for `bytes` moved in `secs`.
+#[inline]
+pub fn throughput_bps(bytes: u64, secs: f64) -> BitsPerSec {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 * 8.0 / secs
+}
+
+/// Format a byte count with binary-free, paper-style units (1 MB = 10^6 B).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e12 {
+        format!("{:.2}TB", b / 1e12)
+    } else if b >= 1e9 {
+        format!("{:.2}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2}KB", b / 1e3)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Format a bandwidth in the paper's Mb/s / Gb/s convention.
+pub fn fmt_bps(rate: BitsPerSec) -> String {
+    if rate >= 1e9 {
+        format!("{:.2}Gb/s", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.1}Mb/s", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.1}Kb/s", rate / 1e3)
+    } else {
+        format!("{rate:.0}b/s")
+    }
+}
+
+/// Format seconds compactly (ms below 1s, h/m/s above).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 0.001 {
+        format!("{:.0}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else if secs < 7200.0 {
+        format!("{:.1}m", secs / 60.0)
+    } else {
+        format!("{:.1}h", secs / 3600.0)
+    }
+}
+
+/// Parse a size string like `100MB`, `1GB`, `1B`, `10KB` (paper notation).
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_uppercase().as_str() {
+        "B" => 1.0,
+        "KB" => 1e3,
+        "MB" => 1e6,
+        "GB" => 1e9,
+        "TB" => 1e12,
+        _ => return None,
+    };
+    Some((num * mult) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_basics() {
+        // 1 GB at 1 Gb/s = 8 seconds.
+        assert!((transfer_secs(GB, gbps(1.0)) - 8.0).abs() < 1e-9);
+        assert!(transfer_secs(GB, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn throughput_inverse_of_transfer() {
+        let secs = transfer_secs(100 * MB, mbps(500.0));
+        let tput = throughput_bps(100 * MB, secs);
+        assert!((tput - mbps(500.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn parse_paper_sizes() {
+        assert_eq!(parse_size("1B"), Some(1));
+        assert_eq!(parse_size("1KB"), Some(1_000));
+        assert_eq!(parse_size("10KB"), Some(10_000));
+        assert_eq!(parse_size("100KB"), Some(100_000));
+        assert_eq!(parse_size("1MB"), Some(1_000_000));
+        assert_eq!(parse_size("10MB"), Some(10_000_000));
+        assert_eq!(parse_size("100MB"), Some(100_000_000));
+        assert_eq!(parse_size("1GB"), Some(1_000_000_000));
+        assert_eq!(parse_size("2.5MB"), Some(2_500_000));
+        assert_eq!(parse_size("bogus"), None);
+    }
+
+    #[test]
+    fn formatting_round_trips_visually() {
+        assert_eq!(fmt_bytes(100 * MB), "100.00MB");
+        assert_eq!(fmt_bps(gbps(3.4)), "3.40Gb/s");
+        assert_eq!(fmt_bps(mbps(500.0)), "500.0Mb/s");
+        assert_eq!(fmt_secs(0.0005), "500us");
+    }
+}

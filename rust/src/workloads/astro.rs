@@ -1,0 +1,259 @@
+//! §5 astronomy stacking workloads (Table 2).
+//!
+//! The working set derives from an SDSS DR5 quasar search (the Figure 6
+//! SQL query): 154,345 objects per band in 111,700 files, each file 2 MB
+//! compressed / 6 MB uncompressed. Table 2 defines nine workloads whose
+//! *data locality* — average objects per file — ranges from 1 to 30.
+//!
+//! A workload is one stacking task per object; tasks touching the same
+//! file exhibit the locality the data-aware scheduler exploits.
+
+use crate::config::Config;
+use crate::coordinator::task::{Task, TaskId};
+use crate::driver::sim::SimWorkloadSpec;
+use crate::storage::object::{Catalog, DataFormat, ObjectId};
+use crate::util::rng::Rng;
+
+/// One Table 2 row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadRow {
+    /// Data locality (objects per file, on average).
+    pub locality: f64,
+    /// Number of objects (= tasks).
+    pub objects: u64,
+    /// Number of distinct files.
+    pub files: u64,
+}
+
+/// The paper's Table 2, verbatim.
+pub const TABLE2: [WorkloadRow; 9] = [
+    WorkloadRow { locality: 1.0, objects: 111_700, files: 111_700 },
+    WorkloadRow { locality: 1.38, objects: 154_345, files: 111_699 },
+    WorkloadRow { locality: 2.0, objects: 97_999, files: 49_000 },
+    WorkloadRow { locality: 3.0, objects: 88_857, files: 29_620 },
+    WorkloadRow { locality: 4.0, objects: 76_575, files: 19_145 },
+    WorkloadRow { locality: 5.0, objects: 60_590, files: 12_120 },
+    WorkloadRow { locality: 10.0, objects: 46_480, files: 4_650 },
+    WorkloadRow { locality: 20.0, objects: 40_460, files: 2_025 },
+    WorkloadRow { locality: 30.0, objects: 23_695, files: 790 },
+];
+
+/// Look up the Table 2 row closest to a requested locality.
+pub fn row_for_locality(locality: f64) -> WorkloadRow {
+    *TABLE2
+        .iter()
+        .min_by(|a, b| {
+            (a.locality - locality)
+                .abs()
+                .partial_cmp(&(b.locality - locality).abs())
+                .unwrap()
+        })
+        .expect("TABLE2 nonempty")
+}
+
+/// A generated stacking workload.
+pub struct AstroWorkload {
+    /// The Table 2 row it instantiates (possibly scaled).
+    pub row: WorkloadRow,
+    /// Objects actually generated (after scaling).
+    pub objects: u64,
+    /// Files actually generated.
+    pub files: u64,
+    /// The workload spec to simulate.
+    pub spec: SimWorkloadSpec,
+    /// Stored-size catalog for the files.
+    pub catalog: Catalog,
+}
+
+/// Generate a Table 2 workload.
+///
+/// * `row` — which locality row;
+/// * `format` — GZ (2 MB stored, ×3 expansion) or FIT (6 MB stored);
+/// * `caching` — data diffusion on, or the GPFS-only baseline;
+/// * `scale` — subsampling factor in (0, 1] so CI-speed sims keep the
+///   objects:files ratio (locality) intact;
+/// * `seed` — task-order shuffle seed (object queries arrive in no
+///   particular file order, which is what makes locality non-trivial).
+pub fn generate(
+    cfg: &Config,
+    row: WorkloadRow,
+    format: DataFormat,
+    caching: bool,
+    scale: f64,
+    seed: u64,
+) -> AstroWorkload {
+    generate_bands(cfg, row, format, caching, scale, seed, 1)
+}
+
+/// Multi-band variant of [`generate`].
+///
+/// SDSS images every area of sky in five bands (u, g, r, i, z; §5.1:
+/// "154,345 objects *per band* ... stored in 111,700 files per band").
+/// With `bands > 1` each stacking task reads one file **per band** — a
+/// multi-input task that exercises the scheduler's byte-weighted executor
+/// choice and the executor's sequential fetch pipeline. Band files are
+/// disjoint id ranges (`band * files + file`), as on disk.
+pub fn generate_bands(
+    cfg: &Config,
+    row: WorkloadRow,
+    format: DataFormat,
+    caching: bool,
+    scale: f64,
+    seed: u64,
+    bands: u32,
+) -> AstroWorkload {
+    assert!((1..=5).contains(&bands), "SDSS has 5 bands");
+    assert!(scale > 0.0 && scale <= 1.0, "scale in (0,1]");
+    let files = ((row.files as f64 * scale).round() as u64).max(1);
+    let objects = ((row.objects as f64 * scale).round() as u64).max(files);
+
+    let (stored, expansion) = match format {
+        DataFormat::Gz => (cfg.app.gz_bytes, cfg.app.fit_bytes as f64 / cfg.app.gz_bytes as f64),
+        DataFormat::Fit => (cfg.app.fit_bytes, 1.0),
+    };
+
+    let mut catalog = Catalog::new();
+    for b in 0..bands as u64 {
+        for f in 0..files {
+            catalog.insert(ObjectId(b * files + f), stored);
+        }
+    }
+
+    // Object -> file assignment: object i lives in file i % files (in
+    // every band), giving each file ~locality objects. Task order is
+    // shuffled so consecutive tasks do not trivially share files.
+    let mut order: Vec<u64> = (0..objects).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+
+    let depth = row.locality.round().max(1.0) as u32;
+    let tasks: Vec<(f64, Task)> = order
+        .iter()
+        .enumerate()
+        .map(|(i, &obj)| {
+            let inputs: Vec<ObjectId> = (0..bands as u64)
+                .map(|b| ObjectId(b * files + obj % files))
+                .collect();
+            let mut t = Task::stacking(TaskId(i as u64), inputs[0], depth, cfg.app.output_bytes);
+            t.inputs = inputs;
+            (0.0, t)
+        })
+        .collect();
+
+    AstroWorkload {
+        row,
+        objects,
+        files: files * bands as u64,
+        spec: SimWorkloadSpec {
+            tasks,
+            caching,
+            format,
+            expansion,
+            prewarm: Vec::new(),
+        },
+        catalog,
+    }
+}
+
+/// Ideal cache-hit ratio for a locality (Fig 10's reference line):
+/// each file is accessed `locality` times — one cold miss, the rest hits.
+pub fn ideal_hit_ratio(locality: f64) -> f64 {
+    if locality <= 1.0 {
+        0.0
+    } else {
+        1.0 - 1.0 / locality
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        assert_eq!(TABLE2.len(), 9);
+        assert_eq!(TABLE2[1].objects, 154_345);
+        assert_eq!(TABLE2[8].files, 790);
+        // Locality ≈ objects / files for every row.
+        for row in &TABLE2 {
+            let implied = row.objects as f64 / row.files as f64;
+            assert!(
+                (implied - row.locality).abs() / row.locality < 0.35,
+                "row {row:?} implied locality {implied}"
+            );
+        }
+    }
+
+    #[test]
+    fn generator_preserves_locality_under_scaling() {
+        let cfg = Config::with_nodes(4);
+        let row = TABLE2[6]; // locality 10
+        let w = generate(&cfg, row, DataFormat::Gz, true, 0.01, 42);
+        let implied = w.objects as f64 / w.files as f64;
+        assert!((implied - 10.0).abs() < 1.0, "implied={implied}");
+        assert_eq!(w.spec.tasks.len(), w.objects as usize);
+        assert_eq!(w.catalog.len(), w.files as usize);
+    }
+
+    #[test]
+    fn gz_format_sets_expansion() {
+        let cfg = Config::with_nodes(2);
+        let w = generate(&cfg, TABLE2[0], DataFormat::Gz, true, 0.001, 1);
+        assert!((w.spec.expansion - 3.0).abs() < 1e-9);
+        let w = generate(&cfg, TABLE2[0], DataFormat::Fit, true, 0.001, 1);
+        assert!((w.spec.expansion - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let cfg = Config::with_nodes(2);
+        let a = generate(&cfg, TABLE2[3], DataFormat::Gz, true, 0.01, 7);
+        let b = generate(&cfg, TABLE2[3], DataFormat::Gz, true, 0.01, 7);
+        assert_eq!(a.spec.tasks.len(), b.spec.tasks.len());
+        for (x, y) in a.spec.tasks.iter().zip(&b.spec.tasks) {
+            assert_eq!(x.1.inputs, y.1.inputs);
+        }
+    }
+
+    #[test]
+    fn ideal_hit_ratio_formula() {
+        assert_eq!(ideal_hit_ratio(1.0), 0.0);
+        assert!((ideal_hit_ratio(3.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((ideal_hit_ratio(30.0) - 29.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_band_tasks_read_one_file_per_band() {
+        let cfg = Config::with_nodes(4);
+        let w = generate_bands(&cfg, TABLE2[6], DataFormat::Gz, true, 0.01, 3, 5);
+        assert_eq!(w.catalog.len() as u64, w.files, "5 bands of files");
+        for (_, t) in &w.spec.tasks {
+            assert_eq!(t.inputs.len(), 5);
+            // All five inputs map to the same per-band file offset.
+            let base = t.inputs[0].0;
+            let per_band = w.files / 5;
+            for (b, obj) in t.inputs.iter().enumerate() {
+                assert_eq!(obj.0, base + b as u64 * per_band);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_band_workload_completes_in_sim() {
+        use crate::driver::sim::SimDriver;
+        let cfg = Config::with_nodes(8);
+        let w = generate_bands(&cfg, TABLE2[8], DataFormat::Gz, true, 0.01, 3, 5);
+        let n = w.spec.tasks.len() as u64;
+        let out = SimDriver::new(cfg, w.spec, w.catalog).run();
+        assert_eq!(out.metrics.tasks_done, n);
+        // Five inputs per task -> five resolutions per task.
+        let m = &out.metrics;
+        assert_eq!(m.cache_hits + m.peer_hits + m.gpfs_misses, 5 * n);
+    }
+
+    #[test]
+    fn closest_row_lookup() {
+        assert_eq!(row_for_locality(1.4).locality, 1.38);
+        assert_eq!(row_for_locality(26.0).locality, 30.0);
+    }
+}

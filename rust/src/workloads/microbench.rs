@@ -1,0 +1,242 @@
+//! §4.3 micro-benchmark workload generator.
+//!
+//! "We measured performance for eight configurations, two variants (read
+//! and read+write), seven node counts (1..64), and eight file sizes (1B
+//! .. 1GB), for a total of 896 experiments."
+//!
+//! Configurations (1) and (2) are analytic models (see
+//! [`crate::analysis::model`]); (3)–(8) are generated here as
+//! [`SimWorkloadSpec`]s over the simulated testbed.
+
+use crate::config::Config;
+use crate::coordinator::task::{Task, TaskId};
+use crate::driver::sim::SimWorkloadSpec;
+use crate::scheduler::DispatchPolicy;
+use crate::storage::object::{Catalog, DataFormat, ObjectId};
+
+/// The eight §4.3 configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MbConfig {
+    /// (1) analytic local-disk model (no simulation).
+    ModelLocalDisk,
+    /// (2) analytic GPFS model (no simulation).
+    ModelGpfs,
+    /// (3) Falkon, first-available (no caching, no hints).
+    FirstAvailable,
+    /// (4) = (3) + sandbox wrapper (mkdir/symlink/rmdir on GPFS).
+    FirstAvailableWrapper,
+    /// (5) first-cache-available, 0% locality.
+    FirstCacheAvail0,
+    /// (6) first-cache-available, 100% locality (warm caches).
+    FirstCacheAvail100,
+    /// (7) max-compute-util, 0% locality.
+    MaxComputeUtil0,
+    /// (8) max-compute-util, 100% locality (warm caches).
+    MaxComputeUtil100,
+}
+
+impl MbConfig {
+    /// All simulated configurations (3)–(8).
+    pub const SIMULATED: [MbConfig; 6] = [
+        MbConfig::FirstAvailable,
+        MbConfig::FirstAvailableWrapper,
+        MbConfig::FirstCacheAvail0,
+        MbConfig::FirstCacheAvail100,
+        MbConfig::MaxComputeUtil0,
+        MbConfig::MaxComputeUtil100,
+    ];
+
+    /// Figure label, matching the paper's legend.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MbConfig::ModelLocalDisk => "Model (local disk)",
+            MbConfig::ModelGpfs => "Model (persistent storage)",
+            MbConfig::FirstAvailable => "Falkon (first-available)",
+            MbConfig::FirstAvailableWrapper => "Falkon (first-available) + Wrapper",
+            MbConfig::FirstCacheAvail0 => "Falkon (first-cache-available; 0% locality)",
+            MbConfig::FirstCacheAvail100 => "Falkon (first-cache-available; 100% locality)",
+            MbConfig::MaxComputeUtil0 => "Falkon (max-compute-util; 0% locality)",
+            MbConfig::MaxComputeUtil100 => "Falkon (max-compute-util; 100% locality)",
+        }
+    }
+
+    /// Whether caches are warm at t=0.
+    pub fn warm(&self) -> bool {
+        matches!(self, MbConfig::FirstCacheAvail100 | MbConfig::MaxComputeUtil100)
+    }
+
+    /// Whether data diffusion (caching) is enabled.
+    pub fn caching(&self) -> bool {
+        !matches!(
+            self,
+            MbConfig::FirstAvailable | MbConfig::FirstAvailableWrapper
+        )
+    }
+
+    /// Dispatch policy for the configuration.
+    pub fn policy(&self) -> DispatchPolicy {
+        match self {
+            MbConfig::FirstCacheAvail0 | MbConfig::FirstCacheAvail100 => {
+                DispatchPolicy::FirstCacheAvailable
+            }
+            MbConfig::MaxComputeUtil0 | MbConfig::MaxComputeUtil100 => {
+                DispatchPolicy::MaxComputeUtil
+            }
+            _ => DispatchPolicy::FirstAvailable,
+        }
+    }
+}
+
+/// One generated micro-benchmark experiment, ready to simulate.
+pub struct MbExperiment {
+    /// Testbed + policy configuration.
+    pub config: Config,
+    /// The workload.
+    pub spec: SimWorkloadSpec,
+    /// Object catalog (stored sizes).
+    pub catalog: Catalog,
+    /// Total payload bytes the tasks read (for throughput math).
+    pub read_bytes: u64,
+    /// Total payload bytes written.
+    pub write_bytes: u64,
+}
+
+/// Generate the §4.3 experiment for one (config, nodes, file size,
+/// read-or-read+write) cell.
+///
+/// `tasks_per_node` controls workload length (the paper ran enough tasks
+/// to reach steady state; 8/node keeps sims fast while saturating).
+pub fn generate(
+    mb: MbConfig,
+    nodes: usize,
+    file_bytes: u64,
+    read_write: bool,
+    tasks_per_node: usize,
+) -> MbExperiment {
+    assert!(
+        !matches!(mb, MbConfig::ModelLocalDisk | MbConfig::ModelGpfs),
+        "configurations (1)/(2) are analytic; use analysis::model"
+    );
+    let mut config = Config::with_nodes(nodes);
+    config.scheduler.policy = mb.policy();
+    config.scheduler.wrapper = matches!(mb, MbConfig::FirstAvailableWrapper);
+
+    let n_tasks = (nodes * tasks_per_node) as u64;
+    let mut catalog = Catalog::new();
+    let mut tasks = Vec::with_capacity(n_tasks as usize);
+    let mut prewarm = Vec::new();
+
+    if mb.warm() {
+        // 100% locality: one object per node, resident before t=0; each
+        // node's tasks re-read objects already somewhere in cache. The
+        // paper repeats the 0%-workload 4× over warmed caches; we issue
+        // tasks over the warmed set round-robin.
+        for node in 0..nodes {
+            let obj = ObjectId(node as u64);
+            catalog.insert(obj, file_bytes);
+            prewarm.push((node, obj));
+        }
+        for i in 0..n_tasks {
+            let obj = ObjectId(i % nodes as u64);
+            tasks.push((
+                0.0,
+                if read_write {
+                    Task::read_write(TaskId(i), obj, file_bytes)
+                } else {
+                    Task::with_inputs(TaskId(i), vec![obj])
+                },
+            ));
+        }
+    } else {
+        // 0% locality: every task reads a distinct file (no re-use).
+        for i in 0..n_tasks {
+            let obj = ObjectId(i);
+            catalog.insert(obj, file_bytes);
+            tasks.push((
+                0.0,
+                if read_write {
+                    Task::read_write(TaskId(i), obj, file_bytes)
+                } else {
+                    Task::with_inputs(TaskId(i), vec![obj])
+                },
+            ));
+        }
+    }
+
+    let read_bytes = n_tasks * file_bytes;
+    let write_bytes = if read_write { n_tasks * file_bytes } else { 0 };
+    let spec = SimWorkloadSpec {
+        tasks,
+        caching: mb.caching(),
+        format: DataFormat::Fit,
+        expansion: 1.0,
+        prewarm,
+    };
+    MbExperiment {
+        config,
+        spec,
+        catalog,
+        read_bytes,
+        write_bytes,
+    }
+}
+
+/// The paper's file-size sweep (Fig 5): 1B → 1GB.
+pub const FILE_SIZES: [u64; 8] = [
+    1,
+    1_000,
+    10_000,
+    100_000,
+    1_000_000,
+    10_000_000,
+    100_000_000,
+    1_000_000_000,
+];
+
+/// The paper's node-count sweep (Figs 3–4).
+pub const NODE_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn cold_config_has_unique_objects() {
+        let e = generate(MbConfig::MaxComputeUtil0, 4, MB, false, 8);
+        assert_eq!(e.catalog.len(), 32);
+        assert!(e.spec.prewarm.is_empty());
+        assert!(e.spec.caching);
+        assert_eq!(e.read_bytes, 32 * MB);
+        assert_eq!(e.write_bytes, 0);
+    }
+
+    #[test]
+    fn warm_config_prewarms_each_node() {
+        let e = generate(MbConfig::MaxComputeUtil100, 4, MB, true, 8);
+        assert_eq!(e.catalog.len(), 4);
+        assert_eq!(e.spec.prewarm.len(), 4);
+        assert_eq!(e.write_bytes, 32 * MB);
+    }
+
+    #[test]
+    fn wrapper_config_sets_wrapper_flag() {
+        let e = generate(MbConfig::FirstAvailableWrapper, 2, MB, false, 2);
+        assert!(e.config.scheduler.wrapper);
+        assert!(!e.spec.caching);
+    }
+
+    #[test]
+    #[should_panic(expected = "analytic")]
+    fn model_configs_rejected() {
+        let _ = generate(MbConfig::ModelGpfs, 2, MB, false, 2);
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(
+            MbConfig::MaxComputeUtil100.label(),
+            "Falkon (max-compute-util; 100% locality)"
+        );
+    }
+}

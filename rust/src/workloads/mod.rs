@@ -1,0 +1,13 @@
+//! Workload generators.
+//!
+//! * [`microbench`] — the §4.3 micro-benchmark matrix: 8 configurations ×
+//!   {read, read+write} × node counts × file sizes.
+//! * [`astro`] — the §5 stacking workloads derived from SDSS DR5
+//!   (Table 2): locality 1 → 30 over 111,700 → 790 files.
+//! * [`sky`] — deterministic synthetic image/cutout data for live runs.
+//! * [`trace`] — record/replay of task traces (TSV).
+
+pub mod astro;
+pub mod microbench;
+pub mod sky;
+pub mod trace;

@@ -1,0 +1,130 @@
+//! Deterministic synthetic sky data for live runs.
+//!
+//! Gives every object id reproducible calibration parameters and every
+//! (file, slot) a reproducible cutout, so live executions can be checked
+//! end-to-end (the same stacking request always produces the same image,
+//! byte-for-byte, regardless of which executor served the data).
+
+use crate::storage::object::ObjectId;
+use crate::util::rng::Rng;
+
+/// Per-image calibration parameters (the SKY and CAL variables of §5.2,
+/// plus the sub-pixel shift the interpolation phase corrects).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImageParams {
+    /// Sky background level.
+    pub sky: f32,
+    /// Calibration gain.
+    pub cal: f32,
+    /// Horizontal sub-pixel offset in [0, 1).
+    pub dx: f32,
+    /// Vertical sub-pixel offset in [0, 1).
+    pub dy: f32,
+}
+
+/// Deterministic calibration parameters for cutout `slot` of `file`.
+pub fn params_for(file: ObjectId, slot: u32) -> ImageParams {
+    let mut rng = Rng::new(file.0.wrapping_mul(0x5851_F42D_4C95_7F2D) ^ slot as u64);
+    ImageParams {
+        sky: rng.range_f64(10.0, 100.0) as f32,
+        cal: rng.range_f64(0.5, 2.0) as f32,
+        dx: rng.next_f64() as f32,
+        dy: rng.next_f64() as f32,
+    }
+}
+
+/// Extract `depth` cutouts of `h*w` int16 pixels from a file payload
+/// (starting after the 16-byte header), wrapping if the payload is
+/// smaller than `depth*h*w` — live test stores may be scaled down.
+pub fn cutouts_from_payload(pixels: &[i16], depth: usize, h: usize, w: usize) -> Vec<i16> {
+    let px = h * w;
+    let mut out = Vec::with_capacity(depth * px);
+    if pixels.is_empty() {
+        out.resize(depth * px, 0);
+        return out;
+    }
+    for k in 0..depth * px {
+        out.push(pixels[k % pixels.len()]);
+    }
+    out
+}
+
+/// Assemble the full stacking request inputs for one task in live mode.
+///
+/// Returns (raw, sky, cal, shifts, weights) vectors sized for `depth`.
+pub fn stack_inputs(
+    file: ObjectId,
+    pixels: &[i16],
+    depth: usize,
+    h: usize,
+    w: usize,
+) -> (Vec<i16>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let raw = cutouts_from_payload(pixels, depth, h, w);
+    let mut sky = Vec::with_capacity(depth);
+    let mut cal = Vec::with_capacity(depth);
+    let mut shifts = Vec::with_capacity(depth * 2);
+    for slot in 0..depth as u32 {
+        let p = params_for(file, slot);
+        sky.push(p.sky);
+        cal.push(p.cal);
+        shifts.push(p.dx);
+        shifts.push(p.dy);
+    }
+    let weights = vec![1.0; depth];
+    (raw, sky, cal, shifts, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_deterministic_and_distinct() {
+        let a = params_for(ObjectId(5), 0);
+        let b = params_for(ObjectId(5), 0);
+        assert_eq!(a, b);
+        let c = params_for(ObjectId(5), 1);
+        assert_ne!(a, c);
+        assert!((10.0..100.0).contains(&a.sky));
+        assert!((0.5..2.0).contains(&a.cal));
+        assert!((0.0..1.0).contains(&a.dx));
+    }
+
+    #[test]
+    fn cutouts_wrap_small_payloads() {
+        let pixels: Vec<i16> = (0..10).collect();
+        let c = cutouts_from_payload(&pixels, 2, 2, 3);
+        assert_eq!(c.len(), 12);
+        assert_eq!(c[..10], pixels[..]);
+        assert_eq!(c[10], 0);
+        assert_eq!(c[11], 1);
+    }
+
+    #[test]
+    fn stack_inputs_shapes() {
+        let pixels: Vec<i16> = (0..100).collect();
+        let (raw, sky, cal, shifts, weights) = stack_inputs(ObjectId(1), &pixels, 4, 5, 5);
+        assert_eq!(raw.len(), 4 * 25);
+        assert_eq!(sky.len(), 4);
+        assert_eq!(cal.len(), 4);
+        assert_eq!(shifts.len(), 8);
+        assert_eq!(weights, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn empty_payload_zero_fills() {
+        let c = cutouts_from_payload(&[], 1, 2, 2);
+        assert_eq!(c, vec![0; 4]);
+    }
+}
+
+/// Deterministic sky coordinates (radians) for an object — inputs to the
+/// radec2xy phase in live mode. Clustered near the tangent point
+/// (0.15, 0.0) used by the e2e driver.
+pub fn radec_for(file: ObjectId) -> (f32, f32) {
+    let mut rng = Rng::new(file.0 ^ 0x5EC7_0A11);
+    (
+        (0.15 + rng.range_f64(-0.05, 0.05)) as f32,
+        rng.range_f64(-0.05, 0.05) as f32,
+    )
+}

@@ -1,0 +1,127 @@
+//! Task-trace record / replay (TSV).
+//!
+//! Lets an experiment's exact task stream be saved and re-run (e.g. to
+//! compare policies on identical workloads, or to ship a repro case).
+//!
+//! Format, one task per line:
+//!
+//! ```text
+//! # arrival  task_id  kind  depth_or_cpu  output_bytes  input,input,...
+//! 0.000000   17       stack 30            40000         churn12,churn13
+//! ```
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::coordinator::task::{Task, TaskId, TaskKind};
+use crate::error::{Error, Result};
+use crate::storage::object::ObjectId;
+
+/// Serialize (arrival, task) pairs to a TSV file.
+pub fn record(path: &Path, tasks: &[(f64, Task)]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("# arrival\ttask_id\tkind\tdepth_or_cpu\toutput_bytes\tinputs\n");
+    for (arrival, t) in tasks {
+        let (kind, knum) = match t.kind {
+            TaskKind::Synthetic { cpu_s } => ("synthetic", cpu_s.to_string()),
+            TaskKind::Stack { stack_depth } => ("stack", stack_depth.to_string()),
+        };
+        let inputs: Vec<String> = t.inputs.iter().map(|o| o.0.to_string()).collect();
+        out.push_str(&format!(
+            "{arrival}\t{}\t{kind}\t{knum}\t{}\t{}\n",
+            t.id.0,
+            t.output_bytes,
+            inputs.join(",")
+        ));
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())?;
+    Ok(())
+}
+
+/// Load a trace back.
+pub fn replay(path: &Path) -> Result<Vec<(f64, Task)>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut tasks = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        // Trim only line endings: a task with no inputs ends in a tab
+        // that full trim() would eat, corrupting the field count.
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() != 6 {
+            return Err(Error::Workload(format!(
+                "trace line {}: expected 6 fields, got {}",
+                lineno + 1,
+                fields.len()
+            )));
+        }
+        let bad = |what: &str| Error::Workload(format!("trace line {}: bad {what}", lineno + 1));
+        let arrival: f64 = fields[0].parse().map_err(|_| bad("arrival"))?;
+        let id: u64 = fields[1].parse().map_err(|_| bad("task_id"))?;
+        let output_bytes: u64 = fields[4].parse().map_err(|_| bad("output_bytes"))?;
+        let kind = match fields[2] {
+            "synthetic" => TaskKind::Synthetic {
+                cpu_s: fields[3].parse().map_err(|_| bad("cpu_s"))?,
+            },
+            "stack" => TaskKind::Stack {
+                stack_depth: fields[3].parse().map_err(|_| bad("stack_depth"))?,
+            },
+            other => return Err(bad(&format!("kind {other:?}"))),
+        };
+        let inputs: Vec<ObjectId> = if fields[5].is_empty() {
+            Vec::new()
+        } else {
+            fields[5]
+                .split(',')
+                .map(|s| s.parse::<u64>().map(ObjectId).map_err(|_| bad("inputs")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        tasks.push((
+            arrival,
+            Task {
+                id: TaskId(id),
+                inputs,
+                output_bytes,
+                kind,
+            },
+        ));
+    }
+    Ok(tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tasks = vec![
+            (0.0, Task::with_inputs(TaskId(1), vec![ObjectId(7)])),
+            (1.5, Task::read_write(TaskId(2), ObjectId(8), 100)),
+            (2.25, Task::stacking(TaskId(3), ObjectId(9), 30, 40_000)),
+            (3.0, Task::with_inputs(TaskId(4), vec![])),
+        ];
+        let path = std::env::temp_dir().join(format!("dd_trace_{}.tsv", std::process::id()));
+        record(&path, &tasks).unwrap();
+        let back = replay(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        for ((a0, t0), (a1, t1)) in tasks.iter().zip(&back) {
+            assert_eq!(a0, a1);
+            assert_eq!(t0, t1);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn malformed_trace_errors() {
+        let path = std::env::temp_dir().join(format!("dd_trace_bad_{}.tsv", std::process::id()));
+        std::fs::write(&path, "0.0\tnot_a_number\tstack\t1\t0\t1\n").unwrap();
+        assert!(replay(&path).is_err());
+        std::fs::write(&path, "0.0\t1\tbogus_kind\t1\t0\t1\n").unwrap();
+        assert!(replay(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

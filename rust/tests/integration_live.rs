@@ -1,0 +1,145 @@
+//! Integration: live mode with real files, real gzip, real byte movement.
+//!
+//! (PJRT-backed stacking is covered by `integration_runtime.rs`; these
+//! tests focus on the storage/caching/scheduling plumbing with synthetic
+//! tasks so they stay fast.)
+
+use std::path::PathBuf;
+
+use datadiffusion::config::Config;
+use datadiffusion::coordinator::task::{Task, TaskId};
+use datadiffusion::driver::live::LiveCluster;
+use datadiffusion::scheduler::DispatchPolicy;
+use datadiffusion::storage::live::{synth_object_bytes, LiveStore};
+use datadiffusion::storage::object::{DataFormat, ObjectId};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dd_it_live_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn warm_pass_hits_caches_cold_pass_does_not() {
+    let root = tmp("warmcold");
+    let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Gz).unwrap();
+    for i in 0..6 {
+        store.populate(ObjectId(i), 10_000).unwrap();
+    }
+    let cfg = Config::with_nodes(3);
+    // Two passes over the same 6 objects.
+    let tasks: Vec<Task> = (0..12)
+        .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 6)]))
+        .collect();
+    let out = LiveCluster::new(cfg, store, root.join("work"), None)
+        .run(tasks)
+        .unwrap();
+    assert_eq!(out.metrics.tasks_done, 12);
+    // 6 cold misses; the rest resolved from caches (own or peer).
+    assert!(out.metrics.gpfs_misses >= 6);
+    assert!(
+        out.metrics.cache_hits + out.metrics.peer_hits >= 4,
+        "second pass should mostly hit: {:?}",
+        (out.metrics.cache_hits, out.metrics.peer_hits, out.metrics.gpfs_misses)
+    );
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn gz_store_moves_fewer_bytes_than_fit() {
+    // The same objects stored compressed vs raw: persistent-storage
+    // traffic must shrink accordingly (paper's GZ-vs-FIT axis).
+    let mut gz_bytes = 0u64;
+    let mut fit_bytes = 0u64;
+    for (format, acc) in [(DataFormat::Gz, &mut gz_bytes), (DataFormat::Fit, &mut fit_bytes)] {
+        let root = tmp(format.label());
+        let mut store = LiveStore::create(root.join("gpfs"), format).unwrap();
+        for i in 0..4 {
+            store.populate(ObjectId(i), 20_000).unwrap();
+        }
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::FirstAvailable; // no caching
+        let tasks: Vec<Task> = (0..4)
+            .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i)]))
+            .collect();
+        let out = LiveCluster::new(cfg, store, root.join("work"), None)
+            .run(tasks)
+            .unwrap();
+        *acc = out.metrics.gpfs_bytes;
+        let _ = std::fs::remove_dir_all(root);
+    }
+    // Synthetic pixels compress ~1.7x (real SDSS images reach ~3x); the
+    // invariant under test is the *direction*, with real headroom.
+    assert!(
+        (gz_bytes as f64) < 0.7 * fit_bytes as f64,
+        "gzip should shrink persistent reads: {gz_bytes} vs {fit_bytes}"
+    );
+}
+
+#[test]
+fn data_integrity_survives_cache_hops() {
+    // An object fetched via GPFS → cache → peer cache must decompress to
+    // exactly the generator's bytes (checked inside read_object_file via
+    // the magic header; here we check full content end-to-end).
+    let root = tmp("integrity");
+    let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Gz).unwrap();
+    store.populate(ObjectId(0), 5_000).unwrap();
+    let cfg = Config::with_nodes(2);
+    // Many tasks over one object: forces peer copies between the 2 nodes.
+    let tasks: Vec<Task> = (0..10)
+        .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(0)]))
+        .collect();
+    let out = LiveCluster::new(cfg, store, root.join("work"), None)
+        .run(tasks)
+        .unwrap();
+    assert_eq!(out.metrics.tasks_done, 10);
+    // Verify both cache dirs' copies decode to the synthetic source.
+    for e in 0..2 {
+        let p = root.join("work").join(format!("cache{e}")).join("obj0.fits.gz");
+        if p.exists() {
+            let raw =
+                datadiffusion::storage::live::read_object_file(&p, DataFormat::Gz).unwrap();
+            assert_eq!(raw, synth_object_bytes(ObjectId(0), 5_000));
+        }
+    }
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn missing_object_fails_loudly() {
+    let root = tmp("missing");
+    let store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+    let cfg = Config::with_nodes(1);
+    let tasks = vec![Task::with_inputs(TaskId(0), vec![ObjectId(404)])];
+    let err = LiveCluster::new(cfg, store, root.join("work"), None)
+        .run(tasks)
+        .unwrap_err();
+    assert!(err.to_string().contains("obj404"), "{err}");
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn eviction_under_tiny_cache_keeps_progress() {
+    let root = tmp("evict");
+    let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+    for i in 0..8 {
+        store.populate(ObjectId(i), 10_000).unwrap();
+    }
+    let mut cfg = Config::with_nodes(2);
+    // Cache fits ~2 objects (10_000 px * 2B + header ≈ 20KB each).
+    cfg.cache.capacity_bytes = 45_000;
+    let tasks: Vec<Task> = (0..24)
+        .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 8)]))
+        .collect();
+    let out = LiveCluster::new(cfg, store, root.join("work"), None)
+        .run(tasks)
+        .unwrap();
+    assert_eq!(out.metrics.tasks_done, 24, "evictions must not stall work");
+    // Cache dirs must respect the capacity (at most ~2 files each).
+    for e in 0..2 {
+        let dir = root.join("work").join(format!("cache{e}"));
+        let count = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        assert!(count <= 3, "cache{e} holds {count} files, capacity ~2");
+    }
+    let _ = std::fs::remove_dir_all(root);
+}

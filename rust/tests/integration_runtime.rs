@@ -1,0 +1,180 @@
+//! Integration: the PJRT runtime against the AOT artifacts and the
+//! python-produced golden fixture.
+//!
+//! Requires `make artifacts` to have run (skips, loudly, otherwise —
+//! CI and `make test` always build artifacts first).
+
+use datadiffusion::runtime::{artifacts_dir, Manifest, PjrtEngine, StackRequest};
+
+fn engine_or_skip() -> Option<PjrtEngine> {
+    match PjrtEngine::load(&artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn parse_golden() -> Option<(StackRequest, Vec<f64>, (usize, usize, usize))> {
+    let path = artifacts_dir().join("golden_stack.tsv");
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut fields = std::collections::HashMap::new();
+    let mut shape = (0usize, 0usize, 0usize);
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (name, rest) = line.split_once('\t')?;
+        if name == "shape" {
+            let v: Vec<usize> = rest.split_whitespace().map(|s| s.parse().unwrap()).collect();
+            shape = (v[0], v[1], v[2]);
+        } else {
+            let vals: Vec<f64> = rest
+                .split_whitespace()
+                .map(|s| s.parse().unwrap())
+                .collect();
+            fields.insert(name.to_string(), vals);
+        }
+    }
+    let req = StackRequest {
+        raw: fields["raw"].iter().map(|&v| v as i16).collect(),
+        sky: fields["sky"].iter().map(|&v| v as f32).collect(),
+        cal: fields["cal"].iter().map(|&v| v as f32).collect(),
+        shifts: fields["shifts"].iter().map(|&v| v as f32).collect(),
+        weights: fields["weights"].iter().map(|&v| v as f32).collect(),
+        depth: shape.0,
+    };
+    Some((req, fields.remove("output")?, shape))
+}
+
+#[test]
+fn manifest_covers_table2_stack_depths() {
+    let Ok(m) = Manifest::load(&artifacts_dir()) else {
+        eprintln!("SKIP (run `make artifacts`)");
+        return;
+    };
+    // Must cover depth 30 (Table 2's max locality) via some variant.
+    let v = m.stack_variant(30).expect("variant for depth 30");
+    assert!(v.params["n"] >= 30);
+    assert!(m.of_kind("radec2xy").count() >= 1);
+}
+
+#[test]
+fn pjrt_matches_python_oracle_golden() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (req, want, (_, h, w)) = parse_golden().expect("golden fixture present");
+    let got = engine.stack(&req).expect("pjrt execution");
+    assert_eq!(got.len(), h * w);
+    let mut max_err = 0.0f64;
+    for (a, b) in got.iter().zip(&want) {
+        max_err = max_err.max((*a as f64 - b).abs());
+    }
+    // Raw pixels are O(4096); 1e-2 absolute is ~1e-6 relative.
+    assert!(max_err < 1e-2, "max |pjrt - oracle| = {max_err}");
+}
+
+#[test]
+fn padding_is_exact_across_variants() {
+    // depth-d request must produce identical output through any variant
+    // that fits it (padding with zero weights is semantically inert).
+    let Some(engine) = engine_or_skip() else { return };
+    let (mut req, _, _) = parse_golden().expect("golden fixture");
+    // Run the same request at its native depth (variant n=4) and as a
+    // padded request (forced into a larger variant by raising depth
+    // metadata is not possible directly; instead re-stack with depth
+    // increased by appending explicit zero-weight slots).
+    let base = engine.stack(&req).expect("base");
+    let (_, h, w) = (req.depth, 100, 100);
+    let px = h * w;
+    req.raw.extend(std::iter::repeat(0i16).take(px * 8));
+    req.sky.extend([0.0; 8]);
+    req.cal.extend([0.0; 8]);
+    req.shifts.extend([0.0; 16]);
+    req.weights.extend([0.0; 8]);
+    req.depth += 8; // now needs the n=16 variant
+    let padded = engine.stack(&req).expect("padded");
+    let mut max_err = 0.0f64;
+    for (a, b) in base.iter().zip(&padded) {
+        max_err = max_err.max((a - b).abs() as f64);
+    }
+    assert!(max_err < 1e-3, "padding changed the result by {max_err}");
+}
+
+#[test]
+fn radec2xy_matches_gnomonic_reference() {
+    let Some(engine) = engine_or_skip() else { return };
+    // Gnomonic projection reference computed in Rust (same math as the
+    // python oracle radec2xy_ref).
+    let gnomonic = |ra: f64, dec: f64, ra0: f64, dec0: f64, s: f64| {
+        let cos_c =
+            dec0.sin() * dec.sin() + dec0.cos() * dec.cos() * (ra - ra0).cos();
+        let x = dec.cos() * (ra - ra0).sin() / cos_c;
+        let y = (dec0.cos() * dec.sin() - dec0.sin() * dec.cos() * (ra - ra0).cos()) / cos_c;
+        (x * s, y * s)
+    };
+    let (ra0, dec0, scale) = (0.15f32, 0.05f32, 1.0e4f32);
+    // 200 points: exercises chunking (artifact batch m=128) and padding.
+    let ra: Vec<f32> = (0..200).map(|i| 0.001 * i as f32).collect();
+    let dec: Vec<f32> = (0..200).map(|i| -0.1 + 0.001 * i as f32).collect();
+    let xy = engine.radec2xy(&ra, &dec, ra0, dec0, scale).expect("radec2xy");
+    assert_eq!(xy.len(), 200);
+    for i in [0usize, 1, 64, 127, 128, 199] {
+        let (ex, ey) = gnomonic(
+            ra[i] as f64,
+            dec[i] as f64,
+            ra0 as f64,
+            dec0 as f64,
+            scale as f64,
+        );
+        assert!(
+            (xy[i].0 as f64 - ex).abs() < 0.05 && (xy[i].1 as f64 - ey).abs() < 0.05,
+            "point {i}: got {:?}, want ({ex}, {ey})",
+            xy[i]
+        );
+    }
+    // Tangent point maps to the origin.
+    let o = engine.radec2xy(&[ra0], &[dec0], ra0, dec0, scale).unwrap();
+    assert!(o[0].0.abs() < 1e-2 && o[0].1.abs() < 1e-2);
+}
+
+#[test]
+fn rejects_malformed_requests() {
+    let Some(engine) = engine_or_skip() else { return };
+    let bad = StackRequest {
+        raw: vec![0; 10],
+        sky: vec![0.0],
+        cal: vec![1.0],
+        shifts: vec![0.0, 0.0],
+        weights: vec![1.0],
+        depth: 1,
+    };
+    assert!(engine.stack(&bad).is_err(), "shape mismatch must error");
+    let zero = StackRequest {
+        raw: vec![],
+        sky: vec![],
+        cal: vec![],
+        shifts: vec![],
+        weights: vec![],
+        depth: 0,
+    };
+    assert!(engine.stack(&zero).is_err(), "depth 0 must error");
+}
+
+#[test]
+fn stack_throughput_sanity() {
+    // The request path must be fast enough that compute never dominates
+    // the simulated I/O times (paper: compute <1ms + radec2xy; our CPU
+    // interpret-mode kernel is slower but must stay well under the
+    // ~100ms-scale I/O costs it is paired with).
+    let Some(engine) = engine_or_skip() else { return };
+    let (req, _, _) = parse_golden().expect("golden fixture");
+    let t0 = std::time::Instant::now();
+    let iters = 20;
+    for _ in 0..iters {
+        engine.stack(&req).expect("stack");
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    eprintln!("stack: {:.2} ms/op", per * 1e3);
+    assert!(per < 0.25, "stacking took {per:.3}s/op — request path too slow");
+}

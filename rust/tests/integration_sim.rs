@@ -1,0 +1,166 @@
+//! Integration: simulated end-to-end experiments at paper scale.
+//!
+//! These exercise the full pipeline — workload generator → dispatcher
+//! core → flow-network testbed → metrics — and pin the paper's headline
+//! *shapes* (who wins, roughly by how much, where crossovers fall).
+
+use datadiffusion::analysis::figures::{run_stacking, StackConfig};
+use datadiffusion::analysis::model;
+use datadiffusion::config::Config;
+use datadiffusion::driver::sim::SimDriver;
+use datadiffusion::util::units::{gbps, MB};
+use datadiffusion::workloads::astro;
+use datadiffusion::workloads::microbench::{generate, MbConfig};
+
+#[test]
+fn microbench_gpfs_saturates_dd_scales() {
+    // Fig 3's core contrast at 64 nodes, 100 MB files.
+    let gpfs = {
+        let e = generate(MbConfig::FirstAvailable, 64, 100 * MB, false, 4);
+        SimDriver::new(e.config, e.spec, e.catalog).run()
+    };
+    let dd = {
+        let e = generate(MbConfig::MaxComputeUtil100, 64, 100 * MB, false, 4);
+        SimDriver::new(e.config, e.spec, e.catalog).run()
+    };
+    let gpfs_bps = gpfs.metrics.read_throughput_bps();
+    let dd_bps = dd.metrics.read_throughput_bps();
+    assert!(
+        gpfs_bps < gbps(3.6),
+        "GPFS must not exceed its aggregate cap: {gpfs_bps}"
+    );
+    assert!(
+        dd_bps > 3.0 * gpfs_bps,
+        "warm data diffusion must beat GPFS by a wide margin: {dd_bps} vs {gpfs_bps}"
+    );
+    // DD@100% should land near the local-disk envelope.
+    let ideal = model::local_disk_read_bps(&Config::with_nodes(64), 64, 100 * MB);
+    assert!(
+        dd_bps > 0.6 * ideal,
+        "DD@100% well below ideal: {dd_bps} vs {ideal}"
+    );
+}
+
+#[test]
+fn microbench_read_write_shape() {
+    // Fig 4: GPFS r+w ~1.1 Gb/s; warm DD r+w far above it.
+    let gpfs = {
+        let e = generate(MbConfig::FirstAvailable, 64, 100 * MB, true, 4);
+        SimDriver::new(e.config, e.spec, e.catalog).run()
+    };
+    let dd = {
+        let e = generate(MbConfig::MaxComputeUtil100, 64, 100 * MB, true, 4);
+        SimDriver::new(e.config, e.spec, e.catalog).run()
+    };
+    let gpfs_bps = gpfs.metrics.rw_throughput_bps();
+    assert!(
+        gpfs_bps < gbps(1.5),
+        "GPFS r+w must sit near the paper's 1.1 Gb/s: {gpfs_bps}"
+    );
+    assert!(dd.metrics.rw_throughput_bps() > 5.0 * gpfs_bps);
+}
+
+#[test]
+fn wrapper_caps_small_file_task_rate() {
+    // Fig 5: the sandbox wrapper serializes on shared metadata and caps
+    // around the paper's ~21 tasks/s at 64 nodes on tiny files.
+    let e = generate(MbConfig::FirstAvailableWrapper, 64, 1, false, 4);
+    let out = SimDriver::new(e.config, e.spec, e.catalog).run();
+    let rate = out.metrics.task_rate();
+    assert!(
+        (10.0..40.0).contains(&rate),
+        "wrapper rate {rate} not near the paper's ~21 tasks/s"
+    );
+    // No-wrapper is an order of magnitude faster.
+    let e = generate(MbConfig::FirstAvailable, 64, 1, false, 4);
+    let plain = SimDriver::new(e.config, e.spec, e.catalog).run();
+    assert!(plain.metrics.task_rate() > 5.0 * rate);
+}
+
+#[test]
+fn stacking_hit_ratio_within_90pct_of_ideal() {
+    // Fig 10 at a meaningful scale: locality 10 (ideal 90%).
+    let row = astro::row_for_locality(10.0);
+    let out = run_stacking(128, row, StackConfig::DiffusionGz, 0.25, 7);
+    let ideal = astro::ideal_hit_ratio(row.locality);
+    let got = out.metrics.local_hit_ratio();
+    assert!(
+        got >= 0.85 * ideal,
+        "hit ratio {got} below 85% of ideal {ideal}"
+    );
+}
+
+#[test]
+fn stacking_gpfs_load_collapses_with_locality() {
+    // Fig 13: GPFS bytes per stack shrink ~linearly in locality.
+    let lo = run_stacking(
+        128,
+        astro::row_for_locality(1.0),
+        StackConfig::DiffusionGz,
+        0.05,
+        7,
+    );
+    let hi = run_stacking(
+        128,
+        astro::row_for_locality(30.0),
+        StackConfig::DiffusionGz,
+        0.25,
+        7,
+    );
+    let per_lo = lo.metrics.gpfs_bytes as f64 / lo.metrics.tasks_done as f64;
+    let per_hi = hi.metrics.gpfs_bytes as f64 / hi.metrics.tasks_done as f64;
+    assert!(
+        per_lo > 10.0 * per_hi,
+        "GPFS bytes/stack should collapse: {per_lo} -> {per_hi}"
+    );
+}
+
+#[test]
+fn all_policies_complete_all_tasks() {
+    use datadiffusion::coordinator::task::{Task, TaskId};
+    use datadiffusion::driver::sim::SimWorkloadSpec;
+    use datadiffusion::scheduler::DispatchPolicy;
+    use datadiffusion::storage::object::{Catalog, ObjectId};
+
+    for policy in [
+        DispatchPolicy::FirstAvailable,
+        DispatchPolicy::FirstCacheAvailable,
+        DispatchPolicy::MaxCacheHit,
+        DispatchPolicy::MaxComputeUtil,
+    ] {
+        let mut cfg = Config::with_nodes(8);
+        cfg.scheduler.policy = policy;
+        let mut catalog = Catalog::new();
+        for i in 0..64 {
+            catalog.insert(ObjectId(i % 16), MB);
+        }
+        let tasks: Vec<(f64, Task)> = (0..200)
+            .map(|i| (0.0, Task::with_inputs(TaskId(i), vec![ObjectId(i % 16)])))
+            .collect();
+        let mut spec = SimWorkloadSpec::new(tasks);
+        spec.caching = policy.is_data_aware();
+        let out = SimDriver::new(cfg, spec, catalog).run();
+        assert_eq!(
+            out.metrics.tasks_done, 200,
+            "{policy:?} lost tasks"
+        );
+        assert_eq!(out.metrics.tasks_dispatched, 200);
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let run = || {
+        run_stacking(
+            64,
+            astro::row_for_locality(5.0),
+            StackConfig::DiffusionGz,
+            0.02,
+            99,
+        )
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.metrics.tasks_done, b.metrics.tasks_done);
+    assert_eq!(a.metrics.gpfs_bytes, b.metrics.gpfs_bytes);
+    assert!((a.makespan_s - b.makespan_s).abs() < 1e-9);
+}
