@@ -5,9 +5,10 @@
 //! within ~2.1 ms (≈3700 index updates or ≈8700 lookups).
 
 use datadiffusion::cache::store::CacheEvent;
-use datadiffusion::config::SchedulerConfig;
+use datadiffusion::config::{IndexConfig, SchedulerConfig};
 use datadiffusion::coordinator::core::FalkonCore;
 use datadiffusion::coordinator::task::{Task, TaskId};
+use datadiffusion::index::IndexBackend;
 use datadiffusion::scheduler::DispatchPolicy;
 use datadiffusion::storage::object::{Catalog, ObjectId};
 use datadiffusion::util::bench::{bench_header, black_box, time_it};
@@ -18,6 +19,14 @@ const TASKS: u64 = 100_000;
 const OBJECTS: u64 = 10_000;
 
 fn run_policy(policy: DispatchPolicy, data_aware_state: bool) -> (f64, f64) {
+    run_policy_with(policy, data_aware_state, IndexBackend::Central)
+}
+
+fn run_policy_with(
+    policy: DispatchPolicy,
+    data_aware_state: bool,
+    backend: IndexBackend,
+) -> (f64, f64) {
     let mut catalog = Catalog::new();
     for i in 0..OBJECTS {
         catalog.insert(ObjectId(i), 2_000_000);
@@ -26,7 +35,11 @@ fn run_policy(policy: DispatchPolicy, data_aware_state: bool) -> (f64, f64) {
         policy,
         ..SchedulerConfig::default()
     };
-    let mut core = FalkonCore::new(&cfg, catalog);
+    let index_cfg = IndexConfig {
+        backend,
+        ..IndexConfig::default()
+    };
+    let mut core = FalkonCore::with_index(&cfg, catalog, datadiffusion::index::build(&index_cfg, 7));
     for e in 0..EXECUTORS {
         core.register_executor(e);
     }
@@ -89,6 +102,24 @@ fn main() {
             if per_us < 2100.0 { "(within 2.1ms budget)" } else { "(OVER 2.1ms budget)" }
         );
         csv.rowf(&[&policy.label(), &rate, &per_us]);
+    }
+
+    // Backend indirection check: the same data-aware drain through the
+    // trait object with the chord backend (routing per charged lookup).
+    // The central rows above already go through `Box<dyn DataIndex>`, so
+    // central-vs-chord isolates backend cost, and comparing the central
+    // rows against a pre-refactor checkout isolates the indirection.
+    println!();
+    for backend in [IndexBackend::Central, IndexBackend::Chord] {
+        let (rate, per) = run_policy_with(DispatchPolicy::MaxComputeUtil, true, backend);
+        let label = format!("max-compute-util@{}", backend.label());
+        println!(
+            "{:<24} {:>12.0} tasks/s {:>12.1} us/decision",
+            label,
+            rate,
+            per * 1e6
+        );
+        csv.rowf(&[&label, &rate, &(per * 1e6)]);
     }
 
     // Raw index ops (the §3.2.3 microbenchmark).

@@ -5,8 +5,14 @@
 //! et al.) needs >32K nodes to match that aggregate throughput.
 //!
 //! We *measure* our Rust `CentralIndex` and combine it with the same
-//! P-RLS latency model the paper uses.
+//! P-RLS latency model the paper uses — and then go one step further
+//! than the paper's analytic argument: the same data-aware workload is
+//! run through the real dispatch path under both the centralized and the
+//! Chord index backend (`--index central|chord` on the CLI), so the
+//! central-vs-distributed comparison is also *measured on scheduled
+//! runs*, not only on closed-form curves.
 
+use datadiffusion::analysis::figures;
 use datadiffusion::index::central::CentralIndex;
 use datadiffusion::index::dht::{ChordRing, DhtModel};
 use datadiffusion::index::prls::PrlsModel;
@@ -123,4 +129,60 @@ fn main() {
          paper's §3.2.3 conclusion holds for both P-RLS and DHT designs."
     );
     println!("wrote {}", path.display());
+
+    // Measured companion: the same workload scheduled end-to-end under
+    // each index backend through the real dispatch path.
+    println!("\nmeasured central-vs-chord on real scheduled runs (max-compute-util):");
+    let rows = figures::fig2_measured(&[4, 16, 64], 8);
+    let mut mcsv = CsvWriter::new(
+        results_dir().join("fig2_index_measured.csv"),
+        &[
+            "backend",
+            "nodes",
+            "tasks",
+            "makespan_s",
+            "index_lookups",
+            "index_hops",
+            "mean_hops",
+            "index_cost_s",
+            "cost_fraction",
+        ],
+    );
+    println!(
+        "{:<9} {:>6} {:>7} {:>12} {:>9} {:>7} {:>8} {:>13} {:>9}",
+        "backend", "nodes", "tasks", "makespan", "lookups", "hops", "hops/op", "index cost", "cost%"
+    );
+    for r in &rows {
+        println!(
+            "{:<9} {:>6} {:>7} {:>11.3}s {:>9} {:>7} {:>8.2} {:>12.6}s {:>8.4}%",
+            r.backend,
+            r.nodes,
+            r.tasks,
+            r.makespan_s,
+            r.index_lookups,
+            r.index_hops,
+            r.mean_hops,
+            r.index_cost_s,
+            r.cost_fraction * 100.0
+        );
+        mcsv.rowf(&[
+            &r.backend,
+            &r.nodes,
+            &r.tasks,
+            &r.makespan_s,
+            &r.index_lookups,
+            &r.index_hops,
+            &r.mean_hops,
+            &r.index_cost_s,
+            &r.cost_fraction,
+        ]);
+    }
+    let mpath = mcsv.finish().expect("write csv");
+    println!(
+        "\nmeasured note: at these scales the chord overlay charges O(log N) hops per\n\
+         lookup while the central index stays sub-microsecond — the distributed\n\
+         design only pays off once aggregate load exceeds one node's capacity\n\
+         (the >32K-node crossover above).\nwrote {}",
+        mpath.display()
+    );
 }

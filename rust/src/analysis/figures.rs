@@ -7,8 +7,11 @@
 
 use crate::analysis::model;
 use crate::config::{presets, Config};
-use crate::driver::sim::{SimDriver, SimOutcome};
-use crate::storage::object::DataFormat;
+use crate::coordinator::task::{Task, TaskId};
+use crate::driver::sim::{SimDriver, SimOutcome, SimWorkloadSpec};
+use crate::index::IndexBackend;
+use crate::scheduler::DispatchPolicy;
+use crate::storage::object::{Catalog, DataFormat, ObjectId};
 use crate::workloads::astro::{self, WorkloadRow};
 use crate::workloads::microbench::{self, MbConfig};
 
@@ -28,6 +31,91 @@ pub fn env_tpn() -> usize {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(8)
+}
+
+// ------------------------------------------------------------------ Fig 2
+
+/// One measured point of the Figure 2 companion: a real scheduled run
+/// under one index backend.
+#[derive(Debug, Clone)]
+pub struct IndexBackendPoint {
+    /// Backend label ("central" / "chord").
+    pub backend: &'static str,
+    /// Executor nodes (and Chord overlay size).
+    pub nodes: usize,
+    /// Tasks completed.
+    pub tasks: u64,
+    /// Simulated makespan, seconds.
+    pub makespan_s: f64,
+    /// Index lookups charged at dispatch time.
+    pub index_lookups: u64,
+    /// Overlay routing hops behind those lookups.
+    pub index_hops: u64,
+    /// Total simulated index latency charged, seconds.
+    pub index_cost_s: f64,
+    /// Mean hops per lookup (0 on the centralized backend).
+    pub mean_hops: f64,
+    /// Index cost as a fraction of the makespan.
+    pub cost_fraction: f64,
+}
+
+/// Figure 2 (measured companion): run the *same* data-aware workload
+/// through the real dispatch path under the centralized and the Chord
+/// index and report what the index actually cost each run.
+///
+/// The analytic Figure 2 curves answer "when would a distributed index's
+/// aggregate throughput catch up?"; this answers the operational
+/// question behind them — what a scheduled run pays per backend today.
+/// Placement is backend-invariant (see `crate::index`), so any makespan
+/// delta is pure index cost.
+pub fn fig2_measured(nodes_list: &[usize], tasks_per_node: usize) -> Vec<IndexBackendPoint> {
+    let mut rows = Vec::new();
+    for &nodes in nodes_list {
+        for backend in [IndexBackend::Central, IndexBackend::Chord] {
+            let mut cfg = Config::with_nodes(nodes);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.index.backend = backend;
+            // Every object requested repeatedly with spaced arrivals, so
+            // the index is consulted against warm state on every
+            // dispatch (the regime §3.2.3 budgets for).
+            let objects = 2 * nodes as u64;
+            let total = (nodes * tasks_per_node.max(1)) as u64;
+            let mut catalog = Catalog::new();
+            for i in 0..objects {
+                catalog.insert(ObjectId(i), crate::util::units::MB);
+            }
+            let tasks: Vec<(f64, Task)> = (0..total)
+                .map(|i| {
+                    (
+                        i as f64 * 0.01,
+                        Task::with_inputs(TaskId(i), vec![ObjectId(i % objects)]),
+                    )
+                })
+                .collect();
+            let out = SimDriver::new(cfg, SimWorkloadSpec::new(tasks), catalog).run();
+            let m = &out.metrics;
+            rows.push(IndexBackendPoint {
+                backend: backend.label(),
+                nodes,
+                tasks: m.tasks_done,
+                makespan_s: out.makespan_s,
+                index_lookups: m.index_lookups,
+                index_hops: m.index_hops,
+                index_cost_s: m.index_cost_s,
+                mean_hops: if m.index_lookups > 0 {
+                    m.index_hops as f64 / m.index_lookups as f64
+                } else {
+                    0.0
+                },
+                cost_fraction: if out.makespan_s > 0.0 {
+                    m.index_cost_s / out.makespan_s
+                } else {
+                    0.0
+                },
+            });
+        }
+    }
+    rows
 }
 
 // ---------------------------------------------------------------- Fig 3/4
@@ -289,6 +377,19 @@ mod tests {
         let warm = get(MbConfig::MaxComputeUtil100.label());
         let cold = get(MbConfig::MaxComputeUtil0.label());
         assert!(warm > 0.0 && cold > 0.0);
+    }
+
+    #[test]
+    fn fig2_measured_chord_costs_more_than_central() {
+        let rows = fig2_measured(&[8], 4);
+        assert_eq!(rows.len(), 2);
+        let central = rows.iter().find(|r| r.backend == "central").unwrap();
+        let chord = rows.iter().find(|r| r.backend == "chord").unwrap();
+        assert_eq!(central.tasks, chord.tasks, "same workload both backends");
+        assert_eq!(central.index_lookups, chord.index_lookups);
+        assert_eq!(central.index_hops, 0);
+        assert!(chord.index_hops > 0);
+        assert!(chord.index_cost_s > central.index_cost_s);
     }
 
     #[test]

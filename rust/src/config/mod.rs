@@ -15,6 +15,7 @@ pub mod presets;
 
 use crate::cache::policy::EvictionPolicy;
 use crate::error::Result;
+use crate::index::IndexBackend;
 use crate::scheduler::DispatchPolicy;
 use crate::util::units::{gbps, mbps, BitsPerSec, GB, MB};
 
@@ -166,6 +167,38 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Cache-location index configuration (§3.2.3).
+///
+/// Selects the [`DataIndex`](crate::index::DataIndex) backend the
+/// dispatcher runs against and calibrates its simulated lookup costs.
+/// Defaults reproduce the paper's measurements: 0.25–1 µs per central
+/// hash-table lookup (we charge the midpoint) and LAN-regime per-hop
+/// latency for the distributed (Chord) design.
+#[derive(Debug, Clone)]
+pub struct IndexConfig {
+    /// Which backend serves location lookups.
+    pub backend: IndexBackend,
+    /// Simulated service time of one centralized-index lookup, seconds.
+    pub central_lookup_s: f64,
+    /// One-way per-hop network latency on the Chord overlay, seconds
+    /// (GigE LAN: ~0.2 ms — same regime as the paper's 1–2 ms
+    /// dispatcher-executor latency).
+    pub hop_latency_s: f64,
+    /// Local processing per overlay hop (hash + finger lookup), seconds.
+    pub hop_proc_s: f64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            backend: IndexBackend::Central,
+            central_lookup_s: 0.5e-6,
+            hop_latency_s: 0.0002,
+            hop_proc_s: 0.00002,
+        }
+    }
+}
+
 /// Dynamic resource provisioner configuration (§3.1).
 #[derive(Debug, Clone)]
 pub struct ProvisionerConfig {
@@ -248,6 +281,8 @@ pub struct Config {
     pub cache: CacheConfig,
     /// Dispatch policy settings.
     pub scheduler: SchedulerConfig,
+    /// Cache-location index backend + cost calibration.
+    pub index: IndexConfig,
     /// Dynamic resource provisioning settings.
     pub provisioner: ProvisionerConfig,
     /// Stacking application constants.
@@ -305,6 +340,15 @@ impl Config {
         }
         self.scheduler.wrapper = doc.bool_or("scheduler.wrapper", self.scheduler.wrapper);
 
+        let ix = &mut self.index;
+        if let Some(parse::Value::Str(b)) = doc.get("index.backend") {
+            ix.backend = IndexBackend::parse(b)
+                .ok_or_else(|| crate::error::Error::Config(format!("bad index.backend {b:?}")))?;
+        }
+        ix.central_lookup_s = doc.num_or("index.central_lookup_s", ix.central_lookup_s);
+        ix.hop_latency_s = doc.num_or("index.hop_latency_s", ix.hop_latency_s);
+        ix.hop_proc_s = doc.num_or("index.hop_proc_s", ix.hop_proc_s);
+
         let p = &mut self.provisioner;
         p.min_executors = doc.num_or("provisioner.min_executors", p.min_executors as f64) as usize;
         p.max_executors = doc.num_or("provisioner.max_executors", p.max_executors as f64) as usize;
@@ -355,6 +399,9 @@ policy = "lfu"
 [scheduler]
 policy = "first-available"
 wrapper = true
+[index]
+backend = "chord"
+hop_latency_s = 0.001
 "#,
         )
         .unwrap();
@@ -366,7 +413,16 @@ wrapper = true
         assert_eq!(c.cache.policy, EvictionPolicy::Lfu);
         assert_eq!(c.scheduler.policy, DispatchPolicy::FirstAvailable);
         assert!(c.scheduler.wrapper);
+        assert_eq!(c.index.backend, IndexBackend::Chord);
+        assert!((c.index.hop_latency_s - 0.001).abs() < 1e-12);
         assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn bad_index_backend_is_config_error() {
+        let doc = parse::Doc::parse("[index]\nbackend = \"gossip\"").unwrap();
+        let mut c = Config::default();
+        assert!(c.apply_doc(&doc).is_err());
     }
 
     #[test]

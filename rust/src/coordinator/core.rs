@@ -1,11 +1,17 @@
-//! The Falkon dispatcher core: wait queue + executor registry + central
-//! index + dispatch policy, as pure synchronous state.
+//! The Falkon dispatcher core: wait queue + executor registry +
+//! cache-location index + dispatch policy, as pure synchronous state.
 //!
 //! Both drivers (discrete-event simulation and live threads) feed this
 //! same structure, which is the point: the paper's *contribution* — the
 //! data-aware scheduling logic — is one implementation exercised under
 //! two substrates. Drivers call in on every state change and carry out
 //! the returned [`DispatchOrder`]s.
+//!
+//! The index is any [`DataIndex`] backend chosen at construction
+//! ([`FalkonCore::with_index`]); backends change lookup *cost*, never
+//! placement, so the scheduling behavior is backend-invariant while the
+//! charged index latency (shipped on every order as
+//! [`DispatchOrder::cost`]) is not.
 
 use crate::util::fxhash::FxHashMap;
 
@@ -13,6 +19,7 @@ use crate::cache::store::CacheEvent;
 use crate::config::SchedulerConfig;
 use crate::coordinator::task::{Task, TaskId};
 use crate::index::central::{CentralIndex, ExecutorId};
+use crate::index::{DataIndex, LookupCost};
 use crate::scheduler::decision::{Decision, LocationHints, SchedView};
 use crate::scheduler::queue::WaitQueue;
 use crate::scheduler::DispatchPolicy;
@@ -27,6 +34,10 @@ pub struct DispatchOrder {
     pub executor: ExecutorId,
     /// Data-location hints to ship along (empty for first-available).
     pub hints: LocationHints,
+    /// Simulated index cost behind this dispatch (one location lookup per
+    /// input for data-aware policies; [`LookupCost::ZERO`] otherwise).
+    /// The sim driver charges `cost.latency_s` into the event timeline.
+    pub cost: LookupCost,
 }
 
 /// Executor slot accounting. An executor (node) may run several tasks
@@ -43,7 +54,7 @@ pub struct FalkonCore {
     policy: DispatchPolicy,
     window: usize,
     queue: WaitQueue,
-    index: CentralIndex,
+    index: Box<dyn DataIndex>,
     catalog: Catalog,
     slots: FxHashMap<ExecutorId, Slots>,
     idle: Vec<ExecutorId>, // sorted: executors with a free slot
@@ -54,13 +65,20 @@ pub struct FalkonCore {
 }
 
 impl FalkonCore {
-    /// New core with the given policy and object catalog.
+    /// New core with the given policy and object catalog, over a
+    /// zero-cost [`CentralIndex`] (the historical default).
     pub fn new(cfg: &SchedulerConfig, catalog: Catalog) -> Self {
+        FalkonCore::with_index(cfg, catalog, Box::new(CentralIndex::new()))
+    }
+
+    /// New core over an explicit index backend (see [`crate::index::build`]
+    /// for constructing one from an `IndexConfig`).
+    pub fn with_index(cfg: &SchedulerConfig, catalog: Catalog, index: Box<dyn DataIndex>) -> Self {
         FalkonCore {
             policy: cfg.policy,
             window: cfg.window.max(1),
             queue: WaitQueue::new(),
-            index: CentralIndex::new(),
+            index,
             catalog,
             slots: FxHashMap::default(),
             idle: Vec::new(),
@@ -81,9 +99,9 @@ impl FalkonCore {
         &self.catalog
     }
 
-    /// The central index (read access for metrics/benches).
-    pub fn index(&self) -> &CentralIndex {
-        &self.index
+    /// The cache-location index (read access for metrics/benches).
+    pub fn index(&self) -> &dyn DataIndex {
+        self.index.as_ref()
     }
 
     /// Register a newly provisioned executor with one task slot.
@@ -106,6 +124,7 @@ impl FalkonCore {
             if let Err(pos) = self.idle.binary_search(&e) {
                 self.idle.insert(pos, e);
             }
+            self.index.executor_joined(e);
         }
     }
 
@@ -165,17 +184,19 @@ impl FalkonCore {
             let view = SchedView {
                 idle: &self.idle,
                 all: &self.all,
-                index: &self.index,
+                index: self.index.as_ref(),
                 catalog: &self.catalog,
             };
             match self.policy.decide(&task, &view) {
                 Decision::Dispatch { executor, hints } => {
+                    let cost = self.hint_lookup_cost(&task);
                     self.mark_busy(executor);
                     self.dispatched += 1;
                     orders.push(DispatchOrder {
                         task,
                         executor,
                         hints,
+                        cost,
                     });
                 }
                 Decision::Delay { executor } => {
@@ -264,19 +285,37 @@ impl FalkonCore {
             let view = SchedView {
                 idle: &self.idle,
                 all: &self.all,
-                index: &self.index,
+                index: self.index.as_ref(),
                 catalog: &self.catalog,
             };
             let hints = view.hints_for(&task);
+            let cost = self.hint_lookup_cost(&task);
             self.mark_busy(executor);
             self.dispatched += 1;
             orders.push(DispatchOrder {
                 task,
                 executor,
                 hints,
+                cost,
             });
         }
         orders
+    }
+
+    /// Index cost charged for dispatching `task`: one location lookup per
+    /// input for data-aware policies (the hints shipped with the order).
+    /// The window scan's candidate scoring reuses those same per-input
+    /// resolutions, so it is not double-charged — consistent with the
+    /// §3.2.3 budget analysis, which counts lookups per *task*.
+    fn hint_lookup_cost(&self, task: &Task) -> LookupCost {
+        if !self.policy.is_data_aware() {
+            return LookupCost::ZERO;
+        }
+        let mut cost = LookupCost::ZERO;
+        for &obj in &task.inputs {
+            cost.accumulate(self.index.lookup_cost(obj));
+        }
+        cost
     }
 
     /// Executor reports a completed task along with the cache changes it
@@ -434,6 +473,51 @@ mod tests {
         assert_eq!(c.idle_count(), 1);
         let o = c.try_dispatch();
         assert_eq!(o.len(), 1);
+    }
+
+    #[test]
+    fn orders_carry_index_cost_per_backend() {
+        use crate::config::IndexConfig;
+        use crate::index::IndexBackend;
+
+        // Data-unaware policy: free regardless of backend.
+        let mut c = core(DispatchPolicy::FirstAvailable);
+        c.register_executor(0);
+        c.submit(Task::with_inputs(TaskId(0), vec![ObjectId(1)]));
+        let o = c.try_dispatch();
+        assert_eq!(o[0].cost, crate::index::LookupCost::ZERO);
+
+        // Chord backend: every data-aware dispatch charges routed lookups.
+        let mut catalog = Catalog::new();
+        for i in 0..10 {
+            catalog.insert(ObjectId(i), 100);
+        }
+        let cfg = SchedulerConfig {
+            policy: DispatchPolicy::MaxComputeUtil,
+            ..SchedulerConfig::default()
+        };
+        let chord_cfg = IndexConfig {
+            backend: IndexBackend::Chord,
+            ..IndexConfig::default()
+        };
+        let mut c = FalkonCore::with_index(&cfg, catalog, crate::index::build(&chord_cfg, 7));
+        for e in 0..32 {
+            c.register_executor(e);
+        }
+        assert_eq!(c.index().backend(), "chord");
+        let mut total_lookups = 0u32;
+        let mut any_hops = false;
+        for i in 0..16 {
+            c.submit(Task::with_inputs(TaskId(i), vec![ObjectId(i % 10)]));
+        }
+        for o in c.try_dispatch() {
+            total_lookups += o.cost.lookups;
+            any_hops |= o.cost.hops > 0;
+            let per_hop = chord_cfg.hop_latency_s + chord_cfg.hop_proc_s;
+            assert!((o.cost.latency_s - o.cost.hops as f64 * per_hop).abs() < 1e-12);
+        }
+        assert_eq!(total_lookups, 16, "one lookup per single-input task");
+        assert!(any_hops, "32-node overlay should route at least once");
     }
 
     #[test]

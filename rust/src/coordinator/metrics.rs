@@ -6,6 +6,7 @@
 //! into local / cache-to-cache / GPFS (Fig 12), and per-task data
 //! movement by source (Fig 13).
 
+use crate::index::LookupCost;
 use crate::util::stats::Summary;
 
 /// Where bytes came from (the three arrows in the architecture figure).
@@ -42,6 +43,13 @@ pub struct Metrics {
     pub tasks_done: u64,
     /// Tasks dispatched (should equal tasks_done at quiesce).
     pub tasks_dispatched: u64,
+    /// Cache-location index lookups charged at dispatch time.
+    pub index_lookups: u64,
+    /// Overlay routing hops behind those lookups (0 on the centralized
+    /// backend).
+    pub index_hops: u64,
+    /// Total simulated index latency charged, seconds.
+    pub index_cost_s: f64,
     /// Per-task end-to-end latency (submit → complete), seconds.
     pub task_latency: Summary,
     /// Per-task execution span (dispatch → complete), seconds.
@@ -66,6 +74,13 @@ impl Metrics {
             ByteSource::Gpfs => self.gpfs_bytes += bytes,
             ByteSource::GpfsWrite => self.gpfs_write_bytes += bytes,
         }
+    }
+
+    /// Record the index cost charged for one dispatch order.
+    pub fn add_index_cost(&mut self, cost: LookupCost) {
+        self.index_lookups += cost.lookups as u64;
+        self.index_hops += cost.hops as u64;
+        self.index_cost_s += cost.latency_s;
     }
 
     /// Record how one input was resolved.

@@ -2,8 +2,9 @@
 //!
 //! The same [`FalkonCore`] as the simulator, but executors are OS threads
 //! doing real I/O against a directory tree ("persistent storage"), real
-//! per-executor cache directories, real gzip decompression (flate2), and
-//! real PJRT stacking compute through [`crate::runtime::PjrtEngine`].
+//! per-executor cache directories, real gzip decoding
+//! ([`crate::util::gzip`]), and real PJRT stacking compute through
+//! [`crate::runtime::PjrtEngine`] (when the `pjrt` feature is on).
 //!
 //! Threading model:
 //!
@@ -197,7 +198,15 @@ impl LiveCluster {
             catalog.insert(id, store.catalog().size(id).unwrap());
         }
 
-        let mut core = FalkonCore::new(&cfg.scheduler, catalog);
+        // The live coordinator threads the same pluggable index backend
+        // as the simulator: lookups resolve instantly (the overlay is a
+        // cost model, not real RPCs), but the charged cost lands in the
+        // run metrics so live and simulated accounting stay comparable.
+        let mut core = FalkonCore::with_index(
+            &cfg.scheduler,
+            catalog,
+            crate::index::build(&cfg.index, cfg.seed),
+        );
         for e in 0..n_exec {
             core.register_executor_with(e, capacity);
         }
@@ -254,6 +263,7 @@ impl LiveCluster {
         while completed < total {
             for order in core.try_dispatch() {
                 metrics.tasks_dispatched += 1;
+                metrics.add_index_cost(order.cost);
                 let msg = ExecMsg::Run {
                     t_submit: submit_times
                         .remove(&order.task.id)
@@ -513,6 +523,30 @@ mod tests {
         );
         assert!(out.metrics.gpfs_misses <= 8 + 2, "most repeats hit caches");
         assert!(out.metrics.total_read_bytes() > 0);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn live_cluster_chord_index_accounts_cost() {
+        let root = tmp("chord");
+        let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+        for i in 0..4 {
+            store.populate(ObjectId(i), 2_000).unwrap();
+        }
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.index.backend = crate::index::IndexBackend::Chord;
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 4)]))
+            .collect();
+        let out = LiveCluster::new(cfg, store, root.join("work"), None)
+            .run(tasks)
+            .unwrap();
+        assert_eq!(out.metrics.tasks_done, 8);
+        assert_eq!(
+            out.metrics.index_lookups, 8,
+            "one charged lookup per single-input task"
+        );
         let _ = std::fs::remove_dir_all(root);
     }
 

@@ -2,50 +2,113 @@
 //!
 //! Coarse-grained by subsystem; everything converges to [`Error`] at the
 //! public API boundary. Internal modules may use more specific enums.
+//!
+//! `Display`/`Error` are hand-implemented — the offline crate set has no
+//! `thiserror` (see `rust/Cargo.toml`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Top-level error type for the data-diffusion library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / preset problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A referenced data object is unknown to the persistent store.
-    #[error("unknown data object: {0}")]
     UnknownObject(String),
 
     /// Executor-side failure (fetch, cache, execute).
-    #[error("executor {executor} failed: {msg}")]
-    Executor { executor: usize, msg: String },
+    Executor {
+        /// The executor that failed.
+        executor: usize,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// The PJRT runtime failed to load or execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Workload generation / trace parsing problems.
-    #[error("workload error: {0}")]
     Workload(String),
 
     /// Live-mode filesystem failures.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Coordinator protocol violation (e.g. completion for unknown task).
-    #[error("protocol error: {0}")]
     Protocol(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::UnknownObject(m) => write!(f, "unknown data object: {m}"),
+            Error::Executor { executor, msg } => {
+                write!(f, "executor {executor} failed: {msg}")
+            }
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Workload(m) => write!(f, "workload error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_subsystem_prefixes() {
+        assert_eq!(
+            Error::Config("bad key".into()).to_string(),
+            "config error: bad key"
+        );
+        assert_eq!(
+            Error::Executor {
+                executor: 3,
+                msg: "fetch failed".into()
+            }
+            .to_string(),
+            "executor 3 failed: fetch failed"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(e.source().is_some());
     }
 }

@@ -11,6 +11,7 @@
 
 use crate::util::fxhash::FxHashMap;
 
+use super::{DataIndex, LookupCost};
 use crate::storage::object::ObjectId;
 
 /// Executor identifier (dense, assigned by the coordinator).
@@ -23,12 +24,24 @@ pub struct CentralIndex {
     by_executor: FxHashMap<ExecutorId, Vec<ObjectId>>,
     inserts: u64,
     lookups: std::cell::Cell<u64>,
+    /// Simulated per-lookup service time charged by [`DataIndex::lookup_cost`]
+    /// (0 when the index is used as a raw data structure).
+    lookup_s: f64,
 }
 
 impl CentralIndex {
-    /// Empty index.
+    /// Empty index with free lookups (raw data-structure use).
     pub fn new() -> Self {
         CentralIndex::default()
+    }
+
+    /// Empty index charging `lookup_s` seconds of simulated service time
+    /// per lookup (§3.2.3 measures 0.25–1 µs at 1M–8M entries).
+    pub fn with_cost(lookup_s: f64) -> Self {
+        CentralIndex {
+            lookup_s,
+            ..CentralIndex::default()
+        }
     }
 
     /// Record that `exec` now caches `obj`.
@@ -121,6 +134,56 @@ impl CentralIndex {
     /// Lifetime (inserts, lookups) counters for the Fig 2 bench.
     pub fn op_counts(&self) -> (u64, u64) {
         (self.inserts, self.lookups.get())
+    }
+}
+
+impl DataIndex for CentralIndex {
+    fn insert(&mut self, obj: ObjectId, exec: ExecutorId) {
+        CentralIndex::insert(self, obj, exec);
+    }
+
+    fn remove(&mut self, obj: ObjectId, exec: ExecutorId) {
+        CentralIndex::remove(self, obj, exec);
+    }
+
+    fn locations(&self, obj: ObjectId) -> &[ExecutorId] {
+        CentralIndex::locations(self, obj)
+    }
+
+    fn holds(&self, exec: ExecutorId, obj: ObjectId) -> bool {
+        CentralIndex::holds(self, exec, obj)
+    }
+
+    fn objects_of(&self, exec: ExecutorId) -> &[ObjectId] {
+        CentralIndex::objects_of(self, exec)
+    }
+
+    fn drop_executor(&mut self, exec: ExecutorId) -> Vec<ObjectId> {
+        CentralIndex::drop_executor(self, exec)
+    }
+
+    fn len(&self) -> usize {
+        CentralIndex::len(self)
+    }
+
+    fn entries(&self) -> usize {
+        CentralIndex::entries(self)
+    }
+
+    fn op_counts(&self) -> (u64, u64) {
+        CentralIndex::op_counts(self)
+    }
+
+    fn lookup_cost(&self, _obj: ObjectId) -> LookupCost {
+        LookupCost {
+            latency_s: self.lookup_s,
+            hops: 0,
+            lookups: 1,
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "central"
     }
 }
 

@@ -1,0 +1,265 @@
+//! Stateful Chord-backed distributed index (§3.2.3's "other candidate").
+//!
+//! The object→locations map is partitioned by consistent hashing over a
+//! [`ChordRing`] whose nodes are the registered executors: the ring
+//! successor of `hash(obj)` *owns* that object's location records, as in
+//! Chord-based replica location services. Every lookup is **routed** —
+//! the query enters the overlay at a rotating executor (sampling the hop
+//! distribution the way `ChordRing::mean_hops` does) and follows
+//! closest-preceding-finger forwarding to the owner, so the hop count in
+//! [`DataIndex::lookup_cost`] is measured on real finger tables, not
+//! assumed from the ½·log₂N law.
+//!
+//! Content-wise the backend is lossless: the full location map is kept in
+//! a [`CentralIndex`] (the union of what every owner node would store),
+//! which guarantees the scheduler sees byte-identical placement
+//! information on either backend — the trait contract. What changes is
+//! *cost*: each resolved object charges `hops × (hop_latency + proc)`
+//! seconds, the same per-hop model the analytic Figure 2 curves use, so
+//! measured scheduled runs and closed-form curves are directly
+//! comparable.
+//!
+//! Like [`super::dht`], the overlay is modeled without churn or
+//! stabilization traffic: executor join/leave rebuilds the ring
+//! immediately (membership changes are rare relative to lookups in every
+//! workload the paper studies).
+
+use std::cell::Cell;
+
+use super::central::{CentralIndex, ExecutorId};
+use super::dht::{ChordRing, DhtModel};
+use super::{DataIndex, LookupCost};
+use crate::storage::object::ObjectId;
+
+/// Distributed cache-location index over a Chord overlay of executors.
+pub struct ChordIndex {
+    /// Ground-truth location map (union of all per-owner partitions).
+    store: CentralIndex,
+    /// Per-hop cost model.
+    model: DhtModel,
+    /// Ring placement seed (deterministic runs).
+    seed: u64,
+    /// Number of executors currently in the overlay.
+    members: usize,
+    /// The routing overlay; rebuilt on membership change. Always at least
+    /// one node so routing is defined even before registration.
+    ring: ChordRing,
+    /// Monotone query counter — rotates the overlay entry point.
+    queries: Cell<u64>,
+    /// Total hops across all routed lookups (metrics/bench readout).
+    routed_hops: Cell<u64>,
+    /// Total routed lookups.
+    routed_lookups: Cell<u64>,
+}
+
+impl ChordIndex {
+    /// Empty index with the given per-hop cost model and ring seed.
+    pub fn new(model: DhtModel, seed: u64) -> ChordIndex {
+        ChordIndex {
+            store: CentralIndex::new(),
+            model,
+            seed,
+            members: 0,
+            ring: ChordRing::new(1, seed),
+            queries: Cell::new(0),
+            routed_hops: Cell::new(0),
+            routed_lookups: Cell::new(0),
+        }
+    }
+
+    /// Convenience: an index whose overlay already has `nodes` executors
+    /// (one ring build, not `nodes` incremental rebuilds).
+    pub fn with_nodes(nodes: usize, model: DhtModel, seed: u64) -> ChordIndex {
+        let mut idx = ChordIndex::new(model, seed);
+        idx.members = nodes;
+        idx.rebuild_ring();
+        idx
+    }
+
+    /// Executors currently in the overlay.
+    pub fn overlay_size(&self) -> usize {
+        self.members
+    }
+
+    /// (routed lookups, total hops) since construction.
+    pub fn routing_counts(&self) -> (u64, u64) {
+        (self.routed_lookups.get(), self.routed_hops.get())
+    }
+
+    /// Mean hops per routed lookup so far (NaN before the first lookup).
+    pub fn mean_hops(&self) -> f64 {
+        self.routed_hops.get() as f64 / self.routed_lookups.get() as f64
+    }
+
+    /// Rebuild the overlay for the current membership.
+    fn rebuild_ring(&mut self) {
+        self.ring = ChordRing::new(self.members.max(1), self.seed);
+    }
+
+    /// Route one query for `obj` from the rotating entry node; returns
+    /// the measured hop count.
+    fn route_query(&self, obj: ObjectId) -> u32 {
+        let q = self.queries.get();
+        self.queries.set(q + 1);
+        // Sequential rotation: stride 1 is co-prime with every ring size,
+        // so entry points are sampled evenly (a fixed stride like 31
+        // would collapse onto one node whenever 31 | ring size).
+        let entry = (q as usize) % self.ring.len();
+        let (_, hops) = self.ring.route(entry, obj);
+        self.routed_lookups.set(self.routed_lookups.get() + 1);
+        self.routed_hops.set(self.routed_hops.get() + hops as u64);
+        hops
+    }
+}
+
+impl DataIndex for ChordIndex {
+    fn insert(&mut self, obj: ObjectId, exec: ExecutorId) {
+        self.store.insert(obj, exec);
+    }
+
+    fn remove(&mut self, obj: ObjectId, exec: ExecutorId) {
+        self.store.remove(obj, exec);
+    }
+
+    fn locations(&self, obj: ObjectId) -> &[ExecutorId] {
+        self.store.locations(obj)
+    }
+
+    fn holds(&self, exec: ExecutorId, obj: ObjectId) -> bool {
+        self.store.holds(exec, obj)
+    }
+
+    fn objects_of(&self, exec: ExecutorId) -> &[ObjectId] {
+        self.store.objects_of(exec)
+    }
+
+    fn executor_joined(&mut self, _exec: ExecutorId) {
+        self.members += 1;
+        self.rebuild_ring();
+    }
+
+    fn drop_executor(&mut self, exec: ExecutorId) -> Vec<ObjectId> {
+        if self.members > 0 {
+            self.members -= 1;
+            self.rebuild_ring();
+        }
+        self.store.drop_executor(exec)
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn entries(&self) -> usize {
+        self.store.entries()
+    }
+
+    fn op_counts(&self) -> (u64, u64) {
+        self.store.op_counts()
+    }
+
+    fn lookup_cost(&self, obj: ObjectId) -> LookupCost {
+        let hops = self.route_query(obj);
+        LookupCost {
+            latency_s: hops as f64 * (self.model.hop_latency_s + self.model.proc_s),
+            hops,
+            lookups: 1,
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "chord"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chord(nodes: usize) -> ChordIndex {
+        ChordIndex::with_nodes(nodes, DhtModel::default(), 42)
+    }
+
+    #[test]
+    fn content_matches_central_semantics() {
+        let mut idx = chord(8);
+        idx.insert(ObjectId(1), 3);
+        idx.insert(ObjectId(1), 5);
+        idx.insert(ObjectId(1), 3); // duplicate: no-op
+        assert_eq!(idx.locations(ObjectId(1)), &[3, 5]);
+        assert!(idx.holds(5, ObjectId(1)));
+        assert!(!idx.holds(4, ObjectId(1)));
+        idx.remove(ObjectId(1), 3);
+        assert_eq!(idx.locations(ObjectId(1)), &[5]);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.entries(), 1);
+    }
+
+    #[test]
+    fn lookup_cost_charges_measured_hops() {
+        let idx = chord(64);
+        let mut total = LookupCost::ZERO;
+        for i in 0..200u64 {
+            total.accumulate(idx.lookup_cost(ObjectId(i)));
+        }
+        assert_eq!(total.lookups, 200);
+        assert!(total.hops > 0, "64-node overlay must route");
+        let per_hop = DhtModel::default().hop_latency_s + DhtModel::default().proc_s;
+        let expect = total.hops as f64 * per_hop;
+        assert!((total.latency_s - expect).abs() < 1e-12);
+        // Classic Chord: mean hops ≈ ½ log2(N) = 3 at N=64; allow slack.
+        let mean = idx.mean_hops();
+        assert!((1.0..6.0).contains(&mean), "mean hops {mean}");
+    }
+
+    #[test]
+    fn cost_grows_logarithmically_with_overlay() {
+        let small = chord(16);
+        let large = chord(4096);
+        let mean_of = |idx: &ChordIndex| {
+            for i in 0..500u64 {
+                idx.lookup_cost(ObjectId(i.wrapping_mul(0x9E37_79B9)));
+            }
+            idx.mean_hops()
+        };
+        let s = mean_of(&small);
+        let l = mean_of(&large);
+        assert!(s < l, "hops must grow with overlay size");
+        assert!(l < s * 4.0, "growth must be sub-linear: {s} -> {l}");
+    }
+
+    #[test]
+    fn single_node_overlay_is_free() {
+        let idx = chord(1);
+        let c = idx.lookup_cost(ObjectId(9));
+        assert_eq!(c.hops, 0);
+        assert_eq!(c.latency_s, 0.0);
+        assert_eq!(c.lookups, 1);
+    }
+
+    #[test]
+    fn membership_tracks_join_and_drop() {
+        let mut idx = ChordIndex::new(DhtModel::default(), 7);
+        assert_eq!(idx.overlay_size(), 0);
+        for e in 0..5 {
+            idx.executor_joined(e);
+        }
+        assert_eq!(idx.overlay_size(), 5);
+        idx.insert(ObjectId(1), 2);
+        let orphans = idx.drop_executor(2);
+        assert_eq!(orphans, vec![ObjectId(1)]);
+        assert_eq!(idx.overlay_size(), 4);
+    }
+
+    #[test]
+    fn zero_cost_model_is_free_but_still_routes() {
+        let zero = DhtModel {
+            hop_latency_s: 0.0,
+            proc_s: 0.0,
+        };
+        let idx = ChordIndex::with_nodes(32, zero, 3);
+        let c = idx.lookup_cost(ObjectId(77));
+        assert_eq!(c.latency_s, 0.0);
+        assert_eq!(c.lookups, 1);
+    }
+}

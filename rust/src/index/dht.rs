@@ -120,12 +120,14 @@ impl ChordRing {
     }
 
     /// Mean lookup hop count over a key sample, from a rotating start
-    /// node (the classic Chord metric; expected ≈ ½·log2 N).
+    /// node (the classic Chord metric; expected ≈ ½·log2 N). Sequential
+    /// rotation samples every start node evenly at any ring size (a
+    /// fixed stride would alias whenever it divides the ring size).
     pub fn mean_hops(&self, samples: u64) -> f64 {
         let mut total = 0u64;
         for i in 0..samples {
             let (_, hops) = self.route(
-                (i as usize * 31) % self.len(),
+                i as usize % self.len(),
                 ObjectId(i.wrapping_mul(0x9E37_79B9)),
             );
             total += hops as u64;

@@ -1,20 +1,240 @@
-//! Cache-location indices (§3.2.1, §3.2.3).
+//! Cache-location indices (§3.2.1, §3.2.3) behind one pluggable trait.
 //!
-//! * [`central`] — the dispatcher's centralized in-memory index mapping
-//!   every cached data object to the executors holding it. The paper
-//!   argues (Fig 2) this beats a distributed index until ~32K nodes.
-//! * [`local`] — the per-executor local index over its own cache.
-//! * [`prls`] — the analytic P-RLS (peer-to-peer replica location
-//!   service) model from Chervenak et al.'s measurements, used to
-//!   regenerate Figure 2's comparison.
-//! * [`dht`] — a Chord ring (consistent hashing + finger-table routing)
-//!   with measured hop counts, the paper's other distributed-index
-//!   candidate.
+//! The dispatcher needs to answer one question on every scheduling
+//! decision: *which executors hold a cached copy of this object?* The
+//! paper (§3.2.3 / Fig 2) argues a centralized in-memory index answers it
+//! faster than any distributed design until ~32K nodes — but the seed
+//! code could only make that argument with closed-form models, because
+//! the live scheduling stack was hard-wired to [`CentralIndex`].
+//!
+//! This module now defines the [`DataIndex`] trait — the index *service
+//! interface* the scheduler, coordinator, and drivers program against —
+//! plus two interchangeable backends:
+//!
+//! * [`central`] — the dispatcher's centralized in-memory index
+//!   ([`CentralIndex`]): one hash table, zero routing hops, per-lookup
+//!   cost calibrated to the paper's 0.25–1 µs measurements.
+//! * [`chord`] — a stateful distributed backend ([`ChordIndex`]): the
+//!   object→locations map is partitioned over a Chord ring of the
+//!   registered executors, every lookup is *routed* through real finger
+//!   tables ([`dht::ChordRing`]), and [`DataIndex::lookup_cost`] charges
+//!   the measured hop count at the fitted per-hop latency.
+//!
+//! Two analytic companions back the Figure 2 curves:
+//!
+//! * [`prls`] — the P-RLS (peer-to-peer replica location service) log-fit
+//!   model from Chervenak et al.'s measurements.
+//! * [`dht`] — the Chord routing structure itself (consistent hashing +
+//!   finger tables) with measured hop counts, shared by [`chord`].
+//!
+//! [`local`] is the per-executor index over its own cache and is not part
+//! of the pluggable surface (it models node-local state, not the
+//! dispatcher's global view).
+//!
+//! ## Contract
+//!
+//! A backend must never change *placement*, only *cost*: for identical
+//! insert/remove histories, [`DataIndex::locations`] must return the same
+//! executors in the same (ascending) order on every backend, so the four
+//! dispatch policies make byte-identical decisions regardless of which
+//! index is configured (property-tested in `tests/proptest_invariants.rs`).
+//! What differs is [`DataIndex::lookup_cost`]: the simulated latency and
+//! routing hops a real deployment of that design would pay, which the
+//! simulation driver charges into the event timeline and both drivers
+//! account in [`crate::coordinator::metrics::Metrics`].
+//!
+//! Adding a new backend (hierarchical, gossip, replicated, …) is a
+//! one-file change: implement [`DataIndex`], extend [`IndexBackend`] and
+//! [`build`].
 
 pub mod central;
+pub mod chord;
 pub mod dht;
 pub mod local;
 pub mod prls;
 
-pub use central::CentralIndex;
+pub use central::{CentralIndex, ExecutorId};
+pub use chord::ChordIndex;
 pub use local::LocalIndex;
+
+use crate::storage::object::ObjectId;
+
+/// Simulated cost of the index lookups behind one scheduling action.
+///
+/// Returned by [`DataIndex::lookup_cost`] and accumulated per dispatch
+/// order; the sim driver charges `latency_s` into the event timeline and
+/// both drivers fold the counters into the run metrics.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct LookupCost {
+    /// Simulated wall time the lookup(s) take, seconds.
+    pub latency_s: f64,
+    /// Routing hops traversed (0 for the centralized index).
+    pub hops: u32,
+    /// Number of index lookups performed.
+    pub lookups: u32,
+}
+
+impl LookupCost {
+    /// The free lookup (data-unaware policies never consult the index).
+    pub const ZERO: LookupCost = LookupCost {
+        latency_s: 0.0,
+        hops: 0,
+        lookups: 0,
+    };
+
+    /// Fold another cost into this one.
+    pub fn accumulate(&mut self, other: LookupCost) {
+        self.latency_s += other.latency_s;
+        self.hops += other.hops;
+        self.lookups += other.lookups;
+    }
+}
+
+/// The pluggable cache-location index service.
+///
+/// Object-safe so the coordinator can own a `Box<dyn DataIndex>` chosen
+/// at configuration time. `Send` because the live driver's coordinator
+/// may run on a spawned thread.
+///
+/// Implementations must keep [`locations`](DataIndex::locations) sorted
+/// ascending and deduplicated — schedulers rely on that for deterministic
+/// tie-breaking — and must return identical contents for identical
+/// update histories (see the module docs: backends change cost, never
+/// placement).
+pub trait DataIndex: Send {
+    /// Record that `exec` now caches `obj`.
+    fn insert(&mut self, obj: ObjectId, exec: ExecutorId);
+
+    /// Record that `exec` evicted `obj`.
+    fn remove(&mut self, obj: ObjectId, exec: ExecutorId);
+
+    /// All executors currently holding `obj`, ascending (empty if none).
+    fn locations(&self, obj: ObjectId) -> &[ExecutorId];
+
+    /// Whether a specific executor holds `obj`.
+    fn holds(&self, exec: ExecutorId, obj: ObjectId) -> bool;
+
+    /// Objects cached on one executor, ascending.
+    fn objects_of(&self, exec: ExecutorId) -> &[ObjectId];
+
+    /// A newly provisioned executor joined the cluster. Distributed
+    /// backends grow their overlay here; the centralized index ignores it.
+    fn executor_joined(&mut self, _exec: ExecutorId) {}
+
+    /// Remove an executor entirely (released by the provisioner); returns
+    /// the objects whose only copy may have been lost.
+    fn drop_executor(&mut self, exec: ExecutorId) -> Vec<ObjectId>;
+
+    /// Number of distinct objects with at least one location.
+    fn len(&self) -> usize;
+
+    /// Whether the index holds no locations at all.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total (object, executor) location entries.
+    fn entries(&self) -> usize;
+
+    /// Lifetime (inserts, lookups) counters for the Fig 2 bench.
+    fn op_counts(&self) -> (u64, u64);
+
+    /// Simulated cost of resolving the locations of `obj` once, from the
+    /// dispatcher's vantage point. Pure accounting: the data itself is
+    /// returned by [`locations`](DataIndex::locations) without delay.
+    fn lookup_cost(&self, obj: ObjectId) -> LookupCost;
+
+    /// Human-readable backend name (figure labels, CLI output).
+    fn backend(&self) -> &'static str;
+}
+
+/// Index backend selector (config / CLI `--index central|chord`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IndexBackend {
+    /// Centralized in-memory hash table at the dispatcher (the paper's
+    /// design and the default).
+    #[default]
+    Central,
+    /// Chord DHT partitioned over the executors, with routed lookups.
+    Chord,
+}
+
+impl IndexBackend {
+    /// Parse from config/CLI text.
+    pub fn parse(s: &str) -> Option<IndexBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "central" | "centralized" => Some(IndexBackend::Central),
+            "chord" | "dht" => Some(IndexBackend::Chord),
+            _ => None,
+        }
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            IndexBackend::Central => "central",
+            IndexBackend::Chord => "chord",
+        }
+    }
+}
+
+/// Build the configured index backend.
+///
+/// `seed` keys the Chord ring placement so runs stay deterministic.
+pub fn build(cfg: &crate::config::IndexConfig, seed: u64) -> Box<dyn DataIndex> {
+    match cfg.backend {
+        IndexBackend::Central => Box::new(CentralIndex::with_cost(cfg.central_lookup_s)),
+        IndexBackend::Chord => Box::new(ChordIndex::new(
+            dht::DhtModel {
+                hop_latency_s: cfg.hop_latency_s,
+                proc_s: cfg.hop_proc_s,
+            },
+            seed,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_and_label() {
+        assert_eq!(IndexBackend::parse("central"), Some(IndexBackend::Central));
+        assert_eq!(IndexBackend::parse("Chord"), Some(IndexBackend::Chord));
+        assert_eq!(IndexBackend::parse("dht"), Some(IndexBackend::Chord));
+        assert_eq!(IndexBackend::parse("p2p"), None);
+        assert_eq!(IndexBackend::Chord.label(), "chord");
+    }
+
+    #[test]
+    fn lookup_cost_accumulates() {
+        let mut c = LookupCost::ZERO;
+        c.accumulate(LookupCost {
+            latency_s: 0.5e-6,
+            hops: 0,
+            lookups: 1,
+        });
+        c.accumulate(LookupCost {
+            latency_s: 4.4e-4,
+            hops: 2,
+            lookups: 1,
+        });
+        assert_eq!(c.hops, 2);
+        assert_eq!(c.lookups, 2);
+        assert!((c.latency_s - 4.405e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_selects_backend() {
+        let cfg = crate::config::IndexConfig::default();
+        let idx = build(&cfg, 1);
+        assert_eq!(idx.backend(), "central");
+        let chord_cfg = crate::config::IndexConfig {
+            backend: IndexBackend::Chord,
+            ..Default::default()
+        };
+        let idx = build(&chord_cfg, 1);
+        assert_eq!(idx.backend(), "chord");
+    }
+}

@@ -16,6 +16,7 @@ use datadiffusion::config::{presets, Config};
 use datadiffusion::coordinator::task::{Task, TaskId};
 use datadiffusion::driver::live::LiveCluster;
 use datadiffusion::driver::sim::SimDriver;
+use datadiffusion::index::IndexBackend;
 use datadiffusion::runtime::{artifacts_dir, Manifest};
 use datadiffusion::scheduler::DispatchPolicy;
 use datadiffusion::storage::live::LiveStore;
@@ -34,10 +35,11 @@ fn main() {
         OptSpec { name: "locality", value: "L", help: "Table 2 data locality", default: "30" },
         OptSpec { name: "scale", value: "F", help: "workload scale (0,1]", default: "0.02" },
         OptSpec { name: "policy", value: "NAME", help: "dispatch policy", default: "max-compute-util" },
+        OptSpec { name: "index", value: "BACKEND", help: "cache-location index (central|chord)", default: "central" },
         OptSpec { name: "tasks", value: "N", help: "task count (live)", default: "64" },
         OptSpec { name: "objects", value: "N", help: "distinct objects (live)", default: "16" },
         OptSpec { name: "workdir", value: "DIR", help: "live-mode working dir", default: "/tmp/falkon-live" },
-        OptSpec { name: "figure", value: "N", help: "figure to sweep (3,4,5,8,9,10,11,12,13)", default: "11" },
+        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13)", default: "11" },
         OptSpec { name: "config", value: "FILE", help: "TOML config (see configs/)", default: "" },
         OptSpec { name: "gz", value: "", help: "compressed (GZ) store format", default: "" },
         OptSpec { name: "read-write", value: "", help: "read+write variant", default: "" },
@@ -67,6 +69,10 @@ fn cmd_sim(args: &Args) -> i32 {
     let scale: f64 = args.num_or("scale", 0.02);
     let caching = !args.flag("no-caching");
     let format = if args.flag("gz") { DataFormat::Gz } else { DataFormat::Fit };
+    let Some(backend) = IndexBackend::parse(&args.str_or("index", "central")) else {
+        eprintln!("error: --index expects central|chord");
+        return 2;
+    };
 
     let mut cfg = if caching {
         presets::stacking(cpus)
@@ -83,16 +89,19 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         }
     }
+    // The CLI flag wins over presets and config file.
+    cfg.index.backend = backend;
     let row = astro::row_for_locality(locality);
     let w = astro::generate(&cfg, row, format, caching, scale, cfg.seed);
     println!(
-        "sim: locality {} | {} objects over {} files | {} CPUs | {} | caching={}",
+        "sim: locality {} | {} objects over {} files | {} CPUs | {} | caching={} | index={}",
         row.locality,
         w.objects,
         w.files,
         cpus,
         format.label(),
-        caching
+        caching,
+        cfg.index.backend.label()
     );
     let out = SimDriver::new(cfg, w.spec, w.catalog).run();
     print_outcome_common(
@@ -118,6 +127,10 @@ fn cmd_live(args: &Args) -> i32 {
     let format = if args.flag("gz") { DataFormat::Gz } else { DataFormat::Fit };
     let policy = DispatchPolicy::parse(&args.str_or("policy", "max-compute-util"))
         .unwrap_or(DispatchPolicy::MaxComputeUtil);
+    let Some(backend) = IndexBackend::parse(&args.str_or("index", "central")) else {
+        eprintln!("error: --index expects central|chord");
+        return 2;
+    };
 
     let _ = std::fs::remove_dir_all(&workdir);
     let mut store = match LiveStore::create(workdir.join("gpfs"), format) {
@@ -152,10 +165,12 @@ fn cmd_live(args: &Args) -> i32 {
 
     let mut cfg = Config::with_nodes(nodes);
     cfg.scheduler.policy = policy;
+    cfg.index.backend = backend;
     println!(
-        "live: {nodes} executors | {n_tasks} stacking tasks over {n_objects} objects | {} | {}",
+        "live: {nodes} executors | {n_tasks} stacking tasks over {n_objects} objects | {} | {} | index={}",
         format.label(),
-        policy.label()
+        policy.label(),
+        backend.label()
     );
     match LiveCluster::new(cfg, store, workdir.join("work"), artifacts).run(tasks) {
         Ok(out) => {
@@ -178,6 +193,27 @@ fn cmd_sweep(args: &Args) -> i32 {
     let fig: u32 = args.num_or("figure", 11);
     let scale: f64 = args.num_or("scale", figures::env_scale());
     match fig {
+        2 => {
+            let rows = figures::fig2_measured(&[4, 16, 64], figures::env_tpn());
+            println!(
+                "{:<10} {:>6} {:>7} {:>12} {:>10} {:>10} {:>10} {:>12} {:>9}",
+                "backend", "nodes", "tasks", "makespan", "lookups", "hops", "hops/op", "index cost", "cost%"
+            );
+            for r in rows {
+                println!(
+                    "{:<10} {:>6} {:>7} {:>12} {:>10} {:>10} {:>10.2} {:>12} {:>8.3}%",
+                    r.backend,
+                    r.nodes,
+                    r.tasks,
+                    fmt_secs(r.makespan_s),
+                    r.index_lookups,
+                    r.index_hops,
+                    r.mean_hops,
+                    fmt_secs(r.index_cost_s),
+                    r.cost_fraction * 100.0
+                );
+            }
+        }
         3 | 4 => {
             let rw = fig == 4;
             let rows = figures::fig3_fig4(rw, &[1, 2, 4, 8, 16, 32, 64], figures::env_tpn());
@@ -236,7 +272,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown figure {other}; supported: 3,4,5,8,9,10,11,12,13");
+            eprintln!("unknown figure {other}; supported: 2,3,4,5,8,9,10,11,12,13");
             return 2;
         }
     }
@@ -301,4 +337,12 @@ fn print_outcome_common(
         fmt_bps(m.rw_throughput_bps()),
         m.task_rate()
     );
+    if m.index_lookups > 0 {
+        println!(
+            "  index: {} lookups | {} hops | charged {}",
+            m.index_lookups,
+            m.index_hops,
+            fmt_secs(m.index_cost_s)
+        );
+    }
 }

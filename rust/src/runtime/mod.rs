@@ -8,11 +8,19 @@
 //! Python never runs here — the HLO text was produced once at build time
 //! by `python/compile/aot.py` (see that file for why HLO *text* is the
 //! interchange format).
+//!
+//! The `xla` crate is not available in the offline build, so the real
+//! engine is gated behind the `pjrt` cargo feature (see `rust/Cargo.toml`
+//! for how to enable it). Without the feature a stub [`PjrtEngine`] with
+//! the same API always fails to load — callers that already tolerate
+//! missing artifacts (the live driver, `falkon live`, the integration
+//! tests) degrade exactly as they do when `make artifacts` has not run.
 
 pub mod artifact;
 
 pub use artifact::{artifacts_dir, Artifact, Manifest};
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -38,6 +46,7 @@ pub struct StackRequest {
 impl StackRequest {
     /// Validate the request against an (n, h, w) variant shape and pad
     /// it to exactly `n` slots with zero weights.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn padded(&self, n: usize, h: usize, w: usize) -> Result<StackRequest> {
         let d = self.depth;
         if d == 0 || d > n {
@@ -65,6 +74,7 @@ impl StackRequest {
     }
 }
 
+#[cfg(feature = "pjrt")]
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
     n: usize,
@@ -72,12 +82,14 @@ struct Compiled {
     w: usize,
 }
 
+#[cfg(feature = "pjrt")]
 struct CompiledRadec {
     exe: xla::PjRtLoadedExecutable,
     m: usize,
 }
 
 /// The PJRT engine: one CPU client + compiled executables per artifact.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -85,6 +97,7 @@ pub struct PjrtEngine {
     radec: Option<CompiledRadec>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Load the manifest and compile every stacking artifact eagerly, so
     /// the request path never compiles.
@@ -240,6 +253,65 @@ impl PjrtEngine {
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Stub engine compiled when the `pjrt` feature is off: same API, always
+/// fails to load, so callers take their existing no-artifacts path.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    /// Always fails: PJRT execution requires the `pjrt` feature (which
+    /// needs the `xla` crate — see `rust/Cargo.toml`). Manifest problems
+    /// are still reported first so diagnostics stay accurate.
+    pub fn load(dir: &Path) -> Result<PjrtEngine> {
+        let _ = Manifest::load(dir)?;
+        Err(Error::Runtime(
+            "built without the `pjrt` feature: PJRT compute is unavailable \
+             (see rust/Cargo.toml to enable it)"
+                .into(),
+        ))
+    }
+
+    /// Load from the default artifacts directory (always fails — stub).
+    pub fn load_default() -> Result<PjrtEngine> {
+        Self::load(&artifacts_dir())
+    }
+
+    /// PJRT platform name (stub).
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature off)".into()
+    }
+
+    /// Available stack variant depths (stub: none).
+    pub fn stack_depths(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// ROI geometry (stub: zero).
+    pub fn roi_shape(&self) -> (usize, usize) {
+        (0, 0)
+    }
+
+    /// Coordinate transform (stub: always errors).
+    pub fn radec2xy(
+        &self,
+        _ra: &[f32],
+        _dec: &[f32],
+        _ra0: f32,
+        _dec0: f32,
+        _scale: f32,
+    ) -> Result<Vec<(f32, f32)>> {
+        Err(Error::Runtime("pjrt feature off".into()))
+    }
+
+    /// Stacking execution (stub: always errors).
+    pub fn stack(&self, _req: &StackRequest) -> Result<Vec<f32>> {
+        Err(Error::Runtime("pjrt feature off".into()))
     }
 }
 

@@ -3,7 +3,8 @@
 use std::collections::HashMap;
 
 use crate::coordinator::task::Task;
-use crate::index::central::{CentralIndex, ExecutorId};
+use crate::index::central::ExecutorId;
+use crate::index::DataIndex;
 use crate::storage::object::{Catalog, ObjectId};
 
 /// Per-object location hints shipped with a dispatched task, so the
@@ -40,8 +41,9 @@ pub struct SchedView<'a> {
     pub idle: &'a [ExecutorId],
     /// All registered executors (idle + busy), ascending.
     pub all: &'a [ExecutorId],
-    /// The central cache-location index.
-    pub index: &'a CentralIndex,
+    /// The cache-location index (any [`DataIndex`] backend; backends may
+    /// differ in lookup cost but never in contents — see `crate::index`).
+    pub index: &'a dyn DataIndex,
     /// Object size catalog (policies weigh *bytes*, not object counts,
     /// when sizes differ; with uniform sizes this reduces to counts).
     pub catalog: &'a Catalog,
@@ -74,6 +76,7 @@ impl<'a> SchedView<'a> {
 mod tests {
     use super::*;
     use crate::coordinator::task::{Task, TaskId};
+    use crate::index::central::CentralIndex;
 
     fn setup() -> (CentralIndex, Catalog) {
         let mut idx = CentralIndex::new();

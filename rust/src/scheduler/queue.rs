@@ -5,16 +5,19 @@
 //! that executor reports back, its parked tasks re-enter consideration
 //! ahead of the FIFO (they were admitted earlier).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::coordinator::task::Task;
 use crate::index::central::ExecutorId;
+use crate::util::fxhash::FxHashMap;
 
 /// Wait queue with executor-parked delays.
 #[derive(Debug, Default)]
 pub struct WaitQueue {
     fifo: VecDeque<Task>,
-    parked: HashMap<ExecutorId, VecDeque<Task>>,
+    // FxHashMap like the rest of the dispatch hot path: park/release runs
+    // on every max-cache-hit decision and executor report-back.
+    parked: FxHashMap<ExecutorId, VecDeque<Task>>,
     parked_count: usize,
     peak: usize,
 }

@@ -1,0 +1,232 @@
+//! Minimal vendored gzip (RFC 1952) — stored DEFLATE blocks only.
+//!
+//! The live storage backend needs real `.gz` files on disk so the GZ
+//! configurations move real bytes through real file I/O, but the offline
+//! crate set has no `flate2`. This module implements the gzip container
+//! with **stored** (uncompressed) DEFLATE blocks: framing, CRC-32 and
+//! length verification are all real, while the payload is carried
+//! verbatim.
+//!
+//! Consequences, by design:
+//!
+//! * [`compress`] output is slightly *larger* than the input (18 bytes of
+//!   gzip framing + 5 bytes per 64 KiB block). Live-mode GZ experiments
+//!   therefore exercise the format's *mechanics* (separate cached
+//!   decompressed form, integrity checks, per-fetch decode step), not its
+//!   size reduction — the simulator still models the paper's 2 MB→6 MB
+//!   ratio through catalog sizes, which is what every figure uses.
+//! * [`decompress`] accepts only streams whose DEFLATE blocks are stored
+//!   and byte-aligned — i.e. our own output (plus any other
+//!   stored-block encoder). Huffman-coded streams from a general gzip
+//!   are rejected with a clear error rather than mis-decoded.
+//!
+//! Swapping a real DEFLATE back in (ROADMAP open item) only has to
+//! replace these two functions.
+
+use crate::error::{Error, Result};
+
+/// gzip magic + method: 0x1f 0x8b, CM=8 (deflate).
+const MAGIC: [u8; 2] = [0x1f, 0x8b];
+/// Largest payload of one stored DEFLATE block.
+const STORED_MAX: usize = 0xFFFF;
+
+fn bad(msg: &str) -> Error {
+    Error::Io(std::io::Error::new(std::io::ErrorKind::InvalidData, msg))
+}
+
+/// CRC-32 (IEEE, reflected) over `data` — the gzip trailer checksum.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Wrap `data` in a gzip stream (stored DEFLATE blocks).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let blocks = data.len().div_ceil(STORED_MAX).max(1);
+    let mut out = Vec::with_capacity(18 + data.len() + 5 * blocks);
+    out.extend_from_slice(&MAGIC);
+    out.push(8); // CM = deflate
+    out.push(0); // FLG = none
+    out.extend_from_slice(&[0, 0, 0, 0]); // MTIME = unknown
+    out.push(0); // XFL
+    out.push(255); // OS = unknown
+
+    if data.is_empty() {
+        // One final empty stored block.
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+    } else {
+        let mut chunks = data.chunks(STORED_MAX).peekable();
+        while let Some(chunk) = chunks.next() {
+            let bfinal = if chunks.peek().is_none() { 1u8 } else { 0 };
+            out.push(bfinal); // BTYPE=00 in bits 1-2; rest of byte is padding
+            let len = chunk.len() as u16;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&(!len).to_le_bytes());
+            out.extend_from_slice(chunk);
+        }
+    }
+
+    out.extend_from_slice(&crc32(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+/// Unwrap a gzip stream produced by a stored-block encoder; verifies the
+/// header, block framing, CRC-32 and length trailer.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 18 {
+        return Err(bad("gzip stream truncated"));
+    }
+    if data[..2] != MAGIC {
+        return Err(bad("not a gzip stream (bad magic)"));
+    }
+    if data[2] != 8 {
+        return Err(bad("unsupported gzip compression method"));
+    }
+    let flg = data[3];
+    // Skip MTIME (4), XFL, OS.
+    let mut pos = 10usize;
+    let body_end = data.len() - 8; // trailer: CRC32 + ISIZE
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        if pos + 2 > body_end {
+            return Err(bad("gzip FEXTRA truncated"));
+        }
+        let xlen = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: NUL-terminated strings.
+        if flg & flag != 0 {
+            loop {
+                if pos >= body_end {
+                    return Err(bad("gzip header string unterminated"));
+                }
+                pos += 1;
+                if data[pos - 1] == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    if flg & 0x02 != 0 {
+        // FHCRC
+        pos += 2;
+    }
+    if pos > body_end {
+        return Err(bad("gzip header overruns stream"));
+    }
+
+    // Inflate: stored, byte-aligned blocks only (see module docs).
+    let mut out = Vec::with_capacity(data.len());
+    loop {
+        if pos >= body_end {
+            return Err(bad("deflate stream truncated (no final block)"));
+        }
+        let hdr = data[pos];
+        pos += 1;
+        let bfinal = hdr & 1;
+        let btype = (hdr >> 1) & 3;
+        if btype != 0 {
+            return Err(bad(
+                "unsupported deflate block (vendored inflate handles stored blocks only)",
+            ));
+        }
+        if pos + 4 > body_end {
+            return Err(bad("stored block header truncated"));
+        }
+        let len = u16::from_le_bytes([data[pos], data[pos + 1]]);
+        let nlen = u16::from_le_bytes([data[pos + 2], data[pos + 3]]);
+        if nlen != !len {
+            return Err(bad("stored block LEN/NLEN mismatch"));
+        }
+        pos += 4;
+        let len = len as usize;
+        if pos + len > body_end {
+            return Err(bad("stored block payload truncated"));
+        }
+        out.extend_from_slice(&data[pos..pos + len]);
+        pos += len;
+        if bfinal == 1 {
+            break;
+        }
+    }
+    if pos != body_end {
+        return Err(bad("trailing garbage between deflate stream and trailer"));
+    }
+
+    let crc = u32::from_le_bytes([data[pos], data[pos + 1], data[pos + 2], data[pos + 3]]);
+    let isize_ = u32::from_le_bytes([data[pos + 4], data[pos + 5], data[pos + 6], data[pos + 7]]);
+    if crc32(&out) != crc {
+        return Err(bad("gzip CRC-32 mismatch"));
+    }
+    if out.len() as u32 != isize_ {
+        return Err(bad("gzip ISIZE mismatch"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_empty_small_large() {
+        for data in [
+            Vec::new(),
+            b"hello gzip".to_vec(),
+            // Spans two stored blocks (> 64 KiB).
+            (0..70_000u32).map(|i| (i % 251) as u8).collect::<Vec<u8>>(),
+        ] {
+            let gz = compress(&data);
+            assert_eq!(decompress(&gz).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn framing_overhead_is_small_and_fixed() {
+        let data = vec![7u8; 1000];
+        let gz = compress(&data);
+        assert_eq!(gz.len(), 18 + 5 + 1000, "header+trailer+block framing");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic check value: CRC-32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut gz = compress(b"payload under test");
+        let last = gz.len() - 12; // a payload byte, not framing
+        gz[last] ^= 0xFF;
+        assert!(decompress(&gz).is_err(), "CRC must catch payload flips");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_rejected() {
+        assert!(decompress(b"not gzip").is_err());
+        let gz = compress(b"abcdef");
+        assert!(decompress(&gz[..gz.len() - 4]).is_err());
+        let mut notgz = gz.clone();
+        notgz[0] = 0;
+        assert!(decompress(&notgz).is_err());
+    }
+
+    #[test]
+    fn huffman_blocks_rejected_not_misdecoded() {
+        let mut gz = compress(b"x");
+        // Flip BTYPE of the first block to 01 (fixed Huffman).
+        gz[10] |= 0b010;
+        assert!(decompress(&gz).is_err());
+    }
+}

@@ -1,13 +1,15 @@
-//! Shared utilities: PRNG, units, stats, CSV, bench harness, CLI, logging.
+//! Shared utilities: PRNG, units, stats, CSV, gzip, bench harness, CLI,
+//! logging.
 //!
-//! The offline crate set has no `rand`/`clap`/`criterion`/`serde`, so this
-//! module carries small, tested substitutes that the rest of the crate
-//! (and the benches/examples) build on.
+//! The offline crate set has no `rand`/`clap`/`criterion`/`serde`/
+//! `flate2`, so this module carries small, tested substitutes that the
+//! rest of the crate (and the benches/examples) build on.
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod fxhash;
+pub mod gzip;
 pub mod logging;
 pub mod rng;
 pub mod stats;

@@ -10,6 +10,8 @@ use datadiffusion::config::SchedulerConfig;
 use datadiffusion::coordinator::core::FalkonCore;
 use datadiffusion::coordinator::task::{Task, TaskId};
 use datadiffusion::index::central::CentralIndex;
+use datadiffusion::index::dht::DhtModel;
+use datadiffusion::index::{ChordIndex, DataIndex};
 use datadiffusion::scheduler::DispatchPolicy;
 use datadiffusion::sim::flownet::{FlowNetwork, ResourceId};
 use datadiffusion::storage::object::{Catalog, ObjectId};
@@ -243,6 +245,94 @@ fn prop_no_task_lost_or_duplicated() {
                 dispatched.values().all(|&c| c == 1),
                 "[{policy:?} seed={seed}] duplicated dispatch"
             );
+        }
+    }
+}
+
+/// Backend invariant (the `DataIndex` contract): with the Chord cost
+/// model zeroed, all four dispatch policies return byte-identical
+/// `Decision`s over a `CentralIndex` and a `ChordIndex` that saw the
+/// same update history — the backend may change lookup *cost* but never
+/// *placement*.
+#[test]
+fn prop_backends_agree_on_placement() {
+    use datadiffusion::scheduler::decision::SchedView;
+    const N_EXEC: usize = 8;
+    const N_OBJ: u64 = 16;
+    let zero_cost = DhtModel {
+        hop_latency_s: 0.0,
+        proc_s: 0.0,
+    };
+    for case in 0..CASES * 2 {
+        let seed = 0xC02D + case;
+        let mut rng = Rng::new(seed);
+        let mut central = CentralIndex::new();
+        let mut chord = ChordIndex::with_nodes(N_EXEC, zero_cost, seed);
+        let mut catalog = Catalog::new();
+        for i in 0..N_OBJ {
+            catalog.insert(ObjectId(i), rng.range_u64(1, 100));
+        }
+        // Mirror a random update history into both backends.
+        for _ in 0..80 {
+            let obj = ObjectId(rng.below(N_OBJ));
+            let exec = rng.index(N_EXEC);
+            match rng.below(4) {
+                0..=2 => {
+                    central.insert(obj, exec);
+                    DataIndex::insert(&mut chord, obj, exec);
+                }
+                _ => {
+                    central.remove(obj, exec);
+                    DataIndex::remove(&mut chord, obj, exec);
+                }
+            }
+        }
+        // Random idle subset of a full executor set.
+        let all: Vec<usize> = (0..N_EXEC).collect();
+        let mut idle: Vec<usize> = all
+            .iter()
+            .copied()
+            .filter(|_| rng.next_f64() < 0.5)
+            .collect();
+        if idle.is_empty() {
+            idle.push(rng.index(N_EXEC));
+        }
+        idle.sort_unstable();
+        let task = Task::with_inputs(
+            TaskId(0),
+            (0..rng.range_u64(1, 4))
+                .map(|_| ObjectId(rng.below(N_OBJ)))
+                .collect(),
+        );
+        for policy in [
+            DispatchPolicy::FirstAvailable,
+            DispatchPolicy::FirstCacheAvailable,
+            DispatchPolicy::MaxCacheHit,
+            DispatchPolicy::MaxComputeUtil,
+        ] {
+            let central_view = SchedView {
+                idle: &idle,
+                all: &all,
+                index: &central,
+                catalog: &catalog,
+            };
+            let chord_view = SchedView {
+                idle: &idle,
+                all: &all,
+                index: &chord,
+                catalog: &catalog,
+            };
+            assert_eq!(
+                policy.decide(&task, &central_view),
+                policy.decide(&task, &chord_view),
+                "[{policy:?} seed={seed}] backends disagreed on placement"
+            );
+        }
+        // And the zeroed model really is free (cost ≠ placement).
+        for &obj in &task.inputs {
+            let c = chord.lookup_cost(obj);
+            assert_eq!(c.latency_s, 0.0, "seed={seed}: zeroed model charged time");
+            assert_eq!(c.lookups, 1);
         }
     }
 }
