@@ -1,17 +1,19 @@
-//! Quickstart: a five-node live data-diffusion cluster in ~40 lines.
+//! Quickstart: an elastic live data-diffusion cluster in ~50 lines.
 //!
 //! Populates a tiny "persistent storage" directory with synthetic image
-//! files, runs a batch of tasks twice (cold, then warm) through the live
-//! coordinator with the paper's default policy (max-compute-util + LRU),
-//! and shows the cache doing its job. Also demonstrates the dynamic
-//! resource provisioner making allocation decisions.
+//! files, then runs a batch of tasks through the live coordinator with
+//! the paper's default policy (max-compute-util + LRU) and the dynamic
+//! resource provisioner (§3.1) *enabled*: the pool starts empty, the
+//! provisioner grows it in response to queue pressure (real executor
+//! threads spawn mid-run after the simulated allocation latency), and
+//! data diffuses onto the newly provisioned caches.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use datadiffusion::config::{Config, ProvisionerConfig};
+use datadiffusion::config::Config;
 use datadiffusion::coordinator::task::{Task, TaskId};
 use datadiffusion::driver::live::LiveCluster;
-use datadiffusion::provisioner::{AllocationPolicy, Provisioner};
+use datadiffusion::provisioner::AllocationPolicy;
 use datadiffusion::storage::live::LiveStore;
 use datadiffusion::storage::object::{DataFormat, ObjectId};
 use datadiffusion::util::units::fmt_bytes;
@@ -31,25 +33,29 @@ fn main() -> datadiffusion::Result<()> {
         fmt_bytes(store.catalog().total_bytes())
     );
 
-    // 2. The dynamic resource provisioner decides how many executors the
-    //    queued work justifies (§3.1). 36 queued tasks / 4-per-executor
-    //    target -> 9, capped at the 5-node cluster.
-    let mut drp = Provisioner::new(ProvisionerConfig {
-        policy: AllocationPolicy::Adaptive,
-        max_executors: 5,
-        ..ProvisionerConfig::default()
-    });
-    let actions = drp.evaluate(36, 0.0);
-    println!("provisioner: queue=36 -> {actions:?}");
+    // 2. A live cluster with data diffusion on and an ELASTIC pool: zero
+    //    executors at t=0, up to 5, adaptive growth driven by the wait
+    //    queue, 50 ms simulated GRAM4 allocation latency.
+    let mut cfg = Config::with_nodes(5);
+    cfg.provisioner.enabled = true;
+    cfg.provisioner.policy = AllocationPolicy::Adaptive;
+    cfg.provisioner.min_executors = 0;
+    cfg.provisioner.max_executors = 5;
+    cfg.provisioner.allocation_latency_s = 0.05;
+    cfg.provisioner.poll_interval_s = 0.01;
+    cfg.provisioner.idle_release_s = 30.0; // don't shrink mid-demo
+    cfg.provisioner.queue_per_executor = 8;
 
-    // 3. A live cluster with data diffusion on.
-    let cfg = Config::with_nodes(5);
-    let tasks: Vec<Task> = (0..36)
+    let tasks: Vec<Task> = (0..48)
         .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 12)]))
         .collect();
     let out = LiveCluster::new(cfg, store, root.join("work"), None).run(tasks)?;
 
     let m = &out.metrics;
+    println!(
+        "provisioner: {} allocation requests -> {} executors joined mid-run (peak pool {})",
+        m.alloc_requests, m.executors_joined, m.peak_executors
+    );
     println!(
         "ran {} tasks in {:.2}s: {} local hits, {} peer fetches, {} from persistent storage",
         m.tasks_done, out.makespan_s, m.cache_hits, m.peer_hits, m.gpfs_misses
@@ -61,7 +67,12 @@ fn main() -> datadiffusion::Result<()> {
         fmt_bytes(m.gpfs_bytes)
     );
     assert!(m.cache_hits + m.peer_hits > 0, "diffusion should produce hits");
-    println!("OK: data diffused onto executor caches and got re-used.");
+    assert!(
+        m.executors_joined > 0,
+        "the pool started empty: every task ran on a dynamically provisioned executor"
+    );
+    assert!(m.peak_executors <= 5, "pool must respect max_executors");
+    println!("OK: executors provisioned on demand, data diffused onto their caches and got re-used.");
     let _ = std::fs::remove_dir_all(root);
     Ok(())
 }

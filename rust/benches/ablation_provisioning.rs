@@ -53,6 +53,7 @@ fn main() {
             allocation_latency_s: 40.0,
             idle_release_s: 30.0,
             queue_per_executor: 4,
+            ..ProvisionerConfig::default()
         });
         let mut cluster = ClusterProvider::new(max_nodes, 40.0);
         let mut pending: Vec<(f64, Vec<usize>)> = Vec::new();

@@ -109,17 +109,23 @@ fn main() {
     // The central rows above already go through `Box<dyn DataIndex>`, so
     // central-vs-chord isolates backend cost, and comparing the central
     // rows against a pre-refactor checkout isolates the indirection.
+    // Both locations()-scored policies are covered: since the dispatch
+    // hot path scores only executors holding >=1 input (O(replicas), not
+    // O(executors)), these rows double as the no-regression proof for
+    // that rewrite on a 128-executor registry.
     println!();
-    for backend in [IndexBackend::Central, IndexBackend::Chord] {
-        let (rate, per) = run_policy_with(DispatchPolicy::MaxComputeUtil, true, backend);
-        let label = format!("max-compute-util@{}", backend.label());
-        println!(
-            "{:<24} {:>12.0} tasks/s {:>12.1} us/decision",
-            label,
-            rate,
-            per * 1e6
-        );
-        csv.rowf(&[&label, &rate, &(per * 1e6)]);
+    for policy in [DispatchPolicy::MaxComputeUtil, DispatchPolicy::MaxCacheHit] {
+        for backend in [IndexBackend::Central, IndexBackend::Chord] {
+            let (rate, per) = run_policy_with(policy, true, backend);
+            let label = format!("{}@{}", policy.label(), backend.label());
+            println!(
+                "{:<28} {:>12.0} tasks/s {:>12.1} us/decision",
+                label,
+                rate,
+                per * 1e6
+            );
+            csv.rowf(&[&label, &rate, &(per * 1e6)]);
+        }
     }
 
     // Raw index ops (the §3.2.3 microbenchmark).

@@ -10,9 +10,11 @@ use crate::config::{presets, Config};
 use crate::coordinator::task::{Task, TaskId};
 use crate::driver::sim::{SimDriver, SimOutcome, SimWorkloadSpec};
 use crate::index::IndexBackend;
+use crate::provisioner::AllocationPolicy;
 use crate::scheduler::DispatchPolicy;
 use crate::storage::object::{Catalog, DataFormat, ObjectId};
 use crate::workloads::astro::{self, WorkloadRow};
+use crate::workloads::bursty::{self, BurstSpec, DemandShape};
 use crate::workloads::microbench::{self, MbConfig};
 
 /// Environment-tunable workload scale for the astro sims (fraction of the
@@ -116,6 +118,191 @@ pub fn fig2_measured(nodes_list: &[usize], tasks_per_node: usize) -> Vec<IndexBa
         }
     }
     rows
+}
+
+// -------------------------------------------------------------- DRP figure
+
+/// One measured point of the demand-response (DRP) figure: a bursty
+/// workload scheduled end-to-end under one allocation policy with the
+/// executor pool elastic.
+#[derive(Debug, Clone)]
+pub struct DrpPoint {
+    /// Allocation-policy label ("one-at-a-time" / "all-at-once" /
+    /// "adaptive").
+    pub policy: &'static str,
+    /// Tasks completed.
+    pub tasks: u64,
+    /// Simulated makespan, seconds.
+    pub makespan_s: f64,
+    /// Task throughput over the experiment span, tasks/s.
+    pub tasks_per_s: f64,
+    /// Largest pool the run reached.
+    pub peak_executors: usize,
+    /// Pool ceiling in force.
+    pub max_executors: usize,
+    /// Allocation requests sent to the cluster.
+    pub alloc_requests: u64,
+    /// Executors that joined mid-run.
+    pub executors_joined: u64,
+    /// Executors released mid-run.
+    pub executors_released: u64,
+    /// Executor-seconds spent fully idle while allocated.
+    pub idle_exec_s: f64,
+    /// Executor-seconds lost to allocation latency (requested, unusable).
+    pub alloc_wait_s: f64,
+    /// Local cache-hit ratio over the whole run.
+    pub hit_ratio: f64,
+    /// The full outcome (pool timeline included), for deeper analysis.
+    pub outcome: SimOutcome,
+}
+
+/// The DRP figure: the same square-burst workload (two bursts separated
+/// by a lull longer than the idle-release timeout) scheduled through the
+/// real dispatch path under each of the three §3.1 allocation policies,
+/// with the pool elastic end-to-end. This is the dynamic-provisioning
+/// analog of `fig2_measured`: policies are compared on measured runs, not
+/// closed-form curves — throughput vs the executor-seconds wasted idle
+/// and the executor-seconds lost to allocation latency.
+pub fn fig_drp(nodes: usize, tasks: u64) -> Vec<DrpPoint> {
+    let nodes = nodes.max(2);
+    let tasks = tasks.max(16);
+    // Two bursts: the burst length carries half the tasks at a rate that
+    // wants roughly the whole cluster; the lull comfortably exceeds the
+    // idle-release timeout so every policy faces a shrink decision.
+    let period_s = 200.0;
+    let duty = 0.3;
+    let peak_rate = tasks as f64 / (2.0 * duty * period_s);
+    let spec = BurstSpec {
+        shape: DemandShape::Square,
+        tasks,
+        objects: (tasks / 4).max(8),
+        object_bytes: crate::util::units::MB,
+        period_s,
+        base_rate: 0.0,
+        peak_rate,
+        duty,
+        task_cpu_s: 2.0,
+    };
+    let mut rows = Vec::new();
+    for policy in [
+        AllocationPolicy::OneAtATime,
+        AllocationPolicy::Adaptive,
+        AllocationPolicy::AllAtOnce,
+    ] {
+        let mut cfg = Config::with_nodes(nodes);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = policy;
+        cfg.provisioner.min_executors = 1;
+        cfg.provisioner.max_executors = nodes;
+        cfg.provisioner.allocation_latency_s = 30.0;
+        cfg.provisioner.idle_release_s = 20.0;
+        cfg.provisioner.poll_interval_s = 2.0;
+        cfg.provisioner.queue_per_executor = 2;
+        let w = bursty::generate(&spec, 20080611);
+        let out = SimDriver::new(cfg, w.spec, w.catalog).run();
+        let m = &out.metrics;
+        rows.push(DrpPoint {
+            policy: policy.label(),
+            tasks: m.tasks_done,
+            makespan_s: out.makespan_s,
+            tasks_per_s: m.task_rate(),
+            peak_executors: m.peak_executors,
+            max_executors: nodes,
+            alloc_requests: m.alloc_requests,
+            executors_joined: m.executors_joined,
+            executors_released: m.executors_released,
+            idle_exec_s: m.idle_exec_s,
+            alloc_wait_s: m.alloc_wait_s,
+            hit_ratio: m.local_hit_ratio(),
+            outcome: out,
+        });
+    }
+    rows
+}
+
+/// Print the DRP comparison table and write the summary + per-tick
+/// timeline CSVs under `dir`. One emitter shared by the `fig_drp` bench
+/// and `falkon sweep --figure drp`, so the table format and CSV schema
+/// cannot drift. Returns the two CSV paths.
+pub fn emit_drp(
+    rows: &[DrpPoint],
+    dir: &std::path::Path,
+) -> std::io::Result<(std::path::PathBuf, std::path::PathBuf)> {
+    use crate::util::csv::CsvWriter;
+    println!(
+        "{:<14} {:>6} {:>11} {:>9} {:>10} {:>7} {:>7} {:>9} {:>12} {:>13} {:>7}",
+        "policy",
+        "tasks",
+        "makespan",
+        "tasks/s",
+        "peak-pool",
+        "allocs",
+        "joined",
+        "released",
+        "idle-exec-s",
+        "alloc-wait-s",
+        "hit%"
+    );
+    let mut csv = CsvWriter::new(
+        dir.join("fig_drp.csv"),
+        &[
+            "policy",
+            "tasks",
+            "makespan_s",
+            "tasks_per_s",
+            "peak_executors",
+            "max_executors",
+            "alloc_requests",
+            "executors_joined",
+            "executors_released",
+            "idle_exec_s",
+            "alloc_wait_s",
+            "hit_ratio",
+        ],
+    );
+    let mut tcsv = CsvWriter::new(
+        dir.join("fig_drp_timeline.csv"),
+        &["policy", "t_s", "allocated", "pending", "queued", "window_hit_ratio"],
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>6} {:>10.1}s {:>9.2} {:>7}/{:<2} {:>7} {:>7} {:>9} {:>12.0} {:>13.0} {:>6.1}%",
+            r.policy,
+            r.tasks,
+            r.makespan_s,
+            r.tasks_per_s,
+            r.peak_executors,
+            r.max_executors,
+            r.alloc_requests,
+            r.executors_joined,
+            r.executors_released,
+            r.idle_exec_s,
+            r.alloc_wait_s,
+            r.hit_ratio * 100.0
+        );
+        csv.rowf(&[
+            &r.policy,
+            &r.tasks,
+            &r.makespan_s,
+            &r.tasks_per_s,
+            &r.peak_executors,
+            &r.max_executors,
+            &r.alloc_requests,
+            &r.executors_joined,
+            &r.executors_released,
+            &r.idle_exec_s,
+            &r.alloc_wait_s,
+            &r.hit_ratio,
+        ]);
+        let mut prev: Option<crate::coordinator::metrics::PoolSample> = None;
+        for s in &r.outcome.metrics.pool_timeline {
+            let w = prev.map(|p| s.window_hit_ratio(&p)).unwrap_or(0.0);
+            tcsv.rowf(&[&r.policy, &s.t, &s.allocated, &s.pending, &s.queued, &w]);
+            prev = Some(*s);
+        }
+    }
+    Ok((csv.finish()?, tcsv.finish()?))
 }
 
 // ---------------------------------------------------------------- Fig 3/4
@@ -390,6 +577,39 @@ mod tests {
         assert_eq!(central.index_hops, 0);
         assert!(chord.index_hops > 0);
         assert!(chord.index_cost_s > central.index_cost_s);
+    }
+
+    #[test]
+    fn fig_drp_compares_all_three_policies_on_real_runs() {
+        let rows = fig_drp(8, 160);
+        assert_eq!(rows.len(), 3);
+        let labels: Vec<&str> = rows.iter().map(|r| r.policy).collect();
+        assert_eq!(labels, vec!["one-at-a-time", "adaptive", "all-at-once"]);
+        for r in &rows {
+            assert_eq!(r.tasks, 160, "{}: run must drain", r.policy);
+            assert!(r.peak_executors <= r.max_executors, "{}: pool cap", r.policy);
+            assert!(r.executors_joined > 0, "{}: pool must grow", r.policy);
+            assert!(
+                r.executors_released > 0,
+                "{}: pool must shrink in the lull",
+                r.policy
+            );
+            assert!(r.alloc_wait_s > 0.0, "{}: allocation latency costs", r.policy);
+            assert!(!r.outcome.metrics.pool_timeline.is_empty());
+            for s in &r.outcome.metrics.pool_timeline {
+                assert!(s.allocated + s.pending <= r.max_executors);
+            }
+        }
+        // one-at-a-time grows one grant per evaluation; all-at-once takes
+        // the whole headroom in one request. More requests, same ceiling.
+        let one = rows.iter().find(|r| r.policy == "one-at-a-time").unwrap();
+        let all = rows.iter().find(|r| r.policy == "all-at-once").unwrap();
+        assert!(
+            one.alloc_requests >= all.alloc_requests,
+            "one-at-a-time ({}) should need at least as many requests as all-at-once ({})",
+            one.alloc_requests,
+            all.alloc_requests
+        );
     }
 
     #[test]

@@ -202,6 +202,12 @@ impl Default for IndexConfig {
 /// Dynamic resource provisioner configuration (§3.1).
 #[derive(Debug, Clone)]
 pub struct ProvisionerConfig {
+    /// Whether the drivers run the pool elastically. Off (the default)
+    /// reproduces the paper's static-pool experiments: all
+    /// `testbed.nodes` executors are registered before t=0 and never
+    /// leave. On, the pool starts at `min_executors` and the provisioner
+    /// grows/shrinks it mid-run.
+    pub enabled: bool,
     /// Allocation policy.
     pub policy: crate::provisioner::policy::AllocationPolicy,
     /// Lower bound on allocated executors.
@@ -214,17 +220,21 @@ pub struct ProvisionerConfig {
     pub idle_release_s: f64,
     /// Wait-queue length per idle executor that triggers growth.
     pub queue_per_executor: usize,
+    /// How often the drivers evaluate the provisioner, seconds.
+    pub poll_interval_s: f64,
 }
 
 impl Default for ProvisionerConfig {
     fn default() -> Self {
         ProvisionerConfig {
+            enabled: false,
             policy: crate::provisioner::policy::AllocationPolicy::AllAtOnce,
             min_executors: 0,
             max_executors: 64,
             allocation_latency_s: 40.0,
             idle_release_s: 60.0,
             queue_per_executor: 4,
+            poll_interval_s: 5.0,
         }
     }
 }
@@ -350,11 +360,20 @@ impl Config {
         ix.hop_proc_s = doc.num_or("index.hop_proc_s", ix.hop_proc_s);
 
         let p = &mut self.provisioner;
+        p.enabled = doc.bool_or("provisioner.enabled", p.enabled);
+        if let Some(parse::Value::Str(s)) = doc.get("provisioner.policy") {
+            p.policy = crate::provisioner::policy::AllocationPolicy::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("bad provisioner.policy {s:?}"))
+            })?;
+        }
         p.min_executors = doc.num_or("provisioner.min_executors", p.min_executors as f64) as usize;
         p.max_executors = doc.num_or("provisioner.max_executors", p.max_executors as f64) as usize;
         p.allocation_latency_s =
             doc.num_or("provisioner.allocation_latency_s", p.allocation_latency_s);
         p.idle_release_s = doc.num_or("provisioner.idle_release_s", p.idle_release_s);
+        p.queue_per_executor =
+            doc.num_or("provisioner.queue_per_executor", p.queue_per_executor as f64) as usize;
+        p.poll_interval_s = doc.num_or("provisioner.poll_interval_s", p.poll_interval_s);
 
         self.seed = doc.num_or("seed", self.seed as f64) as u64;
         Ok(())
@@ -416,6 +435,36 @@ hop_latency_s = 0.001
         assert_eq!(c.index.backend, IndexBackend::Chord);
         assert!((c.index.hop_latency_s - 0.001).abs() < 1e-12);
         assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn provisioner_overrides_apply() {
+        let doc = parse::Doc::parse(
+            r#"
+[provisioner]
+enabled = true
+policy = "adaptive"
+min_executors = 2
+max_executors = 32
+poll_interval_s = 1.5
+queue_per_executor = 8
+"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.provisioner.enabled);
+        assert_eq!(
+            c.provisioner.policy,
+            crate::provisioner::policy::AllocationPolicy::Adaptive
+        );
+        assert_eq!(c.provisioner.min_executors, 2);
+        assert_eq!(c.provisioner.max_executors, 32);
+        assert!((c.provisioner.poll_interval_s - 1.5).abs() < 1e-12);
+        assert_eq!(c.provisioner.queue_per_executor, 8);
+
+        let bad = parse::Doc::parse("[provisioner]\npolicy = \"psychic\"").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
     }
 
     #[test]

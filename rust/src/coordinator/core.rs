@@ -154,9 +154,36 @@ impl FalkonCore {
         self.queue.len()
     }
 
+    /// Wait-queue high-water mark since the run started.
+    pub fn queue_peak(&self) -> usize {
+        self.queue.peak()
+    }
+
+    /// Wait-queue high-water mark since the last call, resetting the
+    /// mark — the provisioner's per-interval demand signal.
+    pub fn take_queue_peak(&mut self) -> usize {
+        self.queue.take_peak()
+    }
+
     /// Number of idle executors.
     pub fn idle_count(&self) -> usize {
         self.idle.len()
+    }
+
+    /// All registered executors, ascending.
+    pub fn executors(&self) -> &[ExecutorId] {
+        &self.all
+    }
+
+    /// Executors running nothing at all (every slot free), ascending —
+    /// the provisioner's release candidates. Distinct from `idle`, which
+    /// contains any executor with *a* free slot.
+    pub fn quiescent_executors(&self) -> Vec<ExecutorId> {
+        self.all
+            .iter()
+            .copied()
+            .filter(|e| self.slots.get(e).map(|s| s.busy == 0).unwrap_or(false))
+            .collect()
     }
 
     /// Number of registered executors.

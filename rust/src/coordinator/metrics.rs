@@ -22,6 +22,44 @@ pub enum ByteSource {
     GpfsWrite,
 }
 
+/// One sample of the elastic executor pool, taken at every provisioner
+/// evaluation — the allocated-vs-demand timeline behind the DRP figure.
+/// Hit/miss counters are cumulative at sample time, so windowed hit
+/// ratios (cache recovery after churn) fall out of consecutive samples.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PoolSample {
+    /// Sample time (sim seconds / live seconds since start).
+    pub t: f64,
+    /// Executors registered and live.
+    pub allocated: usize,
+    /// Executors requested but not yet granted (allocation latency).
+    pub pending: usize,
+    /// Wait-queue length at sample time (the demand).
+    pub queued: usize,
+    /// Cumulative local cache hits.
+    pub cache_hits: u64,
+    /// Cumulative peer-cache hits.
+    pub peer_hits: u64,
+    /// Cumulative persistent-storage misses.
+    pub gpfs_misses: u64,
+}
+
+impl PoolSample {
+    /// Local hit ratio of the accesses that happened between `prev` and
+    /// this sample (NaN-free: 0.0 for an empty window).
+    pub fn window_hit_ratio(&self, prev: &PoolSample) -> f64 {
+        let hits = self.cache_hits.saturating_sub(prev.cache_hits);
+        let total = hits
+            + self.peer_hits.saturating_sub(prev.peer_hits)
+            + self.gpfs_misses.saturating_sub(prev.gpfs_misses);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
 /// Mutable experiment counters.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
@@ -58,6 +96,23 @@ pub struct Metrics {
     pub t_start: f64,
     /// Time the last task completed (experiment end).
     pub t_end: f64,
+    /// Allocated-vs-demand samples, one per provisioner evaluation
+    /// (empty when the pool is static).
+    pub pool_timeline: Vec<PoolSample>,
+    /// Allocation requests sent to the cluster provider.
+    pub alloc_requests: u64,
+    /// Executors that came up mid-run.
+    pub executors_joined: u64,
+    /// Executors released mid-run.
+    pub executors_released: u64,
+    /// Largest pool observed (static runs: the configured node count).
+    pub peak_executors: usize,
+    /// Executor-seconds spent fully idle while allocated (the cost of
+    /// over-provisioning the idle-release timeout defends against).
+    pub idle_exec_s: f64,
+    /// Executor-seconds spent waiting on the cluster's allocation
+    /// latency (requested but not yet usable — the DRP overhead).
+    pub alloc_wait_s: f64,
 }
 
 impl Metrics {
@@ -81,6 +136,21 @@ impl Metrics {
         self.index_lookups += cost.lookups as u64;
         self.index_hops += cost.hops as u64;
         self.index_cost_s += cost.latency_s;
+    }
+
+    /// Record one elastic-pool sample (hit counters are captured from
+    /// the current totals) and keep the pool peak up to date.
+    pub fn sample_pool(&mut self, t: f64, allocated: usize, pending: usize, queued: usize) {
+        self.peak_executors = self.peak_executors.max(allocated);
+        self.pool_timeline.push(PoolSample {
+            t,
+            allocated,
+            pending,
+            queued,
+            cache_hits: self.cache_hits,
+            peer_hits: self.peer_hits,
+            gpfs_misses: self.gpfs_misses,
+        });
     }
 
     /// Record how one input was resolved.
@@ -194,5 +264,26 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.local_hit_ratio(), 0.0);
         assert_eq!(m.task_rate(), 0.0);
+    }
+
+    #[test]
+    fn pool_samples_track_peak_and_windowed_hits() {
+        let mut m = Metrics::new();
+        m.sample_pool(0.0, 2, 1, 10);
+        for _ in 0..3 {
+            m.add_resolution(ByteSource::Gpfs);
+        }
+        m.sample_pool(5.0, 6, 0, 4);
+        for _ in 0..4 {
+            m.add_resolution(ByteSource::Local);
+        }
+        m.add_resolution(ByteSource::Gpfs);
+        m.sample_pool(10.0, 6, 0, 0);
+        assert_eq!(m.peak_executors, 6);
+        assert_eq!(m.pool_timeline.len(), 3);
+        let w1 = m.pool_timeline[1].window_hit_ratio(&m.pool_timeline[0]);
+        let w2 = m.pool_timeline[2].window_hit_ratio(&m.pool_timeline[1]);
+        assert_eq!(w1, 0.0, "first window: all misses");
+        assert!((w2 - 0.8).abs() < 1e-12, "second window: 4/5 local");
     }
 }

@@ -8,7 +8,10 @@
 //!
 //! Threading model:
 //!
-//! * the coordinator owns `FalkonCore` and runs the dispatch loop;
+//! * the coordinator owns `FalkonCore` and runs the dispatch loop; with
+//!   `provisioner.enabled` it also runs the DRP on wall-clock time,
+//!   spawning executor threads when the (simulated GRAM4-like) cluster
+//!   grants an allocation and reaping idle ones on release;
 //! * each executor is a thread with an inbox (`mpsc::Sender<ExecMsg>`);
 //! * completions flow back on one shared channel;
 //! * PJRT compute runs on a dedicated **compute service** thread (the
@@ -30,6 +33,7 @@ use crate::coordinator::metrics::{ByteSource, Metrics};
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::error::{Error, Result};
 use crate::index::central::ExecutorId;
+use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
 use crate::runtime::{PjrtEngine, StackRequest};
 use crate::scheduler::decision::LocationHints;
 use crate::storage::live::{pixels_of, read_object_file, LiveCacheDir, LiveStore};
@@ -181,6 +185,12 @@ impl LiveCluster {
     }
 
     /// Run a batch of tasks to completion.
+    ///
+    /// With `provisioner.enabled` the executor pool is elastic: threads
+    /// are spawned when the cluster grants an allocation (after the
+    /// configured allocation latency, on wall-clock time) and reaped —
+    /// shutdown message, deregistration, cache-directory teardown — when
+    /// the provisioner releases an idle executor.
     pub fn run(self, tasks: Vec<Task>) -> Result<LiveOutcome> {
         let LiveCluster {
             cfg,
@@ -190,7 +200,8 @@ impl LiveCluster {
         } = self;
         let n_exec = cfg.testbed.nodes;
         let format = store.format();
-        let capacity = cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu;
+        let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
+        let elastic = cfg.provisioner.enabled;
 
         // Catalog from the store (sizes as stored).
         let mut catalog = Catalog::new();
@@ -207,9 +218,6 @@ impl LiveCluster {
             catalog,
             crate::index::build(&cfg.index, cfg.seed),
         );
-        for e in 0..n_exec {
-            core.register_executor_with(e, capacity);
-        }
 
         // Compute service (if stacking compute is wanted).
         let compute = match artifacts {
@@ -218,20 +226,23 @@ impl LiveCluster {
         };
         let compute_client = compute.as_ref().map(|(c, _, _)| c.clone());
 
-        // Executor threads.
+        // Executor plumbing: a slot per provisionable node. `inboxes[e]`
+        // is `Some` exactly while executor `e`'s thread is alive.
         let (done_tx, done_rx) = mpsc::channel::<Completion>();
-        let mut inboxes = Vec::new();
-        let mut handles = Vec::new();
+        let mut inboxes: Vec<Option<mpsc::Sender<ExecMsg>>> = (0..n_exec).map(|_| None).collect();
+        let mut handles: Vec<(ExecutorId, JoinHandle<()>)> = Vec::new();
         let cache_roots: Vec<PathBuf> =
             (0..n_exec).map(|e| workdir.join(format!("cache{e}"))).collect();
-        for e in 0..n_exec {
+        let store_root = store.path_of(ObjectId(0)).parent().unwrap().to_path_buf();
+        let spawn_exec = |e: ExecutorId,
+                          done: mpsc::Sender<Completion>|
+         -> Result<(mpsc::Sender<ExecMsg>, JoinHandle<()>)> {
             let (tx, rx) = mpsc::channel::<ExecMsg>();
-            inboxes.push(tx);
             let ctx = ExecutorCtx {
                 exec: e,
                 cfg: cfg.clone(),
                 format,
-                store_root: store.path_of(ObjectId(0)).parent().unwrap().to_path_buf(),
+                store_root: store_root.clone(),
                 cache_dir: LiveCacheDir::create(&cache_roots[e])?,
                 cache_roots: cache_roots.clone(),
                 cache: DataCache::new(
@@ -240,11 +251,59 @@ impl LiveCluster {
                     cfg.seed ^ e as u64,
                 ),
                 compute: compute_client.clone(),
-                done: done_tx.clone(),
+                done,
             };
-            handles.push(std::thread::spawn(move || executor_loop(ctx, rx)));
+            Ok((tx, std::thread::spawn(move || executor_loop(ctx, rx))))
+        };
+
+        // Provisioning state (elastic runs).
+        let mut drp = Provisioner::new(cfg.provisioner.clone());
+        let mut cluster = ClusterProvider::new(n_exec, cfg.provisioner.allocation_latency_s);
+        let mut pending_allocs: Vec<(f64, Vec<usize>)> = Vec::new(); // (ready_at_s, nodes)
+        let poll_s = cfg.provisioner.poll_interval_s.max(0.005);
+        let mut last_eval = 0.0f64;
+        let mut metrics = Metrics::new();
+        metrics.t_start = 0.0;
+
+        if elastic {
+            if n_exec == 0 || cfg.provisioner.max_executors == 0 {
+                return Err(Error::Config(
+                    "elastic pool needs at least one allocatable executor \
+                     (testbed.nodes and provisioner.max_executors must be >= 1)"
+                        .into(),
+                ));
+            }
+            // Warm floor: min_executors come up instantly, before t=0.
+            let warm = cfg.provisioner.min_executors.min(n_exec);
+            if warm > 0 {
+                let grant = cluster.allocate(0.0, warm);
+                for &e in &grant.nodes {
+                    core.register_executor_with(e, capacity);
+                    let (tx, h) = spawn_exec(e, done_tx.clone())?;
+                    inboxes[e] = Some(tx);
+                    handles.push((e, h));
+                }
+                drp.on_allocated(grant.nodes.len());
+            }
+        } else {
+            for e in 0..n_exec {
+                core.register_executor_with(e, capacity);
+                let (tx, h) = spawn_exec(e, done_tx.clone())?;
+                inboxes[e] = Some(tx);
+                handles.push((e, h));
+            }
         }
-        drop(done_tx);
+        // In a static pool every live sender now sits in an executor
+        // thread, so a fully-dead pool disconnects `done_rx` and turns
+        // into a clean error (the pre-elastic behavior). An elastic pool
+        // must keep one sender for future spawns — an *empty* pool is a
+        // legitimate transient there, not a death.
+        let done_tx = if elastic {
+            Some(done_tx)
+        } else {
+            drop(done_tx);
+            None
+        };
 
         // Coordinator loop.
         let t0 = Instant::now();
@@ -254,13 +313,107 @@ impl LiveCluster {
             submit_times.insert(t.id, Instant::now());
             core.submit(t);
         }
-        let mut metrics = Metrics::new();
-        metrics.t_start = 0.0;
         let mut sample_checksums = Vec::new();
         let mut completed = 0u64;
         let mut first_error: Option<String> = None;
 
         while completed < total {
+            if elastic {
+                let now_s = t0.elapsed().as_secs_f64();
+                // Deliver allocation grants whose latency elapsed: the
+                // nodes register with the core (and index) and their
+                // threads start pulling work.
+                let mut i = 0;
+                while i < pending_allocs.len() {
+                    if pending_allocs[i].0 <= now_s {
+                        let (_, nodes) = pending_allocs.swap_remove(i);
+                        let n = nodes.len();
+                        let done = done_tx.as_ref().expect("elastic keeps a sender");
+                        for e in nodes {
+                            core.register_executor_with(e, capacity);
+                            let (tx, h) = spawn_exec(e, done.clone())?;
+                            inboxes[e] = Some(tx);
+                            handles.push((e, h));
+                        }
+                        drp.on_allocated(n);
+                        metrics.executors_joined += n as u64;
+                        metrics.peak_executors =
+                            metrics.peak_executors.max(core.executor_count());
+                    } else {
+                        i += 1;
+                    }
+                }
+                // A thread that finished while its inbox is still open
+                // died on its own (panic) — the keep-alive `done_tx`
+                // means channel disconnect can no longer signal this, so
+                // probe the join handles instead of hanging forever.
+                for (e, h) in &handles {
+                    if inboxes[*e].is_some() && h.is_finished() {
+                        return Err(Error::Protocol(format!("executor {e} died unexpectedly")));
+                    }
+                }
+                if now_s - last_eval >= poll_s {
+                    let dt = now_s - last_eval;
+                    last_eval = now_s;
+                    let queued_now = core.queue_len();
+                    let demand = core.take_queue_peak().max(queued_now);
+                    let quiescent = core.quiescent_executors();
+                    for &e in core.executors() {
+                        if quiescent.binary_search(&e).is_ok() {
+                            drp.note_idle(e, now_s);
+                        } else {
+                            drp.note_busy(e);
+                        }
+                    }
+                    metrics.idle_exec_s += quiescent.len() as f64 * dt;
+                    metrics.alloc_wait_s += drp.pending() as f64 * dt;
+                    for action in drp.evaluate(demand, now_s) {
+                        match action {
+                            ProvisionAction::Allocate { count } => {
+                                metrics.alloc_requests += 1;
+                                let grant = cluster.allocate(now_s, count);
+                                if grant.nodes.len() < count {
+                                    drp.cancel_pending(count - grant.nodes.len());
+                                }
+                                if !grant.nodes.is_empty() {
+                                    pending_allocs.push((grant.ready_at, grant.nodes));
+                                }
+                            }
+                            ProvisionAction::Release { executors } => {
+                                for e in executors {
+                                    if quiescent.binary_search(&e).is_err() {
+                                        continue;
+                                    }
+                                    // Reap: shutdown + join the thread
+                                    // (it is quiescent, so the inbox recv
+                                    // returns immediately), purge the
+                                    // index, tear down the cache
+                                    // directory. Joining here also keeps
+                                    // `handles` free of finished entries
+                                    // so the death probe above cannot
+                                    // false-positive on a later re-join
+                                    // of the same node id.
+                                    if let Some(tx) = inboxes[e].take() {
+                                        let _ = tx.send(ExecMsg::Shutdown);
+                                    }
+                                    if let Some(pos) =
+                                        handles.iter().position(|(he, _)| *he == e)
+                                    {
+                                        let (_, h) = handles.swap_remove(pos);
+                                        let _ = h.join();
+                                    }
+                                    let _orphans = core.deregister_executor(e);
+                                    let _ = std::fs::remove_dir_all(&cache_roots[e]);
+                                    cluster.release(e);
+                                    drp.on_released(e);
+                                    metrics.executors_released += 1;
+                                }
+                            }
+                        }
+                    }
+                    metrics.sample_pool(now_s, core.executor_count(), drp.pending(), queued_now);
+                }
+            }
             for order in core.try_dispatch() {
                 metrics.tasks_dispatched += 1;
                 metrics.add_index_cost(order.cost);
@@ -272,12 +425,29 @@ impl LiveCluster {
                     hints: order.hints,
                 };
                 inboxes[order.executor]
+                    .as_ref()
+                    .ok_or_else(|| {
+                        Error::Protocol(format!("dispatched to released executor {}", order.executor))
+                    })?
                     .send(msg)
                     .map_err(|_| Error::Protocol(format!("executor {} died", order.executor)))?;
             }
-            let c = done_rx
-                .recv()
-                .map_err(|_| Error::Protocol("all executors died".into()))?;
+            // Elastic pools use a timed receive so provisioning can
+            // progress while the pool is empty; static pools block, as
+            // before the refactor.
+            let c = if elastic {
+                match done_rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                    Ok(c) => c,
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(Error::Protocol("all executors died".into()))
+                    }
+                }
+            } else {
+                done_rx
+                    .recv()
+                    .map_err(|_| Error::Protocol("all executors died".into()))?
+            };
             completed += 1;
             metrics.tasks_done += 1;
             metrics
@@ -300,12 +470,15 @@ impl LiveCluster {
             core.on_task_complete(c.exec, c.task, &c.events);
         }
         metrics.t_end = t0.elapsed().as_secs_f64();
+        metrics.peak_executors = metrics.peak_executors.max(core.executor_count());
 
-        // Shutdown.
-        for tx in &inboxes {
+        // Shutdown. (In elastic mode our keep-alive `done_tx` lives until
+        // the function returns; the loop above exits on the completion
+        // count, not on channel disconnect, so that is harmless.)
+        for tx in inboxes.iter().flatten() {
             let _ = tx.send(ExecMsg::Shutdown);
         }
-        for h in handles {
+        for (_, h) in handles {
             let _ = h.join();
         }
         if let Some((_, tx, h)) = compute {
@@ -547,6 +720,45 @@ mod tests {
             out.metrics.index_lookups, 8,
             "one charged lookup per single-input task"
         );
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    /// Elastic live run: the pool starts EMPTY (min_executors = 0), so
+    /// nothing can run until the provisioner's first grant lands — real
+    /// threads must come up mid-run for the workload to drain at all.
+    #[test]
+    fn live_cluster_elastic_pool_spawns_executors_mid_run() {
+        let root = tmp("elastic");
+        let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+        for i in 0..6 {
+            store.populate(ObjectId(i), 3_000).unwrap();
+        }
+        let mut cfg = Config::with_nodes(3);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = crate::provisioner::AllocationPolicy::Adaptive;
+        cfg.provisioner.min_executors = 0;
+        cfg.provisioner.max_executors = 3;
+        cfg.provisioner.allocation_latency_s = 0.05;
+        cfg.provisioner.poll_interval_s = 0.01;
+        cfg.provisioner.idle_release_s = 30.0; // no shrink before drain
+        cfg.provisioner.queue_per_executor = 4;
+        let tasks: Vec<Task> = (0..24)
+            .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 6)]))
+            .collect();
+        let out = LiveCluster::new(cfg, store, root.join("work"), None)
+            .run(tasks)
+            .unwrap();
+        assert_eq!(out.metrics.tasks_done, 24);
+        assert!(
+            out.metrics.executors_joined > 0,
+            "work only ran because executors joined mid-run"
+        );
+        assert!(out.metrics.alloc_requests > 0);
+        assert!(out.metrics.peak_executors >= 1);
+        assert!(out.metrics.peak_executors <= 3, "pool capped at max");
+        assert!(!out.metrics.pool_timeline.is_empty());
+        assert!(out.makespan_s >= 0.05, "first grant pays allocation latency");
         let _ = std::fs::remove_dir_all(root);
     }
 

@@ -9,8 +9,11 @@
 //!   integration tests.
 //!
 //! Both drivers run the *same* dispatcher core, cache implementation and
-//! central index — the substitution (DESIGN.md §3) swaps only the I/O
-//! substrate.
+//! pluggable index — the substitution (DESIGN.md §3) swaps only the I/O
+//! substrate — and both run the *same* dynamic resource provisioner
+//! (§3.1) when `provisioner.enabled` is set: the sim through
+//! `ProvisionTick`/`AllocReady` events, the live cluster on wall-clock
+//! time with real threads spawned and reaped mid-run.
 
 pub mod live;
 pub mod sim;

@@ -22,6 +22,21 @@
 //! completion** ("loosely coherent", §3.2.1) — the index can briefly lag
 //! the caches, which is exactly why measured hit ratios land slightly
 //! under ideal in Fig 10.
+//!
+//! ## Elastic pools
+//!
+//! With `provisioner.enabled` the executor pool is **not** registered up
+//! front: the run starts at `min_executors` and two extra event kinds
+//! drive §3.1's dynamic resource provisioning — `ProvisionTick` (every
+//! `poll_interval_s`: feed the wait-queue high-water mark to the
+//! [`Provisioner`], mark quiescent executors idle, execute the returned
+//! allocate/release actions) and `AllocReady` (the [`ClusterProvider`]'s
+//! allocation latency elapsed: the granted nodes register with the core
+//! *and* the index backend — Chord rebuilds its finger tables — and start
+//! taking work). A release deregisters the executor, purges its cache
+//! contents from the index (so no future hint targets it), requeues any
+//! tasks parked on it, and resets its node-local cache: a later re-join
+//! of the same node id starts cold, exactly like a fresh lease.
 
 
 use crate::cache::store::{CacheEvent, DataCache};
@@ -30,6 +45,7 @@ use crate::coordinator::core::{DispatchOrder, FalkonCore};
 use crate::coordinator::metrics::{ByteSource, Metrics};
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::index::central::ExecutorId;
+use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
 use crate::scheduler::decision::LocationHints;
 use crate::sim::engine::{Engine, EventQueue, World};
 use crate::sim::flownet::FlowId;
@@ -113,6 +129,10 @@ enum Ev {
     Step(u64),
     /// Flow-completion check (validity-stamped with a version).
     FlowCheck(u64),
+    /// Periodic provisioner evaluation (elastic pools only).
+    ProvisionTick,
+    /// A cluster allocation finished its latency; nodes come up.
+    AllocReady(u64),
 }
 
 /// Why a flow was started (continuation tag).
@@ -159,6 +179,21 @@ struct Running {
     events: Vec<CacheEvent>,
 }
 
+/// Elastic-pool state (present only when `provisioner.enabled`).
+struct ProvisionState {
+    drp: Provisioner,
+    cluster: ClusterProvider,
+    /// Evaluation interval, seconds.
+    interval_s: f64,
+    /// Task slots per executor (cpus × tasks_per_cpu).
+    capacity: usize,
+    /// In-flight allocation grants, keyed by the `AllocReady` event id.
+    pending_allocs: FxHashMap<u64, Vec<usize>>,
+    next_alloc_id: u64,
+    /// Time of the previous evaluation (for executor-second integrals).
+    last_tick: f64,
+}
+
 struct SimWorld {
     cfg: Config,
     caching: bool,
@@ -176,9 +211,117 @@ struct SimWorld {
     flow_version: u64,
     submit_times: FxHashMap<TaskId, f64>,
     first_dispatch: Option<f64>,
+    total_tasks: u64,
+    prov: Option<ProvisionState>,
 }
 
 impl SimWorld {
+    /// A fresh (cold) node-local cache for executor `e`.
+    fn fresh_cache(cfg: &Config, e: ExecutorId) -> DataCache {
+        DataCache::new(
+            cfg.cache.capacity_bytes,
+            cfg.cache.policy,
+            cfg.seed ^ (e as u64).wrapping_mul(0x9E37_79B9),
+        )
+    }
+
+    /// Handle one provisioner evaluation round.
+    fn provision_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        let Some(mut prov) = self.prov.take() else {
+            return;
+        };
+        let dt = (now - prov.last_tick).max(0.0);
+        prov.last_tick = now;
+
+        // Demand: the queue's high-water mark since the last tick (a
+        // burst that arrived and drained in between still registers).
+        let queued_now = self.core.queue_len();
+        let demand = self.core.take_queue_peak().max(queued_now);
+
+        // Idle bookkeeping: an executor is a release candidate only while
+        // every one of its slots is free.
+        let quiescent = self.core.quiescent_executors();
+        for &e in self.core.executors() {
+            if quiescent.binary_search(&e).is_ok() {
+                prov.drp.note_idle(e, now);
+            } else {
+                prov.drp.note_busy(e);
+            }
+        }
+        self.metrics.idle_exec_s += quiescent.len() as f64 * dt;
+        self.metrics.alloc_wait_s += prov.drp.pending() as f64 * dt;
+
+        for action in prov.drp.evaluate(demand, now) {
+            match action {
+                ProvisionAction::Allocate { count } => {
+                    self.metrics.alloc_requests += 1;
+                    let grant = prov.cluster.allocate(now, count);
+                    if grant.nodes.len() < count {
+                        prov.drp.cancel_pending(count - grant.nodes.len());
+                    }
+                    if !grant.nodes.is_empty() {
+                        let id = prov.next_alloc_id;
+                        prov.next_alloc_id += 1;
+                        prov.pending_allocs.insert(id, grant.nodes);
+                        q.at(grant.ready_at, Ev::AllocReady(id));
+                    }
+                }
+                ProvisionAction::Release { executors } => {
+                    for e in executors {
+                        // The provisioner only nominates executors it saw
+                        // quiescent this round, but re-check with the core
+                        // before tearing anything down.
+                        if quiescent.binary_search(&e).is_err() {
+                            continue;
+                        }
+                        // Deregistration purges the index and requeues
+                        // parked tasks; the node cache dies with the lease.
+                        let _orphans = self.core.deregister_executor(e);
+                        self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
+                        prov.cluster.release(e);
+                        prov.drp.on_released(e);
+                        self.metrics.executors_released += 1;
+                    }
+                }
+            }
+        }
+        self.metrics.sample_pool(
+            now,
+            self.core.executor_count(),
+            prov.drp.pending(),
+            queued_now,
+        );
+        // Keep evaluating while work (or an allocation) is outstanding.
+        if self.metrics.tasks_done < self.total_tasks || prov.drp.pending() > 0 {
+            q.after(prov.interval_s, Ev::ProvisionTick);
+        }
+        self.prov = Some(prov);
+        // A release may have requeued parked tasks onto live executors.
+        let orders = self.core.try_dispatch();
+        self.execute_orders(now, orders, q);
+    }
+
+    /// A cluster grant completed: the nodes register and take work.
+    fn alloc_ready(&mut self, now: f64, id: u64, q: &mut EventQueue<Ev>) {
+        let Some(mut prov) = self.prov.take() else {
+            return;
+        };
+        if let Some(nodes) = prov.pending_allocs.remove(&id) {
+            let n = nodes.len();
+            for e in nodes {
+                self.core.register_executor_with(e, prov.capacity);
+                self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
+            }
+            prov.drp.on_allocated(n);
+            self.metrics.executors_joined += n as u64;
+            self.metrics.peak_executors =
+                self.metrics.peak_executors.max(self.core.executor_count());
+        }
+        self.prov = Some(prov);
+        let orders = self.core.try_dispatch();
+        self.execute_orders(now, orders, q);
+    }
+
     /// Cached (post-expansion) size of an object.
     fn cached_size(&self, obj: ObjectId) -> u64 {
         let stored = self.core.catalog().size(obj).unwrap_or(1);
@@ -558,6 +701,8 @@ impl World for SimWorld {
             Ev::AtExecutor(rid) => self.step(now, rid, q),
             Ev::Step(rid) => self.step(now, rid, q),
             Ev::FlowCheck(v) => self.flow_check(now, v, q),
+            Ev::ProvisionTick => self.provision_tick(now, q),
+            Ev::AllocReady(id) => self.alloc_ready(now, id, q),
         }
     }
 }
@@ -587,9 +732,39 @@ impl SimDriver {
             crate::index::build(&cfg.index, cfg.seed),
         );
         let nodes = cfg.testbed.nodes;
-        let capacity = cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu;
-        for e in 0..nodes {
-            core.register_executor_with(e, capacity);
+        let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
+        let mut prov = None;
+        if cfg.provisioner.enabled {
+            // Elastic pool: start at min_executors (granted instantly —
+            // the warm floor is provisioned before the run), grow and
+            // shrink through ProvisionTick / AllocReady events.
+            assert!(
+                nodes > 0 && cfg.provisioner.max_executors > 0,
+                "elastic pool needs at least one allocatable executor"
+            );
+            let mut drp = Provisioner::new(cfg.provisioner.clone());
+            let mut cluster = ClusterProvider::new(nodes, cfg.provisioner.allocation_latency_s);
+            let warm = cfg.provisioner.min_executors.min(nodes);
+            if warm > 0 {
+                let grant = cluster.allocate(0.0, warm);
+                for &e in &grant.nodes {
+                    core.register_executor_with(e, capacity);
+                }
+                drp.on_allocated(grant.nodes.len());
+            }
+            prov = Some(ProvisionState {
+                drp,
+                cluster,
+                interval_s: cfg.provisioner.poll_interval_s.max(1e-3),
+                capacity,
+                pending_allocs: FxHashMap::default(),
+                next_alloc_id: 0,
+                last_tick: 0.0,
+            });
+        } else {
+            for e in 0..nodes {
+                core.register_executor_with(e, capacity);
+            }
         }
 
         let mut caches: Vec<DataCache> = (0..nodes)
@@ -623,6 +798,8 @@ impl SimDriver {
         let pending_tasks: Vec<Option<Task>> =
             spec.tasks.iter().map(|(_, t)| Some(t.clone())).collect();
 
+        let total_tasks = pending_tasks.len() as u64;
+        let elastic = prov.is_some();
         let world = SimWorld {
             cfg,
             caching,
@@ -640,14 +817,22 @@ impl SimDriver {
             flow_version: 0,
             submit_times: FxHashMap::default(),
             first_dispatch: None,
+            total_tasks,
+            prov,
         };
 
         let mut engine = Engine::new(world);
+        if elastic {
+            engine.schedule(0.0, Ev::ProvisionTick);
+        }
         for (t, i) in arrivals {
             engine.schedule(t, Ev::Arrive(i));
         }
         let end = engine.run();
-        let metrics = engine.world.metrics.clone();
+        let mut metrics = engine.world.metrics.clone();
+        metrics.peak_executors = metrics
+            .peak_executors
+            .max(engine.world.core.executor_count());
         let makespan = (metrics.t_end - metrics.t_start).max(0.0);
         debug_assert!(
             engine.world.runs.is_empty(),
@@ -834,5 +1019,128 @@ mod tests {
         assert_eq!(a.metrics.tasks_done, b.metrics.tasks_done);
         assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
         assert_eq!(a.events, b.events);
+    }
+
+    /// A bursty-demand config with an elastic pool.
+    fn elastic_cfg(nodes: usize) -> Config {
+        let mut cfg = Config::with_nodes(nodes);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = crate::provisioner::AllocationPolicy::Adaptive;
+        cfg.provisioner.min_executors = 1;
+        cfg.provisioner.max_executors = nodes;
+        cfg.provisioner.allocation_latency_s = 20.0;
+        cfg.provisioner.idle_release_s = 15.0;
+        cfg.provisioner.poll_interval_s = 2.0;
+        cfg.provisioner.queue_per_executor = 2;
+        cfg
+    }
+
+    #[test]
+    fn elastic_pool_grows_under_burst_and_shrinks_in_the_lull() {
+        use crate::workloads::bursty::{self, BurstSpec, DemandShape};
+        let cfg = elastic_cfg(8);
+        let w = bursty::generate(
+            &BurstSpec {
+                shape: DemandShape::Square,
+                // 2 tasks/s over 60 s-long bursts: 120 tasks in burst one,
+                // a 140 s lull, 120 more in burst two — so the idle
+                // timeout (15 s) fires mid-run.
+                tasks: 240,
+                objects: 32,
+                object_bytes: MB,
+                period_s: 200.0,
+                base_rate: 0.0,
+                peak_rate: 2.0,
+                duty: 0.3,
+                task_cpu_s: 1.0,
+            },
+            11,
+        );
+        let out = SimDriver::new(cfg.clone(), w.spec, w.catalog).run();
+        assert_eq!(out.metrics.tasks_done, 240, "elastic run must drain");
+        assert!(
+            out.metrics.executors_joined > 0,
+            "pool must grow beyond the warm floor"
+        );
+        assert!(
+            out.metrics.executors_released > 0,
+            "pool must shrink during the 140 s lull (idle timeout 15 s)"
+        );
+        assert!(out.metrics.peak_executors > cfg.provisioner.min_executors);
+        assert!(!out.metrics.pool_timeline.is_empty());
+        for s in &out.metrics.pool_timeline {
+            assert!(
+                s.allocated + s.pending <= cfg.provisioner.max_executors,
+                "pool {} + pending {} exceeded max {}",
+                s.allocated,
+                s.pending,
+                cfg.provisioner.max_executors
+            );
+        }
+        // The mid-run churn costs idle executor-seconds and allocation
+        // waiting — both must be accounted.
+        assert!(out.metrics.idle_exec_s > 0.0);
+        assert!(out.metrics.alloc_wait_s > 0.0);
+        assert!(out.metrics.alloc_requests > 0);
+    }
+
+    #[test]
+    fn elastic_pool_is_deterministic_and_chord_survives_churn() {
+        use crate::index::IndexBackend;
+        use crate::workloads::bursty::{self, BurstSpec, DemandShape};
+        let run = |backend: IndexBackend| {
+            let mut cfg = elastic_cfg(6);
+            cfg.index.backend = backend;
+            // Zero the chord cost model: placement AND timing must then
+            // match central exactly, so the provisioning feedback loop
+            // (queue peaks sampled at tick times) cannot diverge.
+            cfg.index.hop_latency_s = 0.0;
+            cfg.index.hop_proc_s = 0.0;
+            cfg.index.central_lookup_s = 0.0;
+            let w = bursty::generate(
+                &BurstSpec {
+                    shape: DemandShape::Sine,
+                    tasks: 120,
+                    objects: 16,
+                    object_bytes: MB,
+                    period_s: 120.0,
+                    base_rate: 0.2,
+                    peak_rate: 3.0,
+                    duty: 0.3,
+                    task_cpu_s: 1.0,
+                },
+                5,
+            );
+            SimDriver::new(cfg, w.spec, w.catalog).run()
+        };
+        let a = run(IndexBackend::Chord);
+        let b = run(IndexBackend::Chord);
+        assert_eq!(a.events, b.events, "elastic chord runs must replay");
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-9);
+        assert_eq!(a.metrics.tasks_done, 120);
+        // Placement is backend-invariant even with mid-run membership
+        // churn (the ring rebuilds on every join/leave).
+        let c = run(IndexBackend::Central);
+        assert_eq!(a.metrics.tasks_done, c.metrics.tasks_done);
+        assert_eq!(a.metrics.cache_hits, c.metrics.cache_hits);
+        assert_eq!(a.metrics.gpfs_misses, c.metrics.gpfs_misses);
+        assert_eq!(a.metrics.executors_joined, c.metrics.executors_joined);
+        assert_eq!(a.metrics.executors_released, c.metrics.executors_released);
+        assert!(a.metrics.index_hops > 0, "chord must route mid-churn too");
+    }
+
+    #[test]
+    fn elastic_pool_starting_from_zero_still_drains() {
+        let mut cfg = elastic_cfg(4);
+        cfg.provisioner.min_executors = 0;
+        cfg.provisioner.allocation_latency_s = 10.0;
+        let spec = SimWorkloadSpec::new(read_tasks(20));
+        let out = SimDriver::new(cfg, spec, catalog(20, MB)).run();
+        assert_eq!(out.metrics.tasks_done, 20);
+        assert!(out.metrics.executors_joined > 0);
+        // Nothing could run before the first allocation landed.
+        assert!(out.makespan_s >= 0.0);
+        assert!(out.metrics.t_start >= 10.0, "first dispatch waits for the grant");
     }
 }

@@ -19,10 +19,13 @@
 //! measured scheduled runs and closed-form curves are directly
 //! comparable.
 //!
-//! Like [`super::dht`], the overlay is modeled without churn or
-//! stabilization traffic: executor join/leave rebuilds the ring
-//! immediately (membership changes are rare relative to lookups in every
-//! workload the paper studies).
+//! Like [`super::dht`], the overlay is modeled without stabilization
+//! traffic: executor join/leave rebuilds the ring (and thus finger
+//! ownership) immediately. Membership churn is *real* now — the elastic
+//! drivers register and deregister executors mid-run under the dynamic
+//! provisioner — but still rare relative to lookups, so the instant
+//! rebuild stands in for Chord's periodic stabilization; charging that
+//! traffic per membership change is a noted follow-on in ROADMAP.md.
 
 use std::cell::Cell;
 

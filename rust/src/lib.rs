@@ -26,7 +26,8 @@
 //! | §3.1 Falkon dispatcher | [`coordinator`] |
 //! | §3.2.2 eviction + dispatch policies | [`cache`], [`scheduler`] |
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
-//! | DRP | [`provisioner`] |
+//! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |
+//! | DRP demand-response figure (`--figure drp`) | [`analysis::figures`], [`workloads::bursty`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |

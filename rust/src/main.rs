@@ -17,13 +17,16 @@ use datadiffusion::coordinator::task::{Task, TaskId};
 use datadiffusion::driver::live::LiveCluster;
 use datadiffusion::driver::sim::SimDriver;
 use datadiffusion::index::IndexBackend;
+use datadiffusion::provisioner::AllocationPolicy;
 use datadiffusion::runtime::{artifacts_dir, Manifest};
 use datadiffusion::scheduler::DispatchPolicy;
 use datadiffusion::storage::live::LiveStore;
 use datadiffusion::storage::object::{DataFormat, ObjectId};
 use datadiffusion::util::cli::{help_if_requested, Args, OptSpec};
+use datadiffusion::util::csv::results_dir;
 use datadiffusion::util::units::{fmt_bps, fmt_bytes, fmt_secs};
 use datadiffusion::workloads::astro;
+use datadiffusion::workloads::bursty::{self, BurstSpec, DemandShape};
 
 fn main() {
     datadiffusion::util::logging::init();
@@ -36,10 +39,13 @@ fn main() {
         OptSpec { name: "scale", value: "F", help: "workload scale (0,1]", default: "0.02" },
         OptSpec { name: "policy", value: "NAME", help: "dispatch policy", default: "max-compute-util" },
         OptSpec { name: "index", value: "BACKEND", help: "cache-location index (central|chord)", default: "central" },
-        OptSpec { name: "tasks", value: "N", help: "task count (live)", default: "64" },
-        OptSpec { name: "objects", value: "N", help: "distinct objects (live)", default: "16" },
+        OptSpec { name: "provisioner", value: "POLICY", help: "elastic pool: one-at-a-time|all-at-once|adaptive", default: "" },
+        OptSpec { name: "workload", value: "NAME", help: "sim workload (stacking|bursty)", default: "stacking" },
+        OptSpec { name: "shape", value: "NAME", help: "bursty demand shape (square|sine)", default: "square" },
+        OptSpec { name: "tasks", value: "N", help: "task count (live: 64, bursty sim: 512)", default: "" },
+        OptSpec { name: "objects", value: "N", help: "distinct objects (live: 16, bursty sim: 64)", default: "" },
         OptSpec { name: "workdir", value: "DIR", help: "live-mode working dir", default: "/tmp/falkon-live" },
-        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13)", default: "11" },
+        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13,drp)", default: "11" },
         OptSpec { name: "config", value: "FILE", help: "TOML config (see configs/)", default: "" },
         OptSpec { name: "gz", value: "", help: "compressed (GZ) store format", default: "" },
         OptSpec { name: "read-write", value: "", help: "read+write variant", default: "" },
@@ -89,27 +95,81 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         }
     }
-    // The CLI flag wins over presets and config file.
+    // CLI flags win over presets and config file.
     cfg.index.backend = backend;
-    let row = astro::row_for_locality(locality);
-    let w = astro::generate(&cfg, row, format, caching, scale, cfg.seed);
+    if let Some(p) = args.get("provisioner") {
+        let Some(policy) = AllocationPolicy::parse(p) else {
+            eprintln!("error: --provisioner expects one-at-a-time|all-at-once|adaptive");
+            return 2;
+        };
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = policy;
+        cfg.provisioner.max_executors = cfg.provisioner.max_executors.min(cfg.testbed.nodes);
+    }
+    // Whether elasticity came from the flag or a config file, reject a
+    // pool that could never allocate (the sim driver asserts on it).
+    if cfg.provisioner.enabled && (cfg.testbed.nodes == 0 || cfg.provisioner.max_executors == 0) {
+        eprintln!("error: elastic pool needs testbed.nodes >= 1 and provisioner.max_executors >= 1");
+        return 2;
+    }
+
+    let workload = args.str_or("workload", "stacking");
+    let (spec, catalog, label) = match workload.as_str() {
+        "bursty" => {
+            let Some(shape) = DemandShape::parse(&args.str_or("shape", "square")) else {
+                eprintln!("error: --shape expects square|sine");
+                return 2;
+            };
+            let bspec = BurstSpec {
+                shape,
+                tasks: args.num_or("tasks", 512),
+                objects: args.num_or("objects", 64),
+                ..BurstSpec::default()
+            };
+            let w = bursty::generate(&bspec, cfg.seed);
+            let label = format!(
+                "bursty({:?}) | {} tasks over {} objects, horizon {}",
+                shape,
+                bspec.tasks,
+                bspec.objects,
+                fmt_secs(w.horizon_s)
+            );
+            (w.spec, w.catalog, label)
+        }
+        "stacking" => {
+            let row = astro::row_for_locality(locality);
+            let w = astro::generate(&cfg, row, format, caching, scale, cfg.seed);
+            let label = format!(
+                "locality {} | {} objects over {} files",
+                row.locality, w.objects, w.files
+            );
+            (w.spec, w.catalog, label)
+        }
+        other => {
+            eprintln!("error: --workload expects stacking|bursty, got {other}");
+            return 2;
+        }
+    };
     println!(
-        "sim: locality {} | {} objects over {} files | {} CPUs | {} | caching={} | index={}",
-        row.locality,
-        w.objects,
-        w.files,
+        "sim: {label} | {} CPUs | {} | caching={} | index={} | provisioner={}",
         cpus,
         format.label(),
         caching,
-        cfg.index.backend.label()
+        cfg.index.backend.label(),
+        if cfg.provisioner.enabled {
+            cfg.provisioner.policy.label()
+        } else {
+            "static"
+        }
     );
-    let out = SimDriver::new(cfg, w.spec, w.catalog).run();
+    let out = SimDriver::new(cfg, spec, catalog).run();
     print_outcome_common(
         out.metrics.tasks_done,
         out.makespan_s,
         out.time_per_task_per_cpu(cpus),
         &out.metrics,
     );
+    print_pool_timeline(&out.metrics);
     println!(
         "  sim-engine: {} events in {} ({:.0} ev/s)",
         out.events,
@@ -117,6 +177,44 @@ fn cmd_sim(args: &Args) -> i32 {
         out.events as f64 / out.wall_s.max(1e-9)
     );
     0
+}
+
+/// Allocated-vs-demand summary of an elastic run (no-op for static pools).
+fn print_pool_timeline(m: &datadiffusion::coordinator::metrics::Metrics) {
+    if m.pool_timeline.is_empty() {
+        return;
+    }
+    println!(
+        "  provisioning: {} allocation requests | {} joined | {} released | peak pool {} | idle {:.0} exec-s | alloc-wait {:.0} exec-s",
+        m.alloc_requests,
+        m.executors_joined,
+        m.executors_released,
+        m.peak_executors,
+        m.idle_exec_s,
+        m.alloc_wait_s
+    );
+    println!(
+        "  {:>10} {:>10} {:>8} {:>8} {:>10}",
+        "t", "allocated", "pending", "queued", "window-hit"
+    );
+    // Sample the timeline evenly: enough rows to see growth and decay
+    // without drowning the summary.
+    let n = m.pool_timeline.len();
+    let stride = n.div_ceil(16);
+    let mut prev = m.pool_timeline[0];
+    for (i, s) in m.pool_timeline.iter().enumerate() {
+        if i % stride == 0 || i + 1 == n {
+            println!(
+                "  {:>10} {:>10} {:>8} {:>8} {:>9.1}%",
+                fmt_secs(s.t),
+                s.allocated,
+                s.pending,
+                s.queued,
+                s.window_hit_ratio(&prev) * 100.0
+            );
+            prev = *s;
+        }
+    }
 }
 
 fn cmd_live(args: &Args) -> i32 {
@@ -166,11 +264,27 @@ fn cmd_live(args: &Args) -> i32 {
     let mut cfg = Config::with_nodes(nodes);
     cfg.scheduler.policy = policy;
     cfg.index.backend = backend;
+    if let Some(p) = args.get("provisioner") {
+        let Some(pol) = AllocationPolicy::parse(p) else {
+            eprintln!("error: --provisioner expects one-at-a-time|all-at-once|adaptive");
+            return 2;
+        };
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = pol;
+        cfg.provisioner.min_executors = 0;
+        cfg.provisioner.max_executors = nodes;
+        // Wall-clock scale: a GRAM4-style 40 s allocation latency would
+        // dwarf a mini-cluster demo.
+        cfg.provisioner.allocation_latency_s = 0.25;
+        cfg.provisioner.poll_interval_s = 0.05;
+        cfg.provisioner.idle_release_s = 2.0;
+    }
     println!(
-        "live: {nodes} executors | {n_tasks} stacking tasks over {n_objects} objects | {} | {} | index={}",
+        "live: {nodes} executors | {n_tasks} stacking tasks over {n_objects} objects | {} | {} | index={} | provisioner={}",
         format.label(),
         policy.label(),
-        backend.label()
+        backend.label(),
+        if cfg.provisioner.enabled { cfg.provisioner.policy.label() } else { "static" }
     );
     match LiveCluster::new(cfg, store, workdir.join("work"), artifacts).run(tasks) {
         Ok(out) => {
@@ -180,6 +294,7 @@ fn cmd_live(args: &Args) -> i32 {
                 out.makespan_s * nodes as f64 / out.metrics.tasks_done.max(1) as f64,
                 &out.metrics,
             );
+            print_pool_timeline(&out.metrics);
             0
         }
         Err(e) => {
@@ -190,7 +305,14 @@ fn cmd_live(args: &Args) -> i32 {
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
-    let fig: u32 = args.num_or("figure", 11);
+    let fig_arg = args.str_or("figure", "11");
+    if fig_arg == "drp" {
+        return sweep_drp(args);
+    }
+    let Ok(fig) = fig_arg.parse::<u32>() else {
+        eprintln!("unknown figure {fig_arg}; supported: 2,3,4,5,8,9,10,11,12,13,drp");
+        return 2;
+    };
     let scale: f64 = args.num_or("scale", figures::env_scale());
     match fig {
         2 => {
@@ -272,11 +394,37 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown figure {other}; supported: 2,3,4,5,8,9,10,11,12,13");
+            eprintln!("unknown figure {other}; supported: 2,3,4,5,8,9,10,11,12,13,drp");
             return 2;
         }
     }
     0
+}
+
+/// The DRP figure: all three allocation policies through real elastic
+/// scheduled runs, with CSVs for external plotting (same emitter as the
+/// `fig_drp` bench).
+fn sweep_drp(args: &Args) -> i32 {
+    let nodes: usize = args.num_or("nodes", 16);
+    let tasks: u64 = args.num_or("tasks", 400);
+    let rows = figures::fig_drp(nodes, tasks);
+    match figures::emit_drp(&rows, &results_dir()) {
+        Ok((p, tp)) => {
+            println!(
+                "\nreading the figure: all-at-once reaches the demand fastest but pays the most\n\
+                 idle executor-seconds; one-at-a-time trickles grants through the allocation\n\
+                 latency; adaptive tracks the backlog with few requests — the trade §3.1\n\
+                 motivates, measured on scheduled runs.\nwrote {} and {}",
+                p.display(),
+                tp.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing CSV: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_info() -> i32 {

@@ -3,10 +3,24 @@
 //! Manages the creation and deletion of executors: watches wait-queue
 //! pressure, requests node allocations from a (simulated GRAM4-like)
 //! cluster provider with realistic allocation latency, and releases
-//! executors that sit idle past a timeout. The paper's experiments hold
-//! the pool static ("we will address dynamic provisioning in future
-//! work") — our benches do too — but the mechanism is implemented and
-//! tested, and `examples/quickstart.rs` exercises it.
+//! executors that sit idle past a timeout. Since the elastic-pool
+//! refactor this is no longer a side-car: both drivers run it on the
+//! dispatch path when `provisioner.enabled` is set —
+//!
+//! * [`crate::driver::sim::SimDriver`] evaluates it on a periodic
+//!   `ProvisionTick` event, grants arrive through `AllocReady` events
+//!   after the provider's allocation latency, and executors join/leave
+//!   the [`crate::coordinator::core::FalkonCore`] (and its
+//!   [`crate::index::DataIndex`] backend) *mid-run*;
+//! * [`crate::driver::live::LiveCluster`] does the same on wall-clock
+//!   time, spawning and reaping real executor threads.
+//!
+//! The demand signal is the wait queue's high-water mark since the last
+//! evaluation ([`crate::scheduler::queue::WaitQueue::take_peak`]); the
+//! release signal is per-executor quiescence tracked via
+//! [`Provisioner::note_idle`]/[`Provisioner::note_busy`]. The three
+//! [`AllocationPolicy`] variants are compared on real scheduled runs by
+//! `falkon sweep --figure drp` (see `crate::analysis::figures::fig_drp`).
 
 pub mod cluster;
 pub mod policy;
@@ -15,6 +29,7 @@ pub use cluster::ClusterProvider;
 pub use policy::AllocationPolicy;
 
 use crate::config::ProvisionerConfig;
+use crate::util::fxhash::FxHashMap;
 
 /// A provisioning decision for the driver to execute.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,7 +52,9 @@ pub struct Provisioner {
     cfg: ProvisionerConfig,
     allocated: usize,
     pending: usize,
-    idle_since: Vec<(usize, f64)>, // (executor, idle-start time)
+    // FxHashMap like the rest of the dispatch-adjacent state: note_idle /
+    // note_busy run per executor per evaluation round.
+    idle_since: FxHashMap<usize, f64>, // executor -> idle-start time
 }
 
 impl Provisioner {
@@ -47,7 +64,7 @@ impl Provisioner {
             cfg,
             allocated: 0,
             pending: 0,
-            idle_since: Vec::new(),
+            idle_since: FxHashMap::default(),
         }
     }
 
@@ -67,16 +84,21 @@ impl Provisioner {
         self.allocated += count;
     }
 
+    /// An allocation request was short-granted (the cluster had fewer
+    /// free nodes than asked): forget the shortfall so it does not block
+    /// future growth forever.
+    pub fn cancel_pending(&mut self, count: usize) {
+        self.pending = self.pending.saturating_sub(count);
+    }
+
     /// Executor became idle at time `now` (candidate for release).
     pub fn note_idle(&mut self, executor: usize, now: f64) {
-        if !self.idle_since.iter().any(|&(e, _)| e == executor) {
-            self.idle_since.push((executor, now));
-        }
+        self.idle_since.entry(executor).or_insert(now);
     }
 
     /// Executor got work again; cancel its idle clock.
     pub fn note_busy(&mut self, executor: usize) {
-        self.idle_since.retain(|&(e, _)| e != executor);
+        self.idle_since.remove(&executor);
     }
 
     /// Executor released (driver confirmed).
@@ -86,7 +108,8 @@ impl Provisioner {
     }
 
     /// Evaluate the provisioning policy. `queued` is the current wait
-    /// queue length; `now` is the current time.
+    /// queue length (or its high-water mark since the last evaluation);
+    /// `now` is the current time.
     pub fn evaluate(&mut self, queued: usize, now: f64) -> Vec<ProvisionAction> {
         let mut actions = Vec::new();
 
@@ -104,17 +127,23 @@ impl Provisioner {
         }
 
         // Shrink: idle past the timeout, but never below min_executors.
+        // Longest-idle first (ties to the lower id) so release order is
+        // deterministic regardless of hash-map iteration order.
         let min = self.cfg.min_executors;
-        let mut releasable: Vec<usize> = self
+        let mut candidates: Vec<(f64, usize)> = self
             .idle_since
             .iter()
-            .filter(|&&(_, t0)| now - t0 >= self.cfg.idle_release_s)
-            .map(|&(e, _)| e)
+            .filter(|&(_, &t0)| now - t0 >= self.cfg.idle_release_s)
+            .map(|(&e, &t0)| (t0, e))
             .collect();
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
         let can_release = self.allocated.saturating_sub(min);
-        releasable.truncate(can_release);
+        candidates.truncate(can_release);
+        let releasable: Vec<usize> = candidates.into_iter().map(|(_, e)| e).collect();
         if !releasable.is_empty() && queued == 0 {
-            self.idle_since.retain(|(e, _)| !releasable.contains(e));
+            for e in &releasable {
+                self.idle_since.remove(e);
+            }
             actions.push(ProvisionAction::Release {
                 executors: releasable,
             });
@@ -136,6 +165,7 @@ mod tests {
             allocation_latency_s: 40.0,
             idle_release_s: 60.0,
             queue_per_executor: 2,
+            ..ProvisionerConfig::default()
         }
     }
 
@@ -171,7 +201,9 @@ mod tests {
         // Past timeout: release down to min (1), i.e. 2 executors.
         let a = p.evaluate(0, 61.0);
         match &a[..] {
-            [ProvisionAction::Release { executors }] => assert_eq!(executors.len(), 2),
+            [ProvisionAction::Release { executors }] => {
+                assert_eq!(executors, &[0, 1], "longest-idle first, id tiebreak")
+            }
             other => panic!("unexpected {other:?}"),
         }
         // Queue pressure blocks release.
@@ -189,5 +221,31 @@ mod tests {
         p.note_idle(0, 0.0);
         p.note_busy(0);
         assert!(p.evaluate(0, 100.0).is_empty());
+    }
+
+    #[test]
+    fn repeated_note_idle_keeps_first_timestamp() {
+        let mut p = Provisioner::new(cfg());
+        p.on_allocated(2);
+        p.note_idle(0, 0.0);
+        p.note_idle(0, 59.0); // must not reset the clock
+        let a = p.evaluate(0, 61.0);
+        assert!(
+            matches!(&a[..], [ProvisionAction::Release { executors }] if executors == &[0]),
+            "unexpected {a:?}"
+        );
+    }
+
+    #[test]
+    fn cancel_pending_unblocks_growth() {
+        let mut p = Provisioner::new(cfg());
+        let _ = p.evaluate(16, 0.0); // pending = 8 (cap)
+        assert_eq!(p.pending(), 8);
+        p.on_allocated(3); // short grant: only 3 of 8 came up
+        p.cancel_pending(5);
+        assert_eq!(p.pending(), 0);
+        assert_eq!(p.allocated(), 3);
+        let a = p.evaluate(16, 1.0);
+        assert_eq!(a, vec![ProvisionAction::Allocate { count: 5 }]);
     }
 }

@@ -30,6 +30,15 @@ impl AllocationPolicy {
         }
     }
 
+    /// Display label (CLI/figure naming, kebab-case).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AllocationPolicy::OneAtATime => "one-at-a-time",
+            AllocationPolicy::AllAtOnce => "all-at-once",
+            AllocationPolicy::Adaptive => "adaptive",
+        }
+    }
+
     /// How many additional executors to request, given the backlog and
     /// the remaining headroom.
     pub fn grow_by(
@@ -91,5 +100,13 @@ mod tests {
             Some(AllocationPolicy::OneAtATime)
         );
         assert_eq!(AllocationPolicy::parse("nope"), None);
+        assert_eq!(AllocationPolicy::Adaptive.label(), "adaptive");
+        for p in [
+            AllocationPolicy::OneAtATime,
+            AllocationPolicy::AllAtOnce,
+            AllocationPolicy::Adaptive,
+        ] {
+            assert_eq!(AllocationPolicy::parse(p.label()), Some(p), "round-trip");
+        }
     }
 }

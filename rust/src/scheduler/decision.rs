@@ -59,6 +59,48 @@ impl<'a> SchedView<'a> {
             .sum()
     }
 
+    /// Best executor among `members` (a sorted slice — `idle` or `all`)
+    /// by cached bytes over `task`'s inputs, with ties to the lower id.
+    ///
+    /// Candidates come from `index.locations()` per input, so the cost is
+    /// O(inputs × replicas) — independent of cluster size — and executors
+    /// holding none of the inputs are never candidates (they all score
+    /// zero; callers fall back to the first idle executor, exactly the
+    /// executor an exhaustive zero-score scan would tie-break to). The
+    /// membership filter also guards against locations that outlived a
+    /// deregistration: the scheduler must never target a ghost.
+    pub fn best_holder(&self, task: &Task, members: &[ExecutorId]) -> Option<(ExecutorId, u64)> {
+        if self.index.is_empty() {
+            return None;
+        }
+        // Tiny linear map: an object rarely lives on more than a few
+        // executors.
+        let mut per_exec: Vec<(ExecutorId, u64)> = Vec::with_capacity(8);
+        for &obj in &task.inputs {
+            let size = self.catalog.size(obj).unwrap_or(1);
+            for &e in self.index.locations(obj) {
+                if members.binary_search(&e).is_err() {
+                    continue;
+                }
+                match per_exec.iter_mut().find(|(pe, _)| *pe == e) {
+                    Some((_, s)) => *s += size,
+                    None => per_exec.push((e, size)),
+                }
+            }
+        }
+        let mut best: Option<(ExecutorId, u64)> = None;
+        for &(e, s) in &per_exec {
+            let better = match best {
+                None => true,
+                Some((be, bs)) => s > bs || (s == bs && e < be),
+            };
+            if better {
+                best = Some((e, s));
+            }
+        }
+        best
+    }
+
     /// Build location hints for every input of `task`.
     pub fn hints_for(&self, task: &Task) -> LocationHints {
         let mut hints = LocationHints::new();
@@ -103,6 +145,28 @@ mod tests {
         assert_eq!(view.cached_bytes(&task, 0), 150);
         assert_eq!(view.cached_bytes(&task, 1), 50);
         assert_eq!(view.cached_bytes(&task, 9), 0);
+    }
+
+    #[test]
+    fn best_holder_scores_members_only_with_low_id_ties() {
+        let (idx, cat) = setup();
+        let view = SchedView {
+            idle: &[0],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        // Object 2 (50 B) lives on 0 and 1; object 1 (100 B) only on 0.
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1), ObjectId(2)]);
+        assert_eq!(view.best_holder(&task, view.all), Some((0, 150)));
+        // Restricted to a membership slice that excludes executor 0.
+        assert_eq!(view.best_holder(&task, &[1]), Some((1, 50)));
+        // A tie (object 2 alone) goes to the lower id.
+        let tie = Task::with_inputs(TaskId(2), vec![ObjectId(2)]);
+        assert_eq!(view.best_holder(&tie, view.all), Some((0, 50)));
+        // Nothing held by the members: no candidate.
+        let task3 = Task::with_inputs(TaskId(3), vec![ObjectId(3)]);
+        assert_eq!(view.best_holder(&task3, view.all), None);
     }
 
     #[test]

@@ -2,22 +2,22 @@
 //! data, **even if busy** — in that case dispatch is delayed until it
 //! becomes available. Maximizes cache reuse at the risk of load imbalance
 //! (§3.2.2).
+//!
+//! Like `max-compute-util`, scoring runs through
+//! [`SchedView::best_holder`] — here over *all* registered executors
+//! (busy included) — at O(inputs × replicas) per decision instead of
+//! scanning every registered executor. An executor holding nothing can
+//! never be "best by cached bytes", so only holders need scoring; the
+//! no-holder case falls back to the first idle executor exactly as the
+//! exhaustive scan did, and the membership filter ensures the policy
+//! never waits on a deregistered ghost.
 
 use super::decision::{Decision, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the max-cache-hit policy.
 pub fn decide(task: &Task, view: &SchedView) -> Decision {
-    // Best over ALL executors (busy included), by cached bytes; ties go to
-    // the lower id for determinism.
-    let best = view
-        .all
-        .iter()
-        .map(|&e| (view.cached_bytes(task, e), e))
-        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)))
-        .map(|(bytes, e)| (e, bytes));
-
-    match best {
+    match view.best_holder(task, view.all) {
         Some((e, bytes)) if bytes > 0 => {
             if view.idle.binary_search(&e).is_ok() {
                 Decision::Dispatch {
@@ -104,6 +104,24 @@ mod tests {
         let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
         match decide(&task, &view) {
             Decision::Dispatch { executor, .. } => assert_eq!(executor, 4),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn never_waits_on_a_deregistered_holder() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 9); // holder 9 is no longer registered
+        let cat = catalog();
+        let view = SchedView {
+            idle: &[0],
+            all: &[0], // 9 absent
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, .. } => assert_eq!(executor, 0),
             other => panic!("unexpected: {other:?}"),
         }
     }

@@ -2,25 +2,31 @@
 //! the idle candidates pick the one holding the most needed data. Keeps
 //! CPUs busy (no delays) while still exploiting locality (§3.2.2). This
 //! is the policy the paper uses for all §5 data-diffusion experiments.
+//!
+//! Scoring runs through [`SchedView::best_holder`] over the *idle* set:
+//! O(inputs × replicas) per decision — independent of cluster size —
+//! instead of O(executors × inputs). Executors holding none of the
+//! inputs all score zero anyway; the first idle executor stands in for
+//! them, which is exactly the executor the exhaustive scan would have
+//! picked (max over zero scores, ties to the lowest id).
 
 use super::decision::{Decision, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the max-compute-util policy.
 pub fn decide(task: &Task, view: &SchedView) -> Decision {
-    let best = view
-        .idle
-        .iter()
-        .map(|&e| (view.cached_bytes(task, e), e))
-        // Max bytes; ties to the lower executor id for determinism.
-        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
-
-    match best {
-        Some((_, executor)) => Decision::Dispatch {
-            executor,
-            hints: view.hints_for(task),
-        },
-        None => Decision::NoExecutor,
+    if view.idle.is_empty() {
+        return Decision::NoExecutor;
+    }
+    let executor = match view.best_holder(task, view.idle) {
+        // Zero-byte candidates tie with every idle executor; the scan's
+        // lowest-id tie-break is the first idle one.
+        Some((e, bytes)) if bytes > 0 => e,
+        _ => view.idle[0],
+    };
+    Decision::Dispatch {
+        executor,
+        hints: view.hints_for(task),
     }
 }
 
@@ -103,6 +109,26 @@ mod tests {
         let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
         match decide(&task, &view) {
             Decision::Dispatch { executor, .. } => assert_eq!(executor, 3),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn equal_bytes_tie_breaks_to_lower_id() {
+        let mut idx = CentralIndex::new();
+        let mut cat = Catalog::new();
+        cat.insert(ObjectId(1), 10);
+        idx.insert(ObjectId(1), 4);
+        idx.insert(ObjectId(1), 7); // both idle, same bytes
+        let view = SchedView {
+            idle: &[4, 7],
+            all: &[4, 7],
+            index: &idx,
+            catalog: &cat,
+        };
+        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
+        match decide(&task, &view) {
+            Decision::Dispatch { executor, .. } => assert_eq!(executor, 4),
             other => panic!("unexpected: {other:?}"),
         }
     }

@@ -93,6 +93,16 @@ impl WaitQueue {
     pub fn peak(&self) -> usize {
         self.peak
     }
+
+    /// High-water mark since construction or the last call, resetting it
+    /// to the current length — the per-interval demand signal the
+    /// provisioner evaluates (a burst that arrived and drained between
+    /// two evaluations still registers).
+    pub fn take_peak(&mut self) -> usize {
+        let p = self.peak;
+        self.peak = self.len();
+        p
+    }
 }
 
 #[cfg(test)]
@@ -157,5 +167,18 @@ mod tests {
         }
         assert_eq!(q.peak(), 5);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_peak_resets_to_current_len() {
+        let mut q = WaitQueue::new();
+        for i in 0..4 {
+            q.push(task(i));
+        }
+        q.pop();
+        assert_eq!(q.take_peak(), 4);
+        assert_eq!(q.peak(), 3, "reset to current length, not zero");
+        q.push(task(9));
+        assert_eq!(q.take_peak(), 4);
     }
 }

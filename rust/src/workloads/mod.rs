@@ -4,10 +4,13 @@
 //!   {read, read+write} × node counts × file sizes.
 //! * [`astro`] — the §5 stacking workloads derived from SDSS DR5
 //!   (Table 2): locality 1 → 30 over 111,700 → 790 files.
+//! * [`bursty`] — time-varying (sine / square-burst) demand for the
+//!   dynamic-provisioning experiments (`fig_drp`).
 //! * [`sky`] — deterministic synthetic image/cutout data for live runs.
 //! * [`trace`] — record/replay of task traces (TSV).
 
 pub mod astro;
+pub mod bursty;
 pub mod microbench;
 pub mod sky;
 pub mod trace;

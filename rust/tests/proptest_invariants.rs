@@ -337,6 +337,87 @@ fn prop_backends_agree_on_placement() {
     }
 }
 
+/// Churn invariant: after an arbitrary interleaving of executor
+/// join/leave and cache insert/evict, mirrored into a `CentralIndex` and
+/// a `ChordIndex`, (a) both backends agree on `locations()` for every
+/// object, and (b) no location references a deregistered executor — the
+/// elastic-pool contract the provisioner relies on (hints must never
+/// target a node whose lease was released).
+#[test]
+fn prop_churn_backends_agree_and_no_dangling_locations() {
+    use std::collections::BTreeSet;
+    const N_OBJ: u64 = 24;
+    let zero_cost = DhtModel {
+        hop_latency_s: 0.0,
+        proc_s: 0.0,
+    };
+    for case in 0..CASES * 2 {
+        let seed = 0xC4C5 + case;
+        let mut rng = Rng::new(seed);
+        let mut central = CentralIndex::new();
+        let mut chord = ChordIndex::new(zero_cost, seed);
+        let mut live: BTreeSet<usize> = BTreeSet::new();
+        let mut next_exec = 0usize;
+        for step in 0..400 {
+            match rng.below(8) {
+                // Join: a newly provisioned executor enters both overlays.
+                0..=1 => {
+                    let e = next_exec;
+                    next_exec += 1;
+                    live.insert(e);
+                    DataIndex::executor_joined(&mut central, e);
+                    DataIndex::executor_joined(&mut chord, e);
+                }
+                // Leave: a released executor is dropped; both backends
+                // must orphan exactly the same objects.
+                2 => {
+                    if let Some(&e) = live.iter().nth(rng.index(live.len().max(1))) {
+                        live.remove(&e);
+                        let a: BTreeSet<ObjectId> =
+                            central.drop_executor(e).into_iter().collect();
+                        let b: BTreeSet<ObjectId> =
+                            DataIndex::drop_executor(&mut chord, e).into_iter().collect();
+                        assert_eq!(a, b, "seed={seed} step={step}: orphan sets differ");
+                    }
+                }
+                // Insert: a live executor caches an object.
+                3..=5 => {
+                    if let Some(&e) = live.iter().nth(rng.index(live.len().max(1))) {
+                        let obj = ObjectId(rng.below(N_OBJ));
+                        DataIndex::insert(&mut central, obj, e);
+                        DataIndex::insert(&mut chord, obj, e);
+                    }
+                }
+                // Evict: any executor (live or not — evicting from a
+                // departed executor is a no-op on a purged index).
+                _ => {
+                    let e = rng.index(next_exec.max(1));
+                    let obj = ObjectId(rng.below(N_OBJ));
+                    DataIndex::remove(&mut central, obj, e);
+                    DataIndex::remove(&mut chord, obj, e);
+                }
+            }
+            for i in 0..N_OBJ {
+                let obj = ObjectId(i);
+                let a = central.locations(obj);
+                let b = DataIndex::locations(&chord, obj);
+                assert_eq!(a, b, "seed={seed} step={step}: backends disagree on {obj}");
+                for &e in a {
+                    assert!(
+                        live.contains(&e),
+                        "seed={seed} step={step}: {obj} references deregistered executor {e}"
+                    );
+                }
+            }
+            assert_eq!(
+                central.len(),
+                DataIndex::len(&chord),
+                "seed={seed} step={step}: len drift"
+            );
+        }
+    }
+}
+
 /// Scheduler-choice invariant: max-compute-util never picks an idle
 /// executor with fewer cached bytes than the best idle candidate.
 #[test]
