@@ -131,53 +131,11 @@ fn main() {
     println!("wrote {}", path.display());
 
     // Measured companion: the same workload scheduled end-to-end under
-    // each index backend through the real dispatch path.
+    // each index backend through the real dispatch path (shared emitter
+    // with `falkon sweep --figure 2`).
     println!("\nmeasured central-vs-chord on real scheduled runs (max-compute-util):");
     let rows = figures::fig2_measured(&[4, 16, 64], 8);
-    let mut mcsv = CsvWriter::new(
-        results_dir().join("fig2_index_measured.csv"),
-        &[
-            "backend",
-            "nodes",
-            "tasks",
-            "makespan_s",
-            "index_lookups",
-            "index_hops",
-            "mean_hops",
-            "index_cost_s",
-            "cost_fraction",
-        ],
-    );
-    println!(
-        "{:<9} {:>6} {:>7} {:>12} {:>9} {:>7} {:>8} {:>13} {:>9}",
-        "backend", "nodes", "tasks", "makespan", "lookups", "hops", "hops/op", "index cost", "cost%"
-    );
-    for r in &rows {
-        println!(
-            "{:<9} {:>6} {:>7} {:>11.3}s {:>9} {:>7} {:>8.2} {:>12.6}s {:>8.4}%",
-            r.backend,
-            r.nodes,
-            r.tasks,
-            r.makespan_s,
-            r.index_lookups,
-            r.index_hops,
-            r.mean_hops,
-            r.index_cost_s,
-            r.cost_fraction * 100.0
-        );
-        mcsv.rowf(&[
-            &r.backend,
-            &r.nodes,
-            &r.tasks,
-            &r.makespan_s,
-            &r.index_lookups,
-            &r.index_hops,
-            &r.mean_hops,
-            &r.index_cost_s,
-            &r.cost_fraction,
-        ]);
-    }
-    let mpath = mcsv.finish().expect("write csv");
+    let mpath = figures::emit_fig2_measured(&rows, &results_dir()).expect("write csv");
     println!(
         "\nmeasured note: at these scales the chord overlay charges O(log N) hops per\n\
          lookup while the central index stays sub-microsecond — the distributed\n\

@@ -1,0 +1,43 @@
+//! Data-diffusion figure: demand-driven replication on vs off.
+//!
+//! The same bursty hot-set workload (two bursts separated by a lull that
+//! churns the elastic pool) is scheduled end-to-end at several cache-node
+//! counts, once with the passive index only and once with the
+//! `ReplicationManager` staging copies in response to demand. Reported
+//! per (mode, nodes): aggregate read throughput, local/any hit ratio,
+//! replicas staged, replica hits — the paper's headline claim (aggregate
+//! I/O bandwidth scaling with cache nodes) measured on real runs.
+//! Table + CSV come from the same `figures::emit_diffusion` the
+//! `falkon sweep --figure diffusion` command uses.
+
+use datadiffusion::analysis::figures;
+use datadiffusion::util::bench::bench_header;
+use datadiffusion::util::csv::results_dir;
+
+fn main() {
+    bench_header(
+        "Data diffusion: demand-driven replication on vs off",
+        "replication lifts hit ratio and scales aggregate read bandwidth",
+    );
+    let max_nodes = std::env::var("DD_DIFF_NODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16usize);
+    let tpn = std::env::var("DD_DIFF_TPN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48usize);
+    let nodes_list: Vec<usize> = [2usize, 4, 8, 16, 32, 64]
+        .into_iter()
+        .filter(|&n| n <= max_nodes.max(2))
+        .collect();
+    let rows = figures::fig_diffusion(&nodes_list, tpn);
+    let path = figures::emit_diffusion(&rows, &results_dir()).expect("write csv");
+    println!(
+        "\nfinding: without replication the post-churn pool hammers the surviving\n\
+         holders (peer fetches on the task critical path); with it, joiners are\n\
+         pre-staged and hot replica sets widen, so locality recovers and aggregate\n\
+         read bandwidth scales with the cache-node count.\nwrote {}",
+        path.display()
+    );
+}

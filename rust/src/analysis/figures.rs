@@ -120,6 +120,60 @@ pub fn fig2_measured(nodes_list: &[usize], tasks_per_node: usize) -> Vec<IndexBa
     rows
 }
 
+/// Print the measured Figure 2 companion table and write its CSV under
+/// `dir`. Shared by the `fig2_index` bench and `falkon sweep --figure 2`
+/// so the schema cannot drift. Returns the CSV path.
+pub fn emit_fig2_measured(
+    rows: &[IndexBackendPoint],
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    use crate::util::csv::CsvWriter;
+    let mut csv = CsvWriter::new(
+        dir.join("fig2_index_measured.csv"),
+        &[
+            "backend",
+            "nodes",
+            "tasks",
+            "makespan_s",
+            "index_lookups",
+            "index_hops",
+            "mean_hops",
+            "index_cost_s",
+            "cost_fraction",
+        ],
+    );
+    println!(
+        "{:<9} {:>6} {:>7} {:>12} {:>9} {:>7} {:>8} {:>13} {:>9}",
+        "backend", "nodes", "tasks", "makespan", "lookups", "hops", "hops/op", "index cost", "cost%"
+    );
+    for r in rows {
+        println!(
+            "{:<9} {:>6} {:>7} {:>11.3}s {:>9} {:>7} {:>8.2} {:>12.6}s {:>8.4}%",
+            r.backend,
+            r.nodes,
+            r.tasks,
+            r.makespan_s,
+            r.index_lookups,
+            r.index_hops,
+            r.mean_hops,
+            r.index_cost_s,
+            r.cost_fraction * 100.0
+        );
+        csv.rowf(&[
+            &r.backend,
+            &r.nodes,
+            &r.tasks,
+            &r.makespan_s,
+            &r.index_lookups,
+            &r.index_hops,
+            &r.mean_hops,
+            &r.index_cost_s,
+            &r.cost_fraction,
+        ]);
+    }
+    csv.finish()
+}
+
 // -------------------------------------------------------------- DRP figure
 
 /// One measured point of the demand-response (DRP) figure: a bursty
@@ -263,7 +317,7 @@ pub fn emit_drp(
     );
     let mut tcsv = CsvWriter::new(
         dir.join("fig_drp_timeline.csv"),
-        &["policy", "t_s", "allocated", "pending", "queued", "window_hit_ratio"],
+        &["policy", "t_s", "allocated", "pending", "queued", "window_hit_ratio", "replicas"],
     );
     for r in rows {
         println!(
@@ -298,11 +352,207 @@ pub fn emit_drp(
         let mut prev: Option<crate::coordinator::metrics::PoolSample> = None;
         for s in &r.outcome.metrics.pool_timeline {
             let w = prev.map(|p| s.window_hit_ratio(&p)).unwrap_or(0.0);
-            tcsv.rowf(&[&r.policy, &s.t, &s.allocated, &s.pending, &s.queued, &w]);
+            tcsv.rowf(&[&r.policy, &s.t, &s.allocated, &s.pending, &s.queued, &w, &s.replicas]);
             prev = Some(*s);
         }
     }
     Ok((csv.finish()?, tcsv.finish()?))
+}
+
+// -------------------------------------------------------- Diffusion figure
+
+/// One measured point of the data-diffusion figure: the same bursty
+/// hot-set workload scheduled end-to-end at one cache-node count, with
+/// demand-driven replication on or off.
+#[derive(Debug, Clone)]
+pub struct DiffusionPoint {
+    /// "replication-on" / "replication-off".
+    pub mode: &'static str,
+    /// Cache-node ceiling (elastic pool max).
+    pub nodes: usize,
+    /// Tasks completed.
+    pub tasks: u64,
+    /// Simulated makespan, seconds.
+    pub makespan_s: f64,
+    /// Aggregate read throughput over the span, bits/sec (local + c2c +
+    /// GPFS — the paper's linear-I/O-scaling metric).
+    pub read_bps: f64,
+    /// Fraction of input resolutions served by the executor's own cache.
+    pub local_hit_ratio: f64,
+    /// Fraction served by any cached copy (local or peer).
+    pub any_hit_ratio: f64,
+    /// Replicas the manager staged into caches.
+    pub replicas_created: u64,
+    /// Bytes shipped by staging transfers.
+    pub replica_bytes_staged: u64,
+    /// Local hits served by staged replicas.
+    pub replica_hits: u64,
+    /// Peer-cache resolutions (paid on the task critical path).
+    pub peer_hits: u64,
+    /// Persistent-storage resolutions.
+    pub gpfs_misses: u64,
+    /// Executors that joined mid-run (the churn replication heals).
+    pub executors_joined: u64,
+    /// The full outcome (pool timeline included), for deeper analysis.
+    pub outcome: SimOutcome,
+}
+
+/// The data-diffusion figure: aggregate read throughput and hit ratio
+/// vs. cache-node count, with demand-driven replication on and off.
+///
+/// The workload is the DRP shape — two square bursts over a small hot
+/// object set, separated by a lull longer than the idle-release timeout,
+/// on an elastic pool — because that is the regime where the paper's
+/// namesake mechanism must earn its keep: burst one warms the pool,
+/// the lull shrinks it (released leases lose their caches), and burst
+/// two re-grows it from cold nodes. Without replication every re-joined
+/// executor pays one peer/GPFS miss per hot object on the task critical
+/// path; with it, joiners are pre-staged with the hottest objects and
+/// sustained demand keeps replica sets wide, so tasks find data locally
+/// and aggregate read bandwidth scales with the node count instead of
+/// hammering the surviving holders.
+pub fn fig_diffusion(nodes_list: &[usize], tasks_per_node: usize) -> Vec<DiffusionPoint> {
+    let mut rows = Vec::new();
+    for &nodes in nodes_list {
+        let nodes = nodes.max(2);
+        let tasks = (nodes * tasks_per_node.max(4)) as u64;
+        let spec = BurstSpec {
+            shape: DemandShape::Square,
+            tasks,
+            // Hot set smaller than the pool: contention on holders is
+            // what replication relieves.
+            objects: (nodes as u64 / 2).max(4),
+            object_bytes: crate::util::units::MB,
+            period_s: 200.0,
+            base_rate: 0.0,
+            // Two 60 s bursts carry the whole workload.
+            peak_rate: tasks as f64 / 120.0,
+            duty: 0.3,
+            task_cpu_s: 2.0,
+        };
+        for on in [false, true] {
+            let mut cfg = Config::with_nodes(nodes);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.provisioner.enabled = true;
+            cfg.provisioner.policy = AllocationPolicy::Adaptive;
+            cfg.provisioner.min_executors = 1;
+            cfg.provisioner.max_executors = nodes;
+            cfg.provisioner.allocation_latency_s = 30.0;
+            cfg.provisioner.idle_release_s = 20.0;
+            cfg.provisioner.poll_interval_s = 2.0;
+            cfg.provisioner.queue_per_executor = 2;
+            if on {
+                cfg.replication.enabled = true;
+                cfg.replication.max_replicas = nodes;
+                // Per-object lookup rate during a burst is peak_rate /
+                // objects ≈ 0.4–1.6 per 2 s evaluation at these scales;
+                // the threshold sits below the burst floor so demand
+                // replication engages at every node count, and the EWMA
+                // decays through it in the lull (back-off).
+                cfg.replication.demand_threshold = 0.3;
+                cfg.replication.ewma_alpha = 0.5;
+                cfg.replication.evaluate_interval_s = 2.0;
+                cfg.replication.prestage_top_k = 8;
+                cfg.replication.max_inflight = nodes.max(8);
+            }
+            let w = bursty::generate(&spec, 20080612);
+            let out = SimDriver::new(cfg, w.spec, w.catalog).run();
+            let m = &out.metrics;
+            rows.push(DiffusionPoint {
+                mode: if on { "replication-on" } else { "replication-off" },
+                nodes,
+                tasks: m.tasks_done,
+                makespan_s: out.makespan_s,
+                read_bps: m.read_throughput_bps(),
+                local_hit_ratio: m.local_hit_ratio(),
+                any_hit_ratio: m.any_hit_ratio(),
+                replicas_created: m.replicas_created,
+                replica_bytes_staged: m.replica_bytes_staged,
+                replica_hits: m.replica_hits,
+                peer_hits: m.peer_hits,
+                gpfs_misses: m.gpfs_misses,
+                executors_joined: m.executors_joined,
+                outcome: out,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the diffusion comparison table and write its CSV under `dir`.
+/// Shared by the `fig_diffusion` bench and `falkon sweep --figure
+/// diffusion`. Returns the CSV path.
+pub fn emit_diffusion(
+    rows: &[DiffusionPoint],
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    use crate::util::csv::CsvWriter;
+    println!(
+        "{:<16} {:>6} {:>6} {:>11} {:>11} {:>7} {:>7} {:>9} {:>13} {:>9} {:>7} {:>7}",
+        "mode",
+        "nodes",
+        "tasks",
+        "makespan",
+        "read-bw",
+        "local%",
+        "any%",
+        "replicas",
+        "staged-bytes",
+        "rep-hits",
+        "peer",
+        "gpfs"
+    );
+    let mut csv = CsvWriter::new(
+        dir.join("fig_diffusion.csv"),
+        &[
+            "mode",
+            "nodes",
+            "tasks",
+            "makespan_s",
+            "read_bps",
+            "local_hit_ratio",
+            "any_hit_ratio",
+            "replicas_created",
+            "replica_bytes_staged",
+            "replica_hits",
+            "peer_hits",
+            "gpfs_misses",
+            "executors_joined",
+        ],
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:>6} {:>6} {:>10.1}s {:>11} {:>6.1}% {:>6.1}% {:>9} {:>13} {:>9} {:>7} {:>7}",
+            r.mode,
+            r.nodes,
+            r.tasks,
+            r.makespan_s,
+            crate::util::units::fmt_bps(r.read_bps),
+            r.local_hit_ratio * 100.0,
+            r.any_hit_ratio * 100.0,
+            r.replicas_created,
+            r.replica_bytes_staged,
+            r.replica_hits,
+            r.peer_hits,
+            r.gpfs_misses
+        );
+        csv.rowf(&[
+            &r.mode,
+            &r.nodes,
+            &r.tasks,
+            &r.makespan_s,
+            &r.read_bps,
+            &r.local_hit_ratio,
+            &r.any_hit_ratio,
+            &r.replicas_created,
+            &r.replica_bytes_staged,
+            &r.replica_hits,
+            &r.peer_hits,
+            &r.gpfs_misses,
+            &r.executors_joined,
+        ]);
+    }
+    csv.finish()
 }
 
 // ---------------------------------------------------------------- Fig 3/4
@@ -609,6 +859,48 @@ mod tests {
             "one-at-a-time ({}) should need at least as many requests as all-at-once ({})",
             one.alloc_requests,
             all.alloc_requests
+        );
+    }
+
+    #[test]
+    fn fig_diffusion_replication_wins_and_scales() {
+        let rows = fig_diffusion(&[4, 8], 24);
+        assert_eq!(rows.len(), 4);
+        let get = |nodes: usize, mode: &str| {
+            rows.iter()
+                .find(|r| r.nodes == nodes && r.mode == mode)
+                .unwrap()
+        };
+        for &n in &[4usize, 8] {
+            let on = get(n, "replication-on");
+            let off = get(n, "replication-off");
+            assert_eq!(on.tasks, (n * 24) as u64, "n={n}: run must drain");
+            assert_eq!(on.tasks, off.tasks);
+            assert_eq!(off.replicas_created, 0);
+            assert!(on.replicas_created > 0, "n={n}: hot set must replicate");
+            assert!(on.replica_hits > 0, "n={n}: staged copies must serve hits");
+            assert!(
+                on.local_hit_ratio > off.local_hit_ratio,
+                "n={n}: replication must lift the local hit ratio: {} vs {}",
+                on.local_hit_ratio,
+                off.local_hit_ratio
+            );
+            assert!(
+                on.read_bps > off.read_bps,
+                "n={n}: replication must lift aggregate read bandwidth: {} vs {}",
+                on.read_bps,
+                off.read_bps
+            );
+        }
+        // The paper's headline: aggregate read throughput scales with the
+        // cache-node count when data diffuses.
+        let on4 = get(4, "replication-on");
+        let on8 = get(8, "replication-on");
+        assert!(
+            on8.read_bps > 1.4 * on4.read_bps,
+            "throughput must scale with cache nodes: {} @4 vs {} @8",
+            on4.read_bps,
+            on8.read_bps
         );
     }
 

@@ -239,6 +239,49 @@ impl Default for ProvisionerConfig {
     }
 }
 
+/// Demand-driven replication configuration (the paper's "data diffusion"
+/// proper — see [`crate::replication`]).
+#[derive(Debug, Clone)]
+pub struct ReplicationConfig {
+    /// Whether the coordinator runs the [`crate::replication::ReplicationManager`].
+    /// Off (the default) reproduces the passive-index behavior: copies
+    /// only appear where tasks happen to fetch.
+    pub enabled: bool,
+    /// Where new replicas land.
+    pub policy: crate::replication::PlacementPolicy,
+    /// Per-object ceiling on copies (holders + in-flight stages).
+    pub max_replicas: usize,
+    /// Smoothed per-evaluation demand above which an object earns a new
+    /// replica.
+    pub demand_threshold: f64,
+    /// EWMA smoothing factor per evaluation round (0..1; higher reacts
+    /// faster, lower remembers longer).
+    pub ewma_alpha: f64,
+    /// How often the drivers evaluate the manager, seconds.
+    pub evaluate_interval_s: f64,
+    /// Hottest objects pre-staged onto a newly joined executor
+    /// (re-replication on join; closes the post-churn hit-ratio dip).
+    pub prestage_top_k: usize,
+    /// Ceiling on concurrent staging transfers (backpressure: replication
+    /// must not saturate the peer-transfer paths tasks also use).
+    pub max_inflight: usize,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig {
+            enabled: false,
+            policy: crate::replication::PlacementPolicy::LeastLoaded,
+            max_replicas: 4,
+            demand_threshold: 2.0,
+            ewma_alpha: 0.5,
+            evaluate_interval_s: 5.0,
+            prestage_top_k: 4,
+            max_inflight: 8,
+        }
+    }
+}
+
 /// Application (image stacking) cost calibration, from §5.2 / Fig 7.
 ///
 /// Compute costs are per stacking *task*; in live mode the real PJRT
@@ -295,6 +338,8 @@ pub struct Config {
     pub index: IndexConfig,
     /// Dynamic resource provisioning settings.
     pub provisioner: ProvisionerConfig,
+    /// Demand-driven replication settings.
+    pub replication: ReplicationConfig,
     /// Stacking application constants.
     pub app: AppConfig,
     /// Master RNG seed for workload generation and tie-breaking.
@@ -374,6 +419,22 @@ impl Config {
         p.queue_per_executor =
             doc.num_or("provisioner.queue_per_executor", p.queue_per_executor as f64) as usize;
         p.poll_interval_s = doc.num_or("provisioner.poll_interval_s", p.poll_interval_s);
+
+        let r = &mut self.replication;
+        r.enabled = doc.bool_or("replication.enabled", r.enabled);
+        if let Some(parse::Value::Str(s)) = doc.get("replication.policy") {
+            r.policy = crate::replication::PlacementPolicy::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("bad replication.policy {s:?}"))
+            })?;
+        }
+        r.max_replicas = doc.num_or("replication.max_replicas", r.max_replicas as f64) as usize;
+        r.demand_threshold = doc.num_or("replication.demand_threshold", r.demand_threshold);
+        r.ewma_alpha = doc.num_or("replication.ewma_alpha", r.ewma_alpha);
+        r.evaluate_interval_s =
+            doc.num_or("replication.evaluate_interval_s", r.evaluate_interval_s);
+        r.prestage_top_k =
+            doc.num_or("replication.prestage_top_k", r.prestage_top_k as f64) as usize;
+        r.max_inflight = doc.num_or("replication.max_inflight", r.max_inflight as f64) as usize;
 
         self.seed = doc.num_or("seed", self.seed as f64) as u64;
         Ok(())
@@ -464,6 +525,40 @@ queue_per_executor = 8
         assert_eq!(c.provisioner.queue_per_executor, 8);
 
         let bad = parse::Doc::parse("[provisioner]\npolicy = \"psychic\"").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn replication_overrides_apply() {
+        let doc = parse::Doc::parse(
+            r#"
+[replication]
+enabled = true
+policy = "co-locate"
+max_replicas = 6
+demand_threshold = 1.5
+ewma_alpha = 0.25
+evaluate_interval_s = 2.0
+prestage_top_k = 8
+max_inflight = 16
+"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert!(c.replication.enabled);
+        assert_eq!(
+            c.replication.policy,
+            crate::replication::PlacementPolicy::CoLocate
+        );
+        assert_eq!(c.replication.max_replicas, 6);
+        assert!((c.replication.demand_threshold - 1.5).abs() < 1e-12);
+        assert!((c.replication.ewma_alpha - 0.25).abs() < 1e-12);
+        assert!((c.replication.evaluate_interval_s - 2.0).abs() < 1e-12);
+        assert_eq!(c.replication.prestage_top_k, 8);
+        assert_eq!(c.replication.max_inflight, 16);
+
+        let bad = parse::Doc::parse("[replication]\npolicy = \"closest\"").unwrap();
         assert!(Config::default().apply_doc(&bad).is_err());
     }
 

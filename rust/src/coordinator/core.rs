@@ -16,14 +16,15 @@
 use crate::util::fxhash::FxHashMap;
 
 use crate::cache::store::CacheEvent;
-use crate::config::SchedulerConfig;
+use crate::config::{ReplicationConfig, SchedulerConfig};
 use crate::coordinator::task::{Task, TaskId};
 use crate::index::central::{CentralIndex, ExecutorId};
 use crate::index::{DataIndex, LookupCost};
+use crate::replication::{ReplicaDirective, ReplicationManager};
 use crate::scheduler::decision::{Decision, LocationHints, SchedView};
 use crate::scheduler::queue::WaitQueue;
 use crate::scheduler::DispatchPolicy;
-use crate::storage::object::Catalog;
+use crate::storage::object::{Catalog, ObjectId};
 
 /// A dispatch the driver must carry out.
 #[derive(Debug, Clone)]
@@ -59,6 +60,8 @@ pub struct FalkonCore {
     slots: FxHashMap<ExecutorId, Slots>,
     idle: Vec<ExecutorId>, // sorted: executors with a free slot
     all: Vec<ExecutorId>,  // sorted
+    /// Demand-driven replication manager (None: passive index only).
+    repl: Option<ReplicationManager>,
     submitted: u64,
     dispatched: u64,
     completed: u64,
@@ -83,6 +86,7 @@ impl FalkonCore {
             slots: FxHashMap::default(),
             idle: Vec::new(),
             all: Vec::new(),
+            repl: None,
             submitted: 0,
             dispatched: 0,
             completed: 0,
@@ -102,6 +106,55 @@ impl FalkonCore {
     /// The cache-location index (read access for metrics/benches).
     pub fn index(&self) -> &dyn DataIndex {
         self.index.as_ref()
+    }
+
+    /// Turn on demand-driven replication (no-op if `cfg.enabled` is
+    /// false). Executors already registered are treated as warm members,
+    /// not joiners — only later joins get pre-staged.
+    pub fn enable_replication(&mut self, cfg: &ReplicationConfig) {
+        if cfg.enabled {
+            self.repl = Some(ReplicationManager::new(cfg.clone()));
+        }
+    }
+
+    /// Whether a replication manager is active.
+    pub fn replication_enabled(&self) -> bool {
+        self.repl.is_some()
+    }
+
+    /// Replica location entries: cached copies beyond each object's
+    /// first (0 when nothing is replicated).
+    pub fn replica_location_entries(&self) -> usize {
+        self.index.entries().saturating_sub(self.index.len())
+    }
+
+    /// One replication evaluation round: returns the staging directives
+    /// the driver must carry out (copy object from src's cache to dst's).
+    /// Empty when replication is disabled.
+    pub fn poll_replication(&mut self) -> Vec<ReplicaDirective> {
+        match self.repl.as_mut() {
+            Some(r) => r.evaluate(self.index.as_ref(), &self.all),
+            None => Vec::new(),
+        }
+    }
+
+    /// Driver notification: executor `dst` fetched `obj` from a peer
+    /// cache (a demand signal for the replication manager).
+    pub fn note_peer_fetch(&mut self, obj: ObjectId, dst: ExecutorId) {
+        if let Some(r) = self.repl.as_mut() {
+            r.note_peer_fetch(obj, dst);
+        }
+    }
+
+    /// Driver notification: the staging transfer behind a directive
+    /// finished (or was abandoned — dst released, source evicted, copy
+    /// already present). Frees the in-flight slot; the index itself is
+    /// updated through [`FalkonCore::apply_cache_events`] like any other
+    /// cache change, preserving the index/cache coherence contract.
+    pub fn replication_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
+        if let Some(r) = self.repl.as_mut() {
+            r.on_staged(obj, dst);
+        }
     }
 
     /// Register a newly provisioned executor with one task slot.
@@ -125,6 +178,9 @@ impl FalkonCore {
                 self.idle.insert(pos, e);
             }
             self.index.executor_joined(e);
+            if let Some(r) = self.repl.as_mut() {
+                r.executor_joined(e);
+            }
         }
     }
 
@@ -140,6 +196,9 @@ impl FalkonCore {
             self.idle.remove(pos);
         }
         self.queue.release(e); // parked tasks go back to the queue front
+        if let Some(r) = self.repl.as_mut() {
+            r.executor_dropped(e);
+        }
         self.index.drop_executor(e)
     }
 
@@ -217,6 +276,7 @@ impl FalkonCore {
             match self.policy.decide(&task, &view) {
                 Decision::Dispatch { executor, hints } => {
                     let cost = self.hint_lookup_cost(&task);
+                    self.note_dispatch_demand(&task, executor);
                     self.mark_busy(executor);
                     self.dispatched += 1;
                     orders.push(DispatchOrder {
@@ -255,7 +315,9 @@ impl FalkonCore {
                 break;
             }
             // Best (score, position, executor), preferring higher score,
-            // then earlier task, then lower executor id. Scores come from
+            // then earlier task; executors tied on score for one task
+            // (replicas of its inputs) rotate by the task id, the same
+            // spread rule as `SchedView::best_holder`. Scores come from
             // index.locations() so the scan cost is O(window × replicas),
             // independent of cluster size.
             let mut best: Option<(u64, usize, ExecutorId)> = None;
@@ -277,14 +339,10 @@ impl FalkonCore {
                             }
                         }
                     }
-                    for &(e, s) in &per_exec {
-                        let better = match best {
-                            None => true,
-                            Some((bs, bp, be)) => {
-                                s > bs || (s == bs && (pos < bp || (pos == bp && e < be)))
-                            }
-                        };
-                        if better {
+                    if let Some((e, s)) = SchedView::rotate_tied(&per_exec, task) {
+                        // Earlier positions win score ties automatically:
+                        // we only replace on a strictly better score.
+                        if best.map(|(bs, _, _)| s > bs).unwrap_or(true) {
                             best = Some((s, pos, e));
                         }
                     }
@@ -317,6 +375,7 @@ impl FalkonCore {
             };
             let hints = view.hints_for(&task);
             let cost = self.hint_lookup_cost(&task);
+            self.note_dispatch_demand(&task, executor);
             self.mark_busy(executor);
             self.dispatched += 1;
             orders.push(DispatchOrder {
@@ -343,6 +402,24 @@ impl FalkonCore {
             cost.accumulate(self.index.lookup_cost(obj));
         }
         cost
+    }
+
+    /// Feed the replication manager the demand behind one dispatch: every
+    /// input's location lookup, plus unmet demand when the chosen
+    /// executor does not hold an input (it will read remotely).
+    fn note_dispatch_demand(&mut self, task: &Task, executor: ExecutorId) {
+        if !self.policy.is_data_aware() {
+            return;
+        }
+        let Some(repl) = self.repl.as_mut() else {
+            return;
+        };
+        for &obj in &task.inputs {
+            repl.note_lookup(obj);
+            if !self.index.holds(executor, obj) {
+                repl.note_remote_placement(obj, executor);
+            }
+        }
     }
 
     /// Executor reports a completed task along with the cache changes it
@@ -545,6 +622,47 @@ mod tests {
         }
         assert_eq!(total_lookups, 16, "one lookup per single-input task");
         assert!(any_hops, "32-node overlay should route at least once");
+    }
+
+    #[test]
+    fn replication_directives_flow_from_dispatch_demand() {
+        use crate::config::ReplicationConfig;
+
+        let mut c = core(DispatchPolicy::MaxComputeUtil);
+        for e in 0..4 {
+            c.register_executor(e);
+        }
+        // Enabled after the initial pool registered: the pool is warm
+        // membership, not a join wave to pre-stage.
+        c.enable_replication(&ReplicationConfig {
+            enabled: true,
+            max_replicas: 3,
+            demand_threshold: 1.0,
+            ewma_alpha: 1.0, // no smoothing: directives after one round
+            ..ReplicationConfig::default()
+        });
+        assert!(c.replication_enabled());
+        // Seed one copy of object 5 on executor 0 and drive demand at it.
+        c.submit(Task::with_inputs(TaskId(0), vec![ObjectId(5)]));
+        let o = c.try_dispatch();
+        c.on_task_complete(o[0].executor, TaskId(0), &[CacheEvent::Inserted(ObjectId(5))]);
+        for i in 1..5 {
+            c.submit(Task::with_inputs(TaskId(i), vec![ObjectId(5)]));
+            for o in c.try_dispatch() {
+                c.on_task_complete(o.executor, o.task.id, &[]);
+            }
+        }
+        let dirs = c.poll_replication();
+        assert_eq!(dirs.len(), 1, "hot object earns one copy per round");
+        let d = dirs[0];
+        assert_eq!(d.obj, ObjectId(5));
+        assert_eq!(d.src, 0, "only holder is the source");
+        assert_ne!(d.dst, 0);
+        // Driver stages it: cache event + completion notification.
+        c.apply_cache_events(d.dst, &[CacheEvent::Inserted(d.obj)]);
+        c.replication_staged(d.obj, d.dst);
+        assert_eq!(c.index().locations(ObjectId(5)).len(), 2);
+        assert_eq!(c.replica_location_entries(), 1);
     }
 
     #[test]

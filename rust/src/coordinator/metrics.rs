@@ -42,6 +42,11 @@ pub struct PoolSample {
     pub peer_hits: u64,
     /// Cumulative persistent-storage misses.
     pub gpfs_misses: u64,
+    /// Replica location entries at sample time: cached copies beyond each
+    /// object's first (index entries − distinct objects), so the timeline
+    /// shows replication growing during bursts and decaying with
+    /// eviction.
+    pub replicas: usize,
 }
 
 impl PoolSample {
@@ -81,7 +86,8 @@ pub struct Metrics {
     pub tasks_done: u64,
     /// Tasks dispatched (should equal tasks_done at quiesce).
     pub tasks_dispatched: u64,
-    /// Cache-location index lookups charged at dispatch time.
+    /// Cache-location index lookups charged at dispatch time, plus
+    /// executor-side re-resolutions of stale hints (§3.2.2).
     pub index_lookups: u64,
     /// Overlay routing hops behind those lookups (0 on the centralized
     /// backend).
@@ -113,6 +119,15 @@ pub struct Metrics {
     /// Executor-seconds spent waiting on the cluster's allocation
     /// latency (requested but not yet usable — the DRP overhead).
     pub alloc_wait_s: f64,
+    /// Replicas created by the replication manager (staged copies that
+    /// actually entered a cache; organic peer-fetch copies not counted).
+    pub replicas_created: u64,
+    /// Bytes shipped by replication staging transfers (also accounted in
+    /// `c2c_bytes` — staging rides the cache-to-cache path).
+    pub replica_bytes_staged: u64,
+    /// Local cache hits served by a manager-staged replica (demand the
+    /// replication subsystem converted from peer/GPFS traffic).
+    pub replica_hits: u64,
 }
 
 impl Metrics {
@@ -139,8 +154,16 @@ impl Metrics {
     }
 
     /// Record one elastic-pool sample (hit counters are captured from
-    /// the current totals) and keep the pool peak up to date.
-    pub fn sample_pool(&mut self, t: f64, allocated: usize, pending: usize, queued: usize) {
+    /// the current totals) and keep the pool peak up to date. `replicas`
+    /// is the index's current count of extra copies (entries − objects).
+    pub fn sample_pool(
+        &mut self,
+        t: f64,
+        allocated: usize,
+        pending: usize,
+        queued: usize,
+        replicas: usize,
+    ) {
         self.peak_executors = self.peak_executors.max(allocated);
         self.pool_timeline.push(PoolSample {
             t,
@@ -150,6 +173,7 @@ impl Metrics {
             cache_hits: self.cache_hits,
             peer_hits: self.peer_hits,
             gpfs_misses: self.gpfs_misses,
+            replicas,
         });
     }
 
@@ -269,18 +293,19 @@ mod tests {
     #[test]
     fn pool_samples_track_peak_and_windowed_hits() {
         let mut m = Metrics::new();
-        m.sample_pool(0.0, 2, 1, 10);
+        m.sample_pool(0.0, 2, 1, 10, 0);
         for _ in 0..3 {
             m.add_resolution(ByteSource::Gpfs);
         }
-        m.sample_pool(5.0, 6, 0, 4);
+        m.sample_pool(5.0, 6, 0, 4, 2);
         for _ in 0..4 {
             m.add_resolution(ByteSource::Local);
         }
         m.add_resolution(ByteSource::Gpfs);
-        m.sample_pool(10.0, 6, 0, 0);
+        m.sample_pool(10.0, 6, 0, 0, 5);
         assert_eq!(m.peak_executors, 6);
         assert_eq!(m.pool_timeline.len(), 3);
+        assert_eq!(m.pool_timeline[2].replicas, 5);
         let w1 = m.pool_timeline[1].window_hit_ratio(&m.pool_timeline[0]);
         let w2 = m.pool_timeline[2].window_hit_ratio(&m.pool_timeline[1]);
         assert_eq!(w1, 0.0, "first window: all misses");

@@ -2,8 +2,9 @@
 //!
 //! * [`task`] — the task model (micro-benchmark and stacking tasks).
 //! * [`core`] — the dispatcher core: wait queue, executor slots, central
-//!   index, and the data-aware dispatch loop. Pure synchronous state
-//!   shared by both execution drivers.
+//!   index, the data-aware dispatch loop, and the demand-driven
+//!   [`crate::replication::ReplicationManager`] it feeds. Pure
+//!   synchronous state shared by both execution drivers.
 //! * [`metrics`] — experiment counters (bytes by source, hit ratios,
 //!   latencies) that the figures read out.
 //!

@@ -20,7 +20,7 @@
 //!
 //! Python is never involved: executors load AOT artifacts only.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -47,6 +47,10 @@ enum ExecMsg {
         hints: LocationHints,
         t_submit: Instant,
     },
+    /// Replication staging: copy `obj` from executor `src`'s cache dir
+    /// (falling back to persistent storage if the source copy vanished)
+    /// into this executor's cache.
+    Stage { obj: ObjectId, src: ExecutorId },
     Shutdown,
 }
 
@@ -55,10 +59,31 @@ struct Completion {
     exec: ExecutorId,
     task: TaskId,
     events: Vec<CacheEvent>,
-    resolutions: Vec<(ByteSource, u64)>,
+    /// How each input was resolved: (source, bytes, object).
+    resolutions: Vec<(ByteSource, u64, ObjectId)>,
+    /// Inputs whose hints were all stale (§3.2.2): the coordinator
+    /// charges one executor-side index lookup per entry.
+    stale: Vec<ObjectId>,
     t_submit: Instant,
     t_dispatch: Instant,
     error: Option<String>,
+}
+
+/// Outcome of a replication staging request.
+struct StageReport {
+    exec: ExecutorId,
+    obj: ObjectId,
+    /// Bytes copied (0 if the stage was skipped).
+    bytes: u64,
+    /// Whether a new cache entry was actually created.
+    created: bool,
+    events: Vec<CacheEvent>,
+}
+
+/// Everything an executor thread can report back.
+enum Report {
+    Done(Completion),
+    Staged(StageReport),
 }
 
 /// Request to the compute-service thread.
@@ -228,14 +253,14 @@ impl LiveCluster {
 
         // Executor plumbing: a slot per provisionable node. `inboxes[e]`
         // is `Some` exactly while executor `e`'s thread is alive.
-        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let (done_tx, done_rx) = mpsc::channel::<Report>();
         let mut inboxes: Vec<Option<mpsc::Sender<ExecMsg>>> = (0..n_exec).map(|_| None).collect();
         let mut handles: Vec<(ExecutorId, JoinHandle<()>)> = Vec::new();
         let cache_roots: Vec<PathBuf> =
             (0..n_exec).map(|e| workdir.join(format!("cache{e}"))).collect();
         let store_root = store.path_of(ObjectId(0)).parent().unwrap().to_path_buf();
         let spawn_exec = |e: ExecutorId,
-                          done: mpsc::Sender<Completion>|
+                          done: mpsc::Sender<Report>|
          -> Result<(mpsc::Sender<ExecMsg>, JoinHandle<()>)> {
             let (tx, rx) = mpsc::channel::<ExecMsg>();
             let ctx = ExecutorCtx {
@@ -304,6 +329,19 @@ impl LiveCluster {
             drop(done_tx);
             None
         };
+
+        // Demand-driven replication: enabled after the initial pool
+        // registered (the warm pool is membership, not a join wave), and
+        // only when the policy caches at all.
+        let replicating = cfg.replication.enabled && cfg.scheduler.policy.is_data_aware();
+        if replicating {
+            core.enable_replication(&cfg.replication);
+        }
+        let repl_poll_s = cfg.replication.evaluate_interval_s.max(0.005);
+        let mut last_repl = 0.0f64;
+        // Manager-staged (executor, object) entries, for replica-hit
+        // accounting; scrubbed on eviction and release.
+        let mut staged: HashSet<(ExecutorId, ObjectId)> = HashSet::new();
 
         // Coordinator loop.
         let t0 = Instant::now();
@@ -403,6 +441,7 @@ impl LiveCluster {
                                         let _ = h.join();
                                     }
                                     let _orphans = core.deregister_executor(e);
+                                    staged.retain(|&(se, _)| se != e);
                                     let _ = std::fs::remove_dir_all(&cache_roots[e]);
                                     cluster.release(e);
                                     drp.on_released(e);
@@ -411,7 +450,35 @@ impl LiveCluster {
                             }
                         }
                     }
-                    metrics.sample_pool(now_s, core.executor_count(), drp.pending(), queued_now);
+                    let replicas = core.replica_location_entries();
+                    metrics.sample_pool(
+                        now_s,
+                        core.executor_count(),
+                        drp.pending(),
+                        queued_now,
+                        replicas,
+                    );
+                }
+            }
+            if replicating {
+                // Wall-clock replication cadence. Static pools block on
+                // the completion channel between iterations, so the
+                // effective cadence there is completion-granular — fine
+                // for a manager that only needs to sample demand trends.
+                let now_s = t0.elapsed().as_secs_f64();
+                if now_s - last_repl >= repl_poll_s {
+                    last_repl = now_s;
+                    for d in core.poll_replication() {
+                        let sent = inboxes
+                            .get(d.dst)
+                            .and_then(|o| o.as_ref())
+                            .map(|tx| tx.send(ExecMsg::Stage { obj: d.obj, src: d.src }).is_ok())
+                            .unwrap_or(false);
+                        if !sent {
+                            // Destination already released: abandon.
+                            core.replication_staged(d.obj, d.dst);
+                        }
+                    }
                 }
             }
             for order in core.try_dispatch() {
@@ -435,9 +502,9 @@ impl LiveCluster {
             // Elastic pools use a timed receive so provisioning can
             // progress while the pool is empty; static pools block, as
             // before the refactor.
-            let c = if elastic {
+            let report = if elastic {
                 match done_rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                    Ok(c) => c,
+                    Ok(r) => r,
                     Err(mpsc::RecvTimeoutError::Timeout) => continue,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         return Err(Error::Protocol("all executors died".into()))
@@ -448,6 +515,35 @@ impl LiveCluster {
                     .recv()
                     .map_err(|_| Error::Protocol("all executors died".into()))?
             };
+            let c = match report {
+                Report::Staged(s) => {
+                    // A staging copy landed (or was skipped): index and
+                    // manager book-keeping, then back to dispatching.
+                    core.replication_staged(s.obj, s.exec);
+                    if s.bytes > 0 {
+                        metrics.add_bytes(ByteSource::CacheToCache, s.bytes);
+                        metrics.replica_bytes_staged += s.bytes;
+                    }
+                    // The executor may have been released between sending
+                    // this report and us reading it — its index entries
+                    // are already purged and must stay purged.
+                    if core.executors().binary_search(&s.exec).is_err() {
+                        continue;
+                    }
+                    for ev in &s.events {
+                        if let CacheEvent::Evicted(v) = ev {
+                            staged.remove(&(s.exec, *v));
+                        }
+                    }
+                    core.apply_cache_events(s.exec, &s.events);
+                    if s.created {
+                        metrics.replicas_created += 1;
+                        staged.insert((s.exec, s.obj));
+                    }
+                    continue;
+                }
+                Report::Done(c) => c,
+            };
             completed += 1;
             metrics.tasks_done += 1;
             metrics
@@ -456,9 +552,30 @@ impl LiveCluster {
             metrics
                 .exec_latency
                 .add(c.t_dispatch.elapsed().as_secs_f64());
-            for (src, bytes) in &c.resolutions {
+            for (src, bytes, obj) in &c.resolutions {
                 metrics.add_resolution(*src);
                 metrics.add_bytes(*src, *bytes);
+                match src {
+                    // Peer fetches are a replication demand signal.
+                    ByteSource::CacheToCache => core.note_peer_fetch(*obj, c.exec),
+                    ByteSource::Local => {
+                        if staged.contains(&(c.exec, *obj)) {
+                            metrics.replica_hits += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // Executor-side re-resolution of stale hints (§3.2.2):
+            // charged at the backend's lookup cost, like dispatch-side
+            // lookups.
+            for obj in &c.stale {
+                metrics.add_index_cost(core.index().lookup_cost(*obj));
+            }
+            for ev in &c.events {
+                if let CacheEvent::Evicted(v) = ev {
+                    staged.remove(&(c.exec, *v));
+                }
             }
             if let Some(e) = c.error {
                 first_error.get_or_insert(e);
@@ -507,7 +624,15 @@ struct ExecutorCtx {
     cache_roots: Vec<PathBuf>,
     cache: DataCache,
     compute: Option<ComputeClient>,
-    done: mpsc::Sender<Completion>,
+    done: mpsc::Sender<Report>,
+}
+
+/// File extension of stored/cached objects in `format`.
+fn ext_of(format: DataFormat) -> &'static str {
+    match format {
+        DataFormat::Gz => "fits.gz",
+        DataFormat::Fit => "fits",
+    }
 }
 
 fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
@@ -522,36 +647,87 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                 let t_dispatch = Instant::now();
                 let mut events = Vec::new();
                 let mut resolutions = Vec::new();
-                let err = run_task(&mut ctx, &task, &hints, &mut events, &mut resolutions)
-                    .err()
-                    .map(|e| e.to_string());
-                let _ = ctx.done.send(Completion {
+                let mut stale = Vec::new();
+                let err = run_task(
+                    &mut ctx,
+                    &task,
+                    &hints,
+                    &mut events,
+                    &mut resolutions,
+                    &mut stale,
+                )
+                .err()
+                .map(|e| e.to_string());
+                let _ = ctx.done.send(Report::Done(Completion {
                     exec: ctx.exec,
                     task: task.id,
                     events,
                     resolutions,
+                    stale,
                     t_submit,
                     t_dispatch,
                     error: err,
-                });
+                }));
+            }
+            ExecMsg::Stage { obj, src } => {
+                let report = stage_object(&mut ctx, obj, src);
+                let _ = ctx.done.send(Report::Staged(report));
             }
         }
     }
 }
 
+/// Replication staging on the destination executor: copy the object from
+/// the source peer's cache directory into our own cache. If the source
+/// copy vanished (evicted or the lease ended) the stage is abandoned —
+/// the same rule the sim driver applies — so staged bytes are always
+/// genuine cache-to-cache traffic and the manager can retry with a
+/// holder that still exists.
+fn stage_object(ctx: &mut ExecutorCtx, obj: ObjectId, src: ExecutorId) -> StageReport {
+    let mut report = StageReport {
+        exec: ctx.exec,
+        obj,
+        bytes: 0,
+        created: false,
+        events: Vec::new(),
+    };
+    if ctx.cache.contains(obj) {
+        return report; // organic copy won the race
+    }
+    let ext = ext_of(ctx.format);
+    let Some(peer_path) = ctx
+        .cache_roots
+        .get(src)
+        .map(|root| root.join(format!("{obj}.{ext}")))
+        .filter(|p| p.exists())
+    else {
+        return report; // source copy gone: abandon, demand will retry
+    };
+    let cached_path = ctx.cache_dir.path_of(obj, ctx.format);
+    if let Ok(bytes) = std::fs::copy(&peer_path, &cached_path) {
+        report.bytes = bytes;
+        report.events = apply_cache_insert(ctx, obj, bytes);
+        report.created = report
+            .events
+            .iter()
+            .any(|e| matches!(e, CacheEvent::Inserted(o) if *o == obj));
+    }
+    report
+}
+
 /// Execute one task on this executor: resolve inputs (own cache → peer →
-/// persistent storage), then run the compute.
+/// persistent storage), then run the compute. `stale` collects inputs
+/// whose hints all went stale (every hinted copy gone), so the
+/// coordinator can charge the executor-side re-resolution.
 fn run_task(
     ctx: &mut ExecutorCtx,
     task: &Task,
     hints: &LocationHints,
     events: &mut Vec<CacheEvent>,
-    resolutions: &mut Vec<(ByteSource, u64)>,
+    resolutions: &mut Vec<(ByteSource, u64, ObjectId)>,
+    stale: &mut Vec<ObjectId>,
 ) -> Result<()> {
-    let ext = match ctx.format {
-        DataFormat::Gz => "fits.gz",
-        DataFormat::Fit => "fits",
-    };
+    let ext = ext_of(ctx.format);
     let caching = ctx.cfg.scheduler.policy.is_data_aware();
     let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(task.inputs.len());
 
@@ -560,23 +736,26 @@ fn run_task(
         if caching && ctx.cache.access(obj) && cached_path.exists() {
             // Own cache hit.
             let raw = read_object_file(&cached_path, ctx.format)?;
-            resolutions.push((ByteSource::Local, raw.len() as u64));
+            resolutions.push((ByteSource::Local, raw.len() as u64, obj));
             payloads.push(raw);
             continue;
         }
 
-        // Peer fetch: first hinted peer whose cache file exists.
+        // Peer fetch: first hinted peer whose cache file exists (hints
+        // are ranked by the scheduler so replicas share the load).
         let mut fetched = false;
+        let mut hinted_peer = false;
         if caching {
             if let Some(locs) = hints.get(&obj) {
                 for &peer in locs {
                     if peer == ctx.exec || peer >= ctx.cache_roots.len() {
                         continue;
                     }
+                    hinted_peer = true;
                     let peer_path = ctx.cache_roots[peer].join(format!("{obj}.{ext}"));
                     if peer_path.exists() {
                         if let Ok(bytes) = std::fs::copy(&peer_path, &cached_path) {
-                            resolutions.push((ByteSource::CacheToCache, bytes));
+                            resolutions.push((ByteSource::CacheToCache, bytes, obj));
                             fetched = true;
                             break;
                         }
@@ -586,20 +765,25 @@ fn run_task(
         }
 
         if !fetched {
+            if hinted_peer {
+                // Every hinted copy vanished (§3.2.2 stale hints): the
+                // executor re-resolves; the coordinator charges it.
+                stale.push(obj);
+            }
             // Persistent storage.
             let store_path = ctx.store_root.join(format!("{obj}.{ext}"));
             if caching {
                 let bytes = std::fs::copy(&store_path, &cached_path).map_err(|e| {
                     Error::UnknownObject(format!("{obj} ({}): {e}", store_path.display()))
                 })?;
-                resolutions.push((ByteSource::Gpfs, bytes));
+                resolutions.push((ByteSource::Gpfs, bytes, obj));
             } else {
                 let bytes = std::fs::metadata(&store_path)
                     .map_err(|e| {
                         Error::UnknownObject(format!("{obj} ({}): {e}", store_path.display()))
                     })?
                     .len();
-                resolutions.push((ByteSource::Gpfs, bytes));
+                resolutions.push((ByteSource::Gpfs, bytes, obj));
             }
         }
 
@@ -759,6 +943,56 @@ mod tests {
         assert!(out.metrics.peak_executors <= 3, "pool capped at max");
         assert!(!out.metrics.pool_timeline.is_empty());
         assert!(out.makespan_s >= 0.05, "first grant pays allocation latency");
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    /// Elastic pool with replication: joins get pre-staged, Stage
+    /// messages flow through real executor threads, and the run drains
+    /// with coherent accounting. Live timing is nondeterministic, so the
+    /// assertions check mechanics and conservation, not exact counts.
+    #[test]
+    fn live_cluster_replication_runs_end_to_end() {
+        let root = tmp("repl");
+        let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+        for i in 0..6 {
+            store.populate(ObjectId(i), 3_000).unwrap();
+        }
+        let mut cfg = Config::with_nodes(3);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.provisioner.enabled = true;
+        cfg.provisioner.policy = crate::provisioner::AllocationPolicy::Adaptive;
+        cfg.provisioner.min_executors = 1;
+        cfg.provisioner.max_executors = 3;
+        cfg.provisioner.allocation_latency_s = 0.05;
+        cfg.provisioner.poll_interval_s = 0.01;
+        cfg.provisioner.idle_release_s = 30.0;
+        cfg.provisioner.queue_per_executor = 2;
+        cfg.replication.enabled = true;
+        cfg.replication.max_replicas = 3;
+        cfg.replication.demand_threshold = 0.5;
+        cfg.replication.ewma_alpha = 0.8;
+        cfg.replication.evaluate_interval_s = 0.01;
+        cfg.replication.prestage_top_k = 4;
+        let tasks: Vec<Task> = (0..24)
+            .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 6)]))
+            .collect();
+        let out = LiveCluster::new(cfg, store, root.join("work"), None)
+            .run(tasks)
+            .unwrap();
+        assert_eq!(out.metrics.tasks_done, 24);
+        assert_eq!(
+            out.metrics.cache_hits + out.metrics.peer_hits + out.metrics.gpfs_misses,
+            24,
+            "every input resolved exactly once"
+        );
+        // Staging accounting is self-consistent: bytes only move when
+        // transfers happened, and hits on replicas imply replicas exist.
+        if out.metrics.replicas_created == 0 {
+            assert_eq!(out.metrics.replica_hits, 0);
+        }
+        if out.metrics.replica_bytes_staged > 0 {
+            assert!(out.metrics.c2c_bytes >= out.metrics.replica_bytes_staged);
+        }
         let _ = std::fs::remove_dir_all(root);
     }
 

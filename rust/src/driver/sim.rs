@@ -37,7 +37,23 @@
 //! contents from the index (so no future hint targets it), requeues any
 //! tasks parked on it, and resets its node-local cache: a later re-join
 //! of the same node id starts cold, exactly like a fresh lease.
-
+//!
+//! ## Demand-driven replication
+//!
+//! With `replication.enabled` a periodic `ReplTick` event polls the
+//! coordinator's [`crate::replication::ReplicationManager`]; each
+//! returned directive becomes a `Replica`-tagged peer-bandwidth flow
+//! (source disk + both NICs + destination disk, exactly like a
+//! cache-to-cache task fetch, so staging contends with foreground
+//! traffic instead of being free). On completion the object enters the
+//! destination cache and the index — through the same
+//! `apply_cache_events` path as any other insert, so no index location
+//! ever lacks a backing cache entry. Stale location hints (§3.2.2: every
+//! hinted copy moved or was evicted since dispatch) make the executor
+//! *re-resolve* against the index, charged via
+//! [`crate::index::DataIndex::lookup_cost`] like a dispatch-side lookup —
+//! which is also how an executor discovers replicas staged after its
+//! task was dispatched.
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
@@ -50,7 +66,7 @@ use crate::scheduler::decision::LocationHints;
 use crate::sim::engine::{Engine, EventQueue, World};
 use crate::sim::flownet::FlowId;
 use crate::sim::server::FifoServer;
-use crate::util::fxhash::FxHashMap;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::storage::object::{Catalog, DataFormat, ObjectId};
 use crate::storage::testbed::{SimTestbed, TransferKind};
 
@@ -133,6 +149,8 @@ enum Ev {
     ProvisionTick,
     /// A cluster allocation finished its latency; nodes come up.
     AllocReady(u64),
+    /// Periodic replication evaluation (replication.enabled only).
+    ReplTick,
 }
 
 /// Why a flow was started (continuation tag).
@@ -145,6 +163,16 @@ enum FlowPurpose {
     WriteGpfs,
 }
 
+/// Who owns a flow: a running task's pipeline phase, or a background
+/// replication staging transfer (no task attached).
+#[derive(Debug, Clone, Copy)]
+enum FlowTag {
+    /// Task flow: (run id, phase purpose).
+    Run(u64, FlowPurpose),
+    /// Replication staging: object headed for an executor's cache.
+    Replica { obj: ObjectId, dst: ExecutorId },
+}
+
 /// Per-task pipeline phase. `Step(rid)` events drive transitions; flow
 /// completions are delivered separately through [`SimWorld::flow_done`].
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -155,6 +183,9 @@ enum Phase {
     Fetch,
     /// Waiting for the GPFS metadata open of the current input.
     GpfsOpen,
+    /// Stale hints: the executor-side index re-resolution (charged at
+    /// the backend's lookup cost) is in flight for the current input.
+    Refetch,
     /// A data flow is in flight for the current input / output.
     AwaitFlow,
     /// CPU decompression of the just-fetched GZ input.
@@ -175,6 +206,8 @@ struct Running {
     t_dispatch: f64,
     next_input: usize,
     phase: Phase,
+    /// Fresh peer found by a stale-hint re-resolution (Refetch phase).
+    refetch_src: Option<ExecutorId>,
     /// Cache updates buffered until completion (loose coherence).
     events: Vec<CacheEvent>,
 }
@@ -207,8 +240,11 @@ struct SimWorld {
     pending_tasks: Vec<Option<Task>>,
     runs: FxHashMap<u64, Running>,
     next_run: u64,
-    flow_map: FxHashMap<FlowId, (u64, FlowPurpose)>,
+    flow_map: FxHashMap<FlowId, FlowTag>,
     flow_version: u64,
+    /// (executor, object) cache entries created by replication staging —
+    /// local hits on these count as `replica_hits`.
+    staged_replicas: FxHashSet<(ExecutorId, ObjectId)>,
     submit_times: FxHashMap<TaskId, f64>,
     first_dispatch: Option<f64>,
     total_tasks: u64,
@@ -278,6 +314,7 @@ impl SimWorld {
                         // parked tasks; the node cache dies with the lease.
                         let _orphans = self.core.deregister_executor(e);
                         self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
+                        self.staged_replicas.retain(|&(se, _)| se != e);
                         prov.cluster.release(e);
                         prov.drp.on_released(e);
                         self.metrics.executors_released += 1;
@@ -285,11 +322,13 @@ impl SimWorld {
                 }
             }
         }
+        let replicas = self.core.replica_location_entries();
         self.metrics.sample_pool(
             now,
             self.core.executor_count(),
             prov.drp.pending(),
             queued_now,
+            replicas,
         );
         // Keep evaluating while work (or an allocation) is outstanding.
         if self.metrics.tasks_done < self.total_tasks || prov.drp.pending() > 0 {
@@ -322,6 +361,70 @@ impl SimWorld {
         self.execute_orders(now, orders, q);
     }
 
+    /// One replication evaluation round: poll the manager and turn each
+    /// directive into a background peer-bandwidth staging flow.
+    fn repl_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        for d in self.core.poll_replication() {
+            // The index may lag the caches (loose coherence) and the
+            // pool may have churned since the manager looked: stage only
+            // from a source whose cache really holds the object, to a
+            // destination that is still registered and does not.
+            let src_ok = d.src < self.caches.len() && self.caches[d.src].contains(d.obj);
+            let dst_ok = d.dst < self.caches.len()
+                && self.core.executors().binary_search(&d.dst).is_ok()
+                && !self.caches[d.dst].contains(d.obj);
+            if !self.caching || !src_ok || !dst_ok {
+                self.core.replication_staged(d.obj, d.dst); // abandoned
+                continue;
+            }
+            let bytes = self.cached_size(d.obj);
+            self.start_flow(
+                now,
+                FlowTag::Replica { obj: d.obj, dst: d.dst },
+                TransferKind::Peer { src: d.src, dst: d.dst },
+                bytes,
+                q,
+            );
+        }
+        // Keep evaluating while the workload is live; staging flows
+        // already in flight drain through the flow network regardless.
+        if self.metrics.tasks_done < self.total_tasks {
+            q.after(self.cfg.replication.evaluate_interval_s.max(1e-3), Ev::ReplTick);
+        }
+    }
+
+    /// A replication staging flow completed: the copy enters the
+    /// destination cache and the index (same path as any cache insert).
+    fn replica_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
+        self.core.replication_staged(obj, dst);
+        let bytes = self.cached_size(obj);
+        // The transfer happened whether or not the copy is still wanted:
+        // account it as cache-to-cache traffic.
+        self.metrics.add_bytes(ByteSource::CacheToCache, bytes);
+        self.metrics.replica_bytes_staged += bytes;
+        if !self.caching
+            || dst >= self.caches.len()
+            || self.core.executors().binary_search(&dst).is_err()
+        {
+            return; // destination lease ended while the copy was in flight
+        }
+        let events = self.caches[dst].insert(obj, bytes);
+        let created = events
+            .iter()
+            .any(|e| matches!(e, CacheEvent::Inserted(o) if *o == obj));
+        if !created {
+            return; // already resident (an organic copy won the race)
+        }
+        for ev in &events {
+            if let CacheEvent::Evicted(v) = ev {
+                self.staged_replicas.remove(&(dst, *v));
+            }
+        }
+        self.core.apply_cache_events(dst, &events);
+        self.staged_replicas.insert((dst, obj));
+        self.metrics.replicas_created += 1;
+    }
+
     /// Cached (post-expansion) size of an object.
     fn cached_size(&self, obj: ObjectId) -> u64 {
         let stored = self.core.catalog().size(obj).unwrap_or(1);
@@ -338,19 +441,18 @@ impl SimWorld {
         (self.cfg.local_disk.open_s * self.cfg.local_disk.read_bps / 8.0) as u64
     }
 
-    /// Start a flow for run `rid` and refresh the completion check.
+    /// Start a tagged flow and refresh the completion check.
     fn start_flow(
         &mut self,
         now: f64,
-        rid: u64,
+        tag: FlowTag,
         kind: TransferKind,
         bytes: u64,
-        purpose: FlowPurpose,
         q: &mut EventQueue<Ev>,
     ) {
         let rs = self.testbed.resources(kind);
         let fid = self.testbed.net.start_flow(now, rs, bytes);
-        self.flow_map.insert(fid, (rid, purpose));
+        self.flow_map.insert(fid, tag);
         self.reschedule_flow_check(now, q);
     }
 
@@ -371,8 +473,10 @@ impl SimWorld {
             match self.testbed.net.next_completion(now) {
                 Some((t, fid)) if t <= now + 1e-9 => {
                     self.testbed.net.remove_flow(now, fid);
-                    if let Some((rid, purpose)) = self.flow_map.remove(&fid) {
-                        self.flow_done(now, rid, purpose, q);
+                    match self.flow_map.remove(&fid) {
+                        Some(FlowTag::Run(rid, purpose)) => self.flow_done(now, rid, purpose, q),
+                        Some(FlowTag::Replica { obj, dst }) => self.replica_staged(obj, dst),
+                        None => {}
                     }
                 }
                 _ => break,
@@ -412,6 +516,7 @@ impl SimWorld {
                     hints: order.hints,
                     next_input: 0,
                     phase: Phase::Start,
+                    refetch_src: None,
                     events: Vec::new(),
                 },
             );
@@ -453,7 +558,40 @@ impl SimWorld {
                 } else {
                     TransferKind::GpfsRead { node }
                 };
-                self.start_flow(now, rid, kind, bytes, FlowPurpose::FetchGpfs, q);
+                self.start_flow(now, FlowTag::Run(rid, FlowPurpose::FetchGpfs), kind, bytes, q);
+            }
+            Phase::Refetch => {
+                // The executor-side re-resolution paid its lookup cost;
+                // fetch from the fresh copy it found (re-validated — the
+                // copy may have been evicted during the lookup) or fall
+                // through to persistent storage.
+                let run = self.runs.get_mut(&rid).unwrap();
+                let obj = run.task.inputs[run.next_input];
+                let exec = run.exec;
+                let src = run.refetch_src.take();
+                let src = src.filter(|&p| p < self.caches.len() && self.caches[p].contains(obj));
+                match src {
+                    Some(src) => {
+                        self.core.note_peer_fetch(obj, exec);
+                        let bytes = self.cached_size(obj);
+                        self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                        self.start_flow(
+                            now,
+                            FlowTag::Run(rid, FlowPurpose::FetchPeer),
+                            TransferKind::Peer { src, dst: exec },
+                            bytes,
+                            q,
+                        );
+                    }
+                    None => {
+                        let done = self
+                            .testbed
+                            .metadata
+                            .submit(now, self.cfg.shared_fs.meta_ops_open);
+                        self.runs.get_mut(&rid).unwrap().phase = Phase::GpfsOpen;
+                        q.at(done, Ev::Step(rid));
+                    }
+                }
             }
             Phase::AwaitFlow => {
                 debug_assert!(false, "AwaitFlow must resolve via flow_done");
@@ -475,10 +613,9 @@ impl SimWorld {
                     self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
                     self.start_flow(
                         now,
-                        rid,
+                        FlowTag::Run(rid, FlowPurpose::WriteLocal),
                         TransferKind::LocalWrite { node },
                         bytes,
-                        FlowPurpose::WriteLocal,
                         q,
                     );
                 } else {
@@ -499,10 +636,9 @@ impl SimWorld {
                 run.phase = Phase::AwaitFlow;
                 self.start_flow(
                     now,
-                    rid,
+                    FlowTag::Run(rid, FlowPurpose::WriteGpfs),
                     TransferKind::GpfsWrite { node },
                     bytes,
-                    FlowPurpose::WriteGpfs,
                     q,
                 );
             }
@@ -524,21 +660,25 @@ impl SimWorld {
             // (The sub-millisecond local-FS open constant is charged as
             // part of the flow; it is negligible against transfer times
             // and — unlike GPFS opens — contends with nothing.)
+            if self.staged_replicas.contains(&(exec, obj)) {
+                self.metrics.replica_hits += 1;
+            }
             let bytes = self.cached_size(obj) + self.local_open_equiv_bytes();
             self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
             self.start_flow(
                 now,
-                rid,
+                FlowTag::Run(rid, FlowPurpose::FetchLocal),
                 TransferKind::LocalRead { node: exec },
                 bytes,
-                FlowPurpose::FetchLocal,
                 q,
             );
             return;
         }
 
         if self.caching {
-            // Peer hint: find a hinted executor that still holds it.
+            // Peer hint: the first hinted executor that still holds it
+            // (hints are ranked by the scheduler, so replicas share the
+            // peer-fetch load).
             let peer = run
                 .hints
                 .get(&obj)
@@ -548,16 +688,46 @@ impl SimWorld {
                 })
                 .copied();
             if let Some(src) = peer {
+                self.core.note_peer_fetch(obj, exec);
                 let bytes = self.cached_size(obj);
                 self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
                 self.start_flow(
                     now,
-                    rid,
+                    FlowTag::Run(rid, FlowPurpose::FetchPeer),
                     TransferKind::Peer { src, dst: exec },
                     bytes,
-                    FlowPurpose::FetchPeer,
                     q,
                 );
+                return;
+            }
+            // Every hinted copy is gone (§3.2.2: hints went stale): the
+            // executor re-resolves against the index, paying the same
+            // routed lookup a dispatch-side resolution pays — and may
+            // discover a replica staged after dispatch.
+            let hinted = run
+                .hints
+                .get(&obj)
+                .is_some_and(|locs| locs.iter().any(|&p| p != exec));
+            if hinted {
+                let cost = self.core.index().lookup_cost(obj);
+                self.metrics.add_index_cost(cost);
+                let rot = run.task.id.0 as usize;
+                let fresh = {
+                    let locs = self.core.index().locations(obj);
+                    if locs.is_empty() {
+                        None
+                    } else {
+                        (0..locs.len())
+                            .map(|i| locs[(i + rot) % locs.len()])
+                            .find(|&p| {
+                                p != exec && p < self.caches.len() && self.caches[p].contains(obj)
+                            })
+                    }
+                };
+                let run = self.runs.get_mut(&rid).unwrap();
+                run.refetch_src = fresh;
+                run.phase = Phase::Refetch;
+                q.after(cost.latency_s, Ev::Step(rid));
                 return;
             }
         }
@@ -632,6 +802,11 @@ impl SimWorld {
             // New object on this node (cached uncompressed).
             let bytes = self.cached_size(obj);
             let events = self.caches[exec].insert(obj, bytes);
+            for ev in &events {
+                if let CacheEvent::Evicted(v) = ev {
+                    self.staged_replicas.remove(&(exec, *v));
+                }
+            }
             self.runs.get_mut(&rid).unwrap().events.extend(events);
         }
         let run = self.runs.get_mut(&rid).unwrap();
@@ -703,6 +878,7 @@ impl World for SimWorld {
             Ev::FlowCheck(v) => self.flow_check(now, v, q),
             Ev::ProvisionTick => self.provision_tick(now, q),
             Ev::AllocReady(id) => self.alloc_ready(now, id, q),
+            Ev::ReplTick => self.repl_tick(now, q),
         }
     }
 }
@@ -766,6 +942,14 @@ impl SimDriver {
                 core.register_executor_with(e, capacity);
             }
         }
+        // Enabled after the initial pool registered: the warm floor is
+        // membership, not a join wave to pre-stage. Meaningless without
+        // caching (there is nothing to replicate from).
+        let replicating = cfg.replication.enabled && spec.caching;
+        let repl_interval_s = cfg.replication.evaluate_interval_s.max(1e-3);
+        if replicating {
+            core.enable_replication(&cfg.replication);
+        }
 
         let mut caches: Vec<DataCache> = (0..nodes)
             .map(|e| {
@@ -815,6 +999,7 @@ impl SimDriver {
             next_run: 0,
             flow_map: FxHashMap::default(),
             flow_version: 0,
+            staged_replicas: FxHashSet::default(),
             submit_times: FxHashMap::default(),
             first_dispatch: None,
             total_tasks,
@@ -824,6 +1009,9 @@ impl SimDriver {
         let mut engine = Engine::new(world);
         if elastic {
             engine.schedule(0.0, Ev::ProvisionTick);
+        }
+        if replicating {
+            engine.schedule(repl_interval_s, Ev::ReplTick);
         }
         for (t, i) in arrivals {
             engine.schedule(t, Ev::Arrive(i));
@@ -1005,6 +1193,127 @@ mod tests {
             chord.makespan_s,
             central.makespan_s
         );
+    }
+
+    #[test]
+    fn replication_stages_copies_and_serves_local_hits() {
+        // One hot object, prewarmed on executor 0 only, tasks spaced so
+        // the holder is always idle when the next task arrives: without
+        // replication every task runs on executor 0 and no second copy
+        // ever exists. With replication the manager stages a copy and
+        // the tie-rotation spreads tasks across both holders.
+        let run = |replication: bool| {
+            let mut cfg = Config::with_nodes(4);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.replication.enabled = replication;
+            cfg.replication.max_replicas = 2;
+            cfg.replication.demand_threshold = 0.5;
+            cfg.replication.ewma_alpha = 0.5;
+            cfg.replication.evaluate_interval_s = 1.0;
+            let tasks: Vec<(f64, Task)> = (0..32)
+                .map(|i| {
+                    let mut t = Task::with_inputs(TaskId(i), vec![ObjectId(0)]);
+                    t.kind = TaskKind::Synthetic { cpu_s: 0.2 };
+                    (i as f64, t)
+                })
+                .collect();
+            let mut spec = SimWorkloadSpec::new(tasks);
+            spec.prewarm = vec![(0, ObjectId(0))];
+            SimDriver::new(cfg, spec, catalog(1, MB)).run()
+        };
+        let off = run(false);
+        assert_eq!(off.metrics.tasks_done, 32);
+        assert_eq!(off.metrics.replicas_created, 0);
+        assert_eq!(off.metrics.c2c_bytes, 0, "sole holder serves everything");
+
+        let on = run(true);
+        assert_eq!(on.metrics.tasks_done, 32);
+        assert_eq!(on.metrics.replicas_created, 1, "max_replicas 2 = one copy");
+        assert_eq!(on.metrics.replica_bytes_staged, MB);
+        assert_eq!(on.metrics.c2c_bytes, MB, "staging rides the c2c path");
+        assert!(
+            on.metrics.replica_hits > 0,
+            "tasks must rotate onto the staged copy"
+        );
+        // Replication must not cost any locality: everything stays local.
+        assert_eq!(on.metrics.cache_hits, 32);
+        assert_eq!(on.metrics.gpfs_misses, 0);
+        assert_eq!(on.metrics.peer_hits, 0);
+    }
+
+    #[test]
+    fn stale_hints_reresolve_at_the_executor_and_charge_lookups() {
+        // first-cache-available ships hints but picks executors blindly.
+        // Executor 1's only cache slot holds obj0; T1 running there
+        // evicts it (capacity = one object) while T2 — dispatched with a
+        // hint pointing at executor 1 — is still in flight. T2's fetch
+        // finds every hinted copy gone, re-resolves at the executor
+        // (charged through DataIndex::lookup_cost), finds nothing fresh,
+        // and falls through to persistent storage.
+        let mut cfg = Config::with_nodes(2);
+        cfg.scheduler.policy = DispatchPolicy::FirstCacheAvailable;
+        cfg.cache.capacity_bytes = MB;
+        let mut t0 = Task::with_inputs(TaskId(0), vec![]);
+        t0.kind = TaskKind::Synthetic { cpu_s: 0.05 };
+        let mut t1 = Task::with_inputs(TaskId(1), vec![ObjectId(2)]);
+        t1.kind = TaskKind::Synthetic { cpu_s: 0.1 };
+        let t2 = Task::with_inputs(TaskId(2), vec![ObjectId(0)]);
+        let mut spec = SimWorkloadSpec::new(vec![(0.0, t0), (0.0, t1), (0.0, t2)]);
+        spec.prewarm = vec![(1, ObjectId(0))];
+        let out = SimDriver::new(cfg, spec, catalog(3, MB)).run();
+        assert_eq!(out.metrics.tasks_done, 3);
+        // Two dispatch-side lookups (T1, T2 — T0 has no inputs) plus the
+        // executor-side stale-hint re-resolution.
+        assert_eq!(out.metrics.index_lookups, 3, "stale re-resolve must be charged");
+        assert_eq!(out.metrics.gpfs_misses, 2, "obj2 cold, obj0 re-fetched");
+        assert_eq!(out.metrics.peer_hits, 0, "the hinted copy was gone");
+    }
+
+    #[test]
+    fn replication_is_backend_invariant_and_deterministic() {
+        use crate::index::IndexBackend;
+        use crate::workloads::bursty::{self, BurstSpec, DemandShape};
+        let run = |backend: IndexBackend| {
+            let mut cfg = elastic_cfg(6);
+            cfg.index.backend = backend;
+            cfg.index.hop_latency_s = 0.0;
+            cfg.index.hop_proc_s = 0.0;
+            cfg.index.central_lookup_s = 0.0;
+            cfg.replication.enabled = true;
+            cfg.replication.max_replicas = 4;
+            cfg.replication.demand_threshold = 1.0;
+            cfg.replication.evaluate_interval_s = 2.0;
+            cfg.replication.prestage_top_k = 4;
+            let w = bursty::generate(
+                &BurstSpec {
+                    shape: DemandShape::Square,
+                    tasks: 160,
+                    objects: 8,
+                    object_bytes: MB,
+                    period_s: 120.0,
+                    base_rate: 0.0,
+                    peak_rate: 2.5,
+                    duty: 0.3,
+                    task_cpu_s: 1.0,
+                },
+                9,
+            );
+            SimDriver::new(cfg, w.spec, w.catalog).run()
+        };
+        let a = run(IndexBackend::Chord);
+        let b = run(IndexBackend::Chord);
+        assert_eq!(a.events, b.events, "replicated chord runs must replay");
+        let c = run(IndexBackend::Central);
+        assert_eq!(a.metrics.tasks_done, 160);
+        assert_eq!(a.metrics.tasks_done, c.metrics.tasks_done);
+        // Placement — and therefore replication decisions, which are a
+        // function of placement-derived demand — is backend-invariant.
+        assert_eq!(a.metrics.cache_hits, c.metrics.cache_hits);
+        assert_eq!(a.metrics.peer_hits, c.metrics.peer_hits);
+        assert_eq!(a.metrics.gpfs_misses, c.metrics.gpfs_misses);
+        assert_eq!(a.metrics.replicas_created, c.metrics.replicas_created);
+        assert_eq!(a.metrics.replica_hits, c.metrics.replica_hits);
+        assert!(a.metrics.replicas_created > 0, "bursty hot set must replicate");
     }
 
     #[test]

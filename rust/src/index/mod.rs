@@ -43,6 +43,22 @@
 //! simulation driver charges into the event timeline and both drivers
 //! account in [`crate::coordinator::metrics::Metrics`].
 //!
+//! ### Multi-holder hint ranking
+//!
+//! With demand-driven replication ([`crate::replication`]) an object
+//! routinely has several holders, so *ranking* matters, not just
+//! membership. Backends still return locations sorted ascending —
+//! ranking is deliberately **not** the index's job, because any
+//! backend-specific order would leak into placement and break the
+//! invariance contract above. Instead the scheduler layer ranks:
+//! [`crate::scheduler::decision::SchedView::hints_for`] rotates each
+//! holder list by the task id before shipping it, and score ties in
+//! `best_holder` (replicas of a task's inputs) rotate the same way, so
+//! consecutive tasks fan out across copies — deterministic, replayable,
+//! and identical on every backend. Executors that find every hinted copy
+//! gone (§3.2.2 stale hints) re-resolve against the index and are
+//! charged one extra [`DataIndex::lookup_cost`], on both drivers.
+//!
 //! Adding a new backend (hierarchical, gossip, replicated, …) is a
 //! one-file change: implement [`DataIndex`], extend [`IndexBackend`] and
 //! [`build`].

@@ -27,7 +27,9 @@
 //! | §3.2.2 eviction + dispatch policies | [`cache`], [`scheduler`] |
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
 //! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |
+//! | Demand-driven replication ("data diffusion" proper) | [`replication`] |
 //! | DRP demand-response figure (`--figure drp`) | [`analysis::figures`], [`workloads::bursty`] |
+//! | Diffusion figure (`--figure diffusion`, replication on/off) | [`analysis::figures`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |
@@ -43,6 +45,7 @@ pub mod driver;
 pub mod error;
 pub mod index;
 pub mod provisioner;
+pub mod replication;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

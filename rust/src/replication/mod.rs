@@ -1,0 +1,517 @@
+//! Demand-driven replication — "data diffusion" proper.
+//!
+//! The paper's namesake mechanism "replicates data in response to demand,
+//! and schedules computations close to data". The cache-location index
+//! records where objects *happen* to land; this module is what actively
+//! creates additional copies of the objects that demand keeps asking for
+//! (the scheduler half of the companion paper, arXiv:0808.3535, *Data
+//! Diffusion: Dynamic Resource Provision and Data-Aware Scheduling*).
+//!
+//! ## How it works
+//!
+//! [`ReplicationManager`] is owned by [`crate::coordinator::FalkonCore`]
+//! and fed three demand signals from the dispatch path:
+//!
+//! * **location-hint lookups** — every data-aware dispatch resolves each
+//!   input's locations ([`ReplicationManager::note_lookup`]);
+//! * **remote placements** — a task dispatched to an executor that does
+//!   not hold an input ([`ReplicationManager::note_remote_placement`]) —
+//!   unmet demand, attributed to that executor;
+//! * **peer fetches** — an executor actually pulled the object from a
+//!   peer cache ([`ReplicationManager::note_peer_fetch`]).
+//!
+//! The drivers call [`FalkonCore::poll_replication`] periodically (a
+//! `ReplTick` event in the simulator, wall-clock in the live cluster).
+//! Each evaluation folds the accumulated counts into a per-object EWMA;
+//! when an object's smoothed demand crosses `demand_threshold` and it has
+//! fewer than `max_replicas` copies (in-flight stages included), the
+//! manager emits one [`ReplicaDirective`] — *copy object X from holder S
+//! to executor D* — with D chosen by the configured
+//! [`PlacementPolicy`]. The driver executes the copy off the task
+//! critical path (the simulator charges it as a peer transfer; the live
+//! cluster does a real file copy between cache directories) and reports
+//! back through [`FalkonCore::replication_staged`].
+//!
+//! When demand decays the EWMA falls below the threshold and the manager
+//! simply stops re-creating copies; normal cache eviction then reclaims
+//! the space (replicas are ordinary cache entries — no pinning).
+//!
+//! ## Re-replication on join
+//!
+//! A newly provisioned executor starts cold — the post-churn hit-ratio
+//! dip in the DRP timeline. [`ReplicationManager::executor_joined`]
+//! queues the joiner; the next evaluation pre-stages the `prestage_top_k`
+//! hottest objects onto it (subject to the same `max_replicas` cap), so
+//! the pool's locality recovers in one staging round instead of one
+//! cold miss per (executor, object) pair.
+//!
+//! [`FalkonCore::poll_replication`]: crate::coordinator::FalkonCore::poll_replication
+//! [`FalkonCore::replication_staged`]: crate::coordinator::FalkonCore::replication_staged
+
+pub mod policy;
+
+pub use policy::PlacementPolicy;
+
+use crate::config::ReplicationConfig;
+use crate::index::central::ExecutorId;
+use crate::index::DataIndex;
+use crate::storage::object::ObjectId;
+use crate::util::fxhash::FxHashMap;
+
+/// A staging order for the driver: copy `obj` from `src`'s cache into
+/// `dst`'s cache. The driver charges/performs the transfer and reports
+/// completion (or abandonment) via
+/// [`crate::coordinator::FalkonCore::replication_staged`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaDirective {
+    /// Object to replicate.
+    pub obj: ObjectId,
+    /// A current holder to copy from.
+    pub src: ExecutorId,
+    /// Destination executor (never a current holder).
+    pub dst: ExecutorId,
+}
+
+/// Per-object demand state.
+#[derive(Debug, Default, Clone)]
+struct Demand {
+    /// Smoothed per-evaluation demand (EWMA of `accum`).
+    ewma: f64,
+    /// Raw signal count since the last evaluation.
+    accum: f64,
+    /// Decayed unmet-demand weight per executor that wanted the object
+    /// without holding it (drives [`PlacementPolicy::CoLocate`]).
+    wanters: Vec<(ExecutorId, f64)>,
+}
+
+/// Observes demand, decides replication, emits placement directives.
+#[derive(Debug)]
+pub struct ReplicationManager {
+    cfg: ReplicationConfig,
+    demand: FxHashMap<ObjectId, Demand>,
+    /// Directives issued but not yet confirmed staged by the driver.
+    inflight: Vec<(ObjectId, ExecutorId)>,
+    /// Executors that joined since the last evaluation (pre-stage queue).
+    pending_joins: Vec<ExecutorId>,
+    /// Rotates the source choice across holders so one holder's NIC does
+    /// not serve every staging transfer.
+    src_seq: usize,
+    /// Lifetime directives issued (diagnostics).
+    issued: u64,
+}
+
+impl ReplicationManager {
+    /// New manager with the given configuration.
+    pub fn new(cfg: ReplicationConfig) -> Self {
+        ReplicationManager {
+            cfg,
+            demand: FxHashMap::default(),
+            inflight: Vec::new(),
+            pending_joins: Vec::new(),
+            src_seq: 0,
+            issued: 0,
+        }
+    }
+
+    /// A data-aware dispatch resolved the locations of `obj`.
+    pub fn note_lookup(&mut self, obj: ObjectId) {
+        self.demand.entry(obj).or_default().accum += 1.0;
+    }
+
+    /// A task needing `obj` was dispatched to `exec`, which does not hold
+    /// it — unmet demand at that executor.
+    pub fn note_remote_placement(&mut self, obj: ObjectId, exec: ExecutorId) {
+        Self::bump_wanter(self.demand.entry(obj).or_default(), exec);
+    }
+
+    /// Executor `dst` fetched `obj` from a peer cache.
+    pub fn note_peer_fetch(&mut self, obj: ObjectId, dst: ExecutorId) {
+        let d = self.demand.entry(obj).or_default();
+        d.accum += 1.0;
+        Self::bump_wanter(d, dst);
+    }
+
+    fn bump_wanter(d: &mut Demand, exec: ExecutorId) {
+        match d.wanters.iter_mut().find(|(e, _)| *e == exec) {
+            Some((_, w)) => *w += 1.0,
+            None => d.wanters.push((exec, 1.0)),
+        }
+    }
+
+    /// A newly provisioned executor joined; pre-stage it at the next
+    /// evaluation.
+    pub fn executor_joined(&mut self, exec: ExecutorId) {
+        if !self.pending_joins.contains(&exec) {
+            self.pending_joins.push(exec);
+        }
+    }
+
+    /// An executor left: forget its unmet demand and any staging
+    /// transfers targeting it (the driver abandons those).
+    pub fn executor_dropped(&mut self, exec: ExecutorId) {
+        self.pending_joins.retain(|&e| e != exec);
+        self.inflight.retain(|&(_, d)| d != exec);
+        for d in self.demand.values_mut() {
+            d.wanters.retain(|&(e, _)| e != exec);
+        }
+    }
+
+    /// The driver finished (or abandoned) the staging transfer behind a
+    /// directive; the slot is free for future replication.
+    pub fn on_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
+        if let Some(pos) = self.inflight.iter().position(|&(o, d)| o == obj && d == dst) {
+            self.inflight.swap_remove(pos);
+        }
+    }
+
+    /// Smoothed demand for `obj` (0.0 if never seen).
+    pub fn demand_of(&self, obj: ObjectId) -> f64 {
+        self.demand.get(&obj).map(|d| d.ewma).unwrap_or(0.0)
+    }
+
+    /// Directives issued but not yet confirmed staged.
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Lifetime directives issued.
+    pub fn directives_issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// One evaluation round: decay demand, pre-stage pending joiners,
+    /// replicate hot objects. `executors` is the sorted set of currently
+    /// registered executors; `index` is the live cache-location index.
+    ///
+    /// Every returned directive satisfies: `src` holds the object, `dst`
+    /// is registered, `dst` neither holds it nor has a stage in flight,
+    /// and holders + in-flight stages stay ≤ `max_replicas`.
+    pub fn evaluate(
+        &mut self,
+        index: &dyn DataIndex,
+        executors: &[ExecutorId],
+    ) -> Vec<ReplicaDirective> {
+        let alpha = self.cfg.ewma_alpha.clamp(0.0, 1.0);
+        for d in self.demand.values_mut() {
+            d.ewma = (1.0 - alpha) * d.ewma + alpha * d.accum;
+            d.accum = 0.0;
+            for w in &mut d.wanters {
+                w.1 *= 1.0 - alpha;
+            }
+            d.wanters.retain(|&(_, w)| w >= 0.05);
+        }
+        self.demand
+            .retain(|_, d| d.ewma >= 1e-3 || !d.wanters.is_empty());
+
+        // Hottest first; ties to the lower object id (determinism —
+        // FxHashMap iteration order must never leak into placement).
+        let mut hot: Vec<(ObjectId, f64)> =
+            self.demand.iter().map(|(&o, d)| (o, d.ewma)).collect();
+        hot.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+
+        let mut dirs: Vec<ReplicaDirective> = Vec::new();
+        let budget = self.cfg.max_inflight.saturating_sub(self.inflight.len());
+
+        // Re-replication on join: pre-stage the hottest objects onto each
+        // joiner before demand-driven growth takes its turn. A joiner
+        // that gets nothing only because the staging budget ran dry is
+        // re-queued for the next round — budget pressure must delay the
+        // prestage, never silently skip it.
+        let joins = std::mem::take(&mut self.pending_joins);
+        let mut deferred: Vec<ExecutorId> = Vec::new();
+        for e in joins {
+            if executors.binary_search(&e).is_err() {
+                continue; // joined and left between evaluations
+            }
+            if dirs.len() >= budget {
+                deferred.push(e);
+                continue;
+            }
+            let mut staged = 0usize;
+            for &(obj, _) in &hot {
+                if staged >= self.cfg.prestage_top_k || dirs.len() >= budget {
+                    break;
+                }
+                if let Some(d) = self.try_stage(obj, e, index) {
+                    dirs.push(d);
+                    staged += 1;
+                }
+            }
+            if staged == 0 && dirs.len() >= budget {
+                deferred.push(e);
+            }
+        }
+        self.pending_joins = deferred;
+
+        // Demand-driven growth: one new copy per hot object per round, so
+        // replica sets grow while demand persists and freeze when it
+        // decays (eviction then reclaims the space).
+        for &(obj, ewma) in &hot {
+            if dirs.len() >= budget {
+                break;
+            }
+            if ewma < self.cfg.demand_threshold {
+                break; // sorted: everything after is colder
+            }
+            if let Some(dst) = self.choose_dst(obj, index, executors) {
+                if let Some(d) = self.try_stage(obj, dst, index) {
+                    dirs.push(d);
+                }
+            }
+        }
+        self.issued += dirs.len() as u64;
+        dirs
+    }
+
+    /// Policy choice of the destination for the next replica of `obj`
+    /// among registered non-holders without a stage in flight.
+    fn choose_dst(
+        &self,
+        obj: ObjectId,
+        index: &dyn DataIndex,
+        executors: &[ExecutorId],
+    ) -> Option<ExecutorId> {
+        let holders = index.locations(obj);
+        let inflight = self.inflight_for(obj);
+        let candidates: Vec<ExecutorId> = executors
+            .iter()
+            .copied()
+            .filter(|e| holders.binary_search(e).is_err())
+            .filter(|e| !self.inflight.iter().any(|&(o, d)| o == obj && d == *e))
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let wanters: &[(ExecutorId, f64)] = self
+            .demand
+            .get(&obj)
+            .map(|d| d.wanters.as_slice())
+            .unwrap_or(&[]);
+        Some(self.cfg.policy.choose(
+            obj,
+            &candidates,
+            holders.len() + inflight,
+            index,
+            wanters,
+        ))
+    }
+
+    fn inflight_for(&self, obj: ObjectId) -> usize {
+        self.inflight.iter().filter(|&&(o, _)| o == obj).count()
+    }
+
+    /// Issue a directive staging `obj` to `dst` if every precondition
+    /// holds (object has a holder, dst is not one, cap not exceeded, no
+    /// duplicate in flight).
+    fn try_stage(
+        &mut self,
+        obj: ObjectId,
+        dst: ExecutorId,
+        index: &dyn DataIndex,
+    ) -> Option<ReplicaDirective> {
+        let holders = index.locations(obj);
+        if holders.is_empty() || holders.binary_search(&dst).is_ok() {
+            return None;
+        }
+        if self.inflight.iter().any(|&(o, d)| o == obj && d == dst) {
+            return None;
+        }
+        if holders.len() + self.inflight_for(obj) >= self.cfg.max_replicas.max(1) {
+            return None;
+        }
+        let src = holders[self.src_seq % holders.len()];
+        self.src_seq = self.src_seq.wrapping_add(1);
+        self.inflight.push((obj, dst));
+        Some(ReplicaDirective { obj, src, dst })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::central::CentralIndex;
+
+    fn cfg() -> ReplicationConfig {
+        ReplicationConfig {
+            enabled: true,
+            max_replicas: 3,
+            demand_threshold: 1.0,
+            ewma_alpha: 0.5,
+            prestage_top_k: 2,
+            max_inflight: 8,
+            ..ReplicationConfig::default()
+        }
+    }
+
+    fn idx_with(entries: &[(u64, usize)]) -> CentralIndex {
+        let mut idx = CentralIndex::new();
+        for &(o, e) in entries {
+            idx.insert(ObjectId(o), e);
+        }
+        idx
+    }
+
+    #[test]
+    fn cold_objects_are_not_replicated() {
+        let mut m = ReplicationManager::new(cfg());
+        let idx = idx_with(&[(1, 0)]);
+        // One lookup is below the sustained threshold after smoothing.
+        m.note_lookup(ObjectId(1));
+        let dirs = m.evaluate(&idx, &[0, 1, 2]);
+        assert!(dirs.is_empty(), "ewma 0.5 < threshold 1.0: {dirs:?}");
+    }
+
+    #[test]
+    fn hot_object_gets_one_replica_per_round_up_to_cap() {
+        let mut m = ReplicationManager::new(cfg());
+        let mut idx = idx_with(&[(1, 0)]);
+        let all = [0usize, 1, 2, 3];
+        for round in 0..4 {
+            for _ in 0..8 {
+                m.note_lookup(ObjectId(1));
+            }
+            let room = idx.locations(ObjectId(1)).len() + m.inflight_len() < 3;
+            let dirs = m.evaluate(&idx, &all);
+            if room {
+                assert_eq!(dirs.len(), 1, "round {round}: one copy per round");
+            } else {
+                assert!(dirs.is_empty(), "round {round}: cap reached");
+            }
+            for d in dirs {
+                assert_eq!(d.obj, ObjectId(1));
+                assert!(idx.locations(d.obj).binary_search(&d.src).is_ok());
+                assert!(idx.locations(d.obj).binary_search(&d.dst).is_err());
+                // Driver stages it.
+                idx.insert(d.obj, d.dst);
+                m.on_staged(d.obj, d.dst);
+            }
+            assert!(
+                idx.locations(ObjectId(1)).len() <= 3,
+                "max_replicas exceeded"
+            );
+        }
+        assert_eq!(idx.locations(ObjectId(1)).len(), 3);
+    }
+
+    #[test]
+    fn inflight_counts_toward_the_cap_and_deduplicates() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            max_replicas: 2,
+            ..cfg()
+        });
+        let idx = idx_with(&[(1, 0)]);
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        let dirs = m.evaluate(&idx, &[0, 1, 2]);
+        assert_eq!(dirs.len(), 1);
+        // Directive not yet staged: holders(1) + inflight(1) == cap.
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        assert!(m.evaluate(&idx, &[0, 1, 2]).is_empty());
+        m.on_staged(dirs[0].obj, dirs[0].dst);
+        assert_eq!(m.inflight_len(), 0);
+    }
+
+    #[test]
+    fn demand_decay_backs_off() {
+        let mut m = ReplicationManager::new(cfg());
+        let idx = idx_with(&[(1, 0), (1, 1)]);
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        assert_eq!(m.evaluate(&idx, &[0, 1, 2]).len(), 1);
+        m.on_staged(ObjectId(1), 2);
+        // No new demand: the EWMA halves each round and drops below the
+        // threshold, so no further copies are requested.
+        let mut quiet = 0;
+        for _ in 0..6 {
+            if m.evaluate(&idx, &[0, 1, 2]).is_empty() {
+                quiet += 1;
+            }
+        }
+        assert!(quiet >= 5, "decayed demand kept replicating");
+        assert!(m.demand_of(ObjectId(1)) < 1.0);
+    }
+
+    #[test]
+    fn joiner_is_prestaged_with_hottest_objects() {
+        let mut m = ReplicationManager::new(cfg());
+        let idx = idx_with(&[(1, 0), (2, 0), (3, 0)]);
+        // Heat objects 1 (hottest) and 2; object 3 stays cold.
+        for _ in 0..9 {
+            m.note_lookup(ObjectId(1));
+        }
+        for _ in 0..4 {
+            m.note_lookup(ObjectId(2));
+        }
+        let _ = m.evaluate(&idx, &[0]);
+        m.executor_joined(7);
+        let dirs = m.evaluate(&idx, &[0, 7]);
+        // prestage_top_k = 2: the two hottest objects land on the joiner
+        // (demand-driven growth may add more, but the joiner directives
+        // come first).
+        assert!(dirs.len() >= 2, "{dirs:?}");
+        assert_eq!(dirs[0], ReplicaDirective { obj: ObjectId(1), src: 0, dst: 7 });
+        assert_eq!(dirs[1].obj, ObjectId(2));
+        assert_eq!(dirs[1].dst, 7);
+    }
+
+    #[test]
+    fn joiner_prestage_defers_under_budget_pressure() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            max_inflight: 1,
+            max_replicas: 8,
+            ..cfg()
+        });
+        let mut idx = idx_with(&[(1, 0)]);
+        for _ in 0..9 {
+            m.note_lookup(ObjectId(1));
+        }
+        // Demand replication fills the whole staging budget...
+        let dirs = m.evaluate(&idx, &[0, 1]);
+        assert_eq!(dirs.len(), 1);
+        // ...then an executor joins while the budget is exhausted: its
+        // prestage must be deferred, not dropped.
+        m.executor_joined(7);
+        assert!(m.evaluate(&idx, &[0, 1, 7]).is_empty());
+        idx.insert(dirs[0].obj, dirs[0].dst);
+        m.on_staged(dirs[0].obj, dirs[0].dst);
+        let dirs = m.evaluate(&idx, &[0, 1, 7]);
+        assert_eq!(dirs.len(), 1, "deferred joiner prestaged next round");
+        assert_eq!(dirs[0].dst, 7);
+    }
+
+    #[test]
+    fn dropped_executor_is_forgotten() {
+        let mut m = ReplicationManager::new(cfg());
+        let idx = idx_with(&[(1, 0)]);
+        for _ in 0..8 {
+            m.note_peer_fetch(ObjectId(1), 2);
+        }
+        let dirs = m.evaluate(&idx, &[0, 1, 2]);
+        assert_eq!(dirs.len(), 1);
+        m.executor_dropped(dirs[0].dst);
+        assert_eq!(m.inflight_len(), 0, "in-flight to the dead dst cleared");
+        m.executor_joined(5);
+        m.executor_dropped(5);
+        let dirs = m.evaluate(&idx, &[0, 1, 2]);
+        assert!(dirs.iter().all(|d| d.dst != 5), "no prestage to a ghost");
+    }
+
+    #[test]
+    fn co_locate_places_toward_the_asking_executor() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            policy: PlacementPolicy::CoLocate,
+            ..cfg()
+        });
+        let idx = idx_with(&[(1, 0)]);
+        for _ in 0..8 {
+            m.note_peer_fetch(ObjectId(1), 4);
+        }
+        let dirs = m.evaluate(&idx, &[0, 2, 4, 6]);
+        assert_eq!(dirs.len(), 1);
+        assert_eq!(dirs[0].dst, 4, "replica follows the unmet demand");
+    }
+}

@@ -1,0 +1,203 @@
+//! Replica-placement policies.
+//!
+//! Once the [`super::ReplicationManager`] decides an object is hot enough
+//! to deserve another copy, *where* that copy lands is a policy choice —
+//! and per "Data Placement and Replica Selection for Improving
+//! Co-location in Distributed Environments" (arXiv:1302.4168) the choice
+//! matters as much as the replica count. Three variants:
+//!
+//! * [`PlacementPolicy::LeastLoaded`] — the executor caching the fewest
+//!   objects takes the copy: replicas gravitate toward free cache space,
+//!   spreading eviction pressure evenly.
+//! * [`PlacementPolicy::HashSpread`] — a deterministic hash of
+//!   (object, replica ordinal) picks the destination: copies of one
+//!   object land on uncorrelated executors, so no node becomes the
+//!   second home of *every* hot object.
+//! * [`PlacementPolicy::CoLocate`] — the copy goes to the executor whose
+//!   recent tasks most wanted the object without holding it (the demand
+//!   signal the manager tracks per executor): data moves *toward* the
+//!   compute that keeps asking for it, maximizing future local hits.
+//!
+//! All three are pure functions of (object, candidates, index state,
+//! demand state), so replica placement — like dispatch — replays
+//! identically run over run and is index-backend-invariant.
+
+use crate::index::central::ExecutorId;
+use crate::index::DataIndex;
+use crate::storage::object::ObjectId;
+
+/// Replica destination selector (config / CLI `--replication <policy>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Fewest cached objects wins (ties to the lower id) — the default.
+    #[default]
+    LeastLoaded,
+    /// Deterministic hash of (object, replica ordinal) over the
+    /// candidates — decorrelates the replica sets of different objects.
+    HashSpread,
+    /// Strongest recent unmet demand wins; falls back to least-loaded
+    /// when no executor has asked for the object yet.
+    CoLocate,
+}
+
+impl PlacementPolicy {
+    /// Parse from config/CLI text.
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "least-loaded" => Some(PlacementPolicy::LeastLoaded),
+            "hash-spread" | "hash" => Some(PlacementPolicy::HashSpread),
+            "co-locate" | "colocate" | "co-location" => Some(PlacementPolicy::CoLocate),
+            _ => None,
+        }
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::HashSpread => "hash-spread",
+            PlacementPolicy::CoLocate => "co-locate",
+        }
+    }
+
+    /// Pick the destination for the next replica of `obj`.
+    ///
+    /// `candidates` is the sorted, non-empty set of registered executors
+    /// that neither hold the object nor have a staging transfer of it in
+    /// flight; `ordinal` is the replica number being created (current
+    /// holders + in-flight copies); `wanters` is the manager's decayed
+    /// per-executor unmet-demand weights for `obj`.
+    pub fn choose(
+        &self,
+        obj: ObjectId,
+        candidates: &[ExecutorId],
+        ordinal: usize,
+        index: &dyn DataIndex,
+        wanters: &[(ExecutorId, f64)],
+    ) -> ExecutorId {
+        debug_assert!(!candidates.is_empty());
+        match self {
+            PlacementPolicy::LeastLoaded => least_loaded(candidates, index),
+            PlacementPolicy::HashSpread => {
+                let h = splitmix64(obj.0 ^ ((ordinal as u64) << 32) ^ 0x9E37_79B9_7F4A_7C15);
+                candidates[(h % candidates.len() as u64) as usize]
+            }
+            PlacementPolicy::CoLocate => {
+                let mut best: Option<(f64, ExecutorId)> = None;
+                for &e in candidates {
+                    let w = wanters
+                        .iter()
+                        .find(|(we, _)| *we == e)
+                        .map(|(_, w)| *w)
+                        .unwrap_or(0.0);
+                    if w <= 0.0 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((bw, be)) => w > bw || (w == bw && e < be),
+                    };
+                    if better {
+                        best = Some((w, e));
+                    }
+                }
+                match best {
+                    Some((_, e)) => e,
+                    None => least_loaded(candidates, index),
+                }
+            }
+        }
+    }
+}
+
+fn least_loaded(candidates: &[ExecutorId], index: &dyn DataIndex) -> ExecutorId {
+    let mut best = candidates[0];
+    let mut best_load = index.objects_of(best).len();
+    for &e in &candidates[1..] {
+        let load = index.objects_of(e).len();
+        if load < best_load {
+            best = e;
+            best_load = load;
+        }
+    }
+    best
+}
+
+/// SplitMix64 finalizer — a tiny, well-mixed stateless hash.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::central::CentralIndex;
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(
+            PlacementPolicy::parse("least-loaded"),
+            Some(PlacementPolicy::LeastLoaded)
+        );
+        assert_eq!(
+            PlacementPolicy::parse("hash_spread"),
+            Some(PlacementPolicy::HashSpread)
+        );
+        assert_eq!(
+            PlacementPolicy::parse("Co-Locate"),
+            Some(PlacementPolicy::CoLocate)
+        );
+        assert_eq!(PlacementPolicy::parse("random"), None);
+        assert_eq!(PlacementPolicy::CoLocate.label(), "co-locate");
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptier_executor() {
+        let mut idx = CentralIndex::new();
+        idx.insert(ObjectId(1), 0);
+        idx.insert(ObjectId(2), 0);
+        idx.insert(ObjectId(3), 1);
+        // Executor 2 caches nothing at all.
+        let pick =
+            PlacementPolicy::LeastLoaded.choose(ObjectId(9), &[0, 1, 2], 1, &idx, &[]);
+        assert_eq!(pick, 2);
+        // Ties go to the lower id (0 and 1 both hold one object).
+        idx.insert(ObjectId(4), 2);
+        let pick =
+            PlacementPolicy::LeastLoaded.choose(ObjectId(9), &[0, 1, 2], 1, &idx, &[]);
+        assert_eq!(pick, 1, "1 holds one object, 0 holds two");
+    }
+
+    #[test]
+    fn hash_spread_is_deterministic_and_varies_by_ordinal() {
+        let idx = CentralIndex::new();
+        let cands = [0, 1, 2, 3, 4, 5, 6, 7];
+        let a = PlacementPolicy::HashSpread.choose(ObjectId(5), &cands, 1, &idx, &[]);
+        let b = PlacementPolicy::HashSpread.choose(ObjectId(5), &cands, 1, &idx, &[]);
+        assert_eq!(a, b, "same inputs, same pick");
+        // Different ordinals (or objects) must not all collapse onto one
+        // destination.
+        let picks: std::collections::BTreeSet<ExecutorId> = (1..16)
+            .map(|ord| PlacementPolicy::HashSpread.choose(ObjectId(5), &cands, ord, &idx, &[]))
+            .collect();
+        assert!(picks.len() > 2, "hash spread degenerated: {picks:?}");
+    }
+
+    #[test]
+    fn co_locate_follows_demand_and_falls_back() {
+        let idx = CentralIndex::new();
+        let wanters = [(3usize, 1.5), (5usize, 4.0)];
+        let pick = PlacementPolicy::CoLocate.choose(ObjectId(1), &[1, 3, 5], 1, &idx, &wanters);
+        assert_eq!(pick, 5, "strongest wanter wins");
+        // Wanter not in the candidate set: next-best candidate wanter.
+        let pick = PlacementPolicy::CoLocate.choose(ObjectId(1), &[1, 3], 1, &idx, &wanters);
+        assert_eq!(pick, 3);
+        // No wanters at all: least-loaded fallback (empty index: ties to
+        // the first candidate).
+        let pick = PlacementPolicy::CoLocate.choose(ObjectId(1), &[1, 3], 1, &idx, &[]);
+        assert_eq!(pick, 1);
+    }
+}

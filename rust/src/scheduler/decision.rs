@@ -12,6 +12,12 @@ use crate::storage::object::{Catalog, ObjectId};
 /// (§3.2.2: "the centralized scheduler includes the necessary information
 /// to locate needed data ... without further lookups incurred at the
 /// executors").
+///
+/// When an object has multiple holders (replicas), the hint list is
+/// *ranked*, not merely sorted: [`SchedView::hints_for`] rotates the
+/// ascending holder list by the task id, so consecutive tasks try
+/// different replicas first and peer-fetch load spreads across copies
+/// instead of hammering the lowest-id holder.
 pub type LocationHints = HashMap<ObjectId, Vec<ExecutorId>>;
 
 /// What the dispatcher decided to do with one task.
@@ -59,8 +65,21 @@ impl<'a> SchedView<'a> {
             .sum()
     }
 
+    /// Deterministic replica-spreading offset: equivalent replicas are
+    /// ranked by rotating the candidate list by the task id, so back-to-
+    /// back tasks fan out across copies instead of all picking the
+    /// lowest-id holder. Purely a function of task identity and index
+    /// *contents* — never of the index backend — so placement stays
+    /// backend-invariant and replays identically.
+    pub fn spread_offset(task: &Task) -> usize {
+        task.id.0 as usize
+    }
+
     /// Best executor among `members` (a sorted slice — `idle` or `all`)
-    /// by cached bytes over `task`'s inputs, with ties to the lower id.
+    /// by cached bytes over `task`'s inputs. Ties between executors
+    /// holding the *same* cached bytes (replicas of the task's inputs)
+    /// rotate by [`SchedView::spread_offset`], spreading load across the
+    /// copies the replication manager creates.
     ///
     /// Candidates come from `index.locations()` per input, so the cost is
     /// O(inputs × replicas) — independent of cluster size — and executors
@@ -88,26 +107,42 @@ impl<'a> SchedView<'a> {
                 }
             }
         }
-        let mut best: Option<(ExecutorId, u64)> = None;
-        for &(e, s) in &per_exec {
-            let better = match best {
-                None => true,
-                Some((be, bs)) => s > bs || (s == bs && e < be),
-            };
-            if better {
-                best = Some((e, s));
-            }
-        }
-        best
+        Self::rotate_tied(&per_exec, task)
     }
 
-    /// Build location hints for every input of `task`.
+    /// The one spread rule: among `scored` executors, pick the max score;
+    /// executors tied at the max (replicas of the task's inputs) rotate
+    /// by [`SchedView::spread_offset`]. Shared by [`best_holder`] and the
+    /// core's wait-queue window scan so the two dispatch paths can never
+    /// diverge on how replicas are ranked.
+    ///
+    /// [`best_holder`]: SchedView::best_holder
+    pub fn rotate_tied(scored: &[(ExecutorId, u64)], task: &Task) -> Option<(ExecutorId, u64)> {
+        let best = scored.iter().map(|&(_, s)| s).max()?;
+        let mut tied: Vec<ExecutorId> = scored
+            .iter()
+            .filter(|&&(_, s)| s == best)
+            .map(|&(e, _)| e)
+            .collect();
+        tied.sort_unstable();
+        Some((tied[Self::spread_offset(task) % tied.len()], best))
+    }
+
+    /// Build location hints for every input of `task`, each holder list
+    /// ranked by rotating the ascending locations by
+    /// [`SchedView::spread_offset`] (executors try the first entry
+    /// first, so ranking is what spreads peer-fetch sources).
     pub fn hints_for(&self, task: &Task) -> LocationHints {
+        let rot = Self::spread_offset(task);
         let mut hints = LocationHints::new();
         for &obj in &task.inputs {
             let locs = self.index.locations(obj);
             if !locs.is_empty() {
-                hints.insert(obj, locs.to_vec());
+                let r = rot % locs.len();
+                let mut ranked = Vec::with_capacity(locs.len());
+                ranked.extend_from_slice(&locs[r..]);
+                ranked.extend_from_slice(&locs[..r]);
+                hints.insert(obj, ranked);
             }
         }
         hints
@@ -148,7 +183,7 @@ mod tests {
     }
 
     #[test]
-    fn best_holder_scores_members_only_with_low_id_ties() {
+    fn best_holder_scores_members_and_rotates_replica_ties() {
         let (idx, cat) = setup();
         let view = SchedView {
             idle: &[0],
@@ -161,11 +196,14 @@ mod tests {
         assert_eq!(view.best_holder(&task, view.all), Some((0, 150)));
         // Restricted to a membership slice that excludes executor 0.
         assert_eq!(view.best_holder(&task, &[1]), Some((1, 50)));
-        // A tie (object 2 alone) goes to the lower id.
+        // Replica ties (object 2 alone, held by 0 and 1) rotate by task
+        // id: even tasks hit one copy, odd tasks the other.
         let tie = Task::with_inputs(TaskId(2), vec![ObjectId(2)]);
         assert_eq!(view.best_holder(&tie, view.all), Some((0, 50)));
+        let tie = Task::with_inputs(TaskId(3), vec![ObjectId(2)]);
+        assert_eq!(view.best_holder(&tie, view.all), Some((1, 50)));
         // Nothing held by the members: no candidate.
-        let task3 = Task::with_inputs(TaskId(3), vec![ObjectId(3)]);
+        let task3 = Task::with_inputs(TaskId(4), vec![ObjectId(3)]);
         assert_eq!(view.best_holder(&task3, view.all), None);
     }
 
@@ -182,5 +220,21 @@ mod tests {
         let hints = view.hints_for(&task);
         assert_eq!(hints.get(&ObjectId(1)), Some(&vec![0]));
         assert!(!hints.contains_key(&ObjectId(3)));
+    }
+
+    #[test]
+    fn hints_rank_replicas_by_task_id() {
+        let (idx, cat) = setup();
+        let view = SchedView {
+            idle: &[0],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        // Object 2 lives on 0 and 1: even task ids rank 0 first, odd 1.
+        let even = view.hints_for(&Task::with_inputs(TaskId(2), vec![ObjectId(2)]));
+        assert_eq!(even.get(&ObjectId(2)), Some(&vec![0, 1]));
+        let odd = view.hints_for(&Task::with_inputs(TaskId(3), vec![ObjectId(2)]));
+        assert_eq!(odd.get(&ObjectId(2)), Some(&vec![1, 0]));
     }
 }

@@ -114,22 +114,28 @@ mod tests {
     }
 
     #[test]
-    fn equal_bytes_tie_breaks_to_lower_id() {
+    fn equal_bytes_spread_across_replicas_by_task_id() {
         let mut idx = CentralIndex::new();
         let mut cat = Catalog::new();
         cat.insert(ObjectId(1), 10);
         idx.insert(ObjectId(1), 4);
-        idx.insert(ObjectId(1), 7); // both idle, same bytes
+        idx.insert(ObjectId(1), 7); // both idle, same bytes: replicas
         let view = SchedView {
             idle: &[4, 7],
             all: &[4, 7],
             index: &idx,
             catalog: &cat,
         };
-        let task = Task::with_inputs(TaskId(1), vec![ObjectId(1)]);
-        match decide(&task, &view) {
-            Decision::Dispatch { executor, .. } => assert_eq!(executor, 4),
-            other => panic!("unexpected: {other:?}"),
-        }
+        // Consecutive tasks rotate across the tied copies instead of all
+        // landing on the lowest id.
+        let picks: Vec<_> = (0..2u64)
+            .map(
+                |i| match decide(&Task::with_inputs(TaskId(i), vec![ObjectId(1)]), &view) {
+                    Decision::Dispatch { executor, .. } => executor,
+                    other => panic!("unexpected: {other:?}"),
+                },
+            )
+            .collect();
+        assert_eq!(picks, vec![4, 7]);
     }
 }

@@ -2,7 +2,9 @@
 //! crate's deterministic PRNG — `proptest` is unavailable offline).
 //!
 //! Each property runs many randomized cases; failures print the seed so
-//! a case can be replayed exactly.
+//! a case can be replayed exactly. The case count defaults to 50 and is
+//! overridable via `PROPTEST_CASES` (the nightly CI job runs 2048 for
+//! deep fuzzing without slowing PR builds).
 
 use datadiffusion::cache::store::{CacheEvent, DataCache};
 use datadiffusion::cache::EvictionPolicy;
@@ -17,7 +19,13 @@ use datadiffusion::sim::flownet::{FlowNetwork, ResourceId};
 use datadiffusion::storage::object::{Catalog, ObjectId};
 use datadiffusion::util::rng::Rng;
 
-const CASES: u64 = 50;
+/// Randomized cases per property: `PROPTEST_CASES` env override, else 50.
+fn cases() -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50)
+}
 
 /// Cache invariants under random op sequences, all four policies:
 /// capacity respected; hit+miss accounting conserved; every eviction
@@ -30,7 +38,7 @@ fn prop_cache_invariants() {
         EvictionPolicy::Lru,
         EvictionPolicy::Lfu,
     ] {
-        for case in 0..CASES {
+        for case in 0..cases() {
             let seed = 0xCAFE + case;
             let mut rng = Rng::new(seed);
             let capacity = rng.range_u64(10, 200);
@@ -93,7 +101,7 @@ fn prop_cache_invariants() {
 #[test]
 fn prop_index_matches_model() {
     use std::collections::{BTreeMap, BTreeSet};
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = 0xBEEF + case;
         let mut rng = Rng::new(seed);
         let mut idx = CentralIndex::new();
@@ -152,7 +160,7 @@ fn prop_no_task_lost_or_duplicated() {
         DispatchPolicy::MaxCacheHit,
         DispatchPolicy::MaxComputeUtil,
     ] {
-        for case in 0..CASES {
+        for case in 0..cases() {
             let seed = 0xD15C + case;
             let mut rng = Rng::new(seed);
             let mut catalog = Catalog::new();
@@ -263,7 +271,7 @@ fn prop_backends_agree_on_placement() {
         hop_latency_s: 0.0,
         proc_s: 0.0,
     };
-    for case in 0..CASES * 2 {
+    for case in 0..cases() * 2 {
         let seed = 0xC02D + case;
         let mut rng = Rng::new(seed);
         let mut central = CentralIndex::new();
@@ -351,7 +359,7 @@ fn prop_churn_backends_agree_and_no_dangling_locations() {
         hop_latency_s: 0.0,
         proc_s: 0.0,
     };
-    for case in 0..CASES * 2 {
+    for case in 0..cases() * 2 {
         let seed = 0xC4C5 + case;
         let mut rng = Rng::new(seed);
         let mut central = CentralIndex::new();
@@ -418,12 +426,165 @@ fn prop_churn_backends_agree_and_no_dangling_locations() {
     }
 }
 
+/// Replication invariants under churn: a [`ReplicationManager`] driving
+/// mirrored Central/Chord indexes through arbitrary interleavings of
+/// join/leave, organic first copies, evictions, demand and staging —
+/// (a) no object ever exceeds `max_replicas` locations, (b) every
+/// directive stages from a live holder to a live non-holder, (c) both
+/// backends agree on every location set (so replication decisions, which
+/// read the index, are backend-invariant), and (d) no location ever
+/// references a departed executor.
+#[test]
+fn prop_replication_caps_and_liveness_under_churn() {
+    use datadiffusion::config::ReplicationConfig;
+    use datadiffusion::replication::{PlacementPolicy, ReplicationManager};
+    use std::collections::BTreeSet;
+
+    const N_OBJ: u64 = 12;
+    let zero = DhtModel {
+        hop_latency_s: 0.0,
+        proc_s: 0.0,
+    };
+    let policies = [
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::HashSpread,
+        PlacementPolicy::CoLocate,
+    ];
+    for case in 0..cases() * 2 {
+        let seed = 0x4E94 + case;
+        let mut rng = Rng::new(seed);
+        let max_replicas = rng.range_u64(1, 4) as usize;
+        let rcfg = ReplicationConfig {
+            enabled: true,
+            policy: policies[rng.index(policies.len())],
+            max_replicas,
+            demand_threshold: 0.5,
+            ewma_alpha: 0.7,
+            prestage_top_k: 2,
+            max_inflight: 6,
+            ..ReplicationConfig::default()
+        };
+        let mut mgr = ReplicationManager::new(rcfg);
+        let mut central = CentralIndex::new();
+        let mut chord = ChordIndex::new(zero, seed);
+        let mut live: BTreeSet<usize> = BTreeSet::new();
+        let mut next_exec = 0usize;
+        for step in 0..250 {
+            match rng.below(10) {
+                // Join: both overlays plus the manager's prestage queue.
+                0..=1 => {
+                    let e = next_exec;
+                    next_exec += 1;
+                    live.insert(e);
+                    DataIndex::executor_joined(&mut central, e);
+                    DataIndex::executor_joined(&mut chord, e);
+                    mgr.executor_joined(e);
+                }
+                // Leave: locations purge identically; manager forgets it.
+                2 => {
+                    if let Some(&e) = live.iter().nth(rng.index(live.len().max(1))) {
+                        live.remove(&e);
+                        let a: BTreeSet<ObjectId> =
+                            central.drop_executor(e).into_iter().collect();
+                        let b: BTreeSet<ObjectId> =
+                            DataIndex::drop_executor(&mut chord, e).into_iter().collect();
+                        assert_eq!(a, b, "seed={seed} step={step}: orphan sets differ");
+                        mgr.executor_dropped(e);
+                    }
+                }
+                // Organic first copy (a task's cold fetch): only when the
+                // object has no location, so every *additional* copy in
+                // this model is manager-created and the cap is meaningful.
+                3..=4 => {
+                    if let Some(&e) = live.iter().nth(rng.index(live.len().max(1))) {
+                        let obj = ObjectId(rng.below(N_OBJ));
+                        if central.locations(obj).is_empty() {
+                            DataIndex::insert(&mut central, obj, e);
+                            DataIndex::insert(&mut chord, obj, e);
+                        }
+                    }
+                }
+                // Eviction (any executor, live or departed — no-op then).
+                5 => {
+                    let e = rng.index(next_exec.max(1));
+                    let obj = ObjectId(rng.below(N_OBJ));
+                    DataIndex::remove(&mut central, obj, e);
+                    DataIndex::remove(&mut chord, obj, e);
+                }
+                // Demand signals.
+                6..=7 => {
+                    let obj = ObjectId(rng.below(N_OBJ));
+                    for _ in 0..rng.range_u64(1, 5) {
+                        mgr.note_lookup(obj);
+                    }
+                    if let Some(&e) = live.iter().nth(rng.index(live.len().max(1))) {
+                        mgr.note_peer_fetch(obj, e);
+                    }
+                }
+                // Evaluate: check every directive, then stage or abandon.
+                _ => {
+                    let executors: Vec<usize> = live.iter().copied().collect();
+                    for d in mgr.evaluate(&central, &executors) {
+                        assert!(
+                            live.contains(&d.src),
+                            "seed={seed} step={step}: src {} not live",
+                            d.src
+                        );
+                        assert!(
+                            live.contains(&d.dst),
+                            "seed={seed} step={step}: dst {} not live",
+                            d.dst
+                        );
+                        assert!(
+                            central.locations(d.obj).binary_search(&d.src).is_ok(),
+                            "seed={seed} step={step}: src {} does not hold {}",
+                            d.src,
+                            d.obj
+                        );
+                        assert!(
+                            central.locations(d.obj).binary_search(&d.dst).is_err(),
+                            "seed={seed} step={step}: dst {} already holds {}",
+                            d.dst,
+                            d.obj
+                        );
+                        if rng.below(4) > 0 {
+                            DataIndex::insert(&mut central, d.obj, d.dst);
+                            DataIndex::insert(&mut chord, d.obj, d.dst);
+                        }
+                        mgr.on_staged(d.obj, d.dst);
+                    }
+                }
+            }
+            for i in 0..N_OBJ {
+                let obj = ObjectId(i);
+                let a = central.locations(obj);
+                assert_eq!(
+                    a,
+                    DataIndex::locations(&chord, obj),
+                    "seed={seed} step={step}: backends disagree on {obj}"
+                );
+                assert!(
+                    a.len() <= max_replicas,
+                    "seed={seed} step={step}: {obj} has {} locations, cap {max_replicas}",
+                    a.len()
+                );
+                for &e in a {
+                    assert!(
+                        live.contains(&e),
+                        "seed={seed} step={step}: {obj} on departed executor {e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Scheduler-choice invariant: max-compute-util never picks an idle
 /// executor with fewer cached bytes than the best idle candidate.
 #[test]
 fn prop_max_compute_util_picks_best_idle() {
     use datadiffusion::scheduler::decision::{Decision, SchedView};
-    for case in 0..CASES * 4 {
+    for case in 0..cases() * 4 {
         let seed = 0x5EED + case;
         let mut rng = Rng::new(seed);
         let mut idx = CentralIndex::new();
@@ -480,7 +641,7 @@ fn prop_max_compute_util_picks_best_idle() {
 /// and all flows eventually complete.
 #[test]
 fn prop_flownet_conservation_and_completion() {
-    for case in 0..CASES {
+    for case in 0..cases() {
         let seed = 0xF10 + case;
         let mut rng = Rng::new(seed);
         let mut net = FlowNetwork::new();
@@ -539,7 +700,7 @@ fn prop_flownet_conservation_and_completion() {
 fn prop_astro_generator_locality_preserved() {
     use datadiffusion::workloads::astro;
     let cfg = datadiffusion::Config::with_nodes(4);
-    for case in 0..CASES {
+    for case in 0..cases() {
         let mut rng = Rng::new(0xA57 + case);
         let row = astro::TABLE2[rng.index(astro::TABLE2.len())];
         let scale = rng.range_f64(0.002, 0.2);
