@@ -265,6 +265,12 @@ pub struct ReplicationConfig {
     /// Ceiling on concurrent staging transfers (backpressure: replication
     /// must not saturate the peer-transfer paths tasks also use).
     pub max_inflight: usize,
+    /// Smoothed demand below which the manager actively releases the
+    /// k-th copy ([`crate::replication::ReplicaDirective::Drop`]) instead
+    /// of waiting for cache pressure. 0 (the default) disables active
+    /// teardown; set it below `demand_threshold` so growth and teardown
+    /// never chase each other.
+    pub release_threshold: f64,
 }
 
 impl Default for ReplicationConfig {
@@ -278,6 +284,27 @@ impl Default for ReplicationConfig {
             evaluate_interval_s: 5.0,
             prestage_top_k: 4,
             max_inflight: 8,
+            release_threshold: 0.0,
+        }
+    }
+}
+
+/// Metered transfer plane configuration (see [`crate::transfer`]).
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    /// Source-executor egress-utilization budget in (0, 1]: background
+    /// staging/prestage transfers are deferred while the source is
+    /// running hotter than this, and re-admitted as it drains. 1.0 (the
+    /// default) disables deferral — utilization cannot exceed 1 — which
+    /// reproduces the pre-refactor unmetered behavior. Foreground
+    /// transfers are never subject to the budget.
+    pub staging_budget: f64,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            staging_budget: 1.0,
         }
     }
 }
@@ -340,6 +367,8 @@ pub struct Config {
     pub provisioner: ProvisionerConfig,
     /// Demand-driven replication settings.
     pub replication: ReplicationConfig,
+    /// Metered transfer plane (staging admission control).
+    pub transfer: TransferConfig,
     /// Stacking application constants.
     pub app: AppConfig,
     /// Master RNG seed for workload generation and tie-breaking.
@@ -435,6 +464,23 @@ impl Config {
         r.prestage_top_k =
             doc.num_or("replication.prestage_top_k", r.prestage_top_k as f64) as usize;
         r.max_inflight = doc.num_or("replication.max_inflight", r.max_inflight as f64) as usize;
+        r.release_threshold = doc.num_or("replication.release_threshold", r.release_threshold);
+        if r.release_threshold > 0.0 && r.release_threshold >= r.demand_threshold {
+            return Err(crate::error::Error::Config(format!(
+                "replication.release_threshold ({}) must be below demand_threshold ({}) \
+                 or the manager would stage and tear down the same object in a loop",
+                r.release_threshold, r.demand_threshold
+            )));
+        }
+
+        let tr = &mut self.transfer;
+        tr.staging_budget = doc.num_or("transfer.staging_budget", tr.staging_budget);
+        if !(tr.staging_budget > 0.0 && tr.staging_budget <= 1.0) {
+            return Err(crate::error::Error::Config(format!(
+                "transfer.staging_budget must be in (0, 1], got {}",
+                tr.staging_budget
+            )));
+        }
 
         self.seed = doc.num_or("seed", self.seed as f64) as u64;
         Ok(())
@@ -541,6 +587,7 @@ ewma_alpha = 0.25
 evaluate_interval_s = 2.0
 prestage_top_k = 8
 max_inflight = 16
+release_threshold = 0.4
 "#,
         )
         .unwrap();
@@ -557,9 +604,37 @@ max_inflight = 16
         assert!((c.replication.evaluate_interval_s - 2.0).abs() < 1e-12);
         assert_eq!(c.replication.prestage_top_k, 8);
         assert_eq!(c.replication.max_inflight, 16);
+        assert!((c.replication.release_threshold - 0.4).abs() < 1e-12);
 
         let bad = parse::Doc::parse("[replication]\npolicy = \"closest\"").unwrap();
         assert!(Config::default().apply_doc(&bad).is_err());
+
+        // Teardown above the growth threshold would stage and drop the
+        // same object forever: rejected.
+        let bad = parse::Doc::parse(
+            "[replication]\ndemand_threshold = 0.5\nrelease_threshold = 0.8",
+        )
+        .unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn transfer_overrides_apply_and_validate() {
+        let doc = parse::Doc::parse("[transfer]\nstaging_budget = 0.35").unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert!((c.transfer.staging_budget - 0.35).abs() < 1e-12);
+        // Default disables deferral.
+        assert!((Config::default().transfer.staging_budget - 1.0).abs() < 1e-12);
+        // Out-of-range budgets are config errors.
+        for bad in ["0", "1.5", "-0.2"] {
+            let doc =
+                parse::Doc::parse(&format!("[transfer]\nstaging_budget = {bad}")).unwrap();
+            assert!(
+                Config::default().apply_doc(&doc).is_err(),
+                "budget {bad} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::cache::store::CacheEvent;
 use crate::config::{ReplicationConfig, SchedulerConfig};
 use crate::coordinator::task::{Task, TaskId};
 use crate::index::central::{CentralIndex, ExecutorId};
-use crate::index::{DataIndex, LookupCost};
+use crate::index::{ControlTraffic, DataIndex, LookupCost};
 use crate::replication::{ReplicaDirective, ReplicationManager};
 use crate::scheduler::decision::{Decision, LocationHints, SchedView};
 use crate::scheduler::queue::WaitQueue;
@@ -108,6 +108,24 @@ impl FalkonCore {
         self.index.as_ref()
     }
 
+    /// Drain the index backend's accumulated control-plane traffic
+    /// (Chord stabilization messages and misroute counts; zero on the
+    /// centralized backend). Drivers harvest this periodically — and once
+    /// at run end — into [`crate::coordinator::metrics::Metrics`].
+    pub fn take_index_control(&mut self) -> ControlTraffic {
+        self.index.take_control_traffic()
+    }
+
+    /// Fraction of `e`'s task slots currently busy (0.0 for an unknown
+    /// executor) — the live driver's egress-load proxy for the transfer
+    /// plane's admission controller.
+    pub fn busy_fraction(&self, e: ExecutorId) -> f64 {
+        self.slots
+            .get(&e)
+            .map(|s| s.busy as f64 / s.capacity.max(1) as f64)
+            .unwrap_or(0.0)
+    }
+
     /// Turn on demand-driven replication (no-op if `cfg.enabled` is
     /// false). Executors already registered are treated as warm members,
     /// not joiners — only later joins get pre-staged.
@@ -154,6 +172,16 @@ impl FalkonCore {
     pub fn replication_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
         if let Some(r) = self.repl.as_mut() {
             r.on_staged(obj, dst);
+        }
+    }
+
+    /// Driver notification: a [`ReplicaDirective::Drop`] was executed (or
+    /// abandoned — victim released, copy already gone). The cache/index
+    /// change itself flows through [`FalkonCore::apply_cache_events`]
+    /// like any other eviction.
+    pub fn replication_dropped(&mut self, obj: ObjectId, victim: ExecutorId) {
+        if let Some(r) = self.repl.as_mut() {
+            r.on_drop_done(obj, victim);
         }
     }
 
@@ -654,15 +682,82 @@ mod tests {
         }
         let dirs = c.poll_replication();
         assert_eq!(dirs.len(), 1, "hot object earns one copy per round");
-        let d = dirs[0];
-        assert_eq!(d.obj, ObjectId(5));
-        assert_eq!(d.src, 0, "only holder is the source");
-        assert_ne!(d.dst, 0);
+        let crate::replication::ReplicaDirective::Stage {
+            obj,
+            src,
+            dst,
+            prestage,
+        } = dirs[0]
+        else {
+            panic!("expected Stage, got {:?}", dirs[0]);
+        };
+        assert_eq!(obj, ObjectId(5));
+        assert_eq!(src, 0, "only holder is the source");
+        assert_ne!(dst, 0);
+        assert!(!prestage, "demand growth, not a join warm-up");
         // Driver stages it: cache event + completion notification.
-        c.apply_cache_events(d.dst, &[CacheEvent::Inserted(d.obj)]);
-        c.replication_staged(d.obj, d.dst);
+        c.apply_cache_events(dst, &[CacheEvent::Inserted(obj)]);
+        c.replication_staged(obj, dst);
         assert_eq!(c.index().locations(ObjectId(5)).len(), 2);
         assert_eq!(c.replica_location_entries(), 1);
+    }
+
+    #[test]
+    fn drop_directives_flow_through_the_core_on_decay() {
+        use crate::config::ReplicationConfig;
+
+        let mut c = core(DispatchPolicy::MaxComputeUtil);
+        for e in 0..3 {
+            c.register_executor(e);
+        }
+        c.enable_replication(&ReplicationConfig {
+            enabled: true,
+            // Cap = current copies: growth is impossible, so the decayed
+            // object goes straight to teardown.
+            max_replicas: 2,
+            demand_threshold: 1.0,
+            release_threshold: 0.5,
+            ewma_alpha: 1.0,
+            ..ReplicationConfig::default()
+        });
+        // Two copies of object 5 exist; demand never materializes, so the
+        // manager tears the second copy down.
+        c.apply_cache_events(0, &[CacheEvent::Inserted(ObjectId(5))]);
+        c.apply_cache_events(2, &[CacheEvent::Inserted(ObjectId(5))]);
+        // One lookup puts the object on the manager's radar (ewma 1.0 with
+        // alpha 1.0), then silence decays it to 0 next round.
+        c.submit(Task::with_inputs(TaskId(0), vec![ObjectId(5)]));
+        for o in c.try_dispatch() {
+            c.on_task_complete(o.executor, o.task.id, &[]);
+        }
+        let _ = c.poll_replication(); // ewma 1.0: neither hot (cap) nor cold
+        let dirs = c.poll_replication(); // ewma 0.0 < 0.5: teardown
+        assert_eq!(
+            dirs,
+            vec![crate::replication::ReplicaDirective::Drop {
+                obj: ObjectId(5),
+                victim: 2
+            }]
+        );
+        // Driver honors it: eviction event + confirmation.
+        c.apply_cache_events(2, &[CacheEvent::Evicted(ObjectId(5))]);
+        c.replication_dropped(ObjectId(5), 2);
+        assert_eq!(c.index().locations(ObjectId(5)), &[0]);
+        assert_eq!(c.replica_location_entries(), 0);
+    }
+
+    #[test]
+    fn busy_fraction_tracks_slots() {
+        let mut c = core(DispatchPolicy::FirstAvailable);
+        c.register_executor_with(0, 2);
+        assert_eq!(c.busy_fraction(0), 0.0);
+        assert_eq!(c.busy_fraction(9), 0.0, "unknown executor reads idle");
+        c.submit(Task::with_inputs(TaskId(0), vec![]));
+        let o = c.try_dispatch();
+        assert_eq!(o.len(), 1);
+        assert!((c.busy_fraction(0) - 0.5).abs() < 1e-12);
+        c.on_task_complete(0, TaskId(0), &[]);
+        assert_eq!(c.busy_fraction(0), 0.0);
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! into local / cache-to-cache / GPFS (Fig 12), and per-task data
 //! movement by source (Fig 13).
 
-use crate::index::LookupCost;
-use crate::util::stats::Summary;
+use crate::index::{ControlTraffic, LookupCost};
+use crate::util::stats::{Percentiles, Summary};
 
 /// Where bytes came from (the three arrows in the architecture figure).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +47,10 @@ pub struct PoolSample {
     /// shows replication growing during bursts and decaying with
     /// eviction.
     pub replicas: usize,
+    /// Cumulative staging transfers deferred by admission control at
+    /// sample time — the timeline shows when background replication was
+    /// held back to protect foreground bandwidth.
+    pub staging_deferred: u64,
 }
 
 impl PoolSample {
@@ -96,6 +100,10 @@ pub struct Metrics {
     pub index_cost_s: f64,
     /// Per-task end-to-end latency (submit → complete), seconds.
     pub task_latency: Summary,
+    /// Stored task-latency sample for tail percentiles (the QoS figure's
+    /// p99); fed together with `task_latency` by
+    /// [`Metrics::note_task_latency`].
+    pub task_latency_pcts: Percentiles,
     /// Per-task execution span (dispatch → complete), seconds.
     pub exec_latency: Summary,
     /// Time the first task was dispatched (experiment start).
@@ -128,6 +136,22 @@ pub struct Metrics {
     /// Local cache hits served by a manager-staged replica (demand the
     /// replication subsystem converted from peer/GPFS traffic).
     pub replica_hits: u64,
+    /// Replica copies actively released on demand decay
+    /// ([`crate::replication::ReplicaDirective::Drop`] honored by a
+    /// driver; pressure evictions not counted).
+    pub replicas_dropped: u64,
+    /// Background staging transfers deferred by the transfer plane's
+    /// admission controller (initial deferrals; re-deferral rounds while
+    /// queued are not re-counted).
+    pub staging_deferred: u64,
+    /// Index control-plane stabilization messages (Chord membership
+    /// maintenance; zero on the centralized backend).
+    pub stabilization_msgs: u64,
+    /// Lookups that misrouted through a stale finger between a
+    /// membership change and the next repair round (their extra hop and
+    /// latency are already inside `index_hops`/`index_cost_s`; this
+    /// counts how many lookups paid it).
+    pub index_misroutes: u64,
 }
 
 impl Metrics {
@@ -153,6 +177,29 @@ impl Metrics {
         self.index_cost_s += cost.latency_s;
     }
 
+    /// Fold harvested index control-plane traffic into the run totals:
+    /// stabilization messages and misroute counts, and the stabilization
+    /// latency lands in `index_cost_s` (misroute latency already arrived
+    /// through the affected lookups' own costs, so nothing is
+    /// double-charged).
+    pub fn add_control_traffic(&mut self, t: ControlTraffic) {
+        self.stabilization_msgs += t.stabilization_msgs;
+        self.index_misroutes += t.misroutes;
+        self.index_cost_s += t.latency_s;
+    }
+
+    /// Record one task's end-to-end latency (Summary + stored sample for
+    /// tail percentiles).
+    pub fn note_task_latency(&mut self, secs: f64) {
+        self.task_latency.add(secs);
+        self.task_latency_pcts.add(secs);
+    }
+
+    /// p99 of per-task end-to-end latency (NaN before the first task).
+    pub fn task_latency_p99(&mut self) -> f64 {
+        self.task_latency_pcts.quantile(0.99)
+    }
+
     /// Record one elastic-pool sample (hit counters are captured from
     /// the current totals) and keep the pool peak up to date. `replicas`
     /// is the index's current count of extra copies (entries − objects).
@@ -174,6 +221,7 @@ impl Metrics {
             peer_hits: self.peer_hits,
             gpfs_misses: self.gpfs_misses,
             replicas,
+            staging_deferred: self.staging_deferred,
         });
     }
 
@@ -291,6 +339,25 @@ mod tests {
     }
 
     #[test]
+    fn control_traffic_and_tail_latency_account() {
+        let mut m = Metrics::new();
+        m.add_control_traffic(ControlTraffic {
+            stabilization_msgs: 16,
+            misroutes: 3,
+            latency_s: 0.004,
+        });
+        m.add_control_traffic(ControlTraffic::default());
+        assert_eq!(m.stabilization_msgs, 16);
+        assert_eq!(m.index_misroutes, 3);
+        assert!((m.index_cost_s - 0.004).abs() < 1e-15);
+        for i in 1..=100 {
+            m.note_task_latency(i as f64);
+        }
+        assert_eq!(m.task_latency.count(), 100);
+        assert!((m.task_latency_p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
     fn pool_samples_track_peak_and_windowed_hits() {
         let mut m = Metrics::new();
         m.sample_pool(0.0, 2, 1, 10, 0);
@@ -306,6 +373,7 @@ mod tests {
         assert_eq!(m.peak_executors, 6);
         assert_eq!(m.pool_timeline.len(), 3);
         assert_eq!(m.pool_timeline[2].replicas, 5);
+        assert_eq!(m.pool_timeline[2].staging_deferred, 0);
         let w1 = m.pool_timeline[1].window_hit_ratio(&m.pool_timeline[0]);
         let w2 = m.pool_timeline[2].window_hit_ratio(&m.pool_timeline[1]);
         assert_eq!(w1, 0.0, "first window: all misses");

@@ -11,7 +11,12 @@
 //! * the coordinator owns `FalkonCore` and runs the dispatch loop; with
 //!   `provisioner.enabled` it also runs the DRP on wall-clock time,
 //!   spawning executor threads when the (simulated GRAM4-like) cluster
-//!   grants an allocation and reaping idle ones on release;
+//!   grants an allocation and reaping idle ones on release; replication
+//!   `Stage` messages pass through a [`LiveTransferPlane`]
+//!   ([`crate::transfer`]) that defers them while the source executor
+//!   runs over the staging budget (busy-slot fraction as the egress
+//!   proxy) and re-admits them as it drains, and `Drop` messages
+//!   actively release decayed replicas from cache directories;
 //! * each executor is a thread with an inbox (`mpsc::Sender<ExecMsg>`);
 //! * completions flow back on one shared channel;
 //! * PJRT compute runs on a dedicated **compute service** thread (the
@@ -34,10 +39,13 @@ use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::error::{Error, Result};
 use crate::index::central::ExecutorId;
 use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
+use crate::replication::ReplicaDirective;
 use crate::runtime::{PjrtEngine, StackRequest};
 use crate::scheduler::decision::LocationHints;
 use crate::storage::live::{pixels_of, read_object_file, LiveCacheDir, LiveStore};
 use crate::storage::object::{Catalog, DataFormat, ObjectId};
+use crate::transfer::live::{copy_into_cache, LiveTransferPlane};
+use crate::transfer::{Admission, TransferClass, TransferPlane, TransferRequest};
 use crate::workloads::sky;
 
 /// Message to an executor thread.
@@ -51,6 +59,9 @@ enum ExecMsg {
     /// (falling back to persistent storage if the source copy vanished)
     /// into this executor's cache.
     Stage { obj: ObjectId, src: ExecutorId },
+    /// Replica teardown: demand decayed, actively evict `obj` from this
+    /// executor's cache (file + cache entry) and report the eviction.
+    Drop { obj: ObjectId },
     Shutdown,
 }
 
@@ -80,10 +91,19 @@ struct StageReport {
     events: Vec<CacheEvent>,
 }
 
+/// Outcome of a replica-teardown request.
+struct DropReport {
+    exec: ExecutorId,
+    obj: ObjectId,
+    /// The eviction event (empty if the copy was already gone).
+    events: Vec<CacheEvent>,
+}
+
 /// Everything an executor thread can report back.
 enum Report {
     Done(Completion),
     Staged(StageReport),
+    Dropped(DropReport),
 }
 
 /// Request to the compute-service thread.
@@ -342,6 +362,11 @@ impl LiveCluster {
         // Manager-staged (executor, object) entries, for replica-hit
         // accounting; scrubbed on eviction and release.
         let mut staged: HashSet<(ExecutorId, ObjectId)> = HashSet::new();
+        // Metered transfer plane: Stage messages are admission-controlled
+        // against the source executor's busy-slot fraction (the live
+        // proxy for egress load), deferred while it runs over budget and
+        // re-admitted as it drains.
+        let mut plane = LiveTransferPlane::new(cfg.transfer.staging_budget);
 
         // Coordinator loop.
         let t0 = Instant::now();
@@ -441,6 +466,12 @@ impl LiveCluster {
                                         let _ = h.join();
                                     }
                                     let _orphans = core.deregister_executor(e);
+                                    // Deferred stagings touching the
+                                    // released executor are cancelled;
+                                    // free the manager's in-flight slots.
+                                    for req in plane.executor_released(e) {
+                                        core.replication_staged(req.obj, req.dst);
+                                    }
                                     staged.retain(|&(se, _)| se != e);
                                     let _ = std::fs::remove_dir_all(&cache_roots[e]);
                                     cluster.release(e);
@@ -450,6 +481,13 @@ impl LiveCluster {
                             }
                         }
                     }
+                    // Membership may have changed: harvest the index
+                    // backend's control-plane bill (Chord stabilization)
+                    // and the transfer plane's deferral count before
+                    // sampling the pool.
+                    let ct = core.take_index_control();
+                    metrics.add_control_traffic(ct);
+                    metrics.staging_deferred = plane.stats().deferred;
                     let replicas = core.replica_location_entries();
                     metrics.sample_pool(
                         now_s,
@@ -466,17 +504,97 @@ impl LiveCluster {
                 // effective cadence there is completion-granular — fine
                 // for a manager that only needs to sample demand trends.
                 let now_s = t0.elapsed().as_secs_f64();
-                if now_s - last_repl >= repl_poll_s {
-                    last_repl = now_s;
-                    for d in core.poll_replication() {
+                let poll_due = now_s - last_repl >= repl_poll_s;
+                // Refresh the admission controller's load snapshot only
+                // when something reads it — a submission round is due or
+                // deferred stagings are waiting. With the default budget
+                // (1.0, never defers) this keeps the hot loop free of the
+                // O(executors) refresh.
+                if poll_due || plane.deferred_len() > 0 {
+                    for &e in core.executors() {
+                        plane.set_load(e, core.busy_fraction(e));
+                    }
+                }
+                // Drain deferred stagings whose source quiesced — every
+                // loop iteration while any wait, so re-admission reacts
+                // to task completions, not just the poll cadence.
+                if plane.deferred_len() > 0 {
+                    for req in plane.readmit() {
                         let sent = inboxes
-                            .get(d.dst)
+                            .get(req.dst)
                             .and_then(|o| o.as_ref())
-                            .map(|tx| tx.send(ExecMsg::Stage { obj: d.obj, src: d.src }).is_ok())
+                            .map(|tx| {
+                                tx.send(ExecMsg::Stage { obj: req.obj, src: req.src }).is_ok()
+                            })
                             .unwrap_or(false);
                         if !sent {
                             // Destination already released: abandon.
-                            core.replication_staged(d.obj, d.dst);
+                            core.replication_staged(req.obj, req.dst);
+                        }
+                    }
+                }
+                if poll_due {
+                    last_repl = now_s;
+                    for d in core.poll_replication() {
+                        match d {
+                            ReplicaDirective::Stage {
+                                obj,
+                                src,
+                                dst,
+                                prestage,
+                            } => {
+                                let req = TransferRequest {
+                                    class: if prestage {
+                                        TransferClass::Prestage
+                                    } else {
+                                        TransferClass::Staging
+                                    },
+                                    obj,
+                                    src,
+                                    dst,
+                                    bytes: core.catalog().size(obj).unwrap_or(1),
+                                };
+                                match plane.submit(req) {
+                                    // Counted by the plane; synced into
+                                    // the metrics at harvest points.
+                                    Admission::Defer => {}
+                                    Admission::Start => {
+                                        let sent = inboxes
+                                            .get(dst)
+                                            .and_then(|o| o.as_ref())
+                                            .map(|tx| {
+                                                tx.send(ExecMsg::Stage { obj, src }).is_ok()
+                                            })
+                                            .unwrap_or(false);
+                                        if !sent {
+                                            // Destination already released.
+                                            core.replication_staged(obj, dst);
+                                        }
+                                    }
+                                }
+                            }
+                            ReplicaDirective::Drop { obj, victim } => {
+                                // Same guard as the sim driver: honor the
+                                // drop only while the index still records
+                                // a second copy to fall back on (the
+                                // world may have moved since the
+                                // directive — eviction pressure, churn).
+                                let droppable = {
+                                    let locs = core.index().locations(obj);
+                                    locs.len() > 1 && locs.binary_search(&victim).is_ok()
+                                };
+                                let sent = droppable
+                                    && inboxes
+                                        .get(victim)
+                                        .and_then(|o| o.as_ref())
+                                        .map(|tx| tx.send(ExecMsg::Drop { obj }).is_ok())
+                                        .unwrap_or(false);
+                                if !sent {
+                                    // Victim released or copy already
+                                    // gone: abandon the teardown.
+                                    core.replication_dropped(obj, victim);
+                                }
+                            }
                         }
                     }
                 }
@@ -542,13 +660,26 @@ impl LiveCluster {
                     }
                     continue;
                 }
+                Report::Dropped(d) => {
+                    // A teardown executed (or found the copy already
+                    // gone): manager bookkeeping first, then the index —
+                    // unless the executor was released meanwhile (its
+                    // entries are already purged and must stay purged).
+                    core.replication_dropped(d.obj, d.exec);
+                    if core.executors().binary_search(&d.exec).is_ok() {
+                        if !d.events.is_empty() {
+                            metrics.replicas_dropped += 1;
+                        }
+                        staged.remove(&(d.exec, d.obj));
+                        core.apply_cache_events(d.exec, &d.events);
+                    }
+                    continue;
+                }
                 Report::Done(c) => c,
             };
             completed += 1;
             metrics.tasks_done += 1;
-            metrics
-                .task_latency
-                .add(c.t_submit.elapsed().as_secs_f64());
+            metrics.note_task_latency(c.t_submit.elapsed().as_secs_f64());
             metrics
                 .exec_latency
                 .add(c.t_dispatch.elapsed().as_secs_f64());
@@ -586,6 +717,12 @@ impl LiveCluster {
             }
             core.on_task_complete(c.exec, c.task, &c.events);
         }
+        // Final harvests (static pools never hit the elastic harvest
+        // point; bootstrap registrations and the transfer plane's
+        // admission counters are collected here).
+        let control = core.take_index_control();
+        metrics.add_control_traffic(control);
+        metrics.staging_deferred = plane.stats().deferred;
         metrics.t_end = t0.elapsed().as_secs_f64();
         metrics.peak_executors = metrics.peak_executors.max(core.executor_count());
 
@@ -673,6 +810,22 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                 let report = stage_object(&mut ctx, obj, src);
                 let _ = ctx.done.send(Report::Staged(report));
             }
+            ExecMsg::Drop { obj } => {
+                // Replica teardown: release the cache entry and the file
+                // now, ahead of eviction pressure. A copy that is already
+                // gone (evicted, never landed) reports an empty event
+                // list so the coordinator only counts real releases.
+                let mut events = Vec::new();
+                if ctx.cache.remove(obj) {
+                    ctx.cache_dir.evict(obj, ctx.format);
+                    events.push(CacheEvent::Evicted(obj));
+                }
+                let _ = ctx.done.send(Report::Dropped(DropReport {
+                    exec: ctx.exec,
+                    obj,
+                    events,
+                }));
+            }
         }
     }
 }
@@ -704,7 +857,7 @@ fn stage_object(ctx: &mut ExecutorCtx, obj: ObjectId, src: ExecutorId) -> StageR
         return report; // source copy gone: abandon, demand will retry
     };
     let cached_path = ctx.cache_dir.path_of(obj, ctx.format);
-    if let Ok(bytes) = std::fs::copy(&peer_path, &cached_path) {
+    if let Ok(bytes) = copy_into_cache(&peer_path, &cached_path) {
         report.bytes = bytes;
         report.events = apply_cache_insert(ctx, obj, bytes);
         report.created = report
@@ -754,7 +907,7 @@ fn run_task(
                     hinted_peer = true;
                     let peer_path = ctx.cache_roots[peer].join(format!("{obj}.{ext}"));
                     if peer_path.exists() {
-                        if let Ok(bytes) = std::fs::copy(&peer_path, &cached_path) {
+                        if let Ok(bytes) = copy_into_cache(&peer_path, &cached_path) {
                             resolutions.push((ByteSource::CacheToCache, bytes, obj));
                             fetched = true;
                             break;
@@ -773,7 +926,7 @@ fn run_task(
             // Persistent storage.
             let store_path = ctx.store_root.join(format!("{obj}.{ext}"));
             if caching {
-                let bytes = std::fs::copy(&store_path, &cached_path).map_err(|e| {
+                let bytes = copy_into_cache(&store_path, &cached_path).map_err(|e| {
                     Error::UnknownObject(format!("{obj} ({}): {e}", store_path.display()))
                 })?;
                 resolutions.push((ByteSource::Gpfs, bytes, obj));
@@ -880,6 +1033,10 @@ mod tests {
         );
         assert!(out.metrics.gpfs_misses <= 8 + 2, "most repeats hit caches");
         assert!(out.metrics.total_read_bytes() > 0);
+        assert_eq!(
+            out.metrics.stabilization_msgs, 0,
+            "central index has no control plane"
+        );
         let _ = std::fs::remove_dir_all(root);
     }
 
@@ -904,6 +1061,10 @@ mod tests {
             out.metrics.index_lookups, 8,
             "one charged lookup per single-input task"
         );
+        assert!(
+            out.metrics.stabilization_msgs > 0,
+            "chord bootstrap joins must charge stabilization messages"
+        );
         let _ = std::fs::remove_dir_all(root);
     }
 
@@ -919,6 +1080,9 @@ mod tests {
         }
         let mut cfg = Config::with_nodes(3);
         cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        // Chord backend: mid-run joins are real membership churn, so the
+        // run must charge control-plane stabilization traffic.
+        cfg.index.backend = crate::index::IndexBackend::Chord;
         cfg.provisioner.enabled = true;
         cfg.provisioner.policy = crate::provisioner::AllocationPolicy::Adaptive;
         cfg.provisioner.min_executors = 0;
@@ -943,6 +1107,10 @@ mod tests {
         assert!(out.metrics.peak_executors <= 3, "pool capped at max");
         assert!(!out.metrics.pool_timeline.is_empty());
         assert!(out.makespan_s >= 0.05, "first grant pays allocation latency");
+        assert!(
+            out.metrics.stabilization_msgs > 0,
+            "chord must charge stabilization for mid-run membership churn"
+        );
         let _ = std::fs::remove_dir_all(root);
     }
 
@@ -973,6 +1141,12 @@ mod tests {
         cfg.replication.ewma_alpha = 0.8;
         cfg.replication.evaluate_interval_s = 0.01;
         cfg.replication.prestage_top_k = 4;
+        // Active teardown + a real (if generous) staging budget: the
+        // Drop / deferral paths run end-to-end through real executor
+        // threads. Live timing is nondeterministic, so assertions below
+        // check mechanics and conservation, not exact counts.
+        cfg.replication.release_threshold = 0.2;
+        cfg.transfer.staging_budget = 0.9;
         let tasks: Vec<Task> = (0..24)
             .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 6)]))
             .collect();

@@ -38,22 +38,31 @@
 //! tasks parked on it, and resets its node-local cache: a later re-join
 //! of the same node id starts cold, exactly like a fresh lease.
 //!
-//! ## Demand-driven replication
+//! ## Demand-driven replication and the metered transfer plane
 //!
-//! With `replication.enabled` a periodic `ReplTick` event polls the
+//! Every byte movement starts through the
+//! [`SimTransferPlane`] (which owns the wired testbed), class-tagged
+//! per [`crate::transfer`]: task I/O is `Foreground`, replication
+//! staging is `Staging`, join warm-up is `Prestage`. With
+//! `replication.enabled` a periodic `ReplTick` event polls the
 //! coordinator's [`crate::replication::ReplicationManager`]; each
-//! returned directive becomes a `Replica`-tagged peer-bandwidth flow
-//! (source disk + both NICs + destination disk, exactly like a
-//! cache-to-cache task fetch, so staging contends with foreground
-//! traffic instead of being free). On completion the object enters the
-//! destination cache and the index — through the same
-//! `apply_cache_events` path as any other insert, so no index location
-//! ever lacks a backing cache entry. Stale location hints (§3.2.2: every
-//! hinted copy moved or was evicted since dispatch) make the executor
-//! *re-resolve* against the index, charged via
-//! [`crate::index::DataIndex::lookup_cost`] like a dispatch-side lookup —
-//! which is also how an executor discovers replicas staged after its
-//! task was dispatched.
+//! staging directive is *offered* to the plane — admitted, it becomes a
+//! `Replica`-tagged peer-bandwidth flow (source disk + both NICs +
+//! destination disk, exactly like a cache-to-cache task fetch, so
+//! admitted staging still contends with foreground traffic instead of
+//! being free); over the source's `staging_budget` it defers, and
+//! flow completions / later ticks pump re-admission as the source
+//! drains. [`crate::replication::ReplicaDirective::Drop`] directives
+//! (replica teardown on demand decay) are executed immediately — an
+//! eviction is local metadata work, not a transfer. On staging
+//! completion the object enters the destination cache and the index —
+//! through the same `apply_cache_events` path as any other insert, so
+//! no index location ever lacks a backing cache entry. Stale location
+//! hints (§3.2.2: every hinted copy moved or was evicted since
+//! dispatch) make the executor *re-resolve* against the index, charged
+//! via [`crate::index::DataIndex::lookup_cost`] like a dispatch-side
+//! lookup — which is also how an executor discovers replicas staged
+//! after its task was dispatched.
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
@@ -62,10 +71,13 @@ use crate::coordinator::metrics::{ByteSource, Metrics};
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::index::central::ExecutorId;
 use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
+use crate::replication::ReplicaDirective;
 use crate::scheduler::decision::LocationHints;
 use crate::sim::engine::{Engine, EventQueue, World};
 use crate::sim::flownet::FlowId;
 use crate::sim::server::FifoServer;
+use crate::transfer::sim::SimTransferPlane;
+use crate::transfer::{Admission, TransferClass, TransferPlane, TransferRequest};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::storage::object::{Catalog, DataFormat, ObjectId};
 use crate::storage::testbed::{SimTestbed, TransferKind};
@@ -233,7 +245,10 @@ struct SimWorld {
     format: DataFormat,
     expansion: f64,
     core: FalkonCore,
-    testbed: SimTestbed,
+    /// The metered transfer plane: owns the wired testbed; every byte
+    /// movement starts through it class-tagged, and background staging is
+    /// admission-controlled against source egress utilization.
+    plane: SimTransferPlane,
     caches: Vec<DataCache>,
     metrics: Metrics,
     dispatch_server: FifoServer,
@@ -313,6 +328,12 @@ impl SimWorld {
                         // Deregistration purges the index and requeues
                         // parked tasks; the node cache dies with the lease.
                         let _orphans = self.core.deregister_executor(e);
+                        // Deferred staging transfers touching the released
+                        // executor are cancelled; free the replication
+                        // manager's in-flight slots.
+                        for req in self.plane.executor_released(e) {
+                            self.core.replication_staged(req.obj, req.dst);
+                        }
                         self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
                         self.staged_replicas.retain(|&(se, _)| se != e);
                         prov.cluster.release(e);
@@ -322,6 +343,13 @@ impl SimWorld {
                 }
             }
         }
+        // Membership changed (or may have): harvest the index backend's
+        // control-plane bill (Chord stabilization; zero on central) and
+        // the transfer plane's deferral count, so the pool sample that
+        // follows sees current totals.
+        let ct = self.core.take_index_control();
+        self.metrics.add_control_traffic(ct);
+        self.metrics.staging_deferred = self.plane.stats().deferred;
         let replicas = self.core.replica_location_entries();
         self.metrics.sample_pool(
             now,
@@ -361,36 +389,111 @@ impl SimWorld {
         self.execute_orders(now, orders, q);
     }
 
-    /// One replication evaluation round: poll the manager and turn each
-    /// directive into a background peer-bandwidth staging flow.
+    /// One replication evaluation round: poll the manager, execute drop
+    /// directives immediately (a release is local metadata work, not a
+    /// transfer), and offer each staging directive to the transfer plane
+    /// — admitted stagings become background peer-bandwidth flows,
+    /// over-budget ones defer until their source drains.
     fn repl_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
         for d in self.core.poll_replication() {
-            // The index may lag the caches (loose coherence) and the
-            // pool may have churned since the manager looked: stage only
-            // from a source whose cache really holds the object, to a
-            // destination that is still registered and does not.
-            let src_ok = d.src < self.caches.len() && self.caches[d.src].contains(d.obj);
-            let dst_ok = d.dst < self.caches.len()
-                && self.core.executors().binary_search(&d.dst).is_ok()
-                && !self.caches[d.dst].contains(d.obj);
-            if !self.caching || !src_ok || !dst_ok {
-                self.core.replication_staged(d.obj, d.dst); // abandoned
-                continue;
+            match d {
+                ReplicaDirective::Stage {
+                    obj,
+                    src,
+                    dst,
+                    prestage,
+                } => {
+                    let class = if prestage {
+                        TransferClass::Prestage
+                    } else {
+                        TransferClass::Staging
+                    };
+                    let req = TransferRequest {
+                        class,
+                        obj,
+                        src,
+                        dst,
+                        bytes: self.cached_size(obj),
+                    };
+                    match self.plane.submit(req) {
+                        Admission::Start => self.launch_stage(now, req, q),
+                        // Deferral is counted by the plane itself
+                        // (stats().deferred) and synced into the metrics
+                        // at harvest points — one source of truth.
+                        Admission::Defer => {}
+                    }
+                }
+                ReplicaDirective::Drop { obj, victim } => self.execute_drop(obj, victim),
             }
-            let bytes = self.cached_size(d.obj);
-            self.start_flow(
-                now,
-                FlowTag::Replica { obj: d.obj, dst: d.dst },
-                TransferKind::Peer { src: d.src, dst: d.dst },
-                bytes,
-                q,
-            );
         }
+        // Deferred stagings whose source drained since the last round.
+        self.pump_admissions(now, q);
         // Keep evaluating while the workload is live; staging flows
         // already in flight drain through the flow network regardless.
         if self.metrics.tasks_done < self.total_tasks {
             q.after(self.cfg.replication.evaluate_interval_s.max(1e-3), Ev::ReplTick);
         }
+    }
+
+    /// Start an admitted staging transfer, re-validating against the
+    /// current world: the index may lag the caches (loose coherence) and
+    /// the pool may have churned since the directive (or its deferral) —
+    /// stage only from a source whose cache really holds the object, to
+    /// a registered destination that does not.
+    fn launch_stage(&mut self, now: f64, req: TransferRequest, q: &mut EventQueue<Ev>) {
+        let TransferRequest {
+            class,
+            obj,
+            src,
+            dst,
+            bytes,
+        } = req;
+        let src_ok = src < self.caches.len() && self.caches[src].contains(obj);
+        let dst_ok = dst < self.caches.len()
+            && self.core.executors().binary_search(&dst).is_ok()
+            && !self.caches[dst].contains(obj);
+        if !self.caching || !src_ok || !dst_ok {
+            self.core.replication_staged(obj, dst); // abandoned
+            return;
+        }
+        self.start_flow(
+            now,
+            FlowTag::Replica { obj, dst },
+            class,
+            TransferKind::Peer { src, dst },
+            bytes,
+            q,
+        );
+    }
+
+    /// Re-admit deferred staging transfers whose source has drained
+    /// under the budget. Called whenever load may have dropped: after
+    /// flow completions and on every replication tick.
+    fn pump_admissions(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        if self.plane.deferred_len() == 0 {
+            return;
+        }
+        for req in self.plane.readmit() {
+            self.launch_stage(now, req, q);
+        }
+    }
+
+    /// Execute a replica-teardown directive: evict the victim's copy now
+    /// (freeing cache space ahead of pressure eviction), unless the world
+    /// moved on — the copy is gone, the lease ended, or the index no
+    /// longer records a second copy to fall back on.
+    fn execute_drop(&mut self, obj: ObjectId, victim: ExecutorId) {
+        let droppable = victim < self.caches.len()
+            && self.core.executors().binary_search(&victim).is_ok()
+            && self.caches[victim].contains(obj)
+            && self.core.index().locations(obj).len() > 1;
+        if droppable && self.caches[victim].remove(obj) {
+            self.staged_replicas.remove(&(victim, obj));
+            self.core
+                .apply_cache_events(victim, &[CacheEvent::Evicted(obj)]);
+            self.metrics.replicas_dropped += 1;
+        }
+        self.core.replication_dropped(obj, victim);
     }
 
     /// A replication staging flow completed: the copy enters the
@@ -441,24 +544,25 @@ impl SimWorld {
         (self.cfg.local_disk.open_s * self.cfg.local_disk.read_bps / 8.0) as u64
     }
 
-    /// Start a tagged flow and refresh the completion check.
+    /// Start a class-tagged flow through the transfer plane and refresh
+    /// the completion check.
     fn start_flow(
         &mut self,
         now: f64,
         tag: FlowTag,
+        class: TransferClass,
         kind: TransferKind,
         bytes: u64,
         q: &mut EventQueue<Ev>,
     ) {
-        let rs = self.testbed.resources(kind);
-        let fid = self.testbed.net.start_flow(now, rs, bytes);
+        let fid = self.plane.start(now, class, kind, bytes);
         self.flow_map.insert(fid, tag);
         self.reschedule_flow_check(now, q);
     }
 
     fn reschedule_flow_check(&mut self, now: f64, q: &mut EventQueue<Ev>) {
         self.flow_version += 1;
-        if let Some((t, _)) = self.testbed.net.next_completion(now) {
+        if let Some((t, _)) = self.plane.testbed.net.next_completion(now) {
             q.at(t, Ev::FlowCheck(self.flow_version));
         }
     }
@@ -468,11 +572,11 @@ impl SimWorld {
         if version != self.flow_version {
             return; // stale check; a newer one is scheduled
         }
-        self.testbed.net.advance_to(now);
+        self.plane.testbed.net.advance_to(now);
         loop {
-            match self.testbed.net.next_completion(now) {
+            match self.plane.testbed.net.next_completion(now) {
                 Some((t, fid)) if t <= now + 1e-9 => {
-                    self.testbed.net.remove_flow(now, fid);
+                    self.plane.testbed.net.remove_flow(now, fid);
                     match self.flow_map.remove(&fid) {
                         Some(FlowTag::Run(rid, purpose)) => self.flow_done(now, rid, purpose, q),
                         Some(FlowTag::Replica { obj, dst }) => self.replica_staged(obj, dst),
@@ -482,6 +586,9 @@ impl SimWorld {
                 _ => break,
             }
         }
+        // Completions freed egress bandwidth: deferred stagings whose
+        // source dropped under budget can start now.
+        self.pump_admissions(now, q);
         self.reschedule_flow_check(now, q);
     }
 
@@ -535,6 +642,7 @@ impl SimWorld {
                     // mkdir + symlink on persistent storage before work.
                     let pre = self.cfg.shared_fs.meta_ops_wrapper.saturating_sub(1).max(1);
                     let done = self
+                        .plane
                         .testbed
                         .metadata
                         .submit_secs(now, pre as f64 * self.cfg.shared_fs.wrapper_op_s);
@@ -558,7 +666,14 @@ impl SimWorld {
                 } else {
                     TransferKind::GpfsRead { node }
                 };
-                self.start_flow(now, FlowTag::Run(rid, FlowPurpose::FetchGpfs), kind, bytes, q);
+                self.start_flow(
+                    now,
+                    FlowTag::Run(rid, FlowPurpose::FetchGpfs),
+                    TransferClass::Foreground,
+                    kind,
+                    bytes,
+                    q,
+                );
             }
             Phase::Refetch => {
                 // The executor-side re-resolution paid its lookup cost;
@@ -578,6 +693,7 @@ impl SimWorld {
                         self.start_flow(
                             now,
                             FlowTag::Run(rid, FlowPurpose::FetchPeer),
+                            TransferClass::Foreground,
                             TransferKind::Peer { src, dst: exec },
                             bytes,
                             q,
@@ -585,6 +701,7 @@ impl SimWorld {
                     }
                     None => {
                         let done = self
+                            .plane
                             .testbed
                             .metadata
                             .submit(now, self.cfg.shared_fs.meta_ops_open);
@@ -614,6 +731,7 @@ impl SimWorld {
                     self.start_flow(
                         now,
                         FlowTag::Run(rid, FlowPurpose::WriteLocal),
+                        TransferClass::Foreground,
                         TransferKind::LocalWrite { node },
                         bytes,
                         q,
@@ -621,6 +739,7 @@ impl SimWorld {
                 } else {
                     // GPFS output: metadata create, then the data flow.
                     let done = self
+                        .plane
                         .testbed
                         .metadata
                         .submit(now, self.cfg.shared_fs.meta_ops_open);
@@ -637,6 +756,7 @@ impl SimWorld {
                 self.start_flow(
                     now,
                     FlowTag::Run(rid, FlowPurpose::WriteGpfs),
+                    TransferClass::Foreground,
                     TransferKind::GpfsWrite { node },
                     bytes,
                     q,
@@ -668,6 +788,7 @@ impl SimWorld {
             self.start_flow(
                 now,
                 FlowTag::Run(rid, FlowPurpose::FetchLocal),
+                TransferClass::Foreground,
                 TransferKind::LocalRead { node: exec },
                 bytes,
                 q,
@@ -694,6 +815,7 @@ impl SimWorld {
                 self.start_flow(
                     now,
                     FlowTag::Run(rid, FlowPurpose::FetchPeer),
+                    TransferClass::Foreground,
                     TransferKind::Peer { src, dst: exec },
                     bytes,
                     q,
@@ -734,6 +856,7 @@ impl SimWorld {
 
         // Persistent storage: metadata open, then the data flow.
         let done = self
+            .plane
             .testbed
             .metadata
             .submit(now, self.cfg.shared_fs.meta_ops_open);
@@ -835,6 +958,7 @@ impl SimWorld {
         if self.cfg.scheduler.wrapper {
             // rmdir of the sandbox directory on persistent storage.
             let done = self
+                .plane
                 .testbed
                 .metadata
                 .submit_secs(now, self.cfg.shared_fs.wrapper_op_s);
@@ -848,7 +972,7 @@ impl SimWorld {
     fn complete_run(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
         let run = self.runs.remove(&rid).unwrap();
         self.metrics.tasks_done += 1;
-        self.metrics.task_latency.add(now - run.t_submit);
+        self.metrics.note_task_latency(now - run.t_submit);
         self.metrics.exec_latency.add(now - run.t_dispatch);
         self.metrics.t_end = now;
         self.core.on_task_complete(run.exec, run.task.id, &run.events);
@@ -970,7 +1094,7 @@ impl SimDriver {
             core.apply_cache_events(exec, &events);
         }
 
-        let testbed = SimTestbed::new(&cfg);
+        let plane = SimTransferPlane::new(SimTestbed::new(&cfg), cfg.transfer.staging_budget);
         let caching = spec.caching;
         let format = spec.format;
         let arrivals: Vec<(f64, u32)> = spec
@@ -990,7 +1114,7 @@ impl SimDriver {
             format,
             expansion,
             core,
-            testbed,
+            plane,
             caches,
             metrics: Metrics::new(),
             dispatch_server: FifoServer::new(1.0 / DISPATCH_RATE),
@@ -1017,6 +1141,12 @@ impl SimDriver {
             engine.schedule(t, Ev::Arrive(i));
         }
         let end = engine.run();
+        // Final harvests: static pools never tick the provisioner, so
+        // bootstrap registrations (Chord: one rebuild per join) and the
+        // transfer plane's admission counters are collected here.
+        let control = engine.world.core.take_index_control();
+        engine.world.metrics.add_control_traffic(control);
+        engine.world.metrics.staging_deferred = engine.world.plane.stats().deferred;
         let mut metrics = engine.world.metrics.clone();
         metrics.peak_executors = metrics
             .peak_executors
@@ -1187,6 +1317,10 @@ mod tests {
         assert!(central.metrics.index_hops == 0, "central index never routes");
         assert!(chord.metrics.index_hops > 0, "chord lookups must route");
         assert!(chord.metrics.index_cost_s > central.metrics.index_cost_s);
+        // Control plane: even a static pool pays bootstrap stabilization
+        // on chord (one rebuild per registration); central pays nothing.
+        assert!(chord.metrics.stabilization_msgs > 0, "chord joins must stabilize");
+        assert_eq!(central.metrics.stabilization_msgs, 0, "central has no control plane");
         assert!(
             chord.makespan_s >= central.makespan_s,
             "routed lookups cannot make the run faster: {} vs {}",
@@ -1239,6 +1373,96 @@ mod tests {
         assert_eq!(on.metrics.cache_hits, 32);
         assert_eq!(on.metrics.gpfs_misses, 0);
         assert_eq!(on.metrics.peer_hits, 0);
+    }
+
+    #[test]
+    fn staging_admission_defers_under_load_and_still_converges() {
+        // One 64 MB object prewarmed on executor 0; sequential tasks read
+        // it there (a ~1.1 s local-disk flow each). The replication
+        // manager wants a second copy while task 0's read has executor
+        // 0's disk at 100% — with a 0.3 budget the staging must defer
+        // (foreground is never blocked), then run in the load gap after
+        // the flow completes. Budget 1.0 reproduces the old unmetered
+        // behavior exactly: admitted mid-read, zero deferrals.
+        let run = |budget: f64| {
+            let mut cfg = Config::with_nodes(4);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.replication.enabled = true;
+            cfg.replication.max_replicas = 2;
+            cfg.replication.demand_threshold = 0.5;
+            cfg.replication.ewma_alpha = 0.5;
+            cfg.replication.evaluate_interval_s = 0.5;
+            cfg.transfer.staging_budget = budget;
+            let tasks: Vec<(f64, Task)> = (0..6)
+                .map(|i| {
+                    let mut t = Task::with_inputs(TaskId(i), vec![ObjectId(0)]);
+                    t.kind = TaskKind::Synthetic { cpu_s: 0.3 };
+                    (i as f64 * 2.0, t)
+                })
+                .collect();
+            let mut spec = SimWorkloadSpec::new(tasks);
+            spec.prewarm = vec![(0, ObjectId(0))];
+            SimDriver::new(cfg, spec, catalog(1, 64 * MB)).run()
+        };
+        let off = run(1.0);
+        assert_eq!(off.metrics.tasks_done, 6);
+        assert_eq!(off.metrics.staging_deferred, 0, "budget 1.0 never defers");
+        assert_eq!(off.metrics.replicas_created, 1);
+
+        let on = run(0.3);
+        assert_eq!(on.metrics.tasks_done, 6);
+        assert!(
+            on.metrics.staging_deferred > 0,
+            "staging from a 100%-busy source must defer"
+        );
+        assert_eq!(
+            on.metrics.replicas_created, 1,
+            "deferred staging must eventually run in a load gap"
+        );
+        assert!(
+            on.metrics.pool_timeline.is_empty(),
+            "static pool: deferral must not require the provisioner"
+        );
+    }
+
+    #[test]
+    fn replica_teardown_frees_copies_when_demand_decays() {
+        // Phase 1 hammers object 0 (prewarmed on executor 0) so the
+        // manager stages extra copies; phase 2 is a trickle of unrelated
+        // tasks that keeps the run (and its ReplTicks) alive while object
+        // 0's demand EWMA decays below the release threshold — the
+        // manager must then actively drop the surplus copies instead of
+        // waiting for cache pressure.
+        let mut cfg = Config::with_nodes(4);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.replication.enabled = true;
+        cfg.replication.max_replicas = 3;
+        cfg.replication.demand_threshold = 0.5;
+        cfg.replication.release_threshold = 0.3;
+        cfg.replication.ewma_alpha = 0.5;
+        cfg.replication.evaluate_interval_s = 1.0;
+        let mut tasks: Vec<(f64, Task)> = (0..24)
+            .map(|i| {
+                let mut t = Task::with_inputs(TaskId(i), vec![ObjectId(0)]);
+                t.kind = TaskKind::Synthetic { cpu_s: 0.2 };
+                (i as f64 * 0.5, t)
+            })
+            .collect();
+        for i in 0..10u64 {
+            let mut t = Task::with_inputs(TaskId(100 + i), vec![ObjectId(1 + i)]);
+            t.kind = TaskKind::Synthetic { cpu_s: 0.1 };
+            tasks.push((20.0 + i as f64 * 3.0, t));
+        }
+        let mut spec = SimWorkloadSpec::new(tasks);
+        spec.prewarm = vec![(0, ObjectId(0))];
+        let out = SimDriver::new(cfg, spec, catalog(16, MB)).run();
+        assert_eq!(out.metrics.tasks_done, 34);
+        assert!(out.metrics.replicas_created > 0, "the burst must replicate");
+        assert!(
+            out.metrics.replicas_dropped > 0,
+            "decayed demand must tear surplus copies down"
+        );
+        assert!(out.metrics.replicas_dropped <= out.metrics.replicas_created);
     }
 
     #[test]
@@ -1437,6 +1661,12 @@ mod tests {
         assert_eq!(a.metrics.executors_joined, c.metrics.executors_joined);
         assert_eq!(a.metrics.executors_released, c.metrics.executors_released);
         assert!(a.metrics.index_hops > 0, "chord must route mid-churn too");
+        // Churn charges chord's control plane; central stays free.
+        assert!(
+            a.metrics.stabilization_msgs > 0,
+            "chord membership churn must charge stabilization messages"
+        );
+        assert_eq!(c.metrics.stabilization_msgs, 0, "central has no control plane");
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //!
 //! Location sets are small sorted `Vec`s — an object rarely lives on more
 //! than a few executors, and sorted order gives deterministic scheduling.
+//!
+//! The centralized design has **no control plane**: membership changes
+//! mutate one in-process hash table, so it keeps the trait's default
+//! zero [`super::ControlTraffic`] — the baseline the Chord backend's
+//! stabilization/misroute charges are compared against.
 
 use crate::util::fxhash::FxHashMap;
 

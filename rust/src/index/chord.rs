@@ -19,19 +19,24 @@
 //! measured scheduled runs and closed-form curves are directly
 //! comparable.
 //!
-//! Like [`super::dht`], the overlay is modeled without stabilization
-//! traffic: executor join/leave rebuilds the ring (and thus finger
-//! ownership) immediately. Membership churn is *real* now — the elastic
-//! drivers register and deregister executors mid-run under the dynamic
-//! provisioner — but still rare relative to lookups, so the instant
-//! rebuild stands in for Chord's periodic stabilization; charging that
-//! traffic per membership change is a noted follow-on in ROADMAP.md.
+//! Membership churn is *real* — the elastic drivers register and
+//! deregister executors mid-run under the dynamic provisioner — and
+//! since the metered-transfer-plane refactor it is no longer free:
+//! every membership change charges [`DhtModel::stabilization_msgs`]
+//! (O(log²N)) control messages, and the next
+//! [`DhtModel::stale_window`] (O(log N)) routed lookups each pay one
+//! **stale-finger misroute** — an extra hop into [`LookupCost`], because
+//! until `fix_fingers` repairs the tables a finger can point at a node
+//! that no longer owns the range. The rebuild itself is still instant
+//! (contents never lag — the trait's placement contract), only the
+//! *cost* of convergence is charged; drivers drain it through
+//! [`DataIndex::take_control_traffic`] into the run metrics.
 
 use std::cell::Cell;
 
 use super::central::{CentralIndex, ExecutorId};
 use super::dht::{ChordRing, DhtModel};
-use super::{DataIndex, LookupCost};
+use super::{ControlTraffic, DataIndex, LookupCost};
 use crate::storage::object::ObjectId;
 
 /// Distributed cache-location index over a Chord overlay of executors.
@@ -53,6 +58,14 @@ pub struct ChordIndex {
     routed_hops: Cell<u64>,
     /// Total routed lookups.
     routed_lookups: Cell<u64>,
+    /// Stabilization messages charged since the last harvest.
+    pending_stab_msgs: u64,
+    /// Stale-finger misroutes charged since the last harvest.
+    pending_misroutes: Cell<u64>,
+    /// Lookups left in the current post-rebuild stale window: each pays
+    /// one misroute hop until `fix_fingers` would have repaired the
+    /// tables.
+    stale_lookups: Cell<u32>,
 }
 
 impl ChordIndex {
@@ -67,6 +80,9 @@ impl ChordIndex {
             queries: Cell::new(0),
             routed_hops: Cell::new(0),
             routed_lookups: Cell::new(0),
+            pending_stab_msgs: 0,
+            pending_misroutes: Cell::new(0),
+            stale_lookups: Cell::new(0),
         }
     }
 
@@ -94,9 +110,17 @@ impl ChordIndex {
         self.routed_hops.get() as f64 / self.routed_lookups.get() as f64
     }
 
-    /// Rebuild the overlay for the current membership.
+    /// Rebuild the overlay for the current membership, charging the
+    /// stabilization traffic the change costs a real deployment and
+    /// opening the stale-finger window the next lookups pay through.
     fn rebuild_ring(&mut self) {
         self.ring = ChordRing::new(self.members.max(1), self.seed);
+        self.pending_stab_msgs += DhtModel::stabilization_msgs(self.members.max(1));
+        self.stale_lookups.set(if self.members > 1 {
+            DhtModel::stale_window(self.members)
+        } else {
+            0
+        });
     }
 
     /// Route one query for `obj` from the rotating entry node; returns
@@ -162,11 +186,33 @@ impl DataIndex for ChordIndex {
     }
 
     fn lookup_cost(&self, obj: ObjectId) -> LookupCost {
-        let hops = self.route_query(obj);
+        let mut hops = self.route_query(obj);
+        // Stale-finger window: lookups issued between a membership change
+        // and the next fix_fingers round risk forwarding through a finger
+        // that no longer owns its range — one extra (misrouted) hop,
+        // charged into this lookup's own cost.
+        let stale = self.stale_lookups.get();
+        if stale > 0 && self.members > 1 {
+            self.stale_lookups.set(stale - 1);
+            self.pending_misroutes.set(self.pending_misroutes.get() + 1);
+            hops += 1;
+        }
         LookupCost {
             latency_s: hops as f64 * (self.model.hop_latency_s + self.model.proc_s),
             hops,
             lookups: 1,
+        }
+    }
+
+    fn take_control_traffic(&mut self) -> ControlTraffic {
+        let msgs = std::mem::take(&mut self.pending_stab_msgs);
+        let misroutes = self.pending_misroutes.take();
+        ControlTraffic {
+            stabilization_msgs: msgs,
+            misroutes,
+            // One control message costs one overlay hop; misroute latency
+            // already landed in the affected lookups' own costs.
+            latency_s: msgs as f64 * (self.model.hop_latency_s + self.model.proc_s),
         }
     }
 
@@ -252,6 +298,55 @@ mod tests {
         let orphans = idx.drop_executor(2);
         assert_eq!(orphans, vec![ObjectId(1)]);
         assert_eq!(idx.overlay_size(), 4);
+    }
+
+    #[test]
+    fn membership_changes_charge_stabilization_and_misroutes() {
+        let mut idx = ChordIndex::new(DhtModel::default(), 7);
+        // Bootstrap joins: members 1, 2, 3, 4 → 1 + 1 + 4 + 4 messages.
+        for e in 0..4 {
+            idx.executor_joined(e);
+        }
+        let per_hop = DhtModel::default().hop_latency_s + DhtModel::default().proc_s;
+        let ct = idx.take_control_traffic();
+        assert_eq!(ct.stabilization_msgs, 10);
+        assert!((ct.latency_s - 10.0 * per_hop).abs() < 1e-12);
+        assert_eq!(ct.misroutes, 0, "no lookups yet");
+        // Harvest drains: a second take is zero.
+        assert!(idx.take_control_traffic().is_zero());
+        // The stale window after the last rebuild (4 members → 2 lookups)
+        // surcharges exactly that many lookups with one misroute hop.
+        let mut surcharged = 0u32;
+        for i in 0..6u64 {
+            let base = {
+                let q = idx.queries.get();
+                let entry = (q as usize) % idx.ring.len();
+                idx.ring.route(entry, ObjectId(100 + i)).1
+            };
+            let c = idx.lookup_cost(ObjectId(100 + i));
+            if c.hops == base + 1 {
+                surcharged += 1;
+            } else {
+                assert_eq!(c.hops, base, "lookup {i}: unexpected hop count");
+            }
+            assert!((c.latency_s - c.hops as f64 * per_hop).abs() < 1e-12);
+        }
+        assert_eq!(surcharged, 2, "stale window is O(log N) lookups");
+        let ct = idx.take_control_traffic();
+        assert_eq!(ct.misroutes, 2);
+        assert_eq!(ct.stabilization_msgs, 0);
+        // A drop re-opens the window and charges again.
+        let _ = DataIndex::drop_executor(&mut idx, 1);
+        let ct = idx.take_control_traffic();
+        assert_eq!(ct.stabilization_msgs, DhtModel::stabilization_msgs(3));
+    }
+
+    #[test]
+    fn central_has_no_control_plane() {
+        let mut idx = CentralIndex::new();
+        DataIndex::insert(&mut idx, ObjectId(1), 0);
+        let _ = DataIndex::lookup_cost(&idx, ObjectId(1));
+        assert!(DataIndex::take_control_traffic(&mut idx).is_zero());
     }
 
     #[test]

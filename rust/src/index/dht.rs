@@ -10,9 +10,12 @@
 //!
 //! The model is deliberately protocol-accurate where it matters to the
 //! figure — ring placement, finger construction, greedy
-//! closest-preceding-finger routing, O(log N) hops — and abstract where
-//! it does not (no churn/stabilization; the paper's comparison is against
-//! a stable deployment).
+//! closest-preceding-finger routing, O(log N) hops — and analytic where
+//! it does not: churn is not simulated message-by-message, but its
+//! *cost* is modeled ([`DhtModel::stabilization_msgs`] messages per
+//! membership change, a [`DhtModel::stale_window`] of misroute-prone
+//! lookups after each), which [`super::chord::ChordIndex`] charges into
+//! the metered index control plane.
 
 use crate::storage::object::ObjectId;
 
@@ -157,6 +160,22 @@ impl Default for DhtModel {
 }
 
 impl DhtModel {
+    /// Stabilization messages charged per membership change on an
+    /// overlay of `n` nodes: Chord repairs successors and finger tables
+    /// with O(log²N) messages per join or leave (each of the O(log N)
+    /// fingers is re-resolved by an O(log N)-hop lookup).
+    pub fn stabilization_msgs(n: usize) -> u64 {
+        let l = (n.max(2) as f64).log2().ceil() as u64;
+        l * l
+    }
+
+    /// Number of lookups after a membership change that risk one
+    /// stale-finger misroute before the periodic `fix_fingers` round
+    /// repairs the tables: one per finger level, O(log N).
+    pub fn stale_window(n: usize) -> u32 {
+        (n.max(2) as f64).log2().ceil() as u32
+    }
+
     /// Expected lookup latency on a ring of `n` nodes (measured hops).
     pub fn lookup_latency_s(&self, ring: &ChordRing) -> f64 {
         let hops = ring.mean_hops(2_000);
@@ -175,6 +194,18 @@ impl DhtModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stabilization_model_grows_logarithmically() {
+        // O(log²N): 16 nodes → 16 msgs, 1024 nodes → 100 msgs.
+        assert_eq!(DhtModel::stabilization_msgs(1), 1);
+        assert_eq!(DhtModel::stabilization_msgs(2), 1);
+        assert_eq!(DhtModel::stabilization_msgs(16), 16);
+        assert_eq!(DhtModel::stabilization_msgs(1024), 100);
+        assert!(DhtModel::stabilization_msgs(1024) < DhtModel::stabilization_msgs(16) * 64);
+        assert_eq!(DhtModel::stale_window(2), 1);
+        assert_eq!(DhtModel::stale_window(64), 6);
+    }
 
     #[test]
     fn routing_reaches_owner() {

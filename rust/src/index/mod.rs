@@ -43,6 +43,17 @@
 //! simulation driver charges into the event timeline and both drivers
 //! account in [`crate::coordinator::metrics::Metrics`].
 //!
+//! Cost has a second axis since the metered-transfer-plane refactor:
+//! **control traffic** ([`ControlTraffic`], drained through
+//! [`DataIndex::take_control_traffic`]). Lookups meter the data plane;
+//! membership churn meters the control plane — Chord charges O(log²N)
+//! stabilization messages per join/leave plus stale-finger misroutes on
+//! the lookups issued before its finger tables repair, while the
+//! centralized index charges nothing (its "overlay" is one process).
+//! Both drivers harvest this into `Metrics::stabilization_msgs`, so a
+//! churning elastic pool shows the distributed design's maintenance bill
+//! next to its routing bill.
+//!
 //! ### Multi-holder hint ranking
 //!
 //! With demand-driven replication ([`crate::replication`]) an object
@@ -106,6 +117,39 @@ impl LookupCost {
     }
 }
 
+/// Control-plane traffic an index backend accumulated since it was last
+/// harvested: the overlay-maintenance cost of *membership*, as opposed
+/// to the per-lookup cost in [`LookupCost`].
+///
+/// The centralized backend has no control plane and always reports zero.
+/// The Chord backend charges O(log²N) stabilization messages per
+/// membership change (each join/leave triggers successor/finger repair
+/// across the ring) and counts the stale-finger misroutes its lookups
+/// paid between a membership change and the next `fix_fingers` round
+/// (those misroutes also surface as extra hops/latency in the affected
+/// [`LookupCost`]s — `latency_s` here covers only the stabilization
+/// messages, so harvesting never double-charges).
+///
+/// Drivers drain this via [`crate::coordinator::core::FalkonCore::take_index_control`]
+/// and fold it into [`crate::coordinator::metrics::Metrics`].
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ControlTraffic {
+    /// Stabilization messages exchanged for membership maintenance.
+    pub stabilization_msgs: u64,
+    /// Lookups that misrouted through a stale finger since the last
+    /// harvest (their extra hop is charged in the lookup's own cost).
+    pub misroutes: u64,
+    /// Simulated wall time behind the stabilization messages, seconds.
+    pub latency_s: f64,
+}
+
+impl ControlTraffic {
+    /// Whether nothing was charged.
+    pub fn is_zero(&self) -> bool {
+        self.stabilization_msgs == 0 && self.misroutes == 0
+    }
+}
+
 /// The pluggable cache-location index service.
 ///
 /// Object-safe so the coordinator can own a `Box<dyn DataIndex>` chosen
@@ -159,6 +203,14 @@ pub trait DataIndex: Send {
     /// dispatcher's vantage point. Pure accounting: the data itself is
     /// returned by [`locations`](DataIndex::locations) without delay.
     fn lookup_cost(&self, obj: ObjectId) -> LookupCost;
+
+    /// Drain the control-plane traffic accumulated since the last call
+    /// (stabilization messages from membership changes, stale-finger
+    /// misroutes). Backends without a control plane — the centralized
+    /// index — keep the default zero-cost implementation.
+    fn take_control_traffic(&mut self) -> ControlTraffic {
+        ControlTraffic::default()
+    }
 
     /// Human-readable backend name (figure labels, CLI output).
     fn backend(&self) -> &'static str;

@@ -28,8 +28,10 @@
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
 //! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |
 //! | Demand-driven replication ("data diffusion" proper) | [`replication`] |
+//! | Metered transfer plane (priority classes, staging admission) | [`transfer`] |
 //! | DRP demand-response figure (`--figure drp`) | [`analysis::figures`], [`workloads::bursty`] |
 //! | Diffusion figure (`--figure diffusion`, replication on/off) | [`analysis::figures`] |
+//! | QoS figure (`--figure qos`, admission control on/off) | [`analysis::figures`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |
@@ -50,6 +52,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod storage;
+pub mod transfer;
 pub mod util;
 pub mod workloads;
 

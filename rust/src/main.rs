@@ -31,7 +31,7 @@ use datadiffusion::workloads::bursty::{self, BurstSpec, DemandShape};
 
 fn main() {
     datadiffusion::util::logging::init();
-    let args = Args::from_env(&["help", "read-write", "no-caching", "gz"]);
+    let args = Args::from_env(&["help", "read-write", "no-caching", "gz", "list"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let specs = [
         OptSpec { name: "cpus", value: "N", help: "CPU count (stacking sims)", default: "128" },
@@ -43,12 +43,14 @@ fn main() {
         OptSpec { name: "provisioner", value: "POLICY", help: "elastic pool: one-at-a-time|all-at-once|adaptive", default: "" },
         OptSpec { name: "replication", value: "POLICY", help: "data diffusion: least-loaded|hash-spread|co-locate", default: "" },
         OptSpec { name: "max-replicas", value: "N", help: "per-object replica ceiling (with --replication)", default: "" },
+        OptSpec { name: "staging-budget", value: "F", help: "source egress budget (0,1] gating background staging (1.0 = off)", default: "1.0" },
         OptSpec { name: "workload", value: "NAME", help: "sim workload (stacking|bursty)", default: "stacking" },
         OptSpec { name: "shape", value: "NAME", help: "bursty demand shape (square|sine)", default: "square" },
         OptSpec { name: "tasks", value: "N", help: "task count (live: 64, bursty sim: 512)", default: "" },
         OptSpec { name: "objects", value: "N", help: "distinct objects (live: 16, bursty sim: 64)", default: "" },
         OptSpec { name: "workdir", value: "DIR", help: "live-mode working dir", default: "/tmp/falkon-live" },
-        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13,drp,diffusion)", default: "11" },
+        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13,drp,diffusion,qos)", default: "11" },
+        OptSpec { name: "list", value: "", help: "sweep: list available figures and exit", default: "" },
         OptSpec { name: "config", value: "FILE", help: "TOML config (see configs/)", default: "" },
         OptSpec { name: "gz", value: "", help: "compressed (GZ) store format", default: "" },
         OptSpec { name: "read-write", value: "", help: "read+write variant", default: "" },
@@ -186,8 +188,9 @@ fn cmd_sim(args: &Args) -> i32 {
     0
 }
 
-/// Apply `--replication <policy>` / `--max-replicas N` to the config
-/// (the flag enables the manager; config files can also enable it).
+/// Apply `--replication <policy>` / `--max-replicas N` /
+/// `--staging-budget F` to the config (the first flag enables the
+/// manager; config files can also enable it).
 fn apply_replication_flags(args: &Args, cfg: &mut Config) -> Result<(), ()> {
     if let Some(p) = args.get("replication") {
         let Some(policy) = PlacementPolicy::parse(p) else {
@@ -202,6 +205,15 @@ fn apply_replication_flags(args: &Args, cfg: &mut Config) -> Result<(), ()> {
             Ok(n) if n >= 1 => cfg.replication.max_replicas = n,
             _ => {
                 eprintln!("error: --max-replicas expects an integer >= 1");
+                return Err(());
+            }
+        }
+    }
+    if let Some(b) = args.get("staging-budget") {
+        match b.parse::<f64>() {
+            Ok(v) if v > 0.0 && v <= 1.0 => cfg.transfer.staging_budget = v,
+            _ => {
+                eprintln!("error: --staging-budget expects a number in (0, 1]");
                 return Err(());
             }
         }
@@ -356,16 +368,48 @@ fn cmd_live(args: &Args) -> i32 {
     }
 }
 
+/// Figure registry for `falkon sweep --list`.
+const FIGURES: &[(&str, &str)] = &[
+    ("2", "index backends measured: central vs chord lookup cost on scheduled runs (CSV)"),
+    ("3", "aggregate read throughput vs node count, 100 MB files"),
+    ("4", "aggregate read+write throughput vs node count"),
+    ("5", "file-size sweep at 64 nodes (throughput + task rate)"),
+    ("8", "time/stack vs CPUs at locality 1.38"),
+    ("9", "time/stack vs CPUs at locality 30"),
+    ("10", "cache-hit ratio vs locality at 128 CPUs"),
+    ("11", "time/stack vs locality at 128 CPUs (the default sweep)"),
+    ("12", "aggregate I/O throughput split by source at 128 CPUs"),
+    ("13", "per-task data movement by source at 128 CPUs"),
+    ("drp", "dynamic provisioning: the three allocation policies on bursty runs (CSVs)"),
+    ("diffusion", "demand-driven replication on/off vs cache-node count (CSV)"),
+    ("qos", "staging admission on/off: foreground p99 (--tasks = bursts of `nodes` tasks, CSV)"),
+];
+
+/// `falkon sweep --list`: enumerate the available figures.
+fn sweep_list() -> i32 {
+    println!("available figures (falkon sweep --figure <id>):");
+    for (id, desc) in FIGURES {
+        println!("  {id:<10} {desc}");
+    }
+    0
+}
+
 fn cmd_sweep(args: &Args) -> i32 {
     let fig_arg = args.str_or("figure", "11");
+    if args.flag("list") || fig_arg == "list" {
+        return sweep_list();
+    }
     if fig_arg == "drp" {
         return sweep_drp(args);
     }
     if fig_arg == "diffusion" {
         return sweep_diffusion(args);
     }
+    if fig_arg == "qos" {
+        return sweep_qos(args);
+    }
     let Ok(fig) = fig_arg.parse::<u32>() else {
-        eprintln!("unknown figure {fig_arg}; supported: 2,3,4,5,8,9,10,11,12,13,drp,diffusion");
+        eprintln!("unknown figure {fig_arg}; see `falkon sweep --list`");
         return 2;
     };
     let scale: f64 = args.num_or("scale", figures::env_scale());
@@ -438,11 +482,43 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown figure {other}; supported: 2,3,4,5,8,9,10,11,12,13,drp,diffusion");
+            eprintln!("unknown figure {other}; see `falkon sweep --list`");
             return 2;
         }
     }
     0
+}
+
+/// The QoS figure: foreground p99 task latency under saturating staging
+/// load, admission control on vs off (same emitter as the `fig_qos`
+/// bench). `--nodes` caps the node-count list. NOTE: unlike the other
+/// sweeps, `--tasks` here is the number of task *bursts* per run — each
+/// burst is `nodes` tasks, so a run schedules nodes × tasks tasks (the
+/// burst structure, not the raw count, is what saturates the holder).
+fn sweep_qos(args: &Args) -> i32 {
+    let max_nodes: usize = args.num_or("nodes", 16);
+    let bursts: usize = args.num_or("tasks", 20);
+    let nodes_list: Vec<usize> = [4usize, 8, 16, 32]
+        .into_iter()
+        .filter(|&n| n <= max_nodes.max(4))
+        .collect();
+    let rows = figures::fig_qos(&nodes_list, bursts);
+    match figures::emit_qos(&rows, &results_dir()) {
+        Ok(p) => {
+            println!(
+                "\nreading the figure: unmetered staging shares each holder's egress with\n\
+                 the foreground fetches queued on it, so the burst tail (p99) stretches;\n\
+                 with the admission budget on, staging defers mid-burst and drains in the\n\
+                 gaps — the tail tightens while replication still converges.\nwrote {}",
+                p.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing CSV: {e}");
+            1
+        }
+    }
 }
 
 /// The data-diffusion figure: aggregate read throughput + hit ratio vs.
@@ -563,18 +639,21 @@ fn print_outcome_common(
     );
     if m.index_lookups > 0 {
         println!(
-            "  index: {} lookups | {} hops | charged {}",
+            "  index: {} lookups | {} hops | {} stabilization msgs | charged {}",
             m.index_lookups,
             m.index_hops,
+            m.stabilization_msgs,
             fmt_secs(m.index_cost_s)
         );
     }
-    if m.replicas_created > 0 || m.replica_bytes_staged > 0 {
+    if m.replicas_created > 0 || m.replica_bytes_staged > 0 || m.staging_deferred > 0 {
         println!(
-            "  replication: {} replicas staged ({}) | {} replica hits",
+            "  replication: {} replicas staged ({}) | {} replica hits | {} dropped on decay | {} stagings deferred",
             m.replicas_created,
             fmt_bytes(m.replica_bytes_staged),
-            m.replica_hits
+            m.replica_hits,
+            m.replicas_dropped,
+            m.staging_deferred
         );
     }
 }

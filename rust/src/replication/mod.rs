@@ -33,8 +33,20 @@
 //! back through [`FalkonCore::replication_staged`].
 //!
 //! When demand decays the EWMA falls below the threshold and the manager
-//! simply stops re-creating copies; normal cache eviction then reclaims
-//! the space (replicas are ordinary cache entries — no pinning).
+//! stops re-creating copies; normal cache eviction reclaims the space
+//! (replicas are ordinary cache entries — no pinning). With
+//! `release_threshold > 0` the manager goes further: once an object's
+//! EWMA falls below that threshold (and no executor still shows unmet
+//! demand for it), it emits [`ReplicaDirective::Drop`] — *actively
+//! evict the k-th copy* — one copy per round down to a single holder,
+//! so small caches get their space back ahead of eviction pressure.
+//! Stage and Drop for the same object never overlap.
+//!
+//! Staging directives carry a `prestage` marker so the driver can class
+//! the transfer on the metered plane ([`crate::transfer`]): join warm-up
+//! copies ride the lowest priority (`Prestage`), demand-driven growth
+//! rides `Staging`, and both yield to foreground fetches under the
+//! admission budget.
 //!
 //! ## Re-replication on join
 //!
@@ -58,18 +70,35 @@ use crate::index::DataIndex;
 use crate::storage::object::ObjectId;
 use crate::util::fxhash::FxHashMap;
 
-/// A staging order for the driver: copy `obj` from `src`'s cache into
-/// `dst`'s cache. The driver charges/performs the transfer and reports
-/// completion (or abandonment) via
-/// [`crate::coordinator::FalkonCore::replication_staged`].
+/// An order for the driver's replica plumbing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ReplicaDirective {
-    /// Object to replicate.
-    pub obj: ObjectId,
-    /// A current holder to copy from.
-    pub src: ExecutorId,
-    /// Destination executor (never a current holder).
-    pub dst: ExecutorId,
+pub enum ReplicaDirective {
+    /// Copy `obj` from `src`'s cache into `dst`'s cache. The driver
+    /// charges/performs the transfer (classed `Staging`, or `Prestage`
+    /// when `prestage` is set — a join warm-up) and reports completion
+    /// or abandonment via
+    /// [`crate::coordinator::FalkonCore::replication_staged`].
+    Stage {
+        /// Object to replicate.
+        obj: ObjectId,
+        /// A current holder to copy from.
+        src: ExecutorId,
+        /// Destination executor (never a current holder).
+        dst: ExecutorId,
+        /// Join-time warm-up (lowest transfer priority) rather than
+        /// demand-driven growth.
+        prestage: bool,
+    },
+    /// Demand decayed below the release threshold: actively evict the
+    /// copy on `victim` (never the last one) instead of waiting for
+    /// cache pressure, and report via
+    /// [`crate::coordinator::FalkonCore::replication_dropped`].
+    Drop {
+        /// Object whose replica set is shrinking.
+        obj: ObjectId,
+        /// Holder whose copy is released.
+        victim: ExecutorId,
+    },
 }
 
 /// Per-object demand state.
@@ -91,6 +120,8 @@ pub struct ReplicationManager {
     demand: FxHashMap<ObjectId, Demand>,
     /// Directives issued but not yet confirmed staged by the driver.
     inflight: Vec<(ObjectId, ExecutorId)>,
+    /// Drop directives issued but not yet confirmed by the driver.
+    dropping: Vec<(ObjectId, ExecutorId)>,
     /// Executors that joined since the last evaluation (pre-stage queue).
     pending_joins: Vec<ExecutorId>,
     /// Rotates the source choice across holders so one holder's NIC does
@@ -107,6 +138,7 @@ impl ReplicationManager {
             cfg,
             demand: FxHashMap::default(),
             inflight: Vec::new(),
+            dropping: Vec::new(),
             pending_joins: Vec::new(),
             src_seq: 0,
             issued: 0,
@@ -147,10 +179,12 @@ impl ReplicationManager {
     }
 
     /// An executor left: forget its unmet demand and any staging
-    /// transfers targeting it (the driver abandons those).
+    /// transfers or pending drops targeting it (the driver abandons
+    /// those).
     pub fn executor_dropped(&mut self, exec: ExecutorId) {
         self.pending_joins.retain(|&e| e != exec);
         self.inflight.retain(|&(_, d)| d != exec);
+        self.dropping.retain(|&(_, v)| v != exec);
         for d in self.demand.values_mut() {
             d.wanters.retain(|&(e, _)| e != exec);
         }
@@ -161,6 +195,18 @@ impl ReplicationManager {
     pub fn on_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
         if let Some(pos) = self.inflight.iter().position(|&(o, d)| o == obj && d == dst) {
             self.inflight.swap_remove(pos);
+        }
+    }
+
+    /// The driver executed (or abandoned) a drop directive; the object
+    /// is eligible for future teardown or re-replication again.
+    pub fn on_drop_done(&mut self, obj: ObjectId, victim: ExecutorId) {
+        if let Some(pos) = self
+            .dropping
+            .iter()
+            .position(|&(o, v)| o == obj && v == victim)
+        {
+            self.dropping.swap_remove(pos);
         }
     }
 
@@ -200,8 +246,57 @@ impl ReplicationManager {
             }
             d.wanters.retain(|&(_, w)| w >= 0.05);
         }
-        self.demand
-            .retain(|_, d| d.ewma >= 1e-3 || !d.wanters.is_empty());
+        // With teardown enabled, a fully decayed object stays tracked
+        // while it still has copies to release (otherwise the purge would
+        // strand its extra replicas until cache pressure evicts them).
+        let teardown = self.cfg.release_threshold > 0.0;
+        self.demand.retain(|o, d| {
+            d.ewma >= 1e-3
+                || !d.wanters.is_empty()
+                || (teardown && index.locations(*o).len() > 1)
+        });
+
+        // Replica teardown on decay: when an object's smoothed demand has
+        // fallen below the release threshold (and nothing still wants it
+        // remotely), actively release the k-th copy — one per object per
+        // round, never the last copy, never while a staging transfer or
+        // another drop of the same object is in flight. The victim is the
+        // highest-id holder: deterministic on any backend (locations are
+        // the placement contract), and biased away from the lowest-id
+        // holder the earliest organic copy usually landed on.
+        let mut drops: Vec<ReplicaDirective> = Vec::new();
+        if teardown {
+            // Clamp under the growth threshold (config files validate
+            // this; programmatic configs are clamped here) so no demand
+            // level is ever simultaneously a stage and a drop candidate —
+            // that would re-ship the same object's bytes every round.
+            let release = self
+                .cfg
+                .release_threshold
+                .min(self.cfg.demand_threshold);
+            let mut cold: Vec<ObjectId> = self
+                .demand
+                .iter()
+                .filter(|(_, d)| d.ewma < release && d.wanters.is_empty())
+                .map(|(&o, _)| o)
+                .collect();
+            // FxHashMap iteration order must never leak into directives.
+            cold.sort_unstable();
+            for obj in cold {
+                if self.inflight_for(obj) > 0
+                    || self.dropping.iter().any(|&(o, _)| o == obj)
+                {
+                    continue;
+                }
+                let holders = index.locations(obj);
+                if holders.len() <= 1 {
+                    continue;
+                }
+                let victim = *holders.last().unwrap();
+                self.dropping.push((obj, victim));
+                drops.push(ReplicaDirective::Drop { obj, victim });
+            }
+        }
 
         // Hottest first; ties to the lower object id (determinism —
         // FxHashMap iteration order must never leak into placement).
@@ -232,7 +327,7 @@ impl ReplicationManager {
                 if staged >= self.cfg.prestage_top_k || dirs.len() >= budget {
                     break;
                 }
-                if let Some(d) = self.try_stage(obj, e, index) {
+                if let Some(d) = self.try_stage(obj, e, index, true) {
                     dirs.push(d);
                     staged += 1;
                 }
@@ -254,13 +349,16 @@ impl ReplicationManager {
                 break; // sorted: everything after is colder
             }
             if let Some(dst) = self.choose_dst(obj, index, executors) {
-                if let Some(d) = self.try_stage(obj, dst, index) {
+                if let Some(d) = self.try_stage(obj, dst, index, false) {
                     dirs.push(d);
                 }
             }
         }
-        self.issued += dirs.len() as u64;
-        dirs
+        // Drops first: they free cache space before new copies arrive and
+        // are near-free control actions (no transfer behind them).
+        self.issued += (drops.len() + dirs.len()) as u64;
+        drops.extend(dirs);
+        drops
     }
 
     /// Policy choice of the destination for the next replica of `obj`
@@ -302,12 +400,13 @@ impl ReplicationManager {
 
     /// Issue a directive staging `obj` to `dst` if every precondition
     /// holds (object has a holder, dst is not one, cap not exceeded, no
-    /// duplicate in flight).
+    /// duplicate in flight, no teardown of the same object pending).
     fn try_stage(
         &mut self,
         obj: ObjectId,
         dst: ExecutorId,
         index: &dyn DataIndex,
+        prestage: bool,
     ) -> Option<ReplicaDirective> {
         let holders = index.locations(obj);
         if holders.is_empty() || holders.binary_search(&dst).is_ok() {
@@ -316,13 +415,21 @@ impl ReplicationManager {
         if self.inflight.iter().any(|&(o, d)| o == obj && d == dst) {
             return None;
         }
+        if self.dropping.iter().any(|&(o, _)| o == obj) {
+            return None; // growing and shrinking at once is contradictory
+        }
         if holders.len() + self.inflight_for(obj) >= self.cfg.max_replicas.max(1) {
             return None;
         }
         let src = holders[self.src_seq % holders.len()];
         self.src_seq = self.src_seq.wrapping_add(1);
         self.inflight.push((obj, dst));
-        Some(ReplicaDirective { obj, src, dst })
+        Some(ReplicaDirective::Stage {
+            obj,
+            src,
+            dst,
+            prestage,
+        })
     }
 }
 
@@ -349,6 +456,19 @@ mod tests {
             idx.insert(ObjectId(o), e);
         }
         idx
+    }
+
+    /// Destructure a directive the test expects to be a Stage.
+    fn stage(d: &ReplicaDirective) -> (ObjectId, ExecutorId, ExecutorId, bool) {
+        match *d {
+            ReplicaDirective::Stage {
+                obj,
+                src,
+                dst,
+                prestage,
+            } => (obj, src, dst, prestage),
+            other => panic!("expected Stage, got {other:?}"),
+        }
     }
 
     #[test]
@@ -378,12 +498,14 @@ mod tests {
                 assert!(dirs.is_empty(), "round {round}: cap reached");
             }
             for d in dirs {
-                assert_eq!(d.obj, ObjectId(1));
-                assert!(idx.locations(d.obj).binary_search(&d.src).is_ok());
-                assert!(idx.locations(d.obj).binary_search(&d.dst).is_err());
+                let (obj, src, dst, prestage) = stage(&d);
+                assert_eq!(obj, ObjectId(1));
+                assert!(!prestage, "demand growth, not a join warm-up");
+                assert!(idx.locations(obj).binary_search(&src).is_ok());
+                assert!(idx.locations(obj).binary_search(&dst).is_err());
                 // Driver stages it.
-                idx.insert(d.obj, d.dst);
-                m.on_staged(d.obj, d.dst);
+                idx.insert(obj, dst);
+                m.on_staged(obj, dst);
             }
             assert!(
                 idx.locations(ObjectId(1)).len() <= 3,
@@ -405,12 +527,13 @@ mod tests {
         }
         let dirs = m.evaluate(&idx, &[0, 1, 2]);
         assert_eq!(dirs.len(), 1);
+        let (obj, _, dst, _) = stage(&dirs[0]);
         // Directive not yet staged: holders(1) + inflight(1) == cap.
         for _ in 0..8 {
             m.note_lookup(ObjectId(1));
         }
         assert!(m.evaluate(&idx, &[0, 1, 2]).is_empty());
-        m.on_staged(dirs[0].obj, dirs[0].dst);
+        m.on_staged(obj, dst);
         assert_eq!(m.inflight_len(), 0);
     }
 
@@ -451,11 +574,21 @@ mod tests {
         let dirs = m.evaluate(&idx, &[0, 7]);
         // prestage_top_k = 2: the two hottest objects land on the joiner
         // (demand-driven growth may add more, but the joiner directives
-        // come first).
+        // come first), classed as prestage traffic.
         assert!(dirs.len() >= 2, "{dirs:?}");
-        assert_eq!(dirs[0], ReplicaDirective { obj: ObjectId(1), src: 0, dst: 7 });
-        assert_eq!(dirs[1].obj, ObjectId(2));
-        assert_eq!(dirs[1].dst, 7);
+        assert_eq!(
+            dirs[0],
+            ReplicaDirective::Stage {
+                obj: ObjectId(1),
+                src: 0,
+                dst: 7,
+                prestage: true
+            }
+        );
+        let (obj, _, dst, prestage) = stage(&dirs[1]);
+        assert_eq!(obj, ObjectId(2));
+        assert_eq!(dst, 7);
+        assert!(prestage);
     }
 
     #[test]
@@ -476,11 +609,12 @@ mod tests {
         // prestage must be deferred, not dropped.
         m.executor_joined(7);
         assert!(m.evaluate(&idx, &[0, 1, 7]).is_empty());
-        idx.insert(dirs[0].obj, dirs[0].dst);
-        m.on_staged(dirs[0].obj, dirs[0].dst);
+        let (obj, _, dst, _) = stage(&dirs[0]);
+        idx.insert(obj, dst);
+        m.on_staged(obj, dst);
         let dirs = m.evaluate(&idx, &[0, 1, 7]);
         assert_eq!(dirs.len(), 1, "deferred joiner prestaged next round");
-        assert_eq!(dirs[0].dst, 7);
+        assert_eq!(stage(&dirs[0]).2, 7);
     }
 
     #[test]
@@ -492,12 +626,15 @@ mod tests {
         }
         let dirs = m.evaluate(&idx, &[0, 1, 2]);
         assert_eq!(dirs.len(), 1);
-        m.executor_dropped(dirs[0].dst);
+        m.executor_dropped(stage(&dirs[0]).2);
         assert_eq!(m.inflight_len(), 0, "in-flight to the dead dst cleared");
         m.executor_joined(5);
         m.executor_dropped(5);
         let dirs = m.evaluate(&idx, &[0, 1, 2]);
-        assert!(dirs.iter().all(|d| d.dst != 5), "no prestage to a ghost");
+        assert!(
+            dirs.iter().all(|d| stage(d).2 != 5),
+            "no prestage to a ghost"
+        );
     }
 
     #[test]
@@ -512,6 +649,96 @@ mod tests {
         }
         let dirs = m.evaluate(&idx, &[0, 2, 4, 6]);
         assert_eq!(dirs.len(), 1);
-        assert_eq!(dirs[0].dst, 4, "replica follows the unmet demand");
+        assert_eq!(stage(&dirs[0]).2, 4, "replica follows the unmet demand");
+    }
+
+    #[test]
+    fn decayed_demand_tears_replicas_down_to_one_copy() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            release_threshold: 0.5,
+            ..cfg()
+        });
+        let mut idx = idx_with(&[(1, 0), (1, 1), (1, 2)]);
+        // Hot: well above the release threshold — no drops.
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        let dirs = m.evaluate(&idx, &[0, 1, 2]);
+        assert!(
+            dirs.iter()
+                .all(|d| !matches!(d, ReplicaDirective::Drop { .. })),
+            "hot object must not be torn down: {dirs:?}"
+        );
+        // No new demand: the EWMA decays below 0.5 and drops begin, one
+        // copy per round, highest-id holder first, never the last copy.
+        let mut dropped = Vec::new();
+        for _ in 0..8 {
+            for d in m.evaluate(&idx, &[0, 1, 2]) {
+                if let ReplicaDirective::Drop { obj, victim } = d {
+                    assert_eq!(obj, ObjectId(1));
+                    assert!(idx.locations(obj).binary_search(&victim).is_ok());
+                    assert!(idx.locations(obj).len() > 1, "never the last copy");
+                    idx.remove(obj, victim);
+                    m.on_drop_done(obj, victim);
+                    dropped.push(victim);
+                }
+            }
+        }
+        assert_eq!(dropped, vec![2, 1], "k-th copy first, down to one");
+        assert_eq!(idx.locations(ObjectId(1)), &[0]);
+    }
+
+    #[test]
+    fn drop_waits_for_driver_confirmation_and_never_overlaps_staging() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            release_threshold: 0.5,
+            ..cfg()
+        });
+        let idx = idx_with(&[(1, 0), (1, 1)]);
+        m.note_lookup(ObjectId(1)); // ewma 0.5 → decays under 0.5 next round
+        let _ = m.evaluate(&idx, &[0, 1]);
+        let dirs = m.evaluate(&idx, &[0, 1]);
+        assert_eq!(
+            dirs,
+            vec![ReplicaDirective::Drop {
+                obj: ObjectId(1),
+                victim: 1
+            }]
+        );
+        // Unconfirmed: no duplicate drop, and no staging of the same
+        // object while the teardown is pending.
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        let dirs = m.evaluate(&idx, &[0, 1]);
+        assert!(dirs.is_empty(), "pending drop blocks both drop and stage: {dirs:?}");
+        m.on_drop_done(ObjectId(1), 1);
+        // Confirmed and demand is hot again: staging resumes.
+        for _ in 0..8 {
+            m.note_lookup(ObjectId(1));
+        }
+        let idx = idx_with(&[(1, 0)]);
+        let dirs = m.evaluate(&idx, &[0, 1]);
+        assert_eq!(dirs.len(), 1);
+        assert!(matches!(dirs[0], ReplicaDirective::Stage { .. }));
+    }
+
+    #[test]
+    fn teardown_skips_objects_with_live_unmet_demand() {
+        let mut m = ReplicationManager::new(ReplicationConfig {
+            release_threshold: 0.8,
+            ewma_alpha: 0.1, // slow: wanter weight stays over the floor
+            ..cfg()
+        });
+        let idx = idx_with(&[(1, 0), (1, 1)]);
+        // Low lookup volume (ewma stays under 0.8) but executor 4 still
+        // shows unmet demand — the copy it may soon receive must survive.
+        m.note_peer_fetch(ObjectId(1), 4);
+        let dirs = m.evaluate(&idx, &[0, 1, 4]);
+        assert!(
+            dirs.iter()
+                .all(|d| !matches!(d, ReplicaDirective::Drop { .. })),
+            "unmet demand must block teardown: {dirs:?}"
+        );
     }
 }

@@ -174,6 +174,24 @@ impl FlowNetwork {
         flow.remaining_bits / 8.0
     }
 
+    /// Instantaneous utilization of a resource in [0, 1]: the sum of the
+    /// fair-share rates of every flow crossing it over its capacity. The
+    /// transfer plane's admission controller reads this to decide whether
+    /// a source executor's egress can absorb background staging.
+    pub fn utilization(&mut self, r: ResourceId) -> f64 {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let cap = self.resources[r.0 as usize].capacity_bps;
+        let mut used = 0.0;
+        for flow in self.slots.iter().flatten() {
+            if flow.resources.contains(&r) {
+                used += flow.rate_bps;
+            }
+        }
+        (used / cap).clamp(0.0, 1.0)
+    }
+
     /// Instantaneous rate of a flow (bits/sec), for metrics.
     pub fn rate(&mut self, id: FlowId) -> f64 {
         if self.rates_dirty {
@@ -406,6 +424,20 @@ mod tests {
             assert!((disk_agg - n as f64 * 470e6).abs() < 1.0);
             assert!((gpfs_agg - 3.4e9).abs() < 1.0);
         }
+    }
+
+    #[test]
+    fn utilization_tracks_fair_share_load() {
+        let mut net = FlowNetwork::new();
+        let wide = net.add_resource(10e6);
+        let narrow = net.add_resource(4e6);
+        assert_eq!(net.utilization(wide), 0.0);
+        // One flow bound by the narrow resource: wide carries 4 of 10.
+        let f = net.start_flow(0.0, vec![wide, narrow], 1_000_000);
+        assert!((net.utilization(narrow) - 1.0).abs() < EPS);
+        assert!((net.utilization(wide) - 0.4).abs() < EPS);
+        net.remove_flow(0.0, f);
+        assert_eq!(net.utilization(narrow), 0.0);
     }
 
     #[test]

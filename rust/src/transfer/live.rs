@@ -1,0 +1,144 @@
+//! Live transfer plane: admission control over the cache-directory copy
+//! path.
+//!
+//! The live driver moves bytes with real file copies between per-executor
+//! cache directories ([`copy_into_cache`] — the one funnel every
+//! cache-bound copy goes through, whether it serves a foreground peer
+//! fetch, a persistent-storage read, or a staging transfer). The
+//! coordinator cannot observe NIC counters for its executor threads, so
+//! the live plane meters the closest observable proxy: the source
+//! executor's **busy-slot fraction** (a busy slot is a running task, and
+//! a running task is doing foreground I/O on that node's disk and NIC).
+//! The coordinator refreshes the snapshot every loop iteration via
+//! [`LiveTransferPlane::set_load`] and drains re-admitted transfers with
+//! [`TransferPlane::readmit`] before dispatching.
+
+use std::path::Path;
+
+use super::{Admission, AdmissionController, TransferPlane, TransferRequest, TransferStats};
+use crate::index::central::ExecutorId;
+use crate::util::fxhash::FxHashMap;
+
+/// The live driver's transfer plane: admission control fed by a
+/// coordinator-maintained per-executor load snapshot.
+pub struct LiveTransferPlane {
+    ctl: AdmissionController,
+    /// Busy-slot fraction per executor (coordinator snapshot).
+    load: FxHashMap<ExecutorId, f64>,
+}
+
+impl LiveTransferPlane {
+    /// Plane with the given staging budget.
+    pub fn new(staging_budget: f64) -> Self {
+        LiveTransferPlane {
+            ctl: AdmissionController::new(staging_budget),
+            load: FxHashMap::default(),
+        }
+    }
+
+    /// Refresh one executor's load (busy slots / capacity, in [0, 1]).
+    /// Released executors are forgotten by
+    /// [`TransferPlane::executor_released`].
+    pub fn set_load(&mut self, exec: ExecutorId, util: f64) {
+        self.load.insert(exec, util.clamp(0.0, 1.0));
+    }
+
+    fn util(&self, exec: ExecutorId) -> f64 {
+        self.load.get(&exec).copied().unwrap_or(0.0)
+    }
+}
+
+impl TransferPlane for LiveTransferPlane {
+    fn submit(&mut self, req: TransferRequest) -> Admission {
+        if !req.class.is_background() {
+            return Admission::Start;
+        }
+        let util = self.util(req.src);
+        self.ctl.offer(req, util)
+    }
+
+    fn readmit(&mut self) -> Vec<TransferRequest> {
+        let load = &self.load;
+        self.ctl
+            .readmit(|e| load.get(&e).copied().unwrap_or(0.0))
+    }
+
+    fn executor_released(&mut self, exec: ExecutorId) -> Vec<TransferRequest> {
+        self.load.remove(&exec);
+        self.ctl.executor_released(exec)
+    }
+
+    fn deferred_len(&self) -> usize {
+        self.ctl.deferred_len()
+    }
+
+    fn stats(&self) -> TransferStats {
+        self.ctl.stats()
+    }
+}
+
+/// The live data path: copy a source file into an executor's cache
+/// directory, returning the bytes moved. Every cache-bound copy in the
+/// live driver (peer fetch, persistent-storage fetch, staging) funnels
+/// through here so all byte movement shares one accounted path.
+pub fn copy_into_cache(src: &Path, dst: &Path) -> std::io::Result<u64> {
+    std::fs::copy(src, dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::object::ObjectId;
+    use crate::transfer::TransferClass;
+
+    fn staging(obj: u64, src: usize) -> TransferRequest {
+        TransferRequest {
+            class: TransferClass::Staging,
+            obj: ObjectId(obj),
+            src,
+            dst: 7,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn load_snapshot_gates_admission() {
+        let mut p = LiveTransferPlane::new(0.5);
+        p.set_load(0, 1.0);
+        p.set_load(1, 0.0);
+        assert_eq!(p.submit(staging(1, 0)), Admission::Defer);
+        assert_eq!(p.submit(staging(2, 1)), Admission::Start);
+        // Source 0 drains; the deferred transfer comes back.
+        p.set_load(0, 0.0);
+        let back = p.readmit();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].obj, ObjectId(1));
+        assert_eq!(p.deferred_len(), 0);
+    }
+
+    #[test]
+    fn unknown_executor_is_idle_and_release_cancels() {
+        let mut p = LiveTransferPlane::new(0.5);
+        assert_eq!(p.submit(staging(1, 42)), Admission::Start);
+        p.set_load(3, 1.0);
+        assert_eq!(p.submit(staging(2, 3)), Admission::Defer);
+        let cancelled = p.executor_released(3);
+        assert_eq!(cancelled.len(), 1);
+        assert_eq!(p.stats().cancelled, 1);
+        assert_eq!(p.deferred_len(), 0);
+    }
+
+    #[test]
+    fn copy_into_cache_moves_real_bytes() {
+        let dir = std::env::temp_dir().join(format!("dd_xfer_copy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = dir.join("src.bin");
+        let dst = dir.join("dst.bin");
+        std::fs::write(&src, vec![7u8; 4096]).unwrap();
+        let n = copy_into_cache(&src, &dst).unwrap();
+        assert_eq!(n, 4096);
+        assert_eq!(std::fs::read(&dst).unwrap().len(), 4096);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,388 @@
+//! The metered transfer plane: every byte movement carries a class, and
+//! background movement is admission-controlled.
+//!
+//! Before this subsystem existed, replication staging shared the peer
+//! path with foreground task fetches *unmetered*: a burst of staging
+//! transfers could halve the bandwidth a task's input fetch saw, which
+//! inverts the point of data diffusion (replication exists to *help*
+//! foreground work — the companion paper arXiv:0808.3535 is explicit
+//! that data-aware scheduling only wins once data movement is accounted
+//! against the shared links it crosses).
+//!
+//! ## The class lattice
+//!
+//! Every transfer carries a [`TransferClass`], ordered
+//!
+//! ```text
+//! Foreground  >  Staging  >  Prestage
+//! ```
+//!
+//! * [`TransferClass::Foreground`] — a running task resolving an input
+//!   (own-cache read, peer fetch, persistent-storage read) or writing an
+//!   output. **Always admitted**: nothing in this plane may ever delay
+//!   the task critical path.
+//! * [`TransferClass::Staging`] — a demand-driven replication copy
+//!   ([`crate::replication`]): useful soon, not urgent now.
+//! * [`TransferClass::Prestage`] — warming a newly joined executor with
+//!   the hottest objects: the most speculative traffic, re-admitted last.
+//!
+//! ## The admission rule
+//!
+//! Background transfers (`Staging`/`Prestage`) are admitted only while
+//! the **source executor's egress utilization** is at or below the
+//! configured budget (`[transfer] staging_budget`, `--staging-budget`):
+//!
+//! ```text
+//! admit(req)  ⇔  req.class == Foreground  ∨  util(req.src) ≤ budget
+//! ```
+//!
+//! A rejected transfer is *deferred*, not dropped: it waits in a
+//! class-ordered queue and is re-admitted (`Staging` before `Prestage`,
+//! FIFO within a class, at most one grant per source per round so a
+//! drained source is not instantly re-saturated) as the source's load
+//! falls back under budget. Deferred transfers whose source or
+//! destination executor is released are cancelled and reported so the
+//! replication manager can free its in-flight slot. The budget default
+//! of 1.0 disables deferral entirely (utilization cannot exceed 1), so
+//! admission control is opt-in per run.
+//!
+//! Two [`TransferPlane`] implementations carry the rule onto the two
+//! execution substrates:
+//!
+//! * [`sim::SimTransferPlane`] wraps the [`crate::storage::testbed`]
+//!   fair-share flow network ([`crate::sim::flownet`]): utilization is
+//!   the measured rate-sum over the source's NIC-out and disk-read
+//!   resources, so admission reacts to the same contention physics the
+//!   flows themselves obey.
+//! * [`live::LiveTransferPlane`] wraps the live driver's cache-directory
+//!   copy path: utilization is the source executor's busy-slot fraction
+//!   (a running task is doing foreground I/O), fed by the coordinator
+//!   each loop.
+
+pub mod live;
+pub mod sim;
+
+use crate::index::central::ExecutorId;
+use crate::storage::object::ObjectId;
+
+/// Priority class of one transfer. Order matters: `Foreground` preempts
+/// nothing but is never deferred; `Staging` re-admits before `Prestage`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TransferClass {
+    /// Join-time warm-up staging (most speculative, lowest priority).
+    Prestage,
+    /// Demand-driven replication staging.
+    Staging,
+    /// A task's own input fetch / output write (never deferred).
+    Foreground,
+}
+
+impl TransferClass {
+    /// Whether this class is subject to admission control.
+    pub fn is_background(&self) -> bool {
+        !matches!(self, TransferClass::Foreground)
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransferClass::Foreground => "foreground",
+            TransferClass::Staging => "staging",
+            TransferClass::Prestage => "prestage",
+        }
+    }
+}
+
+/// One transfer offered to the plane: move `bytes` of `obj` from the
+/// cache of `src` to the cache of `dst` under `class`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferRequest {
+    /// Priority class.
+    pub class: TransferClass,
+    /// Object being moved.
+    pub obj: ObjectId,
+    /// Source executor (whose egress the admission rule meters).
+    pub src: ExecutorId,
+    /// Destination executor.
+    pub dst: ExecutorId,
+    /// Bytes to move.
+    pub bytes: u64,
+}
+
+/// Admission verdict for a submitted transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Start the data movement now.
+    Start,
+    /// Source over budget: queued for re-admission as load drains.
+    Defer,
+}
+
+/// Lifetime admission-control counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Background transfers deferred at submission.
+    pub deferred: u64,
+    /// Previously deferred transfers re-admitted.
+    pub readmitted: u64,
+    /// Deferred transfers cancelled because their source or destination
+    /// executor was released.
+    pub cancelled: u64,
+}
+
+/// The class-aware admission controller shared by both plane
+/// implementations. Pure control logic: the caller supplies source
+/// utilization and performs the actual data movement.
+#[derive(Debug)]
+pub struct AdmissionController {
+    /// Source egress-utilization budget in [0, 1]; 1.0 never defers.
+    budget: f64,
+    /// Deferred background transfers, FIFO within each class.
+    queue: Vec<TransferRequest>,
+    stats: TransferStats,
+}
+
+impl AdmissionController {
+    /// Controller with the given utilization budget (clamped to [0, 1]).
+    pub fn new(budget: f64) -> Self {
+        AdmissionController {
+            budget: budget.clamp(0.0, 1.0),
+            queue: Vec::new(),
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// The utilization budget in force.
+    pub fn budget(&self) -> f64 {
+        self.budget
+    }
+
+    /// Offer a transfer given its source's current egress utilization.
+    /// Foreground is always admitted. Background is admitted at or under
+    /// budget — unless an older transfer from the same source is still
+    /// deferred, in which case the new one queues behind it (a fresh
+    /// submission must not jump the FIFO order or sidestep the
+    /// one-grant-per-source re-admission throttle).
+    pub fn offer(&mut self, req: TransferRequest, src_util: f64) -> Admission {
+        if !req.class.is_background() {
+            return Admission::Start;
+        }
+        let queued_ahead = self.queue.iter().any(|r| r.src == req.src);
+        if src_util <= self.budget && !queued_ahead {
+            Admission::Start
+        } else {
+            self.stats.deferred += 1;
+            self.queue.push(req);
+            Admission::Defer
+        }
+    }
+
+    /// Re-admit deferred transfers whose source has drained to or below
+    /// budget: `Staging` before `Prestage`, FIFO within a class, at most
+    /// one grant per source per call (each grant will raise that
+    /// source's utilization, so further grants wait for the next round).
+    pub fn readmit(&mut self, mut src_util: impl FnMut(ExecutorId) -> f64) -> Vec<TransferRequest> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let mut admitted = Vec::new();
+        let mut granted_src: Vec<ExecutorId> = Vec::new();
+        for class in [TransferClass::Staging, TransferClass::Prestage] {
+            let mut i = 0;
+            while i < self.queue.len() {
+                if self.queue[i].class != class || granted_src.contains(&self.queue[i].src) {
+                    i += 1;
+                    continue;
+                }
+                if src_util(self.queue[i].src) <= self.budget {
+                    let req = self.queue.remove(i);
+                    granted_src.push(req.src);
+                    self.stats.readmitted += 1;
+                    admitted.push(req);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        admitted
+    }
+
+    /// An executor was released: cancel every deferred transfer touching
+    /// it (as source or destination) and return them so the caller can
+    /// free the replication manager's in-flight slots.
+    pub fn executor_released(&mut self, exec: ExecutorId) -> Vec<TransferRequest> {
+        let mut cancelled = Vec::new();
+        self.queue.retain(|r| {
+            if r.src == exec || r.dst == exec {
+                cancelled.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        self.stats.cancelled += cancelled.len() as u64;
+        cancelled
+    }
+
+    /// Transfers currently deferred.
+    pub fn deferred_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> TransferStats {
+        self.stats
+    }
+}
+
+/// The transfer plane: class-tagged byte movement with admission
+/// control. One implementation per execution substrate
+/// ([`sim::SimTransferPlane`], [`live::LiveTransferPlane`]); the data
+/// path is substrate-specific (flows vs file copies) and lives on the
+/// concrete types, while this trait captures the control-plane contract
+/// the drivers and tests program against.
+pub trait TransferPlane {
+    /// Submit a transfer. `Foreground` always returns
+    /// [`Admission::Start`]; background classes may defer.
+    fn submit(&mut self, req: TransferRequest) -> Admission;
+
+    /// Deferred transfers whose source has drained under budget; the
+    /// caller must start (or abandon) each returned request.
+    fn readmit(&mut self) -> Vec<TransferRequest>;
+
+    /// Cancel deferred transfers touching a released executor.
+    fn executor_released(&mut self, exec: ExecutorId) -> Vec<TransferRequest>;
+
+    /// Transfers currently deferred.
+    fn deferred_len(&self) -> usize;
+
+    /// Lifetime admission counters.
+    fn stats(&self) -> TransferStats;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(class: TransferClass, obj: u64, src: usize, dst: usize) -> TransferRequest {
+        TransferRequest {
+            class,
+            obj: ObjectId(obj),
+            src,
+            dst,
+            bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn foreground_is_always_admitted() {
+        let mut c = AdmissionController::new(0.0);
+        for util in [0.0, 0.5, 1.0] {
+            assert_eq!(
+                c.offer(req(TransferClass::Foreground, 1, 0, 1), util),
+                Admission::Start,
+                "foreground deferred at util {util}"
+            );
+        }
+        assert_eq!(c.deferred_len(), 0);
+        assert_eq!(c.stats().deferred, 0);
+    }
+
+    #[test]
+    fn background_defers_over_budget_and_readmits_under() {
+        let mut c = AdmissionController::new(0.5);
+        assert_eq!(c.offer(req(TransferClass::Staging, 1, 0, 1), 0.4), Admission::Start);
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 0, 1), 0.9), Admission::Defer);
+        assert_eq!(c.deferred_len(), 1);
+        // Still loaded: nothing comes back.
+        assert!(c.readmit(|_| 0.9).is_empty());
+        // Drained: the deferred staging is re-admitted.
+        let back = c.readmit(|_| 0.1);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].obj, ObjectId(2));
+        assert_eq!(c.deferred_len(), 0);
+        let s = c.stats();
+        assert_eq!((s.deferred, s.readmitted, s.cancelled), (1, 1, 0));
+    }
+
+    #[test]
+    fn budget_one_never_defers() {
+        let mut c = AdmissionController::new(1.0);
+        for i in 0..10 {
+            assert_eq!(
+                c.offer(req(TransferClass::Prestage, i, 0, 1), 1.0),
+                Admission::Start
+            );
+        }
+        assert_eq!(c.stats().deferred, 0);
+    }
+
+    #[test]
+    fn staging_readmits_before_prestage_fifo_within_class() {
+        let mut c = AdmissionController::new(0.2);
+        // Deferred in mixed order, distinct sources so the one-grant-per-
+        // source rule does not interfere.
+        assert_eq!(c.offer(req(TransferClass::Prestage, 1, 0, 9), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 1, 9), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Staging, 3, 2, 9), 0.9), Admission::Defer);
+        let back = c.readmit(|_| 0.0);
+        let classes: Vec<TransferClass> = back.iter().map(|r| r.class).collect();
+        assert_eq!(
+            classes,
+            vec![TransferClass::Staging, TransferClass::Staging, TransferClass::Prestage]
+        );
+        assert_eq!(back[0].obj, ObjectId(2), "FIFO within the staging class");
+    }
+
+    #[test]
+    fn fresh_submissions_queue_behind_deferred_same_source_transfers() {
+        let mut c = AdmissionController::new(0.5);
+        assert_eq!(c.offer(req(TransferClass::Staging, 1, 0, 8), 0.9), Admission::Defer);
+        // Source drained, but an older transfer is still queued: the new
+        // one must not jump it.
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 0, 9), 0.1), Admission::Defer);
+        // A different (idle) source is unaffected.
+        assert_eq!(c.offer(req(TransferClass::Staging, 3, 1, 9), 0.1), Admission::Start);
+        let back = c.readmit(|_| 0.0);
+        assert_eq!(back.len(), 1, "one grant per source per round");
+        assert_eq!(back[0].obj, ObjectId(1), "oldest first");
+        assert_eq!(c.readmit(|_| 0.0)[0].obj, ObjectId(2));
+    }
+
+    #[test]
+    fn one_grant_per_source_per_round() {
+        let mut c = AdmissionController::new(0.2);
+        assert_eq!(c.offer(req(TransferClass::Staging, 1, 0, 8), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 0, 9), 0.9), Admission::Defer);
+        let back = c.readmit(|_| 0.0);
+        assert_eq!(back.len(), 1, "same source: one grant per round");
+        assert_eq!(back[0].obj, ObjectId(1));
+        let back = c.readmit(|_| 0.0);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].obj, ObjectId(2));
+    }
+
+    #[test]
+    fn released_executor_cancels_touching_transfers() {
+        let mut c = AdmissionController::new(0.0);
+        assert_eq!(c.offer(req(TransferClass::Staging, 1, 3, 5), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 5, 7), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Prestage, 3, 1, 2), 0.9), Admission::Defer);
+        let cancelled = c.executor_released(5);
+        assert_eq!(cancelled.len(), 2, "src==5 and dst==5 both cancelled");
+        assert_eq!(c.deferred_len(), 1);
+        assert_eq!(c.stats().cancelled, 2);
+        // The survivor is untouched and still re-admittable.
+        assert_eq!(c.readmit(|_| 0.0).len(), 1);
+    }
+
+    #[test]
+    fn class_lattice_order() {
+        assert!(TransferClass::Foreground > TransferClass::Staging);
+        assert!(TransferClass::Staging > TransferClass::Prestage);
+        assert!(!TransferClass::Foreground.is_background());
+        assert!(TransferClass::Staging.is_background());
+        assert!(TransferClass::Prestage.is_background());
+        assert_eq!(TransferClass::Prestage.label(), "prestage");
+    }
+}

@@ -1,0 +1,198 @@
+//! Simulated transfer plane: admission control over the fair-share flow
+//! network.
+//!
+//! Wraps the wired [`SimTestbed`] so that every simulated byte movement
+//! — foreground task I/O and background staging alike — starts through
+//! one class-tagged entry point, and background staging is admitted
+//! against the *measured* utilization of the source executor's egress
+//! resources (NIC-out and disk-read), i.e. the same max-min-fair rates
+//! the flows themselves experience. The sim driver owns one
+//! [`SimTransferPlane`] instead of a bare testbed.
+
+use super::{
+    Admission, AdmissionController, TransferClass, TransferPlane, TransferRequest, TransferStats,
+};
+use crate::index::central::ExecutorId;
+use crate::sim::flownet::FlowId;
+use crate::storage::testbed::{SimTestbed, TransferKind};
+
+/// The simulation driver's transfer plane.
+pub struct SimTransferPlane {
+    /// The wired testbed (flow network + resource handles + metadata
+    /// server). Public: the driver still couples flow completions to the
+    /// DES through `testbed.net` and queues metadata ops directly.
+    pub testbed: SimTestbed,
+    ctl: AdmissionController,
+    /// Flows started per class: [foreground, staging, prestage].
+    started: [u64; 3],
+}
+
+impl SimTransferPlane {
+    /// Plane over a wired testbed with the given staging budget.
+    pub fn new(testbed: SimTestbed, staging_budget: f64) -> Self {
+        SimTransferPlane {
+            testbed,
+            ctl: AdmissionController::new(staging_budget),
+            started: [0; 3],
+        }
+    }
+
+    fn class_ix(class: TransferClass) -> usize {
+        match class {
+            TransferClass::Foreground => 0,
+            TransferClass::Staging => 1,
+            TransferClass::Prestage => 2,
+        }
+    }
+
+    /// Start a class-tagged flow now (admission already granted — the
+    /// driver calls this for foreground flows directly and for
+    /// background flows after [`TransferPlane::submit`]/
+    /// [`TransferPlane::readmit`] returned them).
+    pub fn start(
+        &mut self,
+        now: f64,
+        class: TransferClass,
+        kind: TransferKind,
+        bytes: u64,
+    ) -> FlowId {
+        self.started[Self::class_ix(class)] += 1;
+        let rs = self.testbed.resources(kind);
+        self.testbed.net.start_flow(now, rs, bytes)
+    }
+
+    /// Flows started per class: (foreground, staging, prestage).
+    pub fn class_counts(&self) -> (u64, u64, u64) {
+        (self.started[0], self.started[1], self.started[2])
+    }
+
+    /// Egress utilization of one executor: the larger of its NIC-out and
+    /// disk-read utilization (a peer transfer crosses both; whichever is
+    /// more loaded is what a new transfer would contend on).
+    pub fn source_utilization(&mut self, e: ExecutorId) -> f64 {
+        Self::util_of(&mut self.testbed, e)
+    }
+
+    fn util_of(testbed: &mut SimTestbed, e: ExecutorId) -> f64 {
+        match testbed.nodes.get(e).copied() {
+            None => 0.0,
+            Some(n) => {
+                let nic = testbed.net.utilization(n.nic_out);
+                let disk = testbed.net.utilization(n.disk_read);
+                nic.max(disk)
+            }
+        }
+    }
+}
+
+impl TransferPlane for SimTransferPlane {
+    fn submit(&mut self, req: TransferRequest) -> Admission {
+        if !req.class.is_background() {
+            return Admission::Start;
+        }
+        let util = Self::util_of(&mut self.testbed, req.src);
+        self.ctl.offer(req, util)
+    }
+
+    fn readmit(&mut self) -> Vec<TransferRequest> {
+        let testbed = &mut self.testbed;
+        self.ctl.readmit(|e| Self::util_of(testbed, e))
+    }
+
+    fn executor_released(&mut self, exec: ExecutorId) -> Vec<TransferRequest> {
+        self.ctl.executor_released(exec)
+    }
+
+    fn deferred_len(&self) -> usize {
+        self.ctl.deferred_len()
+    }
+
+    fn stats(&self) -> TransferStats {
+        self.ctl.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::storage::object::ObjectId;
+    use crate::util::units::MB;
+
+    fn plane(nodes: usize, budget: f64) -> SimTransferPlane {
+        let cfg = Config::with_nodes(nodes);
+        SimTransferPlane::new(SimTestbed::new(&cfg), budget)
+    }
+
+    fn staging(obj: u64, src: usize, dst: usize) -> TransferRequest {
+        TransferRequest {
+            class: TransferClass::Staging,
+            obj: ObjectId(obj),
+            src,
+            dst,
+            bytes: MB,
+        }
+    }
+
+    #[test]
+    fn idle_source_admits_loaded_source_defers() {
+        let mut p = plane(3, 0.2);
+        assert_eq!(p.submit(staging(1, 0, 1)), Admission::Start);
+        // A foreground peer fetch from node 0 loads its disk-read well
+        // past the 0.2 budget (dst disk-write binds at 230 of 470 Mb/s
+        // source read ⇒ ~0.49 utilization).
+        let fid = p.start(
+            0.0,
+            TransferClass::Foreground,
+            TransferKind::Peer { src: 0, dst: 2 },
+            100 * MB,
+        );
+        assert!(p.source_utilization(0) > 0.2);
+        assert_eq!(p.submit(staging(2, 0, 1)), Admission::Defer);
+        assert_eq!(p.deferred_len(), 1);
+        assert!(p.readmit().is_empty(), "still loaded");
+        // The foreground flow completes: the source drains and the
+        // deferred staging is re-admitted.
+        p.testbed.net.remove_flow(0.0, fid);
+        let back = p.readmit();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].obj, ObjectId(2));
+    }
+
+    #[test]
+    fn foreground_never_defers_even_when_saturated() {
+        let mut p = plane(2, 0.0);
+        let _f = p.start(
+            0.0,
+            TransferClass::Foreground,
+            TransferKind::Peer { src: 0, dst: 1 },
+            100 * MB,
+        );
+        let req = TransferRequest {
+            class: TransferClass::Foreground,
+            obj: ObjectId(9),
+            src: 0,
+            dst: 1,
+            bytes: MB,
+        };
+        assert_eq!(p.submit(req), Admission::Start);
+        assert_eq!(p.stats().deferred, 0);
+    }
+
+    #[test]
+    fn class_counts_track_started_flows() {
+        let mut p = plane(2, 1.0);
+        p.start(0.0, TransferClass::Foreground, TransferKind::LocalRead { node: 0 }, MB);
+        p.start(0.0, TransferClass::Staging, TransferKind::Peer { src: 0, dst: 1 }, MB);
+        p.start(0.0, TransferClass::Prestage, TransferKind::Peer { src: 0, dst: 1 }, MB);
+        p.start(0.0, TransferClass::Foreground, TransferKind::GpfsRead { node: 1 }, MB);
+        assert_eq!(p.class_counts(), (2, 1, 1));
+    }
+
+    #[test]
+    fn unknown_source_reads_as_idle() {
+        let mut p = plane(2, 0.2);
+        assert_eq!(p.source_utilization(99), 0.0);
+        assert_eq!(p.submit(staging(1, 99, 0)), Admission::Start);
+    }
+}

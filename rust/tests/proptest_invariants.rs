@@ -437,7 +437,7 @@ fn prop_churn_backends_agree_and_no_dangling_locations() {
 #[test]
 fn prop_replication_caps_and_liveness_under_churn() {
     use datadiffusion::config::ReplicationConfig;
-    use datadiffusion::replication::{PlacementPolicy, ReplicationManager};
+    use datadiffusion::replication::{PlacementPolicy, ReplicaDirective, ReplicationManager};
     use std::collections::BTreeSet;
 
     const N_OBJ: u64 = 12;
@@ -462,6 +462,9 @@ fn prop_replication_caps_and_liveness_under_churn() {
             ewma_alpha: 0.7,
             prestage_top_k: 2,
             max_inflight: 6,
+            // Half the cases run active teardown too, so drops interleave
+            // with staging, churn and demand.
+            release_threshold: if rng.below(2) == 0 { 0.25 } else { 0.0 },
             ..ReplicationConfig::default()
         };
         let mut mgr = ReplicationManager::new(rcfg);
@@ -521,37 +524,55 @@ fn prop_replication_caps_and_liveness_under_churn() {
                         mgr.note_peer_fetch(obj, e);
                     }
                 }
-                // Evaluate: check every directive, then stage or abandon.
+                // Evaluate: check every directive, then execute or
+                // abandon it.
                 _ => {
                     let executors: Vec<usize> = live.iter().copied().collect();
                     for d in mgr.evaluate(&central, &executors) {
-                        assert!(
-                            live.contains(&d.src),
-                            "seed={seed} step={step}: src {} not live",
-                            d.src
-                        );
-                        assert!(
-                            live.contains(&d.dst),
-                            "seed={seed} step={step}: dst {} not live",
-                            d.dst
-                        );
-                        assert!(
-                            central.locations(d.obj).binary_search(&d.src).is_ok(),
-                            "seed={seed} step={step}: src {} does not hold {}",
-                            d.src,
-                            d.obj
-                        );
-                        assert!(
-                            central.locations(d.obj).binary_search(&d.dst).is_err(),
-                            "seed={seed} step={step}: dst {} already holds {}",
-                            d.dst,
-                            d.obj
-                        );
-                        if rng.below(4) > 0 {
-                            DataIndex::insert(&mut central, d.obj, d.dst);
-                            DataIndex::insert(&mut chord, d.obj, d.dst);
+                        match d {
+                            ReplicaDirective::Stage { obj, src, dst, .. } => {
+                                assert!(
+                                    live.contains(&src),
+                                    "seed={seed} step={step}: src {src} not live"
+                                );
+                                assert!(
+                                    live.contains(&dst),
+                                    "seed={seed} step={step}: dst {dst} not live"
+                                );
+                                assert!(
+                                    central.locations(obj).binary_search(&src).is_ok(),
+                                    "seed={seed} step={step}: src {src} does not hold {obj}"
+                                );
+                                assert!(
+                                    central.locations(obj).binary_search(&dst).is_err(),
+                                    "seed={seed} step={step}: dst {dst} already holds {obj}"
+                                );
+                                if rng.below(4) > 0 {
+                                    DataIndex::insert(&mut central, obj, dst);
+                                    DataIndex::insert(&mut chord, obj, dst);
+                                }
+                                mgr.on_staged(obj, dst);
+                            }
+                            ReplicaDirective::Drop { obj, victim } => {
+                                assert!(
+                                    live.contains(&victim),
+                                    "seed={seed} step={step}: drop victim {victim} not live"
+                                );
+                                assert!(
+                                    central.locations(obj).binary_search(&victim).is_ok(),
+                                    "seed={seed} step={step}: victim {victim} does not hold {obj}"
+                                );
+                                assert!(
+                                    central.locations(obj).len() > 1,
+                                    "seed={seed} step={step}: drop would orphan {obj}"
+                                );
+                                if rng.below(4) > 0 {
+                                    DataIndex::remove(&mut central, obj, victim);
+                                    DataIndex::remove(&mut chord, obj, victim);
+                                }
+                                mgr.on_drop_done(obj, victim);
+                            }
                         }
-                        mgr.on_staged(d.obj, d.dst);
                     }
                 }
             }
@@ -691,6 +712,191 @@ fn prop_flownet_conservation_and_completion() {
             completed += 1;
         }
         assert_eq!(completed, nf, "seed={seed}: not all flows completed");
+    }
+}
+
+/// Transfer-plane admission invariants under arbitrary staging load and
+/// executor churn: (a) foreground transfers are ALWAYS admitted, no
+/// matter how saturated the sources are; (b) a background transfer is
+/// deferred iff its source is over budget; (c) re-admission only
+/// releases transfers whose source is at or under budget, staging
+/// before prestage; and (d) every deferred transfer eventually runs
+/// (once load drains) or is cancelled when an executor it touches is
+/// released — nothing is lost and nothing leaks.
+#[test]
+fn prop_admission_never_starves_foreground() {
+    use datadiffusion::transfer::{
+        Admission, AdmissionController, TransferClass, TransferRequest,
+    };
+
+    const N_EXEC: usize = 6;
+    for case in 0..cases() * 2 {
+        let seed = 0xAD31 + case;
+        let mut rng = Rng::new(seed);
+        let budget = rng.range_f64(0.05, 0.95);
+        let mut ctl = AdmissionController::new(budget);
+        // Per-executor utilization the "world" currently shows.
+        let mut util = [0.0f64; N_EXEC];
+        let mut live: Vec<bool> = vec![true; N_EXEC];
+        // Model of what must still be queued: (obj id, source).
+        let mut queued: Vec<(u64, usize)> = Vec::new();
+        let mut next_obj = 0u64;
+        let mut submitted_bg = 0u64;
+        let mut started = 0u64;
+        let mut cancelled = 0u64;
+
+        for step in 0..300u64 {
+            match rng.below(10) {
+                // Foreground submission: always admitted, even from a
+                // fully saturated (or dead) source.
+                0..=2 => {
+                    let src = rng.index(N_EXEC);
+                    let req = TransferRequest {
+                        class: TransferClass::Foreground,
+                        obj: ObjectId(u64::MAX - step),
+                        src,
+                        dst: (src + 1) % N_EXEC,
+                        bytes: rng.range_u64(1, 1 << 20),
+                    };
+                    assert_eq!(
+                        ctl.offer(req, util[src]),
+                        Admission::Start,
+                        "seed={seed} step={step}: foreground deferred at util {}",
+                        util[src]
+                    );
+                }
+                // Background submission at the source's current load.
+                3..=5 => {
+                    let src = rng.index(N_EXEC);
+                    if !live[src] {
+                        continue;
+                    }
+                    let class = if rng.below(2) == 0 {
+                        TransferClass::Staging
+                    } else {
+                        TransferClass::Prestage
+                    };
+                    let obj = next_obj;
+                    next_obj += 1;
+                    submitted_bg += 1;
+                    let req = TransferRequest {
+                        class,
+                        obj: ObjectId(obj),
+                        src,
+                        dst: (src + 1 + rng.index(N_EXEC - 1)) % N_EXEC,
+                        bytes: rng.range_u64(1, 1 << 20),
+                    };
+                    let same_src_queued = queued.iter().any(|&(_, s)| s == src);
+                    match ctl.offer(req, util[src]) {
+                        Admission::Start => {
+                            assert!(
+                                util[src] <= budget,
+                                "seed={seed} step={step}: admitted over budget"
+                            );
+                            assert!(
+                                !same_src_queued,
+                                "seed={seed} step={step}: jumped the deferred queue"
+                            );
+                            started += 1;
+                        }
+                        Admission::Defer => {
+                            assert!(
+                                util[src] > budget || same_src_queued,
+                                "seed={seed} step={step}: deferred under budget"
+                            );
+                            queued.push((obj, src));
+                        }
+                    }
+                }
+                // Load change + re-admission round.
+                6..=8 => {
+                    for u in util.iter_mut() {
+                        *u = rng.next_f64();
+                    }
+                    let back = ctl.readmit(|e| util[e]);
+                    let mut seen_prestage = false;
+                    for r in &back {
+                        assert!(
+                            util[r.src] <= budget,
+                            "seed={seed} step={step}: readmitted over budget"
+                        );
+                        if r.class == TransferClass::Prestage {
+                            seen_prestage = true;
+                        } else {
+                            assert!(
+                                !seen_prestage,
+                                "seed={seed} step={step}: prestage before staging"
+                            );
+                        }
+                        let pos = queued.iter().position(|&(o, _)| o == r.obj.0);
+                        assert!(
+                            pos.is_some(),
+                            "seed={seed} step={step}: readmitted unknown transfer"
+                        );
+                        queued.remove(pos.unwrap());
+                        started += 1;
+                    }
+                }
+                // Executor release: deferred transfers touching it are
+                // cancelled (returned exactly once, removed from queue).
+                _ => {
+                    let e = rng.index(N_EXEC);
+                    live[e] = false;
+                    util[e] = 0.0;
+                    for r in ctl.executor_released(e) {
+                        assert!(
+                            r.src == e || r.dst == e,
+                            "seed={seed} step={step}: cancelled transfer not touching {e}"
+                        );
+                        let pos = queued.iter().position(|&(o, _)| o == r.obj.0);
+                        assert!(
+                            pos.is_some(),
+                            "seed={seed} step={step}: cancelled unknown transfer"
+                        );
+                        queued.remove(pos.unwrap());
+                        cancelled += 1;
+                    }
+                    // A released executor may come back (fresh lease).
+                    if rng.below(3) == 0 {
+                        live[e] = true;
+                    }
+                }
+            }
+            assert_eq!(
+                ctl.deferred_len(),
+                queued.len(),
+                "seed={seed} step={step}: queue drift"
+            );
+        }
+
+        // Liveness: drain the world — all load gone, repeated rounds
+        // must eventually release every remaining deferred transfer.
+        util = [0.0; N_EXEC];
+        let mut guard = 0;
+        while ctl.deferred_len() > 0 {
+            guard += 1;
+            assert!(guard <= N_EXEC * 64 + 8, "seed={seed}: drain diverged");
+            let back = ctl.readmit(|e| util[e]);
+            assert!(
+                !back.is_empty(),
+                "seed={seed}: idle sources but nothing re-admitted ({} stuck)",
+                ctl.deferred_len()
+            );
+            for r in back {
+                let pos = queued.iter().position(|&(o, _)| o == r.obj.0);
+                assert!(pos.is_some(), "seed={seed}: drained unknown");
+                queued.remove(pos.unwrap());
+                started += 1;
+            }
+        }
+        assert!(queued.is_empty(), "seed={seed}: model retained ghosts");
+        let s = ctl.stats();
+        assert_eq!(s.cancelled, cancelled, "seed={seed}: cancel count drift");
+        assert_eq!(
+            started,
+            submitted_bg - cancelled,
+            "seed={seed}: every deferred staging must run or be cancelled"
+        );
     }
 }
 
