@@ -1,14 +1,18 @@
-//! QoS figure: staging admission control on vs off.
+//! QoS figure: the transfer share-policy axis — off / binary / weighted.
 //!
 //! The same saturating staging workload — task bursts queueing on a hot
 //! holder's egress while the replication manager stages copies *from
-//! that same holder* — is scheduled end-to-end with the transfer plane's
-//! admission budget disabled (1.0) and enabled (0.35). Reported per
-//! (mode, nodes): foreground p99/mean task latency, replicas staged,
-//! stagings deferred — the claim that data diffusion must never starve
-//! the foreground work it exists to accelerate, measured on real runs.
-//! Table + CSV come from the same `figures::emit_qos` the
-//! `falkon sweep --figure qos` command uses.
+//! that same holder* — is scheduled end-to-end three ways: unmetered
+//! (`off`), start-time binary deferral (budget 0.35), and weighted
+//! per-class fair shares (staging at weight 0.25 for its whole flow
+//! lifetime, no deferral). Reported per (mode, nodes): foreground
+//! p50/p90/p99/mean task latency, per-class bytes and staging rate,
+//! replicas staged, stagings deferred — the claim that data diffusion
+//! must never starve the foreground work it exists to accelerate, and
+//! that weighted shares buy binary's tail protection without binary's
+//! stop-start staging throughput, measured on real runs. Table + CSV
+//! come from the same `figures::emit_qos` the `falkon sweep --figure
+//! qos` command uses.
 
 use datadiffusion::analysis::figures;
 use datadiffusion::util::bench::bench_header;
@@ -16,8 +20,8 @@ use datadiffusion::util::csv::results_dir;
 
 fn main() {
     bench_header(
-        "QoS: staging admission control on vs off",
-        "the admission budget protects foreground p99 under staging load",
+        "QoS: share policy off vs binary vs weighted",
+        "weighted shares hold foreground p99 at binary's level without stop-start staging",
     );
     let max_nodes = std::env::var("DD_QOS_NODES")
         .ok()
@@ -35,9 +39,9 @@ fn main() {
     let path = figures::emit_qos(&rows, &results_dir()).expect("write csv");
     println!(
         "\nfinding: unmetered staging rides the same egress as the foreground fetches\n\
-         queued on each holder, stretching the burst tail; the admission budget defers\n\
-         staging to the inter-burst gaps, so p99 tightens and replication still lands\n\
-         its copies.\nwrote {}",
+         queued on each holder, stretching the burst tail; binary deferral tightens the\n\
+         tail by stop-starting staging into the gaps; weighted fair shares keep the tail\n\
+         at binary's level while staging flows continuously at its class weight.\nwrote {}",
         path.display()
     );
 }

@@ -576,10 +576,11 @@ pub fn emit_diffusion(
 // -------------------------------------------------------------- QoS figure
 
 /// One measured point of the QoS figure: the same saturating staging
-/// workload with the transfer plane's admission control on or off.
+/// workload under one transfer share policy.
 #[derive(Debug, Clone)]
 pub struct QosPoint {
-    /// "admission-on" / "admission-off".
+    /// Share-policy axis: "off" (no metering), "binary" (start-time
+    /// deferral), "weighted" (per-class fair shares).
     pub mode: &'static str,
     /// Executor count.
     pub nodes: usize,
@@ -587,8 +588,12 @@ pub struct QosPoint {
     pub tasks: u64,
     /// Simulated makespan, seconds.
     pub makespan_s: f64,
-    /// p99 of foreground task latency (submit → complete), seconds —
-    /// the figure's headline metric.
+    /// p50 of foreground task latency (submit → complete), seconds.
+    pub p50_task_s: f64,
+    /// p90 of foreground task latency, seconds.
+    pub p90_task_s: f64,
+    /// p99 of foreground task latency, seconds — the figure's headline
+    /// metric.
     pub p99_task_s: f64,
     /// Mean foreground task latency, seconds.
     pub mean_task_s: f64,
@@ -603,6 +608,11 @@ pub struct QosPoint {
     pub staging_deferred: u64,
     /// Index control-plane stabilization messages.
     pub stabilization_msgs: u64,
+    /// Bytes moved per transfer class [foreground, staging, prestage].
+    pub class_bytes: [u64; 3],
+    /// Mean achieved staging rate, bits/sec (weighted mode throttles
+    /// this; binary stop-starts it).
+    pub staging_rate_bps: f64,
     /// Peer-cache resolutions (paid on the task critical path).
     pub peer_hits: u64,
     /// Persistent-storage resolutions.
@@ -612,27 +622,37 @@ pub struct QosPoint {
 }
 
 /// The QoS figure: foreground task latency under saturating staging
-/// load, with the transfer plane's admission control on vs off.
+/// load across the three-way share-policy axis — off / binary /
+/// weighted.
 ///
 /// The workload is bursts of `nodes` tasks every 2 s over a hot object
 /// set that lives entirely on executor 0 at t=0, so every burst queues
 /// up on node 0's egress (disk-read + NIC) — exactly the resource
 /// replication staging also wants, since node 0 is the holder the
-/// manager copies from. Unmetered (`admission-off`, budget 1.0), up to
-/// `max_inflight` staging flows share node 0's disk with the burst's
-/// foreground fetches and the burst tail pays for it in latency.
-/// Metered (`admission-on`, budget 0.35), stagings submitted mid-burst
-/// defer and run in the inter-burst gaps instead — foreground p99 drops
-/// while replication still converges (copies land in the gaps, so
-/// `replicas_created` stays positive and later bursts spread anyway).
+/// manager copies from. `off` (binary policy, budget 1.0) never meters:
+/// up to `max_inflight` staging flows share node 0's disk 1:1 with the
+/// burst's foreground fetches and the burst tail pays for it in
+/// latency. `binary` (budget 0.35) defers stagings submitted mid-burst
+/// and drains them stop-start in the inter-burst gaps — the tail
+/// tightens but staging throughput becomes bursty. `weighted` (budget
+/// 1.0, default class weights) admits every staging immediately but
+/// its flows run at weight 0.25 against foreground's 1.0 — foreground
+/// keeps p99 at binary's level while staging moves continuously, so
+/// bytes staged never fall below binary's stop-start schedule.
 pub fn fig_qos(nodes_list: &[usize], bursts: usize) -> Vec<QosPoint> {
+    use crate::transfer::SharePolicyKind;
+    let modes: [(&'static str, SharePolicyKind, f64); 3] = [
+        ("off", SharePolicyKind::Binary, 1.0),
+        ("binary", SharePolicyKind::Binary, 0.35),
+        ("weighted", SharePolicyKind::Weighted, 1.0),
+    ];
     let mut rows = Vec::new();
     for &nodes in nodes_list {
         let nodes = nodes.max(2);
         let objects = (nodes as u64).max(4);
         let obj_bytes = 4 * crate::util::units::MB;
         let tasks = nodes as u64 * bursts.max(4) as u64;
-        for on in [false, true] {
+        for (mode, policy, budget) in modes {
             let mut cfg = Config::with_nodes(nodes);
             cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
             cfg.replication.enabled = true;
@@ -646,7 +666,8 @@ pub fn fig_qos(nodes_list: &[usize], bursts: usize) -> Vec<QosPoint> {
             cfg.replication.ewma_alpha = 0.5;
             cfg.replication.evaluate_interval_s = 0.55;
             cfg.replication.max_inflight = 2 * nodes;
-            cfg.transfer.staging_budget = if on { 0.35 } else { 1.0 };
+            cfg.transfer.share_policy = policy;
+            cfg.transfer.staging_budget = budget;
             let mut catalog = Catalog::new();
             for i in 0..objects {
                 catalog.insert(ObjectId(i), obj_bytes);
@@ -665,10 +686,12 @@ pub fn fig_qos(nodes_list: &[usize], bursts: usize) -> Vec<QosPoint> {
             let out = SimDriver::new(cfg, spec, catalog).run();
             let mut m = out.metrics.clone();
             rows.push(QosPoint {
-                mode: if on { "admission-on" } else { "admission-off" },
+                mode,
                 nodes,
                 tasks: m.tasks_done,
                 makespan_s: out.makespan_s,
+                p50_task_s: m.task_latency_p50(),
+                p90_task_s: m.task_latency_p90(),
                 p99_task_s: m.task_latency_p99(),
                 mean_task_s: m.task_latency.mean(),
                 local_hit_ratio: m.local_hit_ratio(),
@@ -676,6 +699,8 @@ pub fn fig_qos(nodes_list: &[usize], bursts: usize) -> Vec<QosPoint> {
                 replica_bytes_staged: m.replica_bytes_staged,
                 staging_deferred: m.staging_deferred,
                 stabilization_msgs: m.stabilization_msgs,
+                class_bytes: m.class_bytes,
+                staging_rate_bps: m.class_mean_rate_bps(crate::transfer::TransferClass::Staging),
                 peer_hits: m.peer_hits,
                 gpfs_misses: m.gpfs_misses,
                 outcome: out,
@@ -694,18 +719,20 @@ pub fn emit_qos(
 ) -> std::io::Result<std::path::PathBuf> {
     use crate::util::csv::CsvWriter;
     println!(
-        "{:<14} {:>6} {:>6} {:>11} {:>10} {:>10} {:>7} {:>9} {:>9} {:>7} {:>7}",
+        "{:<10} {:>6} {:>6} {:>11} {:>9} {:>9} {:>9} {:>10} {:>7} {:>9} {:>9} {:>13} {:>11}",
         "mode",
         "nodes",
         "tasks",
         "makespan",
+        "p50-task",
+        "p90-task",
         "p99-task",
         "mean-task",
         "local%",
         "replicas",
         "deferred",
-        "peer",
-        "gpfs"
+        "staged-bytes",
+        "stage-rate"
     );
     let mut csv = CsvWriter::new(
         dir.join("fig_qos.csv"),
@@ -714,6 +741,8 @@ pub fn emit_qos(
             "nodes",
             "tasks",
             "makespan_s",
+            "p50_task_s",
+            "p90_task_s",
             "p99_task_s",
             "mean_task_s",
             "local_hit_ratio",
@@ -721,30 +750,38 @@ pub fn emit_qos(
             "replica_bytes_staged",
             "staging_deferred",
             "stabilization_msgs",
+            "class_fg_bytes",
+            "class_staging_bytes",
+            "class_prestage_bytes",
+            "staging_rate_bps",
             "peer_hits",
             "gpfs_misses",
         ],
     );
     for r in rows {
         println!(
-            "{:<14} {:>6} {:>6} {:>10.1}s {:>9.3}s {:>9.3}s {:>6.1}% {:>9} {:>9} {:>7} {:>7}",
+            "{:<10} {:>6} {:>6} {:>10.1}s {:>8.3}s {:>8.3}s {:>8.3}s {:>9.3}s {:>6.1}% {:>9} {:>9} {:>13} {:>11}",
             r.mode,
             r.nodes,
             r.tasks,
             r.makespan_s,
+            r.p50_task_s,
+            r.p90_task_s,
             r.p99_task_s,
             r.mean_task_s,
             r.local_hit_ratio * 100.0,
             r.replicas_created,
             r.staging_deferred,
-            r.peer_hits,
-            r.gpfs_misses
+            r.replica_bytes_staged,
+            crate::util::units::fmt_bps(r.staging_rate_bps)
         );
         csv.rowf(&[
             &r.mode,
             &r.nodes,
             &r.tasks,
             &r.makespan_s,
+            &r.p50_task_s,
+            &r.p90_task_s,
             &r.p99_task_s,
             &r.mean_task_s,
             &r.local_hit_ratio,
@@ -752,6 +789,10 @@ pub fn emit_qos(
             &r.replica_bytes_staged,
             &r.staging_deferred,
             &r.stabilization_msgs,
+            &r.class_bytes[0],
+            &r.class_bytes[1],
+            &r.class_bytes[2],
+            &r.staging_rate_bps,
             &r.peer_hits,
             &r.gpfs_misses,
         ]);
@@ -1109,35 +1150,61 @@ mod tests {
     }
 
     #[test]
-    fn fig_qos_admission_protects_foreground_p99() {
+    fn fig_qos_three_way_share_policy_sweep() {
         let rows = fig_qos(&[6], 20);
-        assert_eq!(rows.len(), 2);
-        let off = rows.iter().find(|r| r.mode == "admission-off").unwrap();
-        let on = rows.iter().find(|r| r.mode == "admission-on").unwrap();
-        assert_eq!(on.tasks, 120, "run must drain");
-        assert_eq!(on.tasks, off.tasks);
-        // Unmetered staging never defers; metered staging must.
+        assert_eq!(rows.len(), 3);
+        let off = rows.iter().find(|r| r.mode == "off").unwrap();
+        let binary = rows.iter().find(|r| r.mode == "binary").unwrap();
+        let weighted = rows.iter().find(|r| r.mode == "weighted").unwrap();
+        assert_eq!(off.tasks, 120, "run must drain");
+        assert_eq!(off.tasks, binary.tasks);
+        assert_eq!(off.tasks, weighted.tasks);
+        // Deferral profile: off never defers; binary must under the
+        // saturating load; weighted (hard cap 1.0) throttles instead.
         assert_eq!(off.staging_deferred, 0);
         assert!(
-            on.staging_deferred > 0,
-            "saturating staging load must trigger deferrals"
+            binary.staging_deferred > 0,
+            "saturating staging load must trigger binary deferrals"
         );
-        // Replication still converges in both modes: admission control
-        // delays staging into the load gaps, it does not starve it.
-        assert!(off.replicas_created > 0, "unmetered staging must replicate");
+        assert_eq!(weighted.staging_deferred, 0, "weighted admits-but-throttles");
+        // Replication converges in every mode.
+        for r in [off, binary, weighted] {
+            assert!(r.replicas_created > 0, "{}: staging must converge", r.mode);
+            assert!(r.p99_task_s > 0.0 && r.p99_task_s.is_finite());
+            assert!(r.p50_task_s <= r.p90_task_s && r.p90_task_s <= r.p99_task_s);
+        }
+        // Headline 1: metering (either kind) can only help the
+        // foreground tail under saturating staging load.
         assert!(
-            on.replicas_created > 0,
-            "metered staging must still converge in the gaps"
-        );
-        // The headline: admission control can only help the foreground
-        // tail under saturating staging load.
-        assert!(
-            on.p99_task_s <= off.p99_task_s + 1e-9,
-            "admission-on p99 {} must not exceed admission-off p99 {}",
-            on.p99_task_s,
+            binary.p99_task_s <= off.p99_task_s + 1e-9,
+            "binary p99 {} must not exceed off p99 {}",
+            binary.p99_task_s,
             off.p99_task_s
         );
-        assert!(on.p99_task_s > 0.0 && on.p99_task_s.is_finite());
+        assert!(
+            weighted.p99_task_s <= off.p99_task_s + 1e-9,
+            "weighted p99 {} must not exceed off p99 {}",
+            weighted.p99_task_s,
+            off.p99_task_s
+        );
+        // Headline 2: weighted keeps staging moving — bytes staged never
+        // fall below binary's stop-start deferral schedule.
+        assert!(
+            weighted.replica_bytes_staged >= binary.replica_bytes_staged,
+            "weighted staged {} must be >= binary staged {}",
+            weighted.replica_bytes_staged,
+            binary.replica_bytes_staged
+        );
+        // Per-class accounting flows through: staging bytes in the
+        // class breakdown match the staged bytes.
+        for r in [off, binary, weighted] {
+            assert_eq!(
+                r.class_bytes[1] + r.class_bytes[2],
+                r.replica_bytes_staged,
+                "{}: class accounting must match staged bytes",
+                r.mode
+            );
+        }
     }
 
     #[test]

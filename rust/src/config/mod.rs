@@ -292,19 +292,33 @@ impl Default for ReplicationConfig {
 /// Metered transfer plane configuration (see [`crate::transfer`]).
 #[derive(Debug, Clone)]
 pub struct TransferConfig {
-    /// Source-executor egress-utilization budget in (0, 1]: background
-    /// staging/prestage transfers are deferred while the source is
-    /// running hotter than this, and re-admitted as it drains. 1.0 (the
+    /// How transfer classes share a source's egress:
+    /// [`SharePolicyKind::Binary`] (start-time admission only, unit
+    /// weights once running — PR 4's behavior, the default) or
+    /// [`SharePolicyKind::Weighted`] (weighted max-min fair shares for
+    /// the whole flow lifetime, deferral only above the budget).
+    pub share_policy: crate::transfer::SharePolicyKind,
+    /// Source-executor egress-utilization budget in (0, 1]: under the
+    /// binary policy, background staging/prestage transfers are deferred
+    /// while the source runs hotter than this and re-admitted as it
+    /// drains; under the weighted policy it is the *hard cap* above
+    /// which admit-but-throttle falls back to deferral. 1.0 (the
     /// default) disables deferral — utilization cannot exceed 1 — which
-    /// reproduces the pre-refactor unmetered behavior. Foreground
-    /// transfers are never subject to the budget.
+    /// with the binary policy reproduces the pre-metering behavior.
+    /// Foreground transfers are never subject to the budget.
     pub staging_budget: f64,
+    /// Per-class fair-share weights (weighted policy only; the binary
+    /// policy always runs unit weights). Default Foreground 1.0 /
+    /// Staging 0.25 / Prestage 0.1.
+    pub class_weights: crate::transfer::ClassWeights,
 }
 
 impl Default for TransferConfig {
     fn default() -> Self {
         TransferConfig {
+            share_policy: crate::transfer::SharePolicyKind::Binary,
             staging_budget: 1.0,
+            class_weights: crate::transfer::ClassWeights::default(),
         }
     }
 }
@@ -474,12 +488,32 @@ impl Config {
         }
 
         let tr = &mut self.transfer;
+        if let Some(parse::Value::Str(s)) = doc.get("transfer.share_policy") {
+            tr.share_policy = crate::transfer::SharePolicyKind::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("bad transfer.share_policy {s:?}"))
+            })?;
+        }
         tr.staging_budget = doc.num_or("transfer.staging_budget", tr.staging_budget);
         if !(tr.staging_budget > 0.0 && tr.staging_budget <= 1.0) {
             return Err(crate::error::Error::Config(format!(
                 "transfer.staging_budget must be in (0, 1], got {}",
                 tr.staging_budget
             )));
+        }
+        let w = &mut tr.class_weights;
+        w.foreground = doc.num_or("transfer.foreground_weight", w.foreground);
+        w.staging = doc.num_or("transfer.staging_weight", w.staging);
+        w.prestage = doc.num_or("transfer.prestage_weight", w.prestage);
+        for (name, v) in [
+            ("foreground_weight", w.foreground),
+            ("staging_weight", w.staging),
+            ("prestage_weight", w.prestage),
+        ] {
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(crate::error::Error::Config(format!(
+                    "transfer.{name} must be a positive number, got {v}"
+                )));
+            }
         }
 
         self.seed = doc.num_or("seed", self.seed as f64) as u64;
@@ -620,12 +654,21 @@ release_threshold = 0.4
 
     #[test]
     fn transfer_overrides_apply_and_validate() {
-        let doc = parse::Doc::parse("[transfer]\nstaging_budget = 0.35").unwrap();
+        let doc = parse::Doc::parse(
+            "[transfer]\nstaging_budget = 0.35\nshare_policy = \"weighted\"\nstaging_weight = 0.5",
+        )
+        .unwrap();
         let mut c = Config::default();
         c.apply_doc(&doc).unwrap();
         assert!((c.transfer.staging_budget - 0.35).abs() < 1e-12);
-        // Default disables deferral.
-        assert!((Config::default().transfer.staging_budget - 1.0).abs() < 1e-12);
+        assert_eq!(c.transfer.share_policy, crate::transfer::SharePolicyKind::Weighted);
+        assert!((c.transfer.class_weights.staging - 0.5).abs() < 1e-12);
+        assert!((c.transfer.class_weights.foreground - 1.0).abs() < 1e-12);
+        // Defaults: binary policy, deferral disabled, paper weights.
+        let d = Config::default();
+        assert!((d.transfer.staging_budget - 1.0).abs() < 1e-12);
+        assert_eq!(d.transfer.share_policy, crate::transfer::SharePolicyKind::Binary);
+        assert_eq!(d.transfer.class_weights, crate::transfer::ClassWeights::default());
         // Out-of-range budgets are config errors.
         for bad in ["0", "1.5", "-0.2"] {
             let doc =
@@ -635,6 +678,11 @@ release_threshold = 0.4
                 "budget {bad} must be rejected"
             );
         }
+        // Nonpositive weights and unknown policies are config errors.
+        let bad = parse::Doc::parse("[transfer]\nstaging_weight = 0").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+        let bad = parse::Doc::parse("[transfer]\nshare_policy = \"fair\"").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
     }
 
     #[test]

@@ -117,8 +117,9 @@ impl FalkonCore {
     }
 
     /// Fraction of `e`'s task slots currently busy (0.0 for an unknown
-    /// executor) — the live driver's egress-load proxy for the transfer
-    /// plane's admission controller.
+    /// executor). Diagnostics only since the weighted-shares refactor:
+    /// the live transfer plane now meters real bytes in flight
+    /// ([`crate::transfer::live::EgressLedger`]) instead of this proxy.
     pub fn busy_fraction(&self, e: ExecutorId) -> f64 {
         self.slots
             .get(&e)

@@ -7,6 +7,7 @@
 //! movement by source (Fig 13).
 
 use crate::index::{ControlTraffic, LookupCost};
+use crate::transfer::TransferClass;
 use crate::util::stats::{Percentiles, Summary};
 
 /// Where bytes came from (the three arrows in the architecture figure).
@@ -152,6 +153,21 @@ pub struct Metrics {
     /// latency are already inside `index_hops`/`index_cost_s`; this
     /// counts how many lookups paid it).
     pub index_misroutes: u64,
+    /// Index-update control messages: routed insert/evict records plus
+    /// the per-owner partition handoff a Chord membership change implies
+    /// (zero on the centralized backend — updates mutate one in-process
+    /// table).
+    pub index_update_msgs: u64,
+    /// Bytes moved by transfer-plane data movements, per
+    /// [`TransferClass`] (indexed by [`TransferClass::index`]:
+    /// foreground, staging, prestage).
+    pub class_bytes: [u64; 3],
+    /// Cumulative transfer time per class, seconds (each movement's
+    /// start→finish span summed; movements overlap, so this is transfer
+    /// work, not wall time). `class_bytes / class_xfer_s` is the class's
+    /// mean achieved rate — the readout that shows weighted shares
+    /// actually throttling background movement.
+    pub class_xfer_s: [f64; 3],
 }
 
 impl Metrics {
@@ -185,7 +201,27 @@ impl Metrics {
     pub fn add_control_traffic(&mut self, t: ControlTraffic) {
         self.stabilization_msgs += t.stabilization_msgs;
         self.index_misroutes += t.misroutes;
+        self.index_update_msgs += t.update_msgs;
         self.index_cost_s += t.latency_s;
+    }
+
+    /// Record one transfer-plane data movement: `bytes` of `class` that
+    /// took `secs` from start to finish.
+    pub fn note_class_transfer(&mut self, class: TransferClass, bytes: u64, secs: f64) {
+        let i = class.index();
+        self.class_bytes[i] += bytes;
+        self.class_xfer_s[i] += secs.max(0.0);
+    }
+
+    /// Mean achieved rate of one transfer class, bits/sec (0 before any
+    /// transfer of that class finished).
+    pub fn class_mean_rate_bps(&self, class: TransferClass) -> f64 {
+        let i = class.index();
+        if self.class_xfer_s[i] <= 0.0 {
+            0.0
+        } else {
+            self.class_bytes[i] as f64 * 8.0 / self.class_xfer_s[i]
+        }
     }
 
     /// Record one task's end-to-end latency (Summary + stored sample for
@@ -193,6 +229,17 @@ impl Metrics {
     pub fn note_task_latency(&mut self, secs: f64) {
         self.task_latency.add(secs);
         self.task_latency_pcts.add(secs);
+    }
+
+    /// p50 (median) of per-task end-to-end latency (NaN before the
+    /// first task).
+    pub fn task_latency_p50(&mut self) -> f64 {
+        self.task_latency_pcts.quantile(0.50)
+    }
+
+    /// p90 of per-task end-to-end latency (NaN before the first task).
+    pub fn task_latency_p90(&mut self) -> f64 {
+        self.task_latency_pcts.quantile(0.90)
     }
 
     /// p99 of per-task end-to-end latency (NaN before the first task).
@@ -344,17 +391,36 @@ mod tests {
         m.add_control_traffic(ControlTraffic {
             stabilization_msgs: 16,
             misroutes: 3,
+            update_msgs: 5,
             latency_s: 0.004,
         });
         m.add_control_traffic(ControlTraffic::default());
         assert_eq!(m.stabilization_msgs, 16);
         assert_eq!(m.index_misroutes, 3);
+        assert_eq!(m.index_update_msgs, 5);
         assert!((m.index_cost_s - 0.004).abs() < 1e-15);
         for i in 1..=100 {
             m.note_task_latency(i as f64);
         }
         assert_eq!(m.task_latency.count(), 100);
+        assert!((m.task_latency_p50() - 50.5).abs() < 1e-9);
+        assert!((m.task_latency_p90() - 90.1).abs() < 1e-9);
         assert!((m.task_latency_p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_transfer_accounting_and_mean_rate() {
+        let mut m = Metrics::new();
+        // 1 MB of foreground in 1 s = 8 Mb/s; 1 MB of staging in 4 s =
+        // 2 Mb/s (a throttled class reads out slower, same bytes).
+        m.note_class_transfer(TransferClass::Foreground, 1_000_000, 1.0);
+        m.note_class_transfer(TransferClass::Staging, 500_000, 2.0);
+        m.note_class_transfer(TransferClass::Staging, 500_000, 2.0);
+        assert_eq!(m.class_bytes[TransferClass::Foreground.index()], 1_000_000);
+        assert_eq!(m.class_bytes[TransferClass::Staging.index()], 1_000_000);
+        assert!((m.class_mean_rate_bps(TransferClass::Foreground) - 8e6).abs() < 1.0);
+        assert!((m.class_mean_rate_bps(TransferClass::Staging) - 2e6).abs() < 1.0);
+        assert_eq!(m.class_mean_rate_bps(TransferClass::Prestage), 0.0);
     }
 
     #[test]

@@ -13,9 +13,14 @@
 //!   spawning executor threads when the (simulated GRAM4-like) cluster
 //!   grants an allocation and reaping idle ones on release; replication
 //!   `Stage` messages pass through a [`LiveTransferPlane`]
-//!   ([`crate::transfer`]) that defers them while the source executor
-//!   runs over the staging budget (busy-slot fraction as the egress
-//!   proxy) and re-admits them as it drains, and `Drop` messages
+//!   ([`crate::transfer`]) that defers them while the source executor's
+//!   egress runs over the staging budget — measured by real byte-level
+//!   accounting ([`crate::transfer::live::EgressLedger`]: every copy
+//!   out of a cache directory registers its bytes against the source
+//!   while in flight) — re-admits them as it drains, and under the
+//!   weighted share policy paces the staging copies themselves with a
+//!   per-source token bucket sized from the class weight
+//!   ([`crate::transfer::live::StagingPacer`]); `Drop` messages
 //!   actively release decayed replicas from cache directories;
 //! * each executor is a thread with an inbox (`mpsc::Sender<ExecMsg>`);
 //! * completions flow back on one shared channel;
@@ -27,7 +32,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -44,7 +49,10 @@ use crate::runtime::{PjrtEngine, StackRequest};
 use crate::scheduler::decision::LocationHints;
 use crate::storage::live::{pixels_of, read_object_file, LiveCacheDir, LiveStore};
 use crate::storage::object::{Catalog, DataFormat, ObjectId};
-use crate::transfer::live::{copy_into_cache, LiveTransferPlane};
+use crate::transfer::live::{
+    copy_into_cache, copy_into_cache_paced, EgressGuard, EgressLedger, LiveTransferPlane,
+    StagingPacer,
+};
 use crate::transfer::{Admission, TransferClass, TransferPlane, TransferRequest};
 use crate::workloads::sky;
 
@@ -56,9 +64,14 @@ enum ExecMsg {
         t_submit: Instant,
     },
     /// Replication staging: copy `obj` from executor `src`'s cache dir
-    /// (falling back to persistent storage if the source copy vanished)
-    /// into this executor's cache.
-    Stage { obj: ObjectId, src: ExecutorId },
+    /// (abandoned if the source copy vanished) into this executor's
+    /// cache, paced at `class`'s share of the source's egress under the
+    /// weighted policy.
+    Stage {
+        obj: ObjectId,
+        src: ExecutorId,
+        class: TransferClass,
+    },
     /// Replica teardown: demand decayed, actively evict `obj` from this
     /// executor's cache (file + cache entry) and report the eviction.
     Drop { obj: ObjectId },
@@ -72,6 +85,9 @@ struct Completion {
     events: Vec<CacheEvent>,
     /// How each input was resolved: (source, bytes, object).
     resolutions: Vec<(ByteSource, u64, ObjectId)>,
+    /// Timed data movements this task performed: (class, bytes, secs) —
+    /// per-class byte/rate accounting for the metrics.
+    xfers: Vec<(TransferClass, u64, f64)>,
     /// Inputs whose hints were all stale (§3.2.2): the coordinator
     /// charges one executor-side index lookup per entry.
     stale: Vec<ObjectId>,
@@ -84,8 +100,12 @@ struct Completion {
 struct StageReport {
     exec: ExecutorId,
     obj: ObjectId,
+    /// The transfer class the copy ran under (staging or prestage).
+    class: TransferClass,
     /// Bytes copied (0 if the stage was skipped).
     bytes: u64,
+    /// Wall seconds the copy took (pacing included).
+    elapsed_s: f64,
     /// Whether a new cache entry was actually created.
     created: bool,
     events: Vec<CacheEvent>,
@@ -271,6 +291,17 @@ impl LiveCluster {
         };
         let compute_client = compute.as_ref().map(|(c, _, _)| c.clone());
 
+        // The metered transfer plane's live substrate: per-source
+        // byte-level egress accounting shared by every executor thread
+        // (the coordinator reads utilization from it for admission) and
+        // the token-bucket pacer that throttles background copies under
+        // the weighted share policy. Egress capacity is the tighter of
+        // NIC and local-disk read — the same legs the sim's utilization
+        // meters.
+        let egress_bps = cfg.testbed.nic_bps.min(cfg.local_disk.read_bps);
+        let ledger = Arc::new(EgressLedger::new(n_exec, egress_bps));
+        let pacer = Arc::new(StagingPacer::new(n_exec, egress_bps, &cfg.transfer));
+
         // Executor plumbing: a slot per provisionable node. `inboxes[e]`
         // is `Some` exactly while executor `e`'s thread is alive.
         let (done_tx, done_rx) = mpsc::channel::<Report>();
@@ -296,6 +327,8 @@ impl LiveCluster {
                     cfg.seed ^ e as u64,
                 ),
                 compute: compute_client.clone(),
+                ledger: ledger.clone(),
+                pacer: pacer.clone(),
                 done,
             };
             Ok((tx, std::thread::spawn(move || executor_loop(ctx, rx))))
@@ -363,10 +396,10 @@ impl LiveCluster {
         // accounting; scrubbed on eviction and release.
         let mut staged: HashSet<(ExecutorId, ObjectId)> = HashSet::new();
         // Metered transfer plane: Stage messages are admission-controlled
-        // against the source executor's busy-slot fraction (the live
-        // proxy for egress load), deferred while it runs over budget and
+        // against the source executor's measured egress backlog (the
+        // shared byte ledger), deferred while it runs over budget and
         // re-admitted as it drains.
-        let mut plane = LiveTransferPlane::new(cfg.transfer.staging_budget);
+        let mut plane = LiveTransferPlane::new(&cfg.transfer, ledger.clone());
 
         // Coordinator loop.
         let t0 = Instant::now();
@@ -505,26 +538,23 @@ impl LiveCluster {
                 // for a manager that only needs to sample demand trends.
                 let now_s = t0.elapsed().as_secs_f64();
                 let poll_due = now_s - last_repl >= repl_poll_s;
-                // Refresh the admission controller's load snapshot only
-                // when something reads it — a submission round is due or
-                // deferred stagings are waiting. With the default budget
-                // (1.0, never defers) this keeps the hot loop free of the
-                // O(executors) refresh.
-                if poll_due || plane.deferred_len() > 0 {
-                    for &e in core.executors() {
-                        plane.set_load(e, core.busy_fraction(e));
-                    }
-                }
-                // Drain deferred stagings whose source quiesced — every
-                // loop iteration while any wait, so re-admission reacts
-                // to task completions, not just the poll cadence.
+                // Drain deferred stagings whose source's egress drained —
+                // the plane reads the shared byte ledger directly (no
+                // snapshot to refresh), and this runs every loop
+                // iteration while any wait, so re-admission reacts to
+                // copies finishing, not just the poll cadence.
                 if plane.deferred_len() > 0 {
                     for req in plane.readmit() {
                         let sent = inboxes
                             .get(req.dst)
                             .and_then(|o| o.as_ref())
                             .map(|tx| {
-                                tx.send(ExecMsg::Stage { obj: req.obj, src: req.src }).is_ok()
+                                tx.send(ExecMsg::Stage {
+                                    obj: req.obj,
+                                    src: req.src,
+                                    class: req.class,
+                                })
+                                .is_ok()
                             })
                             .unwrap_or(false);
                         if !sent {
@@ -543,12 +573,13 @@ impl LiveCluster {
                                 dst,
                                 prestage,
                             } => {
+                                let class = if prestage {
+                                    TransferClass::Prestage
+                                } else {
+                                    TransferClass::Staging
+                                };
                                 let req = TransferRequest {
-                                    class: if prestage {
-                                        TransferClass::Prestage
-                                    } else {
-                                        TransferClass::Staging
-                                    },
+                                    class,
                                     obj,
                                     src,
                                     dst,
@@ -563,7 +594,7 @@ impl LiveCluster {
                                             .get(dst)
                                             .and_then(|o| o.as_ref())
                                             .map(|tx| {
-                                                tx.send(ExecMsg::Stage { obj, src }).is_ok()
+                                                tx.send(ExecMsg::Stage { obj, src, class }).is_ok()
                                             })
                                             .unwrap_or(false);
                                         if !sent {
@@ -641,6 +672,7 @@ impl LiveCluster {
                     if s.bytes > 0 {
                         metrics.add_bytes(ByteSource::CacheToCache, s.bytes);
                         metrics.replica_bytes_staged += s.bytes;
+                        metrics.note_class_transfer(s.class, s.bytes, s.elapsed_s);
                     }
                     // The executor may have been released between sending
                     // this report and us reading it — its index entries
@@ -683,6 +715,9 @@ impl LiveCluster {
             metrics
                 .exec_latency
                 .add(c.t_dispatch.elapsed().as_secs_f64());
+            for (class, bytes, secs) in &c.xfers {
+                metrics.note_class_transfer(*class, *bytes, *secs);
+            }
             for (src, bytes, obj) in &c.resolutions {
                 metrics.add_resolution(*src);
                 metrics.add_bytes(*src, *bytes);
@@ -761,6 +796,12 @@ struct ExecutorCtx {
     cache_roots: Vec<PathBuf>,
     cache: DataCache,
     compute: Option<ComputeClient>,
+    /// Shared per-source egress byte accounting: every copy out of a
+    /// peer's cache registers its bytes against that source.
+    ledger: Arc<EgressLedger>,
+    /// Token-bucket pacing for background staging copies (no-op under
+    /// the binary share policy).
+    pacer: Arc<StagingPacer>,
     done: mpsc::Sender<Report>,
 }
 
@@ -784,6 +825,7 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                 let t_dispatch = Instant::now();
                 let mut events = Vec::new();
                 let mut resolutions = Vec::new();
+                let mut xfers = Vec::new();
                 let mut stale = Vec::new();
                 let err = run_task(
                     &mut ctx,
@@ -791,6 +833,7 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                     &hints,
                     &mut events,
                     &mut resolutions,
+                    &mut xfers,
                     &mut stale,
                 )
                 .err()
@@ -800,14 +843,15 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                     task: task.id,
                     events,
                     resolutions,
+                    xfers,
                     stale,
                     t_submit,
                     t_dispatch,
                     error: err,
                 }));
             }
-            ExecMsg::Stage { obj, src } => {
-                let report = stage_object(&mut ctx, obj, src);
+            ExecMsg::Stage { obj, src, class } => {
+                let report = stage_object(&mut ctx, obj, src, class);
                 let _ = ctx.done.send(Report::Staged(report));
             }
             ExecMsg::Drop { obj } => {
@@ -831,16 +875,25 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
 }
 
 /// Replication staging on the destination executor: copy the object from
-/// the source peer's cache directory into our own cache. If the source
+/// the source peer's cache directory into our own cache — charged to the
+/// source's egress ledger for the duration, and paced at the class's
+/// fair share of that egress under the weighted policy. If the source
 /// copy vanished (evicted or the lease ended) the stage is abandoned —
 /// the same rule the sim driver applies — so staged bytes are always
 /// genuine cache-to-cache traffic and the manager can retry with a
 /// holder that still exists.
-fn stage_object(ctx: &mut ExecutorCtx, obj: ObjectId, src: ExecutorId) -> StageReport {
+fn stage_object(
+    ctx: &mut ExecutorCtx,
+    obj: ObjectId,
+    src: ExecutorId,
+    class: TransferClass,
+) -> StageReport {
     let mut report = StageReport {
         exec: ctx.exec,
         obj,
+        class,
         bytes: 0,
+        elapsed_s: 0.0,
         created: false,
         events: Vec::new(),
     };
@@ -857,8 +910,15 @@ fn stage_object(ctx: &mut ExecutorCtx, obj: ObjectId, src: ExecutorId) -> StageR
         return report; // source copy gone: abandon, demand will retry
     };
     let cached_path = ctx.cache_dir.path_of(obj, ctx.format);
-    if let Ok(bytes) = copy_into_cache(&peer_path, &cached_path) {
+    let expect = std::fs::metadata(&peer_path).map(|m| m.len()).unwrap_or(0);
+    let t = Instant::now();
+    let copied = {
+        let _egress = EgressGuard::new(ctx.ledger.clone(), src, expect);
+        copy_into_cache_paced(&peer_path, &cached_path, &ctx.pacer, src, class)
+    };
+    if let Ok(bytes) = copied {
         report.bytes = bytes;
+        report.elapsed_s = t.elapsed().as_secs_f64();
         report.events = apply_cache_insert(ctx, obj, bytes);
         report.created = report
             .events
@@ -869,15 +929,17 @@ fn stage_object(ctx: &mut ExecutorCtx, obj: ObjectId, src: ExecutorId) -> StageR
 }
 
 /// Execute one task on this executor: resolve inputs (own cache → peer →
-/// persistent storage), then run the compute. `stale` collects inputs
-/// whose hints all went stale (every hinted copy gone), so the
-/// coordinator can charge the executor-side re-resolution.
+/// persistent storage), then run the compute. `xfers` collects the timed
+/// copies this task performed (all `Foreground` — per-class accounting);
+/// `stale` collects inputs whose hints all went stale (every hinted copy
+/// gone), so the coordinator can charge the executor-side re-resolution.
 fn run_task(
     ctx: &mut ExecutorCtx,
     task: &Task,
     hints: &LocationHints,
     events: &mut Vec<CacheEvent>,
     resolutions: &mut Vec<(ByteSource, u64, ObjectId)>,
+    xfers: &mut Vec<(TransferClass, u64, f64)>,
     stale: &mut Vec<ObjectId>,
 ) -> Result<()> {
     let ext = ext_of(ctx.format);
@@ -907,7 +969,22 @@ fn run_task(
                     hinted_peer = true;
                     let peer_path = ctx.cache_roots[peer].join(format!("{obj}.{ext}"));
                     if peer_path.exists() {
-                        if let Ok(bytes) = copy_into_cache(&peer_path, &cached_path) {
+                        // Foreground peer fetch: never paced, but its
+                        // bytes do load the source's egress ledger while
+                        // in flight — that is what holds background
+                        // staging from the same source back.
+                        let expect = std::fs::metadata(&peer_path).map(|m| m.len()).unwrap_or(0);
+                        let t = Instant::now();
+                        let copied = {
+                            let _egress = EgressGuard::new(ctx.ledger.clone(), peer, expect);
+                            copy_into_cache(&peer_path, &cached_path)
+                        };
+                        if let Ok(bytes) = copied {
+                            xfers.push((
+                                TransferClass::Foreground,
+                                bytes,
+                                t.elapsed().as_secs_f64(),
+                            ));
                             resolutions.push((ByteSource::CacheToCache, bytes, obj));
                             fetched = true;
                             break;
@@ -923,12 +1000,14 @@ fn run_task(
                 // executor re-resolves; the coordinator charges it.
                 stale.push(obj);
             }
-            // Persistent storage.
+            // Persistent storage (not an executor's egress: no ledger).
             let store_path = ctx.store_root.join(format!("{obj}.{ext}"));
             if caching {
+                let t = Instant::now();
                 let bytes = copy_into_cache(&store_path, &cached_path).map_err(|e| {
                     Error::UnknownObject(format!("{obj} ({}): {e}", store_path.display()))
                 })?;
+                xfers.push((TransferClass::Foreground, bytes, t.elapsed().as_secs_f64()));
                 resolutions.push((ByteSource::Gpfs, bytes, obj));
             } else {
                 let bytes = std::fs::metadata(&store_path)
@@ -1167,6 +1246,67 @@ mod tests {
         if out.metrics.replica_bytes_staged > 0 {
             assert!(out.metrics.c2c_bytes >= out.metrics.replica_bytes_staged);
         }
+        // Per-class byte conservation: background classes carry exactly
+        // the staged bytes; foreground carries every peer + GPFS copy
+        // (c2c minus staged, plus gpfs) — nothing double- or un-counted.
+        let m = &out.metrics;
+        let staging_ix = TransferClass::Staging.index();
+        let prestage_ix = TransferClass::Prestage.index();
+        assert_eq!(
+            m.class_bytes[staging_ix] + m.class_bytes[prestage_ix],
+            m.replica_bytes_staged,
+            "background class bytes must equal staged bytes"
+        );
+        assert_eq!(
+            m.class_bytes[TransferClass::Foreground.index()] + m.replica_bytes_staged,
+            m.c2c_bytes + m.gpfs_bytes,
+            "foreground class bytes must cover peer + GPFS copies"
+        );
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    /// Weighted share policy end-to-end on real threads: staging copies
+    /// run through the paced path and the egress ledger, the run drains,
+    /// and per-class accounting stays conserved. Live timing is
+    /// nondeterministic, so mechanics over exact counts.
+    #[test]
+    fn live_cluster_weighted_policy_paces_and_accounts() {
+        use crate::transfer::SharePolicyKind;
+        let root = tmp("weighted");
+        let mut store = LiveStore::create(root.join("gpfs"), DataFormat::Fit).unwrap();
+        for i in 0..6 {
+            store.populate(ObjectId(i), 3_000).unwrap();
+        }
+        let mut cfg = Config::with_nodes(3);
+        cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+        cfg.replication.enabled = true;
+        cfg.replication.max_replicas = 3;
+        cfg.replication.demand_threshold = 0.5;
+        cfg.replication.ewma_alpha = 0.8;
+        cfg.replication.evaluate_interval_s = 0.01;
+        cfg.transfer.share_policy = SharePolicyKind::Weighted;
+        cfg.transfer.staging_budget = 1.0; // admit-but-throttle only
+        let tasks: Vec<Task> = (0..24)
+            .map(|i| Task::with_inputs(TaskId(i), vec![ObjectId(i % 6)]))
+            .collect();
+        let out = LiveCluster::new(cfg, store, root.join("work"), None)
+            .run(tasks)
+            .unwrap();
+        assert_eq!(out.metrics.tasks_done, 24);
+        assert_eq!(
+            out.metrics.staging_deferred, 0,
+            "budget 1.0 under weighted must never defer (throttle instead)"
+        );
+        let m = &out.metrics;
+        assert_eq!(
+            m.class_bytes[TransferClass::Staging.index()]
+                + m.class_bytes[TransferClass::Prestage.index()],
+            m.replica_bytes_staged
+        );
+        assert_eq!(
+            m.class_bytes[TransferClass::Foreground.index()] + m.replica_bytes_staged,
+            m.c2c_bytes + m.gpfs_bytes
+        );
         let _ = std::fs::remove_dir_all(root);
     }
 

@@ -50,9 +50,12 @@
 //! `Replica`-tagged peer-bandwidth flow (source disk + both NICs +
 //! destination disk, exactly like a cache-to-cache task fetch, so
 //! admitted staging still contends with foreground traffic instead of
-//! being free); over the source's `staging_budget` it defers, and
-//! flow completions / later ticks pump re-admission as the source
-//! drains. [`crate::replication::ReplicaDirective::Drop`] directives
+//! being free) carrying its class's fair-share weight (unit under the
+//! binary share policy; `transfer.class_weights` under the weighted
+//! one, so an in-flight staging flow concedes most of a contended link
+//! to foreground fetches); over the source's `staging_budget` it
+//! defers, and flow completions / later ticks pump re-admission as the
+//! source drains. [`crate::replication::ReplicaDirective::Drop`] directives
 //! (replica teardown on demand decay) are executed immediately — an
 //! eviction is local metadata work, not a transfer. On staging
 //! completion the object enters the destination cache and the index —
@@ -185,6 +188,18 @@ enum FlowTag {
     Replica { obj: ObjectId, dst: ExecutorId },
 }
 
+/// Bookkeeping for one in-flight flow: the owner tag plus what the
+/// per-class metrics need at completion (class, bytes, start time — a
+/// flow's span divided into its bytes is the achieved rate, which is
+/// where weighted shares become visible).
+#[derive(Debug, Clone, Copy)]
+struct FlowInfo {
+    tag: FlowTag,
+    class: TransferClass,
+    bytes: u64,
+    t_start: f64,
+}
+
 /// Per-task pipeline phase. `Step(rid)` events drive transitions; flow
 /// completions are delivered separately through [`SimWorld::flow_done`].
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -255,7 +270,7 @@ struct SimWorld {
     pending_tasks: Vec<Option<Task>>,
     runs: FxHashMap<u64, Running>,
     next_run: u64,
-    flow_map: FxHashMap<FlowId, FlowTag>,
+    flow_map: FxHashMap<FlowId, FlowInfo>,
     flow_version: u64,
     /// (executor, object) cache entries created by replication staging —
     /// local hits on these count as `replica_hits`.
@@ -556,7 +571,15 @@ impl SimWorld {
         q: &mut EventQueue<Ev>,
     ) {
         let fid = self.plane.start(now, class, kind, bytes);
-        self.flow_map.insert(fid, tag);
+        self.flow_map.insert(
+            fid,
+            FlowInfo {
+                tag,
+                class,
+                bytes,
+                t_start: now,
+            },
+        );
         self.reschedule_flow_check(now, q);
     }
 
@@ -577,10 +600,13 @@ impl SimWorld {
             match self.plane.testbed.net.next_completion(now) {
                 Some((t, fid)) if t <= now + 1e-9 => {
                     self.plane.testbed.net.remove_flow(now, fid);
-                    match self.flow_map.remove(&fid) {
-                        Some(FlowTag::Run(rid, purpose)) => self.flow_done(now, rid, purpose, q),
-                        Some(FlowTag::Replica { obj, dst }) => self.replica_staged(obj, dst),
-                        None => {}
+                    if let Some(info) = self.flow_map.remove(&fid) {
+                        self.metrics
+                            .note_class_transfer(info.class, info.bytes, now - info.t_start);
+                        match info.tag {
+                            FlowTag::Run(rid, purpose) => self.flow_done(now, rid, purpose, q),
+                            FlowTag::Replica { obj, dst } => self.replica_staged(obj, dst),
+                        }
                     }
                 }
                 _ => break,
@@ -1094,7 +1120,7 @@ impl SimDriver {
             core.apply_cache_events(exec, &events);
         }
 
-        let plane = SimTransferPlane::new(SimTestbed::new(&cfg), cfg.transfer.staging_budget);
+        let plane = SimTransferPlane::new(SimTestbed::new(&cfg), &cfg.transfer);
         let caching = spec.caching;
         let format = spec.format;
         let arrivals: Vec<(f64, u32)> = spec
@@ -1423,6 +1449,155 @@ mod tests {
             on.metrics.pool_timeline.is_empty(),
             "static pool: deferral must not require the provisioner"
         );
+    }
+
+    #[test]
+    fn binary_policy_ignores_class_weights_bit_for_bit() {
+        use crate::transfer::{ClassWeights, SharePolicyKind};
+        // Under share_policy = binary the configured class weights must
+        // be inert: every flow runs at unit weight (PR 4's behavior),
+        // so two runs differing only in weights replay identically —
+        // and a weighted run with *unit* weights and budget 1.0 is the
+        // same computation as binary-off, bit for bit.
+        let run = |policy: SharePolicyKind, weights: ClassWeights| {
+            let mut cfg = Config::with_nodes(4);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.replication.enabled = true;
+            cfg.replication.max_replicas = 2;
+            cfg.replication.demand_threshold = 0.5;
+            cfg.replication.ewma_alpha = 0.5;
+            cfg.replication.evaluate_interval_s = 0.5;
+            cfg.transfer.share_policy = policy;
+            cfg.transfer.staging_budget = 1.0;
+            cfg.transfer.class_weights = weights;
+            let tasks: Vec<(f64, Task)> = (0..12)
+                .map(|i| {
+                    let mut t = Task::with_inputs(TaskId(i), vec![ObjectId(0)]);
+                    t.kind = TaskKind::Synthetic { cpu_s: 0.3 };
+                    (i as f64 * 1.5, t)
+                })
+                .collect();
+            let mut spec = SimWorkloadSpec::new(tasks);
+            spec.prewarm = vec![(0, ObjectId(0))];
+            SimDriver::new(cfg, spec, catalog(1, 32 * MB)).run()
+        };
+        let skew = ClassWeights {
+            foreground: 1.0,
+            staging: 0.01,
+            prestage: 0.01,
+        };
+        let a = run(SharePolicyKind::Binary, ClassWeights::default());
+        let b = run(SharePolicyKind::Binary, skew);
+        assert_eq!(a.events, b.events, "binary must ignore class weights");
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+        assert_eq!(a.metrics.replicas_created, b.metrics.replicas_created);
+        let c = run(SharePolicyKind::Weighted, ClassWeights::UNIT);
+        assert_eq!(a.events, c.events, "weighted@unit == binary@1.0");
+        assert!((a.makespan_s - c.makespan_s).abs() < 1e-12);
+        // The skewed weighted run really throttles: same workload, same
+        // replication outcome, but staging's achieved rate drops below
+        // binary's while foreground work is untouched.
+        let d = run(SharePolicyKind::Weighted, skew);
+        assert_eq!(d.metrics.tasks_done, 12);
+        if d.metrics.class_bytes[TransferClass::Staging.index()] > 0
+            && a.metrics.class_bytes[TransferClass::Staging.index()] > 0
+        {
+            assert!(
+                d.metrics.class_mean_rate_bps(TransferClass::Staging)
+                    < a.metrics.class_mean_rate_bps(TransferClass::Staging),
+                "weight 0.01 staging must move slower than unit-weight staging"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_shares_protect_foreground_inflight() {
+        use crate::transfer::{ClassWeights, SharePolicyKind};
+        // One 64 MB object on executor 0; a staging copy of it starts
+        // while a foreground task reads it locally — both contend on
+        // node 0's disk-read for the whole overlap. Unweighted (binary,
+        // budget 1.0) the two flows split the disk 50:50; weighted, the
+        // foreground read keeps an 80% share, so tasks finish strictly
+        // faster while the (slower) staging copy still lands.
+        let run = |policy: SharePolicyKind| {
+            let mut cfg = Config::with_nodes(4);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.replication.enabled = true;
+            cfg.replication.max_replicas = 2;
+            cfg.replication.demand_threshold = 0.5;
+            cfg.replication.ewma_alpha = 0.5;
+            cfg.replication.evaluate_interval_s = 0.5;
+            cfg.transfer.share_policy = policy;
+            cfg.transfer.staging_budget = 1.0; // never defer: isolate weighting
+            let tasks: Vec<(f64, Task)> = (0..6)
+                .map(|i| {
+                    let mut t = Task::with_inputs(TaskId(i), vec![ObjectId(0)]);
+                    t.kind = TaskKind::Synthetic { cpu_s: 0.3 };
+                    (i as f64 * 2.0, t)
+                })
+                .collect();
+            let mut spec = SimWorkloadSpec::new(tasks);
+            spec.prewarm = vec![(0, ObjectId(0))];
+            SimDriver::new(cfg, spec, catalog(1, 64 * MB)).run()
+        };
+        let flat = run(SharePolicyKind::Binary);
+        let mut weighted = run(SharePolicyKind::Weighted);
+        assert_eq!(flat.metrics.tasks_done, 6);
+        assert_eq!(weighted.metrics.tasks_done, 6);
+        // Both modes converge the replica (admit-but-throttle ≠ starve).
+        assert_eq!(flat.metrics.replicas_created, 1);
+        assert_eq!(weighted.metrics.replicas_created, 1);
+        assert_eq!(weighted.metrics.staging_deferred, 0, "budget 1.0 never defers");
+        // In-flight protection: the foreground tail tightens…
+        let mut flat_m = flat.metrics.clone();
+        assert!(
+            weighted.metrics.task_latency_p99() < flat_m.task_latency_p99() - 1e-9,
+            "weighted p99 {} must beat unweighted p99 {}",
+            weighted.metrics.task_latency_p99(),
+            flat_m.task_latency_p99()
+        );
+        // …because staging's achieved rate dropped (throttled), which is
+        // exactly what the per-class rate metric reads out.
+        assert!(
+            weighted.metrics.class_mean_rate_bps(TransferClass::Staging)
+                < flat.metrics.class_mean_rate_bps(TransferClass::Staging)
+        );
+        assert!(
+            weighted.metrics.class_bytes[TransferClass::Staging.index()]
+                >= flat.metrics.class_bytes[TransferClass::Staging.index()],
+            "throttling must not reduce the bytes replication moves"
+        );
+    }
+
+    #[test]
+    fn chord_charges_index_updates_central_does_not() {
+        use crate::index::IndexBackend;
+        let run = |backend: IndexBackend| {
+            let mut cfg = Config::with_nodes(8);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.index.backend = backend;
+            let tasks: Vec<(f64, Task)> = (0..32)
+                .map(|i| {
+                    (
+                        i as f64 * 0.5,
+                        Task::with_inputs(TaskId(i), vec![ObjectId(i % 8)]),
+                    )
+                })
+                .collect();
+            SimDriver::new(cfg, SimWorkloadSpec::new(tasks), catalog(8, MB)).run()
+        };
+        let central = run(IndexBackend::Central);
+        let chord = run(IndexBackend::Chord);
+        // Cold fetches insert into the index at completion: on chord
+        // every insert routes to its ring owner and is billed.
+        assert_eq!(central.metrics.index_update_msgs, 0, "central updates are free");
+        assert!(
+            chord.metrics.index_update_msgs > 0,
+            "chord cache inserts must charge routed update messages"
+        );
+        // Placement (and the data plane) stays backend-invariant.
+        assert_eq!(central.metrics.cache_hits, chord.metrics.cache_hits);
+        assert_eq!(central.metrics.gpfs_misses, chord.metrics.gpfs_misses);
     }
 
     #[test]

@@ -140,6 +140,14 @@ impl CentralIndex {
     pub fn op_counts(&self) -> (u64, u64) {
         (self.inserts, self.lookups.get())
     }
+
+    /// Iterate `(object, replica count)` over every indexed object
+    /// (order unspecified; the Chord backend sums over this to price the
+    /// partition handoff a membership change implies). Not counted as
+    /// lookups — this is introspection, not the service path.
+    pub fn iter_counts(&self) -> impl Iterator<Item = (ObjectId, usize)> + '_ {
+        self.locations.iter().map(|(o, v)| (*o, v.len()))
+    }
 }
 
 impl DataIndex for CentralIndex {

@@ -31,6 +31,16 @@
 //! (contents never lag — the trait's placement contract), only the
 //! *cost* of convergence is charged; drivers drain it through
 //! [`DataIndex::take_control_traffic`] into the run metrics.
+//!
+//! **Updates are metered too** (the last free operation fell with the
+//! weighted-shares refactor): every `insert`/`remove` routes the record
+//! update to the object's ring owner — O(log N) measured hops, each one
+//! control message — a membership change ships every location record
+//! whose owner moved to its new owner (the per-owner partition handoff:
+//! one direct message per record, since post-stabilization the old
+//! owner knows its successor), and a deregistration's purge routes one
+//! eviction per record the departing executor held. The centralized
+//! index pays none of this: updates mutate one in-process hash table.
 
 use std::cell::Cell;
 
@@ -60,6 +70,13 @@ pub struct ChordIndex {
     routed_lookups: Cell<u64>,
     /// Stabilization messages charged since the last harvest.
     pending_stab_msgs: u64,
+    /// Routed update / partition-handoff messages charged since the
+    /// last harvest.
+    pending_update_msgs: u64,
+    /// Monotone update counter — rotates the overlay entry point for
+    /// routed updates (separate from `queries` so update routing never
+    /// perturbs the lookup-side hop statistics).
+    update_queries: u64,
     /// Stale-finger misroutes charged since the last harvest.
     pending_misroutes: Cell<u64>,
     /// Lookups left in the current post-rebuild stale window: each pays
@@ -81,6 +98,8 @@ impl ChordIndex {
             routed_hops: Cell::new(0),
             routed_lookups: Cell::new(0),
             pending_stab_msgs: 0,
+            pending_update_msgs: 0,
+            update_queries: 0,
             pending_misroutes: Cell::new(0),
             stale_lookups: Cell::new(0),
         }
@@ -111,11 +130,23 @@ impl ChordIndex {
     }
 
     /// Rebuild the overlay for the current membership, charging the
-    /// stabilization traffic the change costs a real deployment and
+    /// stabilization traffic the change costs a real deployment, the
+    /// partition handoff for every record whose ring owner moved, and
     /// opening the stale-finger window the next lookups pay through.
     fn rebuild_ring(&mut self) {
-        self.ring = ChordRing::new(self.members.max(1), self.seed);
+        let old = std::mem::replace(&mut self.ring, ChordRing::new(self.members.max(1), self.seed));
         self.pending_stab_msgs += DhtModel::stabilization_msgs(self.members.max(1));
+        // Per-owner partition handoff: ownership is a function of the
+        // ring, so a membership change relocates every record whose
+        // owner position moved — one direct message per record (after
+        // stabilization the old owner knows the new one; no routing).
+        let mut handoff = 0u64;
+        for (obj, replicas) in self.store.iter_counts() {
+            if old.owner_pos(obj) != self.ring.owner_pos(obj) {
+                handoff += replicas as u64;
+            }
+        }
+        self.pending_update_msgs += handoff;
         self.stale_lookups.set(if self.members > 1 {
             DhtModel::stale_window(self.members)
         } else {
@@ -137,14 +168,29 @@ impl ChordIndex {
         self.routed_hops.set(self.routed_hops.get() + hops as u64);
         hops
     }
+
+    /// Route one record *update* for `obj` to its owner and charge the
+    /// measured hops as control messages. Separate rotation counter from
+    /// lookups so update routing never perturbs `mean_hops`.
+    fn route_update(&mut self, obj: ObjectId) {
+        let entry = (self.update_queries as usize) % self.ring.len();
+        self.update_queries += 1;
+        let (_, hops) = self.ring.route(entry, obj);
+        self.pending_update_msgs += hops as u64;
+    }
 }
 
 impl DataIndex for ChordIndex {
     fn insert(&mut self, obj: ObjectId, exec: ExecutorId) {
+        // The record update must reach the object's ring owner: O(log N)
+        // routed hops, billed to the control plane (placement stays
+        // backend-invariant — only the charged cost differs).
+        self.route_update(obj);
         self.store.insert(obj, exec);
     }
 
     fn remove(&mut self, obj: ObjectId, exec: ExecutorId) {
+        self.route_update(obj);
         self.store.remove(obj, exec);
     }
 
@@ -169,6 +215,12 @@ impl DataIndex for ChordIndex {
         if self.members > 0 {
             self.members -= 1;
             self.rebuild_ring();
+        }
+        // The purge is a batch of eviction updates: one routed record
+        // removal per object the departing executor held.
+        let held: Vec<ObjectId> = self.store.objects_of(exec).to_vec();
+        for obj in held {
+            self.route_update(obj);
         }
         self.store.drop_executor(exec)
     }
@@ -206,13 +258,15 @@ impl DataIndex for ChordIndex {
 
     fn take_control_traffic(&mut self) -> ControlTraffic {
         let msgs = std::mem::take(&mut self.pending_stab_msgs);
+        let updates = std::mem::take(&mut self.pending_update_msgs);
         let misroutes = self.pending_misroutes.take();
         ControlTraffic {
             stabilization_msgs: msgs,
             misroutes,
+            update_msgs: updates,
             // One control message costs one overlay hop; misroute latency
             // already landed in the affected lookups' own costs.
-            latency_s: msgs as f64 * (self.model.hop_latency_s + self.model.proc_s),
+            latency_s: (msgs + updates) as f64 * (self.model.hop_latency_s + self.model.proc_s),
         }
     }
 
@@ -339,6 +393,68 @@ mod tests {
         let _ = DataIndex::drop_executor(&mut idx, 1);
         let ct = idx.take_control_traffic();
         assert_eq!(ct.stabilization_msgs, DhtModel::stabilization_msgs(3));
+    }
+
+    #[test]
+    fn updates_charge_routed_messages_central_stays_free() {
+        let mut idx = chord(64);
+        let _ = idx.take_control_traffic(); // drain the bootstrap bill
+        for i in 0..50u64 {
+            DataIndex::insert(&mut idx, ObjectId(i), (i % 8) as usize);
+        }
+        let per_hop = DhtModel::default().hop_latency_s + DhtModel::default().proc_s;
+        let ct = idx.take_control_traffic();
+        assert!(ct.update_msgs > 0, "64-node overlay must route updates");
+        assert_eq!(ct.stabilization_msgs, 0, "no membership change");
+        assert!((ct.latency_s - ct.update_msgs as f64 * per_hop).abs() < 1e-12);
+        // Evictions are updates too.
+        for i in 0..8u64 {
+            DataIndex::remove(&mut idx, ObjectId(i), (i % 8) as usize);
+        }
+        assert!(idx.take_control_traffic().update_msgs > 0);
+        // Lookup-side hop statistics are unperturbed by update routing.
+        assert_eq!(idx.routing_counts(), (0, 0));
+        // The centralized index pays nothing for the same history.
+        let mut central = CentralIndex::new();
+        for i in 0..50u64 {
+            DataIndex::insert(&mut central, ObjectId(i), (i % 8) as usize);
+        }
+        DataIndex::remove(&mut central, ObjectId(0), 0);
+        assert!(DataIndex::take_control_traffic(&mut central).is_zero());
+    }
+
+    #[test]
+    fn membership_change_charges_partition_handoff_per_moved_record() {
+        let mut idx = chord(8);
+        // Two copies of every object: a moved object ships 2 records.
+        for i in 0..128u64 {
+            DataIndex::insert(&mut idx, ObjectId(i), (i % 4) as usize);
+            DataIndex::insert(&mut idx, ObjectId(i), 4 + (i % 4) as usize);
+        }
+        let _ = idx.take_control_traffic(); // drain bootstrap + inserts
+        // Predict which records change owner when the ring shrinks 8→7.
+        let old = ChordRing::new(8, 42);
+        let new = ChordRing::new(7, 42);
+        let expect: u64 = (0..128u64)
+            .map(|i| {
+                if old.owner_pos(ObjectId(i)) != new.owner_pos(ObjectId(i)) {
+                    2
+                } else {
+                    0
+                }
+            })
+            .sum();
+        // Drop an executor holding nothing, so the purge adds no routed
+        // evictions and the handoff is isolated.
+        let orphans = DataIndex::drop_executor(&mut idx, 17);
+        assert!(orphans.is_empty());
+        let ct = idx.take_control_traffic();
+        assert_eq!(ct.stabilization_msgs, DhtModel::stabilization_msgs(7));
+        assert_eq!(
+            ct.update_msgs, expect,
+            "handoff must ship exactly the records whose owner moved"
+        );
+        assert!(expect > 0, "an 8→7 shrink must move some ownership");
     }
 
     #[test]

@@ -86,6 +86,14 @@ impl ChordRing {
         Self::successor_of(&self.ring, ring_hash(obj.0 ^ 0x0B1E_C7))
     }
 
+    /// Ring *position* (node hash) of the object's owner — a stable node
+    /// identity comparable across rebuilds, unlike the ring index.
+    /// [`super::chord::ChordIndex`] diffs this before/after a membership
+    /// change to price the per-owner partition handoff.
+    pub fn owner_pos(&self, obj: ObjectId) -> u64 {
+        self.ring[self.owner(obj)]
+    }
+
     /// Route a lookup for `obj` starting at node `start` using greedy
     /// closest-preceding-finger forwarding. Returns (owner, hops).
     pub fn route(&self, start: usize, obj: ObjectId) -> (usize, u32) {

@@ -46,13 +46,17 @@
 //! Cost has a second axis since the metered-transfer-plane refactor:
 //! **control traffic** ([`ControlTraffic`], drained through
 //! [`DataIndex::take_control_traffic`]). Lookups meter the data plane;
-//! membership churn meters the control plane — Chord charges O(log²N)
-//! stabilization messages per join/leave plus stale-finger misroutes on
-//! the lookups issued before its finger tables repair, while the
-//! centralized index charges nothing (its "overlay" is one process).
-//! Both drivers harvest this into `Metrics::stabilization_msgs`, so a
-//! churning elastic pool shows the distributed design's maintenance bill
-//! next to its routing bill.
+//! membership churn *and index updates* meter the control plane — Chord
+//! charges O(log²N) stabilization messages per join/leave, stale-finger
+//! misroutes on the lookups issued before its finger tables repair,
+//! O(log N) routed hops per `insert`/`remove` (the record update must
+//! reach the object's ring owner), and a partition handoff (one message
+//! per relocated record) when a membership change moves ownership —
+//! while the centralized index charges nothing (its "overlay" is one
+//! process). Both drivers harvest this into
+//! `Metrics::stabilization_msgs` / `Metrics::index_update_msgs`, so a
+//! churning elastic pool shows the distributed design's full
+//! maintenance bill next to its routing bill.
 //!
 //! ### Multi-holder hint ranking
 //!
@@ -118,17 +122,25 @@ impl LookupCost {
 }
 
 /// Control-plane traffic an index backend accumulated since it was last
-/// harvested: the overlay-maintenance cost of *membership*, as opposed
-/// to the per-lookup cost in [`LookupCost`].
+/// harvested: the overlay-maintenance cost of *membership and updates*,
+/// as opposed to the per-lookup cost in [`LookupCost`].
 ///
 /// The centralized backend has no control plane and always reports zero.
-/// The Chord backend charges O(log²N) stabilization messages per
-/// membership change (each join/leave triggers successor/finger repair
-/// across the ring) and counts the stale-finger misroutes its lookups
-/// paid between a membership change and the next `fix_fingers` round
-/// (those misroutes also surface as extra hops/latency in the affected
-/// [`LookupCost`]s — `latency_s` here covers only the stabilization
-/// messages, so harvesting never double-charges).
+/// The Chord backend charges three things:
+///
+/// * O(log²N) **stabilization** messages per membership change (each
+///   join/leave triggers successor/finger repair across the ring);
+/// * **stale-finger misroutes** on the lookups issued between a
+///   membership change and the next `fix_fingers` round (those also
+///   surface as extra hops/latency in the affected [`LookupCost`]s —
+///   `latency_s` here covers only the control messages, so harvesting
+///   never double-charges);
+/// * **update traffic**: every `insert`/`remove` is a record update
+///   *routed to the object's owner node* (O(log N) hops, measured on
+///   the real finger tables), and a membership change additionally
+///   ships every location record whose ring owner moved to its new
+///   owner — the per-owner partition handoff (one direct message per
+///   record: after stabilization the old owner knows the new one).
 ///
 /// Drivers drain this via [`crate::coordinator::core::FalkonCore::take_index_control`]
 /// and fold it into [`crate::coordinator::metrics::Metrics`].
@@ -139,14 +151,18 @@ pub struct ControlTraffic {
     /// Lookups that misrouted through a stale finger since the last
     /// harvest (their extra hop is charged in the lookup's own cost).
     pub misroutes: u64,
-    /// Simulated wall time behind the stabilization messages, seconds.
+    /// Update messages: routed insert/evict record updates plus
+    /// partition-handoff record transfers on membership changes.
+    pub update_msgs: u64,
+    /// Simulated wall time behind the stabilization and update
+    /// messages, seconds.
     pub latency_s: f64,
 }
 
 impl ControlTraffic {
     /// Whether nothing was charged.
     pub fn is_zero(&self) -> bool {
-        self.stabilization_msgs == 0 && self.misroutes == 0
+        self.stabilization_msgs == 0 && self.misroutes == 0 && self.update_msgs == 0
     }
 }
 

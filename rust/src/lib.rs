@@ -28,10 +28,11 @@
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
 //! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |
 //! | Demand-driven replication ("data diffusion" proper) | [`replication`] |
-//! | Metered transfer plane (priority classes, staging admission) | [`transfer`] |
+//! | Metered transfer plane (classes, share policies, weighted fair shares) | [`transfer`] |
+//! | Weighted max-min flow network (per-class flow weights) | [`sim::flownet`] |
 //! | DRP demand-response figure (`--figure drp`) | [`analysis::figures`], [`workloads::bursty`] |
 //! | Diffusion figure (`--figure diffusion`, replication on/off) | [`analysis::figures`] |
-//! | QoS figure (`--figure qos`, admission control on/off) | [`analysis::figures`] |
+//! | QoS figure (`--figure qos`, share policy off/binary/weighted) | [`analysis::figures`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |

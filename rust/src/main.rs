@@ -44,6 +44,8 @@ fn main() {
         OptSpec { name: "replication", value: "POLICY", help: "data diffusion: least-loaded|hash-spread|co-locate", default: "" },
         OptSpec { name: "max-replicas", value: "N", help: "per-object replica ceiling (with --replication)", default: "" },
         OptSpec { name: "staging-budget", value: "F", help: "source egress budget (0,1] gating background staging (1.0 = off)", default: "1.0" },
+        OptSpec { name: "share-policy", value: "NAME", help: "transfer share policy (binary|weighted)", default: "binary" },
+        OptSpec { name: "class-weights", value: "F,S,P", help: "foreground,staging,prestage fair-share weights (implies --share-policy weighted)", default: "" },
         OptSpec { name: "workload", value: "NAME", help: "sim workload (stacking|bursty)", default: "stacking" },
         OptSpec { name: "shape", value: "NAME", help: "bursty demand shape (square|sine)", default: "square" },
         OptSpec { name: "tasks", value: "N", help: "task count (live: 64, bursty sim: 512)", default: "" },
@@ -171,12 +173,12 @@ fn cmd_sim(args: &Args) -> i32 {
         },
         replication_label(&cfg)
     );
-    let out = SimDriver::new(cfg, spec, catalog).run();
+    let mut out = SimDriver::new(cfg, spec, catalog).run();
     print_outcome_common(
         out.metrics.tasks_done,
         out.makespan_s,
         out.time_per_task_per_cpu(cpus),
-        &out.metrics,
+        &mut out.metrics,
     );
     print_pool_timeline(&out.metrics);
     println!(
@@ -189,8 +191,9 @@ fn cmd_sim(args: &Args) -> i32 {
 }
 
 /// Apply `--replication <policy>` / `--max-replicas N` /
-/// `--staging-budget F` to the config (the first flag enables the
-/// manager; config files can also enable it).
+/// `--staging-budget F` / `--share-policy NAME` / `--class-weights F,S,P`
+/// to the config (the first flag enables the manager; config files can
+/// also enable it; `--class-weights` implies the weighted share policy).
 fn apply_replication_flags(args: &Args, cfg: &mut Config) -> Result<(), ()> {
     if let Some(p) = args.get("replication") {
         let Some(policy) = PlacementPolicy::parse(p) else {
@@ -217,6 +220,24 @@ fn apply_replication_flags(args: &Args, cfg: &mut Config) -> Result<(), ()> {
                 return Err(());
             }
         }
+    }
+    if let Some(p) = args.get("share-policy") {
+        let Some(kind) = datadiffusion::transfer::SharePolicyKind::parse(p) else {
+            eprintln!("error: --share-policy expects binary|weighted");
+            return Err(());
+        };
+        cfg.transfer.share_policy = kind;
+    }
+    if let Some(w) = args.get("class-weights") {
+        let Some(weights) = datadiffusion::transfer::ClassWeights::parse(w) else {
+            eprintln!(
+                "error: --class-weights expects three positive numbers \
+                 \"foreground,staging,prestage\" (e.g. 1.0,0.25,0.1)"
+            );
+            return Err(());
+        };
+        cfg.transfer.class_weights = weights;
+        cfg.transfer.share_policy = datadiffusion::transfer::SharePolicyKind::Weighted;
     }
     Ok(())
 }
@@ -351,12 +372,12 @@ fn cmd_live(args: &Args) -> i32 {
         replication_label(&cfg)
     );
     match LiveCluster::new(cfg, store, workdir.join("work"), artifacts).run(tasks) {
-        Ok(out) => {
+        Ok(mut out) => {
             print_outcome_common(
                 out.metrics.tasks_done,
                 out.makespan_s,
                 out.makespan_s * nodes as f64 / out.metrics.tasks_done.max(1) as f64,
-                &out.metrics,
+                &mut out.metrics,
             );
             print_pool_timeline(&out.metrics);
             0
@@ -382,7 +403,7 @@ const FIGURES: &[(&str, &str)] = &[
     ("13", "per-task data movement by source at 128 CPUs"),
     ("drp", "dynamic provisioning: the three allocation policies on bursty runs (CSVs)"),
     ("diffusion", "demand-driven replication on/off vs cache-node count (CSV)"),
-    ("qos", "staging admission on/off: foreground p99 (--tasks = bursts of `nodes` tasks, CSV)"),
+    ("qos", "share-policy axis off/binary/weighted: foreground p50/p90/p99 under saturating staging (--tasks = bursts of `nodes` tasks, CSV)"),
 ];
 
 /// `falkon sweep --list`: enumerate the available figures.
@@ -489,12 +510,14 @@ fn cmd_sweep(args: &Args) -> i32 {
     0
 }
 
-/// The QoS figure: foreground p99 task latency under saturating staging
-/// load, admission control on vs off (same emitter as the `fig_qos`
-/// bench). `--nodes` caps the node-count list. NOTE: unlike the other
-/// sweeps, `--tasks` here is the number of task *bursts* per run — each
-/// burst is `nodes` tasks, so a run schedules nodes × tasks tasks (the
-/// burst structure, not the raw count, is what saturates the holder).
+/// The QoS figure: foreground tail latency under saturating staging
+/// load across the share-policy axis — off (no metering), binary
+/// (start-time deferral) and weighted (per-class fair shares) — same
+/// emitter as the `fig_qos` bench. `--nodes` caps the node-count list.
+/// NOTE: unlike the other sweeps, `--tasks` here is the number of task
+/// *bursts* per run — each burst is `nodes` tasks, so a run schedules
+/// nodes × tasks tasks (the burst structure, not the raw count, is what
+/// saturates the holder).
 fn sweep_qos(args: &Args) -> i32 {
     let max_nodes: usize = args.num_or("nodes", 16);
     let bursts: usize = args.num_or("tasks", 20);
@@ -506,10 +529,12 @@ fn sweep_qos(args: &Args) -> i32 {
     match figures::emit_qos(&rows, &results_dir()) {
         Ok(p) => {
             println!(
-                "\nreading the figure: unmetered staging shares each holder's egress with\n\
-                 the foreground fetches queued on it, so the burst tail (p99) stretches;\n\
-                 with the admission budget on, staging defers mid-burst and drains in the\n\
-                 gaps — the tail tightens while replication still converges.\nwrote {}",
+                "\nreading the figure: unmetered ('off') staging shares each holder's egress\n\
+                 1:1 with the foreground fetches queued on it, stretching the burst tail;\n\
+                 'binary' defers staging mid-burst and drains it in the gaps (stop-start);\n\
+                 'weighted' admits staging throttled at its class weight, so foreground p99\n\
+                 stays at binary's level while staging throughput stays strictly smoother\n\
+                 than stop-start deferral.\nwrote {}",
                 p.display()
             );
             0
@@ -614,9 +639,19 @@ fn print_outcome_common(
     tasks: u64,
     makespan: f64,
     per_task_cpu: f64,
-    m: &datadiffusion::coordinator::metrics::Metrics,
+    m: &mut datadiffusion::coordinator::metrics::Metrics,
 ) {
+    use datadiffusion::transfer::TransferClass;
     println!("  tasks: {tasks} | makespan {} | time/task/cpu {}", fmt_secs(makespan), fmt_secs(per_task_cpu));
+    if m.tasks_done > 0 {
+        println!(
+            "  task latency: p50 {} | p90 {} | p99 {} | mean {}",
+            fmt_secs(m.task_latency_p50()),
+            fmt_secs(m.task_latency_p90()),
+            fmt_secs(m.task_latency_p99()),
+            fmt_secs(m.task_latency.mean())
+        );
+    }
     println!(
         "  hits: local {} ({:.1}%), cache-to-cache {}, persistent {}",
         m.cache_hits,
@@ -639,11 +674,28 @@ fn print_outcome_common(
     );
     if m.index_lookups > 0 {
         println!(
-            "  index: {} lookups | {} hops | {} stabilization msgs | charged {}",
+            "  index: {} lookups | {} hops | {} stabilization msgs | {} update msgs | charged {}",
             m.index_lookups,
             m.index_hops,
             m.stabilization_msgs,
+            m.index_update_msgs,
             fmt_secs(m.index_cost_s)
+        );
+    }
+    if m.class_bytes.iter().any(|&b| b > 0) {
+        let cell = |c: TransferClass| {
+            format!(
+                "{} {} @ {}",
+                c.label(),
+                fmt_bytes(m.class_bytes[c.index()]),
+                fmt_bps(m.class_mean_rate_bps(c))
+            )
+        };
+        println!(
+            "  transfer classes: {} | {} | {}",
+            cell(TransferClass::Foreground),
+            cell(TransferClass::Staging),
+            cell(TransferClass::Prestage)
         );
     }
     if m.replicas_created > 0 || m.replica_bytes_staged > 0 || m.staging_deferred > 0 {

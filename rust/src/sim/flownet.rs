@@ -1,16 +1,27 @@
-//! Fluid flow network with max-min fair sharing.
+//! Fluid flow network with weighted max-min fair sharing.
 //!
 //! Models every byte movement in the simulated system. A **resource** is a
 //! capacity in bits/sec (GPFS aggregate read pool, a node's NIC-in, a
 //! node's disk, ...). A **flow** is a transfer of `bytes` across a *set*
 //! of resources; its instantaneous rate is bound by all of them.
 //!
-//! Rates follow **max-min fairness** computed by progressive filling:
-//! repeatedly find the bottleneck resource (smallest fair share), freeze
-//! the rates of the flows it carries, remove them, repeat. This is the
-//! standard fluid approximation for TCP-like sharing and is what makes
+//! Rates follow **weighted max-min fairness** computed by progressive
+//! filling: repeatedly find the bottleneck resource (smallest fair share
+//! per unit weight), freeze the rates of the flows it carries at
+//! `weight × share`, remove them, repeat. This is the standard fluid
+//! approximation for TCP-like (or WFQ-shaped) sharing and is what makes
 //! GPFS saturate at its aggregate cap while local-disk flows scale
 //! linearly (each node's disk is a private resource).
+//!
+//! Weights are how the metered transfer plane ([`crate::transfer`])
+//! bounds *in-flight* interference, not just admission: a background
+//! staging flow started with weight 0.25 concedes 4/5 of a contended
+//! link to a unit-weight foreground fetch, yet still runs — and the
+//! allocation is **work-conserving**: share a bottlenecked flow cannot
+//! use (because another resource binds it first) is redistributed to the
+//! remaining flows, so capacity never idles while demand exists. With
+//! every weight at 1.0 (the default — [`FlowNetwork::start_flow`]) the
+//! arithmetic reduces bit-for-bit to the classic unweighted fair share.
 //!
 //! The driver couples this to the DES by asking for the next completion
 //! time after every membership change and re-scheduling its completion
@@ -48,6 +59,9 @@ struct Flow {
     resources: Vec<ResourceId>,
     remaining_bits: f64,
     rate_bps: f64,
+    /// Fair-share weight (1.0 = classic max-min; the transfer plane's
+    /// background classes run below 1.0).
+    weight: f64,
 }
 
 /// The flow network. Time is advanced explicitly by the caller.
@@ -62,10 +76,15 @@ pub struct FlowNetwork {
     rates_dirty: bool,
     // Scratch buffers reused across recomputes.
     scratch_cap: Vec<f64>,
-    scratch_count: Vec<u32>,
+    scratch_wsum: Vec<f64>,
     scratch_unfixed: Vec<u32>,
     scratch_loaded: Vec<u32>,
 }
+
+/// A resource's weight-sum below this is treated as unloaded: exact for
+/// unit weights (integral f64 subtraction leaves exactly 0.0) and absorbs
+/// the last-ulp residue fractional weights can leave behind.
+const WSUM_EPS: f64 = 1e-12;
 
 impl FlowNetwork {
     /// Empty network.
@@ -86,10 +105,25 @@ impl FlowNetwork {
         self.rates_dirty = true;
     }
 
-    /// Start a flow of `bytes` across `resources` at time `now`. A flow
-    /// must cross at least one resource.
+    /// Start a unit-weight flow of `bytes` across `resources` at time
+    /// `now`. A flow must cross at least one resource.
     pub fn start_flow(&mut self, now: f64, resources: Vec<ResourceId>, bytes: u64) -> FlowId {
+        self.start_flow_weighted(now, resources, bytes, 1.0)
+    }
+
+    /// Start a flow carrying a fair-share `weight`: on every contended
+    /// resource it receives capacity in proportion to its weight among
+    /// the contending flows (clamped to a positive floor — a zero or
+    /// negative weight would starve the flow forever and stall the DES).
+    pub fn start_flow_weighted(
+        &mut self,
+        now: f64,
+        resources: Vec<ResourceId>,
+        bytes: u64,
+        weight: f64,
+    ) -> FlowId {
         assert!(!resources.is_empty(), "flow needs at least one resource");
+        let weight = if weight.is_finite() { weight.max(1e-6) } else { 1.0 };
         self.advance_to(now);
         self.next_gen = self.next_gen.wrapping_add(1);
         let slot = match self.free.pop() {
@@ -108,6 +142,7 @@ impl FlowNetwork {
             // floor of one bit to avoid NaN rates.
             remaining_bits: (bytes as f64 * 8.0).max(1e-9),
             rate_bps: 0.0,
+            weight,
         });
         self.active += 1;
         self.rates_dirty = true;
@@ -205,6 +240,11 @@ impl FlowNetwork {
         self.get(id).map(|f| f.resources.as_slice()).unwrap_or(&[])
     }
 
+    /// Fair-share weight of a flow (0.0 for a stale id).
+    pub fn flow_weight(&self, id: FlowId) -> f64 {
+        self.get(id).map(|f| f.weight).unwrap_or(0.0)
+    }
+
     /// Capacity of a resource (testing / introspection).
     pub fn capacity(&self, r: ResourceId) -> f64 {
         self.resources[r.0 as usize].capacity_bps
@@ -215,7 +255,16 @@ impl FlowNetwork {
         self.active
     }
 
-    /// Max-min fair rates by progressive filling.
+    /// Weighted max-min fair rates by progressive filling.
+    ///
+    /// Each resource tracks the *weight sum* of its unfixed flows; the
+    /// per-level bottleneck share is `capacity / weight_sum` (share per
+    /// unit weight, the WFQ virtual-time rate) and a frozen flow gets
+    /// `weight × share`. Freezing subtracts the flow's granted rate from
+    /// every resource it crosses, so share it cannot use elsewhere is
+    /// redistributed to the survivors — work-conserving by construction.
+    /// With all weights at 1.0 the weight sums are exact integers and the
+    /// arithmetic is bit-identical to the classic unweighted filling.
     ///
     /// O(levels · (R + F)) over slab scans — no hashing, no allocation
     /// (scratch buffers are reused), no sort (slab order is already
@@ -226,39 +275,39 @@ impl FlowNetwork {
         self.scratch_cap.clear();
         self.scratch_cap
             .extend(self.resources.iter().map(|r| r.capacity_bps));
-        self.scratch_count.clear();
-        self.scratch_count.resize(nr, 0);
+        self.scratch_wsum.clear();
+        self.scratch_wsum.resize(nr, 0.0);
         self.scratch_unfixed.clear();
         for (slot, flow) in self.slots.iter().enumerate() {
             if let Some(flow) = flow {
                 self.scratch_unfixed.push(slot as u32);
                 for r in &flow.resources {
-                    self.scratch_count[r.0 as usize] += 1;
+                    self.scratch_wsum[r.0 as usize] += flow.weight;
                 }
             }
         }
         let cap = &mut self.scratch_cap;
-        let count = &mut self.scratch_count;
+        let wsum = &mut self.scratch_wsum;
         // Only resources actually carrying flows participate; scanning the
         // full resource vector per level is wasted work on big testbeds
         // (4 resources per node × 64 nodes, few of them loaded at once).
         self.scratch_loaded.clear();
         for i in 0..nr {
-            if count[i] > 0 {
+            if wsum[i] > WSUM_EPS {
                 self.scratch_loaded.push(i as u32);
             }
         }
         let mut n_unfixed = self.scratch_unfixed.len();
         while n_unfixed > 0 {
-            // Bottleneck: min fair share among loaded resources.
+            // Bottleneck: min per-unit-weight share among loaded resources.
             let mut share = f64::INFINITY;
             let mut keep_loaded = 0usize;
             for k in 0..self.scratch_loaded.len() {
                 let i = self.scratch_loaded[k] as usize;
-                if count[i] > 0 {
+                if wsum[i] > WSUM_EPS {
                     self.scratch_loaded[keep_loaded] = i as u32;
                     keep_loaded += 1;
-                    let s = cap[i] / count[i] as f64;
+                    let s = cap[i] / wsum[i];
                     if s < share {
                         share = s;
                     }
@@ -271,22 +320,22 @@ impl FlowNetwork {
                 }
                 break;
             }
-            // Freeze flows crossing a bottleneck resource at `share`,
-            // compacting survivors to the front of the scratch list.
+            // Freeze flows crossing a bottleneck resource at
+            // `weight × share`, compacting survivors to the front.
             let mut keep = 0usize;
             for k in 0..n_unfixed {
                 let slot = self.scratch_unfixed[k] as usize;
                 let flow = self.slots[slot].as_mut().unwrap();
                 let bottlenecked = flow.resources.iter().any(|r| {
                     let i = r.0 as usize;
-                    count[i] > 0 && (cap[i] / count[i] as f64) <= share + 1e-9
+                    wsum[i] > WSUM_EPS && (cap[i] / wsum[i]) <= share + 1e-9
                 });
                 if bottlenecked {
-                    flow.rate_bps = share;
+                    flow.rate_bps = flow.weight * share;
                     for r in &flow.resources {
                         let i = r.0 as usize;
-                        cap[i] -= share;
-                        count[i] -= 1;
+                        cap[i] -= flow.weight * share;
+                        wsum[i] -= flow.weight;
                     }
                 } else {
                     self.scratch_unfixed[keep] = slot as u32;
@@ -438,6 +487,81 @@ mod tests {
         assert!((net.utilization(wide) - 0.4).abs() < EPS);
         net.remove_flow(0.0, f);
         assert_eq!(net.utilization(narrow), 0.0);
+    }
+
+    #[test]
+    fn weighted_flows_split_in_weight_proportion() {
+        // Foreground (1.0) vs staging (0.25) on one 10 Mb/s link:
+        // 8 Mb/s vs 2 Mb/s.
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(10e6);
+        let fg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 1.0);
+        let bg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 0.25);
+        assert!((net.rate(fg) - 8e6).abs() < EPS, "fg={}", net.rate(fg));
+        assert!((net.rate(bg) - 2e6).abs() < EPS, "bg={}", net.rate(bg));
+        assert_eq!(net.flow_weight(fg), 1.0);
+        assert_eq!(net.flow_weight(bg), 0.25);
+        // Completion times follow the weighted rates: bg (2 Mb/s over
+        // 8 Mbit) would finish at t=4; fg at t=1, after which bg speeds
+        // up to the full link. fg completes first.
+        let (t, id) = net.next_completion(0.0).unwrap();
+        assert_eq!(id, fg);
+        assert!((t - 1.0).abs() < EPS, "t={t}");
+    }
+
+    #[test]
+    fn weighted_sharing_is_work_conserving() {
+        // A low-weight flow alone still gets the whole link (weights
+        // scale shares among *contenders*, they are not absolute caps).
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(10e6);
+        let bg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 0.1);
+        assert!((net.rate(bg) - 10e6).abs() < EPS, "bg={}", net.rate(bg));
+        // And share a bottlenecked-elsewhere flow cannot use is
+        // redistributed: B (weight 1) is pinned to 1 Mb/s by a narrow
+        // private link, so A (weight 0.25) takes the remaining 9 Mb/s.
+        let mut net = FlowNetwork::new();
+        let wide = net.add_resource(10e6);
+        let narrow = net.add_resource(1e6);
+        let a = net.start_flow_weighted(0.0, vec![wide], 1_000_000, 0.25);
+        let b = net.start_flow_weighted(0.0, vec![wide, narrow], 1_000_000, 1.0);
+        assert!((net.rate(b) - 1e6).abs() < EPS, "b={}", net.rate(b));
+        assert!((net.rate(a) - 9e6).abs() < EPS, "a={}", net.rate(a));
+    }
+
+    #[test]
+    fn unit_weights_match_unweighted_filling_exactly() {
+        // start_flow and start_flow_weighted(…, 1.0) must be the same
+        // computation bit-for-bit (the binary share policy relies on it).
+        let build = |weighted: bool| {
+            let mut net = FlowNetwork::new();
+            let r0 = net.add_resource(10.0);
+            let r1 = net.add_resource(4.0);
+            let mk = |net: &mut FlowNetwork, rs: Vec<ResourceId>| {
+                if weighted {
+                    net.start_flow_weighted(0.0, rs, 1000, 1.0)
+                } else {
+                    net.start_flow(0.0, rs, 1000)
+                }
+            };
+            let a = mk(&mut net, vec![r0]);
+            let b = mk(&mut net, vec![r0, r1]);
+            let c = mk(&mut net, vec![r1]);
+            let rates = (net.rate(a), net.rate(b), net.rate(c));
+            let next = net.next_completion(0.0).unwrap();
+            (rates, next)
+        };
+        assert_eq!(build(false), build(true));
+    }
+
+    #[test]
+    fn nonpositive_weight_is_clamped_not_starved() {
+        let mut net = FlowNetwork::new();
+        let r = net.add_resource(1e6);
+        let f = net.start_flow_weighted(0.0, vec![r], 1_000, 0.0);
+        assert!(net.rate(f) > 0.0, "clamped weight must still progress");
+        let (t, _) = net.next_completion(0.0).unwrap();
+        assert!(t.is_finite());
     }
 
     #[test]

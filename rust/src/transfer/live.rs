@@ -1,50 +1,247 @@
-//! Live transfer plane: admission control over the cache-directory copy
+//! Live transfer plane: the share policy over the cache-directory copy
 //! path.
 //!
 //! The live driver moves bytes with real file copies between per-executor
 //! cache directories ([`copy_into_cache`] — the one funnel every
 //! cache-bound copy goes through, whether it serves a foreground peer
-//! fetch, a persistent-storage read, or a staging transfer). The
-//! coordinator cannot observe NIC counters for its executor threads, so
-//! the live plane meters the closest observable proxy: the source
-//! executor's **busy-slot fraction** (a busy slot is a running task, and
-//! a running task is doing foreground I/O on that node's disk and NIC).
-//! The coordinator refreshes the snapshot every loop iteration via
-//! [`LiveTransferPlane::set_load`] and drains re-admitted transfers with
-//! [`TransferPlane::readmit`] before dispatching.
+//! fetch, a persistent-storage read, or a staging transfer). Two pieces
+//! make the live plane commensurate with the simulator's measured
+//! utilization:
+//!
+//! * **Byte-level egress accounting** ([`EgressLedger`]): every copy out
+//!   of an executor's cache directory — foreground peer fetches and
+//!   background staging alike — registers its byte count against that
+//!   *source* executor while the copy is in flight (the copying thread
+//!   is the destination's, but the bytes leave the source's disk/NIC).
+//!   Utilization is the in-flight backlog expressed as seconds of the
+//!   source's egress bandwidth, clamped to [0, 1] — the same quantity
+//!   the sim reads as the rate-sum over the source's NIC-out/disk-read.
+//!   This replaces PR 4's busy-slot proxy, which could not see bytes at
+//!   all.
+//! * **Token-bucket pacing** ([`StagingPacer`]): under the weighted
+//!   policy, background copies drain a per-source bucket refilled at the
+//!   source's egress rate, with each class charged inversely to its
+//!   fair share against one foreground flow
+//!   ([`super::ClassWeights::share_vs_foreground`]) — a staging copy at
+//!   weight 0.25 proceeds at ~20% of the source's egress, the live
+//!   analog of the sim's weighted max-min rate. The binary policy
+//!   disables pacing (unit weights: admitted copies run at full speed,
+//!   exactly PR 4's behavior).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use super::{Admission, AdmissionController, TransferPlane, TransferRequest, TransferStats};
+use super::{
+    build_share_policy, Admission, AdmissionController, SharePolicyKind, TransferClass,
+    TransferPlane, TransferRequest, TransferStats,
+};
+use crate::config::TransferConfig;
 use crate::index::central::ExecutorId;
-use crate::util::fxhash::FxHashMap;
 
-/// The live driver's transfer plane: admission control fed by a
-/// coordinator-maintained per-executor load snapshot.
-pub struct LiveTransferPlane {
-    ctl: AdmissionController,
-    /// Busy-slot fraction per executor (coordinator snapshot).
-    load: FxHashMap<ExecutorId, f64>,
+/// Per-source-executor in-flight egress byte accounting, shared between
+/// the coordinator (which reads utilization for admission) and the
+/// executor threads (which register their copies). Lock-free: counters
+/// are atomics, capacity is fixed at construction.
+#[derive(Debug)]
+pub struct EgressLedger {
+    /// Bytes currently being copied out of each executor's cache.
+    inflight: Vec<AtomicU64>,
+    /// Egress bandwidth per executor, bits/sec (the tighter of NIC and
+    /// local-disk read — the same legs the sim's utilization meters).
+    egress_bps: f64,
 }
 
-impl LiveTransferPlane {
-    /// Plane with the given staging budget.
-    pub fn new(staging_budget: f64) -> Self {
-        LiveTransferPlane {
-            ctl: AdmissionController::new(staging_budget),
-            load: FxHashMap::default(),
+impl EgressLedger {
+    /// Ledger for `n` executors with the given per-executor egress
+    /// bandwidth (bits/sec).
+    pub fn new(n: usize, egress_bps: f64) -> EgressLedger {
+        EgressLedger {
+            inflight: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            egress_bps: egress_bps.max(1.0),
         }
     }
 
-    /// Refresh one executor's load (busy slots / capacity, in [0, 1]).
-    /// Released executors are forgotten by
-    /// [`TransferPlane::executor_released`].
-    pub fn set_load(&mut self, exec: ExecutorId, util: f64) {
-        self.load.insert(exec, util.clamp(0.0, 1.0));
+    /// A copy of `bytes` out of `src`'s cache started.
+    pub fn begin(&self, src: ExecutorId, bytes: u64) {
+        if let Some(c) = self.inflight.get(src) {
+            c.fetch_add(bytes, Ordering::Relaxed);
+        }
     }
 
-    fn util(&self, exec: ExecutorId) -> f64 {
-        self.load.get(&exec).copied().unwrap_or(0.0)
+    /// A copy of `bytes` out of `src`'s cache finished (or failed).
+    pub fn end(&self, src: ExecutorId, bytes: u64) {
+        if let Some(c) = self.inflight.get(src) {
+            // Saturating: a release/re-join race must never underflow.
+            let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(bytes))
+            });
+        }
+    }
+
+    /// Bytes currently in flight out of `src`'s cache.
+    pub fn inflight_bytes(&self, src: ExecutorId) -> u64 {
+        self.inflight
+            .get(src)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Egress utilization in [0, 1]: the in-flight backlog as seconds of
+    /// the source's egress bandwidth, clamped — one full second of queued
+    /// bytes reads as saturated.
+    pub fn utilization(&self, src: ExecutorId) -> f64 {
+        (self.inflight_bytes(src) as f64 * 8.0 / self.egress_bps).clamp(0.0, 1.0)
+    }
+}
+
+/// RAII egress registration: `bytes` are charged against `src` for the
+/// guard's lifetime and released on drop (panic-safe accounting inside
+/// executor threads).
+pub struct EgressGuard {
+    ledger: Arc<EgressLedger>,
+    src: ExecutorId,
+    bytes: u64,
+}
+
+impl EgressGuard {
+    /// Register `bytes` against `src` on the ledger until dropped.
+    pub fn new(ledger: Arc<EgressLedger>, src: ExecutorId, bytes: u64) -> EgressGuard {
+        ledger.begin(src, bytes);
+        EgressGuard { ledger, src, bytes }
+    }
+}
+
+impl Drop for EgressGuard {
+    fn drop(&mut self) {
+        self.ledger.end(self.src, self.bytes);
+    }
+}
+
+/// Token-bucket state with an explicit clock (testable without
+/// sleeping): `take` returns how long the caller must wait before the
+/// requested tokens are covered.
+#[derive(Debug)]
+struct TokenBucket {
+    /// Refill rate, tokens (bytes) per second.
+    rate: f64,
+    /// Burst allowance, tokens.
+    burst: f64,
+    /// Tokens available at `last` (may go negative: debt = wait time).
+    tokens: f64,
+    /// Clock of the last refill, seconds.
+    last: f64,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64) -> TokenBucket {
+        TokenBucket {
+            rate: rate.max(1.0),
+            burst: burst.max(1.0),
+            tokens: burst.max(1.0),
+            last: 0.0,
+        }
+    }
+
+    /// Consume `cost` tokens at time `now_s`; returns the seconds the
+    /// caller must wait before proceeding (0.0 when the bucket covers
+    /// the cost).
+    fn take(&mut self, cost: f64, now_s: f64) -> f64 {
+        let dt = (now_s - self.last).max(0.0);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now_s;
+        self.tokens -= cost;
+        if self.tokens >= 0.0 {
+            0.0
+        } else {
+            -self.tokens / self.rate
+        }
+    }
+}
+
+/// Per-source token buckets pacing background copies under the weighted
+/// policy (no-op under binary). A copy of class `c` charges
+/// `bytes / share_vs_foreground(c)` tokens against a bucket refilled at
+/// the source's full egress byte rate — equivalent to pacing each class
+/// at its weighted fair share of the source's egress.
+#[derive(Debug)]
+pub struct StagingPacer {
+    /// None: pacing disabled (binary policy).
+    buckets: Option<Vec<Mutex<TokenBucket>>>,
+    weights: super::ClassWeights,
+    /// Shared wall clock (monotonic origin for every bucket).
+    t0: Instant,
+}
+
+/// Chunk size for paced copies: small enough that pacing sleeps are
+/// fine-grained, large enough that syscall overhead stays negligible.
+const PACE_CHUNK: usize = 256 * 1024;
+
+impl StagingPacer {
+    /// Pacer for `n` executors under the configured policy.
+    /// `egress_bps` is the per-executor egress bandwidth (bits/sec).
+    pub fn new(n: usize, egress_bps: f64, cfg: &TransferConfig) -> StagingPacer {
+        let buckets = match cfg.share_policy {
+            SharePolicyKind::Binary => None,
+            SharePolicyKind::Weighted => {
+                let rate = (egress_bps / 8.0).max(1.0);
+                Some(
+                    (0..n)
+                        .map(|_| Mutex::new(TokenBucket::new(rate, 2.0 * PACE_CHUNK as f64)))
+                        .collect(),
+                )
+            }
+        };
+        StagingPacer {
+            buckets,
+            weights: cfg.class_weights,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Whether this pacer actually paces (weighted policy).
+    pub fn enabled(&self) -> bool {
+        self.buckets.is_some()
+    }
+
+    /// Seconds a copy chunk of `bytes` from `src` under `class` must
+    /// wait before proceeding (0.0 when pacing is off or the bucket
+    /// covers it).
+    pub fn wait_s(&self, src: ExecutorId, class: TransferClass, bytes: u64) -> f64 {
+        let Some(buckets) = &self.buckets else {
+            return 0.0;
+        };
+        let Some(bucket) = buckets.get(src) else {
+            return 0.0;
+        };
+        let share = self.weights.share_vs_foreground(class).max(1e-6);
+        let cost = bytes as f64 / share;
+        let now_s = self.t0.elapsed().as_secs_f64();
+        bucket.lock().unwrap().take(cost, now_s)
+    }
+}
+
+/// The live driver's transfer plane: the share policy fed by real
+/// byte-level egress accounting ([`EgressLedger`]).
+pub struct LiveTransferPlane {
+    ctl: AdmissionController,
+    ledger: Arc<EgressLedger>,
+}
+
+impl LiveTransferPlane {
+    /// Plane under the configured share policy, reading utilization from
+    /// the shared egress ledger.
+    pub fn new(cfg: &TransferConfig, ledger: Arc<EgressLedger>) -> Self {
+        LiveTransferPlane {
+            ctl: AdmissionController::with_policy(build_share_policy(cfg)),
+            ledger,
+        }
+    }
+
+    /// Measured egress utilization of one executor (for diagnostics).
+    pub fn source_utilization(&self, exec: ExecutorId) -> f64 {
+        self.ledger.utilization(exec)
     }
 }
 
@@ -53,18 +250,16 @@ impl TransferPlane for LiveTransferPlane {
         if !req.class.is_background() {
             return Admission::Start;
         }
-        let util = self.util(req.src);
+        let util = self.ledger.utilization(req.src);
         self.ctl.offer(req, util)
     }
 
     fn readmit(&mut self) -> Vec<TransferRequest> {
-        let load = &self.load;
-        self.ctl
-            .readmit(|e| load.get(&e).copied().unwrap_or(0.0))
+        let ledger = &self.ledger;
+        self.ctl.readmit(|e| ledger.utilization(e))
     }
 
     fn executor_released(&mut self, exec: ExecutorId) -> Vec<TransferRequest> {
-        self.load.remove(&exec);
         self.ctl.executor_released(exec)
     }
 
@@ -85,11 +280,50 @@ pub fn copy_into_cache(src: &Path, dst: &Path) -> std::io::Result<u64> {
     std::fs::copy(src, dst)
 }
 
+/// Paced variant for background staging: the copy proceeds in
+/// [`PACE_CHUNK`] chunks, each cleared through the source's token bucket
+/// first, so a staging copy moves at its class's fair share of the
+/// source's egress instead of hammering it (no-op pacing under the
+/// binary policy — the pacer returns zero waits).
+pub fn copy_into_cache_paced(
+    src: &Path,
+    dst: &Path,
+    pacer: &StagingPacer,
+    source: ExecutorId,
+    class: TransferClass,
+) -> std::io::Result<u64> {
+    if !pacer.enabled() {
+        return copy_into_cache(src, dst);
+    }
+    use std::io::{Read, Write};
+    let mut input = std::fs::File::open(src)?;
+    let mut output = std::fs::File::create(dst)?;
+    let mut buf = vec![0u8; PACE_CHUNK];
+    let mut total = 0u64;
+    loop {
+        let n = input.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        // Sleep the full debt: capping it would floor the copy at one
+        // chunk per cap-interval and overrun the class's share on slow
+        // links. The wait per chunk is bounded by chunk/(share·egress),
+        // i.e. the transfer time the pacing is emulating.
+        let wait = pacer.wait_s(source, class, n as u64);
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        output.write_all(&buf[..n])?;
+        total += n as u64;
+    }
+    Ok(total)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::storage::object::ObjectId;
-    use crate::transfer::TransferClass;
+    use crate::transfer::ClassWeights;
 
     fn staging(obj: u64, src: usize) -> TransferRequest {
         TransferRequest {
@@ -101,15 +335,27 @@ mod tests {
         }
     }
 
+    fn plane(n: usize, budget: f64, egress_bps: f64) -> (LiveTransferPlane, Arc<EgressLedger>) {
+        let ledger = Arc::new(EgressLedger::new(n, egress_bps));
+        let cfg = TransferConfig {
+            staging_budget: budget,
+            ..TransferConfig::default()
+        };
+        (LiveTransferPlane::new(&cfg, ledger.clone()), ledger)
+    }
+
     #[test]
-    fn load_snapshot_gates_admission() {
-        let mut p = LiveTransferPlane::new(0.5);
-        p.set_load(0, 1.0);
-        p.set_load(1, 0.0);
+    fn ledger_backlog_gates_admission() {
+        // 8 Mb/s egress: 1 MB in flight = 1 s of backlog = saturated.
+        let (mut p, ledger) = plane(4, 0.5, 8e6);
+        ledger.begin(0, 1_000_000);
+        assert!((ledger.utilization(0) - 1.0).abs() < 1e-9);
+        assert_eq!(ledger.utilization(1), 0.0);
         assert_eq!(p.submit(staging(1, 0)), Admission::Defer);
         assert_eq!(p.submit(staging(2, 1)), Admission::Start);
         // Source 0 drains; the deferred transfer comes back.
-        p.set_load(0, 0.0);
+        ledger.end(0, 1_000_000);
+        assert_eq!(ledger.inflight_bytes(0), 0);
         let back = p.readmit();
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].obj, ObjectId(1));
@@ -117,15 +363,77 @@ mod tests {
     }
 
     #[test]
+    fn ledger_guard_releases_on_drop_and_never_underflows() {
+        let ledger = Arc::new(EgressLedger::new(2, 8e6));
+        {
+            let _g = EgressGuard::new(ledger.clone(), 1, 500_000);
+            assert_eq!(ledger.inflight_bytes(1), 500_000);
+            assert!((ledger.utilization(1) - 0.5).abs() < 1e-9);
+        }
+        assert_eq!(ledger.inflight_bytes(1), 0);
+        // Out-of-range executors and double-ends are harmless.
+        ledger.begin(99, 10);
+        ledger.end(0, 10);
+        assert_eq!(ledger.inflight_bytes(0), 0);
+        assert_eq!(ledger.utilization(99), 0.0);
+    }
+
+    #[test]
     fn unknown_executor_is_idle_and_release_cancels() {
-        let mut p = LiveTransferPlane::new(0.5);
+        let (mut p, ledger) = plane(4, 0.5, 8e6);
         assert_eq!(p.submit(staging(1, 42)), Admission::Start);
-        p.set_load(3, 1.0);
+        ledger.begin(3, u64::MAX / 2);
         assert_eq!(p.submit(staging(2, 3)), Admission::Defer);
         let cancelled = p.executor_released(3);
         assert_eq!(cancelled.len(), 1);
         assert_eq!(p.stats().cancelled, 1);
         assert_eq!(p.deferred_len(), 0);
+    }
+
+    #[test]
+    fn token_bucket_paces_at_rate_after_burst() {
+        // 1000 B/s, burst 1000: the first 1000 tokens are free, then each
+        // 500-token take costs 0.5 s of waiting.
+        let mut b = TokenBucket::new(1000.0, 1000.0);
+        assert_eq!(b.take(1000.0, 0.0), 0.0);
+        let w1 = b.take(500.0, 0.0);
+        assert!((w1 - 0.5).abs() < 1e-9, "w1={w1}");
+        // After the debt is paid (t=0.5) another take waits again.
+        let w2 = b.take(500.0, 0.5);
+        assert!((w2 - 0.5).abs() < 1e-9, "w2={w2}");
+        // A long idle gap refills only to the burst cap.
+        let w3 = b.take(2000.0, 100.0);
+        assert!((w3 - 1.0).abs() < 1e-9, "burst-capped refill: w3={w3}");
+    }
+
+    #[test]
+    fn pacer_charges_by_class_share_and_binary_is_free() {
+        let weighted = TransferConfig {
+            share_policy: SharePolicyKind::Weighted,
+            staging_budget: 1.0,
+            class_weights: ClassWeights::default(),
+        };
+        // 8 Mb/s egress = 1e6 B/s bucket rate; burst 512 KiB.
+        let p = StagingPacer::new(2, 8e6, &weighted);
+        assert!(p.enabled());
+        // Drain bucket 0's burst (104857 bytes at 20% share ≈ the burst),
+        // then a 100 KB staging chunk costs 500 KB of tokens = ~0.5 s
+        // (less whatever refilled between the two calls — tolerate CI
+        // scheduling delay, but the wait must stay well above zero).
+        let _ = p.wait_s(0, TransferClass::Staging, 104_857);
+        let w = p.wait_s(0, TransferClass::Staging, 100_000);
+        assert!(w > 0.25 && w <= 0.5 + 1e-6, "staging wait {w}");
+        // Fresh bucket: the same 100 KB staging chunk fits the burst
+        // (500 KB of tokens ≤ 512 KiB) — no wait …
+        assert_eq!(p.wait_s(1, TransferClass::Staging, 100_000), 0.0);
+        // … while prestage (share 0.1/1.1 ≈ 9%) pays ~11x the bytes and
+        // must wait.
+        let w_pre = p.wait_s(1, TransferClass::Prestage, 100_000);
+        assert!(w_pre > 0.5, "prestage wait {w_pre}");
+        // Binary policy: pacing disabled entirely.
+        let b = StagingPacer::new(2, 8e6, &TransferConfig::default());
+        assert!(!b.enabled());
+        assert_eq!(b.wait_s(0, TransferClass::Staging, u64::MAX / 2), 0.0);
     }
 
     #[test]
@@ -139,6 +447,23 @@ mod tests {
         let n = copy_into_cache(&src, &dst).unwrap();
         assert_eq!(n, 4096);
         assert_eq!(std::fs::read(&dst).unwrap().len(), 4096);
+        // The paced variant moves identical bytes (binary pacer: no-op
+        // path; weighted pacer: chunked path — both byte-exact).
+        let b = StagingPacer::new(2, 8e6, &TransferConfig::default());
+        let dst2 = dir.join("dst2.bin");
+        let n = copy_into_cache_paced(&src, &dst2, &b, 0, TransferClass::Staging).unwrap();
+        assert_eq!(n, 4096);
+        let weighted = TransferConfig {
+            share_policy: SharePolicyKind::Weighted,
+            staging_budget: 1.0,
+            class_weights: ClassWeights::default(),
+        };
+        // Generous rate: the 4 KB fits in the burst, so no sleeping.
+        let w = StagingPacer::new(2, 8e9, &weighted);
+        let dst3 = dir.join("dst3.bin");
+        let n = copy_into_cache_paced(&src, &dst3, &w, 0, TransferClass::Staging).unwrap();
+        assert_eq!(n, 4096);
+        assert_eq!(std::fs::read(&dst3).unwrap(), std::fs::read(&src).unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -26,38 +26,65 @@
 //! * [`TransferClass::Prestage`] — warming a newly joined executor with
 //!   the hottest objects: the most speculative traffic, re-admitted last.
 //!
-//! ## The admission rule
+//! ## The share policy
 //!
-//! Background transfers (`Staging`/`Prestage`) are admitted only while
-//! the **source executor's egress utilization** is at or below the
-//! configured budget (`[transfer] staging_budget`, `--staging-budget`):
+//! How the classes share a source executor's egress is a pluggable
+//! [`SharePolicy`] (`[transfer] share_policy`, `--share-policy`), with
+//! two implementations:
 //!
-//! ```text
-//! admit(req)  ⇔  req.class == Foreground  ∨  util(req.src) ≤ budget
-//! ```
+//! * [`BinaryShare`] — PR 4's start-time-only rule, kept for
+//!   comparison: background transfers are admitted only while the
+//!   source's egress utilization is at or below the budget
+//!   (`[transfer] staging_budget`, `--staging-budget`), and an admitted
+//!   flow then competes 1:1 with foreground for its whole duration:
 //!
-//! A rejected transfer is *deferred*, not dropped: it waits in a
-//! class-ordered queue and is re-admitted (`Staging` before `Prestage`,
-//! FIFO within a class, at most one grant per source per round so a
-//! drained source is not instantly re-saturated) as the source's load
-//! falls back under budget. Deferred transfers whose source or
-//! destination executor is released are cancelled and reported so the
-//! replication manager can free its in-flight slot. The budget default
-//! of 1.0 disables deferral entirely (utilization cannot exceed 1), so
-//! admission control is opt-in per run.
+//!   ```text
+//!   admit(req)  ⇔  req.class == Foreground  ∨  util(req.src) ≤ budget
+//!   ```
 //!
-//! Two [`TransferPlane`] implementations carry the rule onto the two
+//! * [`WeightedShare`] — weighted max-min fair sharing **for the whole
+//!   flow lifetime**: every class carries a weight
+//!   ([`ClassWeights`], default Foreground 1.0 / Staging 0.25 /
+//!   Prestage 0.1) and contended capacity divides in weight proportion.
+//!   In the simulator ([`crate::sim::flownet`]) the allocation is
+//!   work-conserving — unused share is redistributed, so a lone staging
+//!   flow still gets the whole link; the live plane approximates the
+//!   same shares conservatively with token-bucket pacing at the class's
+//!   fixed fair-share fraction (a paced copy never exceeds its share,
+//!   even when the source is otherwise idle — the ledger cannot predict
+//!   imminent foreground load). Deferral *composes* with weighting: the budget
+//!   becomes a **hard cap** — below it background transfers are
+//!   admitted-but-throttled; above it they defer exactly like the
+//!   binary rule. The default budget of 1.0 never defers, so weighted
+//!   mode is pure in-flight throttling out of the box.
+//!
+//! Either way a rejected transfer is *deferred*, not dropped: it waits
+//! in a class-ordered queue and is re-admitted (`Staging` before
+//! `Prestage`, FIFO within a class, at most one grant per source per
+//! round so a drained source is not instantly re-saturated) as the
+//! source's load falls back under budget. Deferred transfers whose
+//! source or destination executor is released are cancelled and
+//! reported so the replication manager can free its in-flight slot.
+//! The binary policy with budget 1.0 (the default) disables the plane
+//! entirely — utilization cannot exceed 1 and every weight is 1.0 —
+//! reproducing the pre-metering behavior bit-for-bit.
+//!
+//! Two [`TransferPlane`] implementations carry the policy onto the two
 //! execution substrates:
 //!
 //! * [`sim::SimTransferPlane`] wraps the [`crate::storage::testbed`]
 //!   fair-share flow network ([`crate::sim::flownet`]): utilization is
 //!   the measured rate-sum over the source's NIC-out and disk-read
-//!   resources, so admission reacts to the same contention physics the
-//!   flows themselves obey.
+//!   resources, and each flow starts with its class weight, so both
+//!   admission and in-flight throttling react to the same contention
+//!   physics the flows themselves obey.
 //! * [`live::LiveTransferPlane`] wraps the live driver's cache-directory
-//!   copy path: utilization is the source executor's busy-slot fraction
-//!   (a running task is doing foreground I/O), fed by the coordinator
-//!   each loop.
+//!   copy path: utilization is real **byte-level egress accounting**
+//!   ([`live::EgressLedger`] — bytes in flight out of each source's
+//!   cache, foreground and background alike, over the source's egress
+//!   bandwidth), and background copies are paced by a per-source token
+//!   bucket ([`live::StagingPacer`]) sized from the class weight — the
+//!   live analog of the sim's weighted fair share.
 
 pub mod live;
 pub mod sim;
@@ -78,9 +105,26 @@ pub enum TransferClass {
 }
 
 impl TransferClass {
+    /// All classes, in metrics-array order (see [`TransferClass::index`]).
+    pub const ALL: [TransferClass; 3] = [
+        TransferClass::Foreground,
+        TransferClass::Staging,
+        TransferClass::Prestage,
+    ];
+
     /// Whether this class is subject to admission control.
     pub fn is_background(&self) -> bool {
         !matches!(self, TransferClass::Foreground)
+    }
+
+    /// Dense index for per-class counters: foreground 0, staging 1,
+    /// prestage 2 (the order of [`TransferClass::ALL`]).
+    pub fn index(&self) -> usize {
+        match self {
+            TransferClass::Foreground => 0,
+            TransferClass::Staging => 1,
+            TransferClass::Prestage => 2,
+        }
     }
 
     /// Display label.
@@ -89,6 +133,222 @@ impl TransferClass {
             TransferClass::Foreground => "foreground",
             TransferClass::Staging => "staging",
             TransferClass::Prestage => "prestage",
+        }
+    }
+}
+
+/// Per-class fair-share weights for the weighted policy. Contended
+/// capacity divides in weight proportion among the classes' flows, so
+/// with the defaults one staging flow concedes 80% of a contended link
+/// to a foreground fetch (1.0 vs 0.25) instead of splitting it evenly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassWeights {
+    /// Foreground task I/O (the reference weight; keep at 1.0).
+    pub foreground: f64,
+    /// Demand-driven replication staging.
+    pub staging: f64,
+    /// Join-time warm-up prestaging.
+    pub prestage: f64,
+}
+
+impl Default for ClassWeights {
+    fn default() -> Self {
+        ClassWeights {
+            foreground: 1.0,
+            staging: 0.25,
+            prestage: 0.1,
+        }
+    }
+}
+
+impl ClassWeights {
+    /// Weight of one class.
+    pub fn of(&self, class: TransferClass) -> f64 {
+        match class {
+            TransferClass::Foreground => self.foreground,
+            TransferClass::Staging => self.staging,
+            TransferClass::Prestage => self.prestage,
+        }
+    }
+
+    /// Unit weights (every class competes 1:1 — the binary policy's
+    /// data-path behavior).
+    pub const UNIT: ClassWeights = ClassWeights {
+        foreground: 1.0,
+        staging: 1.0,
+        prestage: 1.0,
+    };
+
+    /// Fraction of a source's egress a background flow of `class` is
+    /// entitled to against one contending foreground flow:
+    /// `w / (w + w_fg)`. Sizes the live plane's token bucket.
+    pub fn share_vs_foreground(&self, class: TransferClass) -> f64 {
+        let w = self.of(class).max(1e-6);
+        let fg = self.foreground.max(1e-6);
+        w / (w + fg)
+    }
+
+    /// Parse `"fg,staging,prestage"` (e.g. `"1.0,0.25,0.1"`). Every
+    /// weight must be a finite positive number — the same rule the
+    /// config-file path enforces (an infinite weight would turn into a
+    /// NaN share and invert the pacing it asked for).
+    pub fn parse(s: &str) -> Option<ClassWeights> {
+        let mut it = s.split(',').map(|p| p.trim().parse::<f64>().ok());
+        let (fg, st, pre) = (it.next()??, it.next()??, it.next()??);
+        let ok = [fg, st, pre].iter().all(|w| w.is_finite() && *w > 0.0);
+        if it.next().is_some() || !ok {
+            return None;
+        }
+        Some(ClassWeights {
+            foreground: fg,
+            staging: st,
+            prestage: pre,
+        })
+    }
+}
+
+/// Share-policy selector (config / CLI `--share-policy binary|weighted`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SharePolicyKind {
+    /// Start-time-only admission: defer over budget, compete 1:1 once
+    /// admitted (PR 4's behavior; the default).
+    #[default]
+    Binary,
+    /// Weighted max-min fair shares for the whole flow lifetime; the
+    /// budget becomes a hard deferral cap.
+    Weighted,
+}
+
+impl SharePolicyKind {
+    /// Parse from config/CLI text.
+    pub fn parse(s: &str) -> Option<SharePolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "binary" => Some(SharePolicyKind::Binary),
+            "weighted" => Some(SharePolicyKind::Weighted),
+            _ => None,
+        }
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SharePolicyKind::Binary => "binary",
+            SharePolicyKind::Weighted => "weighted",
+        }
+    }
+}
+
+/// How contending transfer classes share a source executor's egress:
+/// the admission rule (may a background transfer *start* at this source
+/// utilization?) plus the fair-share weight its flow carries once
+/// running. One trait so deferral and weighting compose — the
+/// [`AdmissionController`] owns the queue mechanics and delegates both
+/// questions here.
+pub trait SharePolicy: Send + std::fmt::Debug {
+    /// Whether a *background* transfer of `class` may start while its
+    /// source runs at `src_util` (foreground never consults this).
+    fn admits(&self, class: TransferClass, src_util: f64) -> bool;
+
+    /// Fair-share weight a flow of `class` carries on the data path.
+    fn weight(&self, class: TransferClass) -> f64;
+
+    /// The utilization level above which background transfers defer.
+    fn budget(&self) -> f64;
+
+    /// Class weights in force (unit for the binary policy).
+    fn class_weights(&self) -> ClassWeights;
+
+    /// Label for figures / CLI output.
+    fn label(&self) -> &'static str;
+}
+
+/// PR 4's start-time-only policy: admit at or under budget, unit
+/// weights once running.
+#[derive(Debug, Clone, Copy)]
+pub struct BinaryShare {
+    budget: f64,
+}
+
+impl BinaryShare {
+    /// Policy with the given utilization budget (clamped to [0, 1]).
+    pub fn new(budget: f64) -> Self {
+        BinaryShare {
+            budget: budget.clamp(0.0, 1.0),
+        }
+    }
+}
+
+impl SharePolicy for BinaryShare {
+    fn admits(&self, _class: TransferClass, src_util: f64) -> bool {
+        src_util <= self.budget
+    }
+
+    fn weight(&self, _class: TransferClass) -> f64 {
+        1.0
+    }
+
+    fn budget(&self) -> f64 {
+        self.budget
+    }
+
+    fn class_weights(&self) -> ClassWeights {
+        ClassWeights::UNIT
+    }
+
+    fn label(&self) -> &'static str {
+        "binary"
+    }
+}
+
+/// Weighted max-min fair sharing with a hard deferral cap: under the
+/// cap background transfers are admitted-but-throttled at their class
+/// weight; above it they defer like the binary rule (weighting and
+/// deferral compose).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightedShare {
+    hard_cap: f64,
+    weights: ClassWeights,
+}
+
+impl WeightedShare {
+    /// Policy with the given hard cap (clamped to [0, 1]; 1.0 never
+    /// defers) and class weights.
+    pub fn new(hard_cap: f64, weights: ClassWeights) -> Self {
+        WeightedShare {
+            hard_cap: hard_cap.clamp(0.0, 1.0),
+            weights,
+        }
+    }
+}
+
+impl SharePolicy for WeightedShare {
+    fn admits(&self, _class: TransferClass, src_util: f64) -> bool {
+        src_util <= self.hard_cap
+    }
+
+    fn weight(&self, class: TransferClass) -> f64 {
+        self.weights.of(class)
+    }
+
+    fn budget(&self) -> f64 {
+        self.hard_cap
+    }
+
+    fn class_weights(&self) -> ClassWeights {
+        self.weights
+    }
+
+    fn label(&self) -> &'static str {
+        "weighted"
+    }
+}
+
+/// Build the configured share policy.
+pub fn build_share_policy(cfg: &crate::config::TransferConfig) -> Box<dyn SharePolicy> {
+    match cfg.share_policy {
+        SharePolicyKind::Binary => Box::new(BinaryShare::new(cfg.staging_budget)),
+        SharePolicyKind::Weighted => {
+            Box::new(WeightedShare::new(cfg.staging_budget, cfg.class_weights))
         }
     }
 }
@@ -132,29 +392,48 @@ pub struct TransferStats {
 
 /// The class-aware admission controller shared by both plane
 /// implementations. Pure control logic: the caller supplies source
-/// utilization and performs the actual data movement.
+/// utilization and performs the actual data movement; the admission
+/// rule and the per-class data-path weights come from the configured
+/// [`SharePolicy`].
 #[derive(Debug)]
 pub struct AdmissionController {
-    /// Source egress-utilization budget in [0, 1]; 1.0 never defers.
-    budget: f64,
+    /// How classes share egress: admission rule + flow weights.
+    policy: Box<dyn SharePolicy>,
     /// Deferred background transfers, FIFO within each class.
     queue: Vec<TransferRequest>,
     stats: TransferStats,
 }
 
 impl AdmissionController {
-    /// Controller with the given utilization budget (clamped to [0, 1]).
+    /// Binary controller with the given utilization budget (clamped to
+    /// [0, 1]) — PR 4's behavior, the default policy.
     pub fn new(budget: f64) -> Self {
+        AdmissionController::with_policy(Box::new(BinaryShare::new(budget)))
+    }
+
+    /// Controller over an explicit share policy (see
+    /// [`build_share_policy`] for constructing one from config).
+    pub fn with_policy(policy: Box<dyn SharePolicy>) -> Self {
         AdmissionController {
-            budget: budget.clamp(0.0, 1.0),
+            policy,
             queue: Vec::new(),
             stats: TransferStats::default(),
         }
     }
 
-    /// The utilization budget in force.
+    /// The utilization level above which background transfers defer.
     pub fn budget(&self) -> f64 {
-        self.budget
+        self.policy.budget()
+    }
+
+    /// The share policy in force.
+    pub fn policy(&self) -> &dyn SharePolicy {
+        self.policy.as_ref()
+    }
+
+    /// Data-path fair-share weight for a class under the policy.
+    pub fn weight_of(&self, class: TransferClass) -> f64 {
+        self.policy.weight(class)
     }
 
     /// Offer a transfer given its source's current egress utilization.
@@ -168,7 +447,7 @@ impl AdmissionController {
             return Admission::Start;
         }
         let queued_ahead = self.queue.iter().any(|r| r.src == req.src);
-        if src_util <= self.budget && !queued_ahead {
+        if self.policy.admits(req.class, src_util) && !queued_ahead {
             Admission::Start
         } else {
             self.stats.deferred += 1;
@@ -194,7 +473,7 @@ impl AdmissionController {
                     i += 1;
                     continue;
                 }
-                if src_util(self.queue[i].src) <= self.budget {
+                if self.policy.admits(class, src_util(self.queue[i].src)) {
                     let req = self.queue.remove(i);
                     granted_src.push(req.src);
                     self.stats.readmitted += 1;
@@ -374,6 +653,62 @@ mod tests {
         assert_eq!(c.stats().cancelled, 2);
         // The survivor is untouched and still re-admittable.
         assert_eq!(c.readmit(|_| 0.0).len(), 1);
+    }
+
+    #[test]
+    fn class_weights_parse_and_share() {
+        let w = ClassWeights::parse("1.0, 0.25,0.1").unwrap();
+        assert_eq!(w, ClassWeights::default());
+        assert!(ClassWeights::parse("1,0.25").is_none(), "needs 3 fields");
+        assert!(ClassWeights::parse("1,0,0.1").is_none(), "weights > 0");
+        assert!(ClassWeights::parse("1,inf,0.1").is_none(), "weights finite");
+        assert!(ClassWeights::parse("1,0.25,0.1,9").is_none(), "extra field");
+        assert_eq!(w.of(TransferClass::Foreground), 1.0);
+        assert_eq!(w.of(TransferClass::Staging), 0.25);
+        // Against one foreground flow: 0.25 / 1.25 = 20% of egress.
+        assert!((w.share_vs_foreground(TransferClass::Staging) - 0.2).abs() < 1e-12);
+        assert_eq!(SharePolicyKind::parse("weighted"), Some(SharePolicyKind::Weighted));
+        assert_eq!(SharePolicyKind::parse("Binary"), Some(SharePolicyKind::Binary));
+        assert_eq!(SharePolicyKind::parse("fair"), None);
+        assert_eq!(SharePolicyKind::Weighted.label(), "weighted");
+    }
+
+    #[test]
+    fn binary_policy_has_unit_weights_weighted_has_class_weights() {
+        let b = BinaryShare::new(0.5);
+        for class in TransferClass::ALL {
+            assert_eq!(b.weight(class), 1.0);
+            assert!(b.admits(class, 0.5));
+            assert!(!b.admits(class, 0.6));
+        }
+        let w = WeightedShare::new(1.0, ClassWeights::default());
+        assert_eq!(w.weight(TransferClass::Foreground), 1.0);
+        assert_eq!(w.weight(TransferClass::Staging), 0.25);
+        assert_eq!(w.weight(TransferClass::Prestage), 0.1);
+        // Hard cap 1.0: never defers — pure throttling.
+        assert!(w.admits(TransferClass::Prestage, 1.0));
+        assert_eq!(w.label(), "weighted");
+        assert_eq!(b.label(), "binary");
+    }
+
+    #[test]
+    fn weighted_policy_composes_deferral_with_throttling() {
+        // Hard cap 0.5: under it background is admitted (the data path
+        // throttles it via the class weight), above it it defers and
+        // re-admits exactly like the binary queue.
+        let mut c = AdmissionController::with_policy(Box::new(WeightedShare::new(
+            0.5,
+            ClassWeights::default(),
+        )));
+        assert_eq!(c.weight_of(TransferClass::Staging), 0.25);
+        assert_eq!(c.offer(req(TransferClass::Staging, 1, 0, 1), 0.4), Admission::Start);
+        assert_eq!(c.offer(req(TransferClass::Staging, 2, 0, 1), 0.9), Admission::Defer);
+        assert_eq!(c.offer(req(TransferClass::Foreground, 3, 0, 1), 1.0), Admission::Start);
+        assert!(c.readmit(|_| 0.9).is_empty(), "still over the hard cap");
+        let back = c.readmit(|_| 0.2);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].obj, ObjectId(2));
+        assert!((c.budget() - 0.5).abs() < 1e-12);
     }
 
     #[test]

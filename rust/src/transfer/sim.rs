@@ -1,17 +1,22 @@
-//! Simulated transfer plane: admission control over the fair-share flow
+//! Simulated transfer plane: the share policy over the fair-share flow
 //! network.
 //!
 //! Wraps the wired [`SimTestbed`] so that every simulated byte movement
 //! — foreground task I/O and background staging alike — starts through
-//! one class-tagged entry point, and background staging is admitted
-//! against the *measured* utilization of the source executor's egress
-//! resources (NIC-out and disk-read), i.e. the same max-min-fair rates
-//! the flows themselves experience. The sim driver owns one
-//! [`SimTransferPlane`] instead of a bare testbed.
+//! one class-tagged entry point: background staging is admitted against
+//! the *measured* utilization of the source executor's egress resources
+//! (NIC-out and disk-read), i.e. the same max-min-fair rates the flows
+//! themselves experience, and each flow starts carrying its class's
+//! fair-share weight (unit under the binary policy, the configured
+//! [`super::ClassWeights`] under the weighted policy), so in-flight
+//! throttling happens inside the same contention physics. The sim
+//! driver owns one [`SimTransferPlane`] instead of a bare testbed.
 
 use super::{
-    Admission, AdmissionController, TransferClass, TransferPlane, TransferRequest, TransferStats,
+    build_share_policy, Admission, AdmissionController, TransferClass, TransferPlane,
+    TransferRequest, TransferStats,
 };
+use crate::config::TransferConfig;
 use crate::index::central::ExecutorId;
 use crate::sim::flownet::FlowId;
 use crate::storage::testbed::{SimTestbed, TransferKind};
@@ -28,27 +33,20 @@ pub struct SimTransferPlane {
 }
 
 impl SimTransferPlane {
-    /// Plane over a wired testbed with the given staging budget.
-    pub fn new(testbed: SimTestbed, staging_budget: f64) -> Self {
+    /// Plane over a wired testbed with the configured share policy.
+    pub fn new(testbed: SimTestbed, cfg: &TransferConfig) -> Self {
         SimTransferPlane {
             testbed,
-            ctl: AdmissionController::new(staging_budget),
+            ctl: AdmissionController::with_policy(build_share_policy(cfg)),
             started: [0; 3],
-        }
-    }
-
-    fn class_ix(class: TransferClass) -> usize {
-        match class {
-            TransferClass::Foreground => 0,
-            TransferClass::Staging => 1,
-            TransferClass::Prestage => 2,
         }
     }
 
     /// Start a class-tagged flow now (admission already granted — the
     /// driver calls this for foreground flows directly and for
     /// background flows after [`TransferPlane::submit`]/
-    /// [`TransferPlane::readmit`] returned them).
+    /// [`TransferPlane::readmit`] returned them). The flow carries the
+    /// class's fair-share weight under the configured policy.
     pub fn start(
         &mut self,
         now: f64,
@@ -56,9 +54,11 @@ impl SimTransferPlane {
         kind: TransferKind,
         bytes: u64,
     ) -> FlowId {
-        self.started[Self::class_ix(class)] += 1;
+        self.started[class.index()] += 1;
         let rs = self.testbed.resources(kind);
-        self.testbed.net.start_flow(now, rs, bytes)
+        self.testbed
+            .net
+            .start_flow_weighted(now, rs, bytes, self.ctl.weight_of(class))
     }
 
     /// Flows started per class: (foreground, staging, prestage).
@@ -121,7 +121,11 @@ mod tests {
 
     fn plane(nodes: usize, budget: f64) -> SimTransferPlane {
         let cfg = Config::with_nodes(nodes);
-        SimTransferPlane::new(SimTestbed::new(&cfg), budget)
+        let tcfg = TransferConfig {
+            staging_budget: budget,
+            ..TransferConfig::default()
+        };
+        SimTransferPlane::new(SimTestbed::new(&cfg), &tcfg)
     }
 
     fn staging(obj: u64, src: usize, dst: usize) -> TransferRequest {
@@ -194,5 +198,38 @@ mod tests {
         let mut p = plane(2, 0.2);
         assert_eq!(p.source_utilization(99), 0.0);
         assert_eq!(p.submit(staging(1, 99, 0)), Admission::Start);
+    }
+
+    #[test]
+    fn weighted_plane_starts_background_flows_below_unit_weight() {
+        use crate::transfer::{ClassWeights, SharePolicyKind};
+        let cfg = Config::with_nodes(2);
+        let tcfg = TransferConfig {
+            share_policy: SharePolicyKind::Weighted,
+            staging_budget: 1.0,
+            class_weights: ClassWeights::default(),
+        };
+        let mut p = SimTransferPlane::new(SimTestbed::new(&cfg), &tcfg);
+        let fg = p.start(
+            0.0,
+            TransferClass::Foreground,
+            TransferKind::LocalRead { node: 0 },
+            100 * MB,
+        );
+        let st = p.start(
+            0.0,
+            TransferClass::Staging,
+            TransferKind::LocalRead { node: 0 },
+            100 * MB,
+        );
+        assert_eq!(p.testbed.net.flow_weight(fg), 1.0);
+        assert_eq!(p.testbed.net.flow_weight(st), 0.25);
+        // Contending on node 0's disk-read: 80/20 split, not 50/50.
+        let cap = p.testbed.net.capacity(p.testbed.nodes[0].disk_read);
+        assert!((p.testbed.net.rate(fg) - 0.8 * cap).abs() < 1.0);
+        assert!((p.testbed.net.rate(st) - 0.2 * cap).abs() < 1.0);
+        // Weighted with budget 1.0 never defers: admit-but-throttle.
+        assert_eq!(p.submit(staging(7, 0, 1)), Admission::Start);
+        assert_eq!(p.stats().deferred, 0);
     }
 }

@@ -715,18 +715,125 @@ fn prop_flownet_conservation_and_completion() {
     }
 }
 
+/// Weighted fair-share invariants over the flow network: (a) granted
+/// rates never oversubscribe any resource and every flow progresses;
+/// (b) the allocation is work-conserving — flows contending on one
+/// resource receive exactly its capacity, split in weight proportion;
+/// (c) a foreground flow's allocated rate is monotone nondecreasing in
+/// its weight, for the same topology and competing load.
+#[test]
+fn prop_weighted_shares_conserve_capacity_and_weight_monotonicity() {
+    use datadiffusion::sim::flownet::FlowId;
+    for case in 0..cases() {
+        let seed = 0x3E16 + case;
+        let mut rng = Rng::new(seed);
+
+        // (a) Conservation under random weighted multi-resource load.
+        let mut net = FlowNetwork::new();
+        let nr = rng.range_u64(2, 8) as usize;
+        let caps: Vec<f64> = (0..nr).map(|_| rng.range_f64(1e6, 1e9)).collect();
+        let rs: Vec<ResourceId> = caps.iter().map(|&c| net.add_resource(c)).collect();
+        let nf = rng.range_u64(2, 40) as usize;
+        let mut flows = Vec::new();
+        for _ in 0..nf {
+            let k = rng.range_u64(1, 3.min(nr as u64)) as usize;
+            let mut set = Vec::new();
+            for _ in 0..k {
+                let r = rs[rng.index(nr)];
+                if !set.contains(&r) {
+                    set.push(r);
+                }
+            }
+            let w = rng.range_f64(0.05, 2.0);
+            flows.push(net.start_flow_weighted(0.0, set, rng.range_u64(1, 1_000_000), w));
+        }
+        let mut usage = vec![0.0f64; nr];
+        for &f in &flows {
+            let rate = net.rate(f);
+            assert!(rate > 0.0, "seed={seed}: weighted flow starved");
+            for r in net.flow_resources(f).to_vec() {
+                usage[r.0 as usize] += rate;
+            }
+        }
+        for (i, u) in usage.iter().enumerate() {
+            assert!(
+                *u <= caps[i] * (1.0 + 1e-6),
+                "seed={seed}: resource {i} oversubscribed: {u} > {}",
+                caps[i]
+            );
+        }
+
+        // (b) Work conservation + weight proportionality on one shared
+        // resource: demand exceeds capacity, so the grants must sum to
+        // exactly the capacity, split w_i / Σw.
+        let mut net = FlowNetwork::new();
+        let cap = rng.range_f64(1e6, 1e9);
+        let r = net.add_resource(cap);
+        let n = rng.range_u64(1, 10) as usize;
+        let ws: Vec<f64> = (0..n).map(|_| rng.range_f64(0.05, 3.0)).collect();
+        let fs: Vec<FlowId> = ws
+            .iter()
+            .map(|&w| net.start_flow_weighted(0.0, vec![r], 1_000_000_000, w))
+            .collect();
+        let wsum: f64 = ws.iter().sum();
+        let total: f64 = fs.iter().map(|&f| net.rate(f)).sum();
+        assert!(
+            (total - cap).abs() <= cap * 1e-6,
+            "seed={seed}: not work-conserving: granted {total} of {cap}"
+        );
+        for (i, &f) in fs.iter().enumerate() {
+            let expect = cap * ws[i] / wsum;
+            assert!(
+                (net.rate(f) - expect).abs() <= cap * 1e-6,
+                "seed={seed}: flow {i} got {} expected {expect}",
+                net.rate(f)
+            );
+        }
+
+        // (c) Monotonicity: rebuild the same random topology twice, the
+        // designated foreground flow at weight w then 2w + ε — its rate
+        // must not decrease.
+        let fg_rate = |fg_w: f64| -> f64 {
+            let mut rng = Rng::new(seed ^ 0x5A5A);
+            let mut net = FlowNetwork::new();
+            let nr = rng.range_u64(2, 6) as usize;
+            let rs: Vec<ResourceId> = (0..nr)
+                .map(|_| net.add_resource(rng.range_f64(1e6, 1e9)))
+                .collect();
+            for _ in 0..rng.range_u64(1, 20) {
+                let r = rs[rng.index(nr)];
+                let w = rng.range_f64(0.05, 2.0);
+                net.start_flow_weighted(0.0, vec![r], 1_000_000, w);
+            }
+            let k = rng.range_u64(1, nr as u64 + 1) as usize;
+            let fg = net.start_flow_weighted(0.0, rs[..k].to_vec(), 1_000_000, fg_w);
+            net.rate(fg)
+        };
+        let w1 = Rng::new(seed ^ 0x77).range_f64(0.1, 1.0);
+        let lo = fg_rate(w1);
+        let hi = fg_rate(2.0 * w1 + 0.1);
+        assert!(
+            hi >= lo * (1.0 - 1e-9),
+            "seed={seed}: raising foreground weight lowered its rate: {lo} -> {hi}"
+        );
+    }
+}
+
 /// Transfer-plane admission invariants under arbitrary staging load and
-/// executor churn: (a) foreground transfers are ALWAYS admitted, no
-/// matter how saturated the sources are; (b) a background transfer is
-/// deferred iff its source is over budget; (c) re-admission only
-/// releases transfers whose source is at or under budget, staging
+/// executor churn, for BOTH share policies (binary, and weighted with
+/// the budget as its hard cap): (a) foreground transfers are ALWAYS
+/// admitted, no matter how saturated the sources are; (b) a background
+/// transfer is deferred iff its source is over budget; (c) re-admission
+/// only releases transfers whose source is at or under budget, staging
 /// before prestage; and (d) every deferred transfer eventually runs
 /// (once load drains) or is cancelled when an executor it touches is
-/// released — nothing is lost and nothing leaks.
+/// released — nothing is lost and nothing leaks. Weighting composes
+/// with deferral; it never changes queue behavior.
 #[test]
 fn prop_admission_never_starves_foreground() {
     use datadiffusion::transfer::{
-        Admission, AdmissionController, TransferClass, TransferRequest,
+        Admission, AdmissionController, ClassWeights, SharePolicy, TransferClass,
+        TransferRequest, WeightedShare,
     };
 
     const N_EXEC: usize = 6;
@@ -734,7 +841,20 @@ fn prop_admission_never_starves_foreground() {
         let seed = 0xAD31 + case;
         let mut rng = Rng::new(seed);
         let budget = rng.range_f64(0.05, 0.95);
-        let mut ctl = AdmissionController::new(budget);
+        let mut ctl = if case % 2 == 0 {
+            AdmissionController::new(budget)
+        } else {
+            AdmissionController::with_policy(Box::new(WeightedShare::new(
+                budget,
+                ClassWeights::default(),
+            )))
+        };
+        // Weighting must not leak into admission: the policy's weights
+        // shape flows, not queueing.
+        if case % 2 == 1 {
+            assert!((ctl.weight_of(TransferClass::Staging) - 0.25).abs() < 1e-12);
+            assert_eq!(ctl.policy().label(), "weighted");
+        }
         // Per-executor utilization the "world" currently shows.
         let mut util = [0.0f64; N_EXEC];
         let mut live: Vec<bool> = vec![true; N_EXEC];
