@@ -4,6 +4,7 @@
 //! the data-aware scheduler not to become the bottleneck it must decide
 //! within ~2.1 ms (≈3700 index updates or ≈8700 lookups).
 
+use datadiffusion::analysis::figures;
 use datadiffusion::cache::store::CacheEvent;
 use datadiffusion::config::{IndexConfig, SchedulerConfig};
 use datadiffusion::coordinator::core::FalkonCore;
@@ -126,6 +127,21 @@ fn main() {
             );
             csv.rowf(&[&label, &rate, &(per * 1e6)]);
         }
+    }
+
+    // Sharded dispatch core: the same kind of data-aware drain through
+    // 1/2/4/8 dispatcher shards (one batched decision pass per shard
+    // wake-up, bounded cross-shard steals). The rows ride along in this
+    // CSV as `sharded@N` and also land in fig_shard_scaling.csv — the
+    // `falkon sweep --figure shards` emitter.
+    println!();
+    let rows = figures::fig_shard_scaling(&[1, 2, 4, 8], 32_768, EXECUTORS);
+    for r in &rows {
+        csv.rowf(&[&format!("sharded@{}", r.shards), &r.tasks_per_s, &r.decision_us]);
+    }
+    match figures::emit_shard_scaling(&rows, &results_dir()) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("error writing shard CSV: {e}"),
     }
 
     // Raw index ops (the §3.2.3 microbenchmark).

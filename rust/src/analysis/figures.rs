@@ -800,6 +800,176 @@ pub fn emit_qos(
     csv.finish()
 }
 
+// ------------------------------------------------- Shard-scaling figure
+
+/// One measured point of the shard-scaling figure: the same queued
+/// workload drained through the dispatch core at one shard count.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    /// Dispatcher shard count.
+    pub shards: usize,
+    /// Tasks dispatched and retired.
+    pub tasks: u64,
+    /// Wall-clock seconds the drain took.
+    pub wall_s: f64,
+    /// Dispatch throughput, tasks/s (the §3.1 ~3800 tasks/s axis).
+    pub tasks_per_s: f64,
+    /// Mean decision latency per task, microseconds (§3.2.3 budget).
+    pub decision_us: f64,
+    /// Throughput relative to the sweep's first shard count.
+    pub speedup: f64,
+    /// Cross-shard steal batches executed during the drain.
+    pub steals: u64,
+    /// Tasks moved by stealing.
+    pub stolen_tasks: u64,
+    /// Non-empty dispatch batches emitted.
+    pub batches: u64,
+}
+
+/// The shard-scaling figure: dispatch throughput vs dispatcher shard
+/// count over one bursty hot-set workload, measured through
+/// [`crate::coordinator::sharded::ShardedCore::drain_all`] (pure
+/// decision + queue throughput: tasks
+/// retire instantly, so no I/O physics dilutes the axis). Each shard's
+/// index slice is prewarmed with the objects it owns, cached on its own
+/// executors, so the window scan scores real locations — the regime
+/// where the single-loop dispatcher's decision rate is the ceiling the
+/// paper's §3.1/§3.2.3 budgets describe.
+pub fn fig_shard_scaling(shards_list: &[usize], tasks: u64, executors: usize) -> Vec<ShardPoint> {
+    use crate::cache::store::CacheEvent;
+    use crate::config::SchedulerConfig;
+    use crate::coordinator::sharded::ShardedCore;
+
+    let tasks = tasks.max(64);
+    let executors = executors.max(2);
+    // Bursty arrivals over a hot object set: deep ready queues at the
+    // peaks, exactly the backlog shape batched dispatch amortizes.
+    let spec = BurstSpec {
+        shape: DemandShape::Square,
+        tasks,
+        objects: (tasks / 8).max(16),
+        object_bytes: crate::util::units::MB,
+        period_s: 60.0,
+        base_rate: 0.0,
+        peak_rate: tasks as f64 / 36.0,
+        duty: 0.3,
+        task_cpu_s: 0.0,
+    };
+    let w = bursty::generate(&spec, 20080613);
+    let task_list: Vec<Task> = w.spec.tasks.iter().map(|(_, t)| t.clone()).collect();
+    let mut rows: Vec<ShardPoint> = Vec::new();
+    let mut base_rate = 0.0f64;
+    for &shards in shards_list {
+        let shards = shards.max(1);
+        let cfg = SchedulerConfig {
+            policy: DispatchPolicy::MaxComputeUtil,
+            window: 64,
+            ..SchedulerConfig::default()
+        };
+        let mut core = ShardedCore::new(&cfg, w.catalog.clone(), shards);
+        for e in 0..executors {
+            core.register_executor_with(e, 2);
+        }
+        // Warm each shard's index slice: every object cached on one
+        // executor of its owning shard (e ≡ shard (mod shards)), so
+        // tasks find their dominant input local to the shard that
+        // schedules them.
+        let per = (executors / shards).max(1);
+        for obj in w.catalog.ids() {
+            let s = core.shard_of_object(obj);
+            let e = s + shards * (obj.0 as usize % per);
+            if e < executors {
+                core.apply_cache_events(e, &[CacheEvent::Inserted(obj)]);
+            }
+        }
+        for t in task_list.clone() {
+            core.submit(t);
+        }
+        let t0 = std::time::Instant::now();
+        let retired = core.drain_all();
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats = core.shard_stats();
+        let rate = retired as f64 / wall;
+        if rows.is_empty() {
+            base_rate = rate;
+        }
+        rows.push(ShardPoint {
+            shards,
+            tasks: retired,
+            wall_s: wall,
+            tasks_per_s: rate,
+            decision_us: wall / retired.max(1) as f64 * 1e6,
+            speedup: rate / base_rate.max(1e-12),
+            steals: stats.steals,
+            stolen_tasks: stats.stolen_tasks,
+            batches: stats.batches,
+        });
+    }
+    rows
+}
+
+/// Print the shard-scaling table and write its CSV under `dir`. Shared
+/// by the `dispatch_throughput` bench and `falkon sweep --figure
+/// shards`. Returns the CSV path.
+pub fn emit_shard_scaling(
+    rows: &[ShardPoint],
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    use crate::util::csv::CsvWriter;
+    let mut csv = CsvWriter::new(
+        dir.join("fig_shard_scaling.csv"),
+        &[
+            "shards",
+            "tasks",
+            "wall_s",
+            "tasks_per_s",
+            "decision_us",
+            "speedup",
+            "steals",
+            "stolen_tasks",
+            "batches",
+        ],
+    );
+    println!(
+        "{:<7} {:>8} {:>10} {:>12} {:>12} {:>8} {:>7} {:>7} {:>8}",
+        "shards",
+        "tasks",
+        "wall",
+        "tasks/s",
+        "decision",
+        "speedup",
+        "steals",
+        "stolen",
+        "batches"
+    );
+    for r in rows {
+        println!(
+            "{:<7} {:>8} {:>9.4}s {:>12.0} {:>10.2}us {:>7.2}x {:>7} {:>7} {:>8}",
+            r.shards,
+            r.tasks,
+            r.wall_s,
+            r.tasks_per_s,
+            r.decision_us,
+            r.speedup,
+            r.steals,
+            r.stolen_tasks,
+            r.batches
+        );
+        csv.rowf(&[
+            &r.shards,
+            &r.tasks,
+            &r.wall_s,
+            &r.tasks_per_s,
+            &r.decision_us,
+            &r.speedup,
+            &r.steals,
+            &r.stolen_tasks,
+            &r.batches,
+        ]);
+    }
+    csv.finish()
+}
+
 // ---------------------------------------------------------------- Fig 3/4
 
 /// One point of Figures 3/4: aggregate throughput for a configuration at
@@ -1059,6 +1229,24 @@ mod tests {
         let warm = get(MbConfig::MaxComputeUtil100.label());
         let cold = get(MbConfig::MaxComputeUtil0.label());
         assert!(warm > 0.0 && cold > 0.0);
+    }
+
+    #[test]
+    fn fig_shard_scaling_rows_are_complete() {
+        // Small sweep sanity: every shard count retires the whole
+        // workload, the baseline row has speedup 1.0, and multi-shard
+        // rows account their dispatch batches. Throughput ratios are
+        // asserted in `tests/shard_scaling.rs`, not here — this test
+        // must stay load-tolerant.
+        let rows = fig_shard_scaling(&[1, 2, 4], 512, 8);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.tasks, 512, "shards={} must retire all tasks", r.shards);
+            assert!(r.tasks_per_s > 0.0);
+            assert!(r.batches > 0, "shards={} must account batches", r.shards);
+        }
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12, "baseline speedup is 1");
+        assert_eq!(rows[0].steals, 0, "one shard cannot steal");
     }
 
     #[test]

@@ -167,6 +167,24 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Dispatcher-core sharding configuration (see
+/// [`crate::coordinator::sharded`]).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Number of dispatcher shards
+    /// ([`crate::coordinator::ShardedCore`]). 1 (the default) reproduces
+    /// the single-loop dispatcher's decisions bit-for-bit; N > 1
+    /// partitions executors and tasks across N independent cores with
+    /// cross-shard work stealing.
+    pub shards: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { shards: 1 }
+    }
+}
+
 /// Cache-location index configuration (§3.2.3).
 ///
 /// Selects the [`DataIndex`](crate::index::DataIndex) backend the
@@ -375,6 +393,8 @@ pub struct Config {
     pub cache: CacheConfig,
     /// Dispatch policy settings.
     pub scheduler: SchedulerConfig,
+    /// Dispatcher-core sharding.
+    pub coordinator: CoordinatorConfig,
     /// Cache-location index backend + cost calibration.
     pub index: IndexConfig,
     /// Dynamic resource provisioning settings.
@@ -437,6 +457,14 @@ impl Config {
             })?;
         }
         self.scheduler.wrapper = doc.bool_or("scheduler.wrapper", self.scheduler.wrapper);
+
+        let co = &mut self.coordinator;
+        co.shards = doc.num_or("coordinator.shards", co.shards as f64) as usize;
+        if co.shards == 0 {
+            return Err(crate::error::Error::Config(
+                "coordinator.shards must be at least 1".to_string(),
+            ));
+        }
 
         let ix = &mut self.index;
         if let Some(parse::Value::Str(b)) = doc.get("index.backend") {
@@ -682,6 +710,17 @@ release_threshold = 0.4
         let bad = parse::Doc::parse("[transfer]\nstaging_weight = 0").unwrap();
         assert!(Config::default().apply_doc(&bad).is_err());
         let bad = parse::Doc::parse("[transfer]\nshare_policy = \"fair\"").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn coordinator_shards_override_applies_and_validates() {
+        let doc = parse::Doc::parse("[coordinator]\nshards = 4").unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.coordinator.shards, 4);
+        assert_eq!(Config::default().coordinator.shards, 1);
+        let bad = parse::Doc::parse("[coordinator]\nshards = 0").unwrap();
         assert!(Config::default().apply_doc(&bad).is_err());
     }
 

@@ -21,7 +21,7 @@ use crate::coordinator::task::{Task, TaskId};
 use crate::index::central::{CentralIndex, ExecutorId};
 use crate::index::{ControlTraffic, DataIndex, LookupCost};
 use crate::replication::{ReplicaDirective, ReplicationManager};
-use crate::scheduler::decision::{Decision, LocationHints, SchedView};
+use crate::scheduler::decision::{BatchScratch, Decision, LocationHints, SchedView};
 use crate::scheduler::queue::WaitQueue;
 use crate::scheduler::DispatchPolicy;
 use crate::storage::object::{Catalog, ObjectId};
@@ -62,6 +62,9 @@ pub struct FalkonCore {
     all: Vec<ExecutorId>,  // sorted
     /// Demand-driven replication manager (None: passive index only).
     repl: Option<ReplicationManager>,
+    /// Reusable scoring scratch: a batch of k decisions per wake-up
+    /// shares one accumulator allocation instead of building k.
+    scratch: BatchScratch,
     submitted: u64,
     dispatched: u64,
     completed: u64,
@@ -87,6 +90,7 @@ impl FalkonCore {
             idle: Vec::new(),
             all: Vec::new(),
             repl: None,
+            scratch: BatchScratch::default(),
             submitted: 0,
             dispatched: 0,
             completed: 0,
@@ -285,12 +289,25 @@ impl FalkonCore {
     }
 
     /// Attempt to dispatch as many queued tasks as the policy allows.
-    /// Returns the orders the driver must execute.
+    /// Returns the orders the driver must execute. Convenience wrapper
+    /// over [`FalkonCore::dispatch_into`] that allocates the result.
     pub fn try_dispatch(&mut self) -> Vec<DispatchOrder> {
-        if self.policy == DispatchPolicy::MaxComputeUtil {
-            return self.try_dispatch_matching();
-        }
         let mut orders = Vec::new();
+        self.dispatch_into(&mut orders);
+        orders
+    }
+
+    /// Batched dispatch into a caller-owned buffer: drains the ready
+    /// queue once per wake-up, scoring the whole batch against the idle
+    /// set through one reused [`BatchScratch`], and appends the resulting
+    /// orders to `orders` (which is *not* cleared — callers reuse one
+    /// buffer across wake-ups and drain it after each call). Decisions
+    /// are identical to deciding each task individually: batching changes
+    /// where allocations live, never what the policy sees.
+    pub fn dispatch_into(&mut self, orders: &mut Vec<DispatchOrder>) {
+        if self.policy == DispatchPolicy::MaxComputeUtil {
+            return self.dispatch_matching_into(orders);
+        }
         // Keep pulling tasks while we can place them. A task that parks
         // (Delay) does not block later tasks; a task that finds no
         // executor goes back to the front and stops the loop (FIFO).
@@ -302,7 +319,7 @@ impl FalkonCore {
                 index: self.index.as_ref(),
                 catalog: &self.catalog,
             };
-            match self.policy.decide(&task, &view) {
+            match self.policy.decide_with(&task, &view, &mut self.scratch) {
                 Decision::Dispatch { executor, hints } => {
                     let cost = self.hint_lookup_cost(&task);
                     self.note_dispatch_demand(&task, executor);
@@ -324,7 +341,6 @@ impl FalkonCore {
                 }
             }
         }
-        orders
     }
 
     /// max-compute-util dispatch with wait-queue matching.
@@ -336,8 +352,7 @@ impl FalkonCore {
     /// (§3.2.3's 2.1 ms decision budget comfortably covers the scan —
     /// see `benches/dispatch_throughput.rs`). With no cached candidate it
     /// degrades to plain FIFO, so CPUs never idle while work waits.
-    fn try_dispatch_matching(&mut self) -> Vec<DispatchOrder> {
-        let mut orders = Vec::new();
+    fn dispatch_matching_into(&mut self, orders: &mut Vec<DispatchOrder>) {
         while !self.idle.is_empty() {
             let w = self.window.min(self.queue.ready_len());
             if w == 0 {
@@ -351,7 +366,9 @@ impl FalkonCore {
             // independent of cluster size.
             let mut best: Option<(u64, usize, ExecutorId)> = None;
             if !self.index.is_empty() {
-                let mut per_exec: Vec<(ExecutorId, u64)> = Vec::with_capacity(8);
+                // Reused scoring accumulator: the window scan shares the
+                // decision scratch, so a whole drain allocates nothing.
+                let per_exec = &mut self.scratch.per_exec;
                 'scan: for (pos, task) in self.queue.iter_ready().take(w).enumerate() {
                     per_exec.clear();
                     let mut task_total = 0u64;
@@ -368,7 +385,7 @@ impl FalkonCore {
                             }
                         }
                     }
-                    if let Some((e, s)) = SchedView::rotate_tied(&per_exec, task) {
+                    if let Some((e, s)) = SchedView::rotate_tied(per_exec, task) {
                         // Earlier positions win score ties automatically:
                         // we only replace on a strictly better score.
                         if best.map(|(bs, _, _)| s > bs).unwrap_or(true) {
@@ -414,7 +431,29 @@ impl FalkonCore {
                 cost,
             });
         }
-        orders
+    }
+
+    /// Steal up to `max` *ready* tasks from the back of this core's wait
+    /// queue (youngest first to go, original order preserved — see
+    /// [`WaitQueue::steal_back`]). Parked tasks never move: they wait on
+    /// a specific busy executor only this core tracks. The `submitted`
+    /// counter is untouched — the victim keeps the submit credit and the
+    /// thief absorbs without counting, so counters summed across shards
+    /// stay exact.
+    pub fn steal_ready(&mut self, max: usize) -> Vec<Task> {
+        self.queue.steal_back(max)
+    }
+
+    /// Accept a task stolen from another core: enqueue it *without*
+    /// counting a submission (the victim already did).
+    pub fn absorb(&mut self, task: Task) {
+        self.queue.push(task);
+    }
+
+    /// Tasks immediately dispatchable (ready, not parked) — the steal
+    /// balancer's queue-length signal.
+    pub fn ready_len(&self) -> usize {
+        self.queue.ready_len()
     }
 
     /// Index cost charged for dispatching `task`: one location lookup per
@@ -745,6 +784,46 @@ mod tests {
         c.replication_dropped(ObjectId(5), 2);
         assert_eq!(c.index().locations(ObjectId(5)), &[0]);
         assert_eq!(c.replica_location_entries(), 0);
+    }
+
+    #[test]
+    fn dispatch_into_appends_to_a_reused_buffer() {
+        let mut c = core(DispatchPolicy::MaxComputeUtil);
+        c.register_executor(0);
+        c.register_executor(1);
+        let mut buf = Vec::new();
+        c.submit(Task::with_inputs(TaskId(0), vec![ObjectId(1)]));
+        c.dispatch_into(&mut buf);
+        assert_eq!(buf.len(), 1);
+        // Not cleared by the core: the caller owns the drain cadence.
+        c.submit(Task::with_inputs(TaskId(1), vec![ObjectId(2)]));
+        c.dispatch_into(&mut buf);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[0].task.id, TaskId(0));
+        assert_eq!(buf[1].task.id, TaskId(1));
+    }
+
+    #[test]
+    fn steal_and_absorb_keep_counters_exact() {
+        let mut victim = core(DispatchPolicy::FirstAvailable);
+        let mut thief = core(DispatchPolicy::FirstAvailable);
+        for i in 0..4 {
+            victim.submit(Task::with_inputs(TaskId(i), vec![]));
+        }
+        assert_eq!(victim.ready_len(), 4);
+        let stolen = victim.steal_ready(2);
+        assert_eq!(stolen.len(), 2);
+        assert_eq!(victim.ready_len(), 2);
+        for t in stolen {
+            thief.absorb(t);
+        }
+        // Submit credit stays with the victim; the thief counted nothing.
+        assert_eq!(victim.counters().0, 4);
+        assert_eq!(thief.counters().0, 0);
+        thief.register_executor(0);
+        let o = thief.try_dispatch();
+        assert_eq!(o.len(), 1, "stolen work actually dispatches");
+        assert_eq!(o[0].task.id, TaskId(2), "youngest tasks moved, in order");
     }
 
     #[test]

@@ -158,6 +158,20 @@ pub struct Metrics {
     /// (zero on the centralized backend — updates mutate one in-process
     /// table).
     pub index_update_msgs: u64,
+    /// Cross-shard work-steal operations performed by the sharded
+    /// dispatcher (always 0 at `shards = 1`).
+    pub dispatch_steals: u64,
+    /// Tasks moved across shards by those steals.
+    pub dispatch_stolen_tasks: u64,
+    /// Non-empty dispatch batches emitted across all shards (one per
+    /// wake-up that produced orders).
+    pub dispatch_batches: u64,
+    /// Dispatch batch-size histogram, buckets 1, 2–3, 4–7, 8–15,
+    /// 16–31, 32+.
+    pub dispatch_batch_hist: [u64; 6],
+    /// Per-shard ready-queue depth at harvest time (one entry per
+    /// dispatcher shard; a single entry at `shards = 1`).
+    pub shard_queue_depths: Vec<usize>,
     /// Bytes moved by transfer-plane data movements, per
     /// [`TransferClass`] (indexed by [`TransferClass::index`]:
     /// foreground, staging, prestage).
@@ -203,6 +217,19 @@ impl Metrics {
         self.index_misroutes += t.misroutes;
         self.index_update_msgs += t.update_msgs;
         self.index_cost_s += t.latency_s;
+    }
+
+    /// Fold the sharded dispatcher's counters into the run totals
+    /// (drivers call this once at run end with
+    /// [`crate::coordinator::ShardStats`]).
+    pub fn harvest_shard_stats(&mut self, stats: &crate::coordinator::ShardStats) {
+        self.dispatch_steals += stats.steals;
+        self.dispatch_stolen_tasks += stats.stolen_tasks;
+        self.dispatch_batches += stats.batches;
+        for (dst, src) in self.dispatch_batch_hist.iter_mut().zip(stats.batch_hist) {
+            *dst += src;
+        }
+        self.shard_queue_depths = stats.queue_depths.clone();
     }
 
     /// Record one transfer-plane data movement: `bytes` of `class` that
@@ -406,6 +433,26 @@ mod tests {
         assert!((m.task_latency_p50() - 50.5).abs() < 1e-9);
         assert!((m.task_latency_p90() - 90.1).abs() < 1e-9);
         assert!((m.task_latency_p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_stats_fold_into_run_totals() {
+        let mut m = Metrics::new();
+        let stats = crate::coordinator::ShardStats {
+            steals: 3,
+            stolen_tasks: 7,
+            batches: 12,
+            batch_hist: [4, 3, 2, 1, 1, 1],
+            queue_depths: vec![5, 0],
+        };
+        m.harvest_shard_stats(&stats);
+        m.harvest_shard_stats(&stats);
+        assert_eq!(m.dispatch_steals, 6);
+        assert_eq!(m.dispatch_stolen_tasks, 14);
+        assert_eq!(m.dispatch_batches, 24);
+        assert_eq!(m.dispatch_batch_hist, [8, 6, 4, 2, 2, 2]);
+        // Depths are a snapshot, not a sum: the last harvest wins.
+        assert_eq!(m.shard_queue_depths, vec![5, 0]);
     }
 
     #[test]

@@ -5,17 +5,52 @@
 //!   index, the data-aware dispatch loop, and the demand-driven
 //!   [`crate::replication::ReplicationManager`] it feeds. Pure
 //!   synchronous state shared by both execution drivers.
+//! * [`sharded`] — N dispatcher shards behind one facade
+//!   ([`ShardedCore`]), lifting the single-loop dispatch-rate ceiling.
 //! * [`metrics`] — experiment counters (bytes by source, hit ratios,
 //!   latencies) that the figures read out.
 //!
+//! ## The shard layer
+//!
+//! [`ShardedCore`] owns N independent [`FalkonCore`]s and adds three
+//! mechanisms on top of them:
+//!
+//! * **Partitioning rule.** Executors split round-robin (`e % shards`):
+//!   disjoint slices, so two shards can never race for one slot. Tasks
+//!   route by the Chord owner of their *dominant input* — the input
+//!   with the largest catalog size (first wins ties; inputless tasks
+//!   hash by task id) — over a small ring keyed by the shard count.
+//!   Tasks touching the same hot object therefore land on the same
+//!   shard, and each shard's [`crate::index::DataIndex`] slice stays
+//!   mostly local to the objects it schedules around.
+//! * **Batching contract.** A wake-up drains the shard's ready queue
+//!   *once* ([`FalkonCore::dispatch_into`]): the whole batch is scored
+//!   against the idle set through one reused
+//!   [`crate::scheduler::decision::BatchScratch`] and emitted as a
+//!   `Vec<DispatchOrder>`. Batching moves allocations out of the hot
+//!   path but never changes what a policy sees — at `shards = 1` the
+//!   emitted orders are bit-for-bit those of the per-task dispatcher,
+//!   for all four policies on both index backends (property-tested by
+//!   `prop_sharded_equivalence`).
+//! * **Steal protocol.** A shard with idle executors and an empty
+//!   ready queue steals from the shard with the longest ready queue:
+//!   at most half the victim's ready tasks, capped by the thief's idle
+//!   slots and [`sharded::MAX_STEAL_BATCH`], taken from the *back* of
+//!   the victim's FIFO (youngest first) with relative order preserved.
+//!   Parked tasks never move — they wait on a specific busy executor
+//!   only the owning shard tracks. Submit credit stays with the victim
+//!   so counters summed across shards remain exact.
+//!
 //! Execution drivers live in [`crate::driver`]: `sim` replays workloads
-//! over the discrete-event testbed; `live` runs real executor threads
-//! with real files and PJRT compute.
+//! over the discrete-event testbed (per-shard dispatch wake-ups); `live`
+//! runs real executor threads with real files and PJRT compute.
 
 pub mod core;
 pub mod metrics;
+pub mod sharded;
 pub mod task;
 
 pub use self::core::{DispatchOrder, FalkonCore};
 pub use metrics::{ByteSource, Metrics};
+pub use sharded::{ShardStats, ShardedCore};
 pub use task::{Task, TaskId, TaskKind};

@@ -1,6 +1,6 @@
 //! Live execution driver: real threads, real files, real compute.
 //!
-//! The same [`FalkonCore`] as the simulator, but executors are OS threads
+//! The same [`ShardedCore`] as the simulator, but executors are OS threads
 //! doing real I/O against a directory tree ("persistent storage"), real
 //! per-executor cache directories, real gzip decoding
 //! ([`crate::util::gzip`]), and real PJRT stacking compute through
@@ -8,7 +8,9 @@
 //!
 //! Threading model:
 //!
-//! * the coordinator owns `FalkonCore` and runs the dispatch loop; with
+//! * the coordinator owns the sharded dispatcher core and runs the
+//!   dispatch loop — above a backlog threshold [`ShardedCore`] drains
+//!   its shards concurrently on scoped dispatcher threads; with
 //!   `provisioner.enabled` it also runs the DRP on wall-clock time,
 //!   spawning executor threads when the (simulated GRAM4-like) cluster
 //!   grants an allocation and reaping idle ones on release; replication
@@ -38,8 +40,8 @@ use std::time::Instant;
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
-use crate::coordinator::core::FalkonCore;
 use crate::coordinator::metrics::{ByteSource, Metrics};
+use crate::coordinator::sharded::ShardedCore;
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::error::{Error, Result};
 use crate::index::central::ExecutorId;
@@ -278,11 +280,11 @@ impl LiveCluster {
         // as the simulator: lookups resolve instantly (the overlay is a
         // cost model, not real RPCs), but the charged cost lands in the
         // run metrics so live and simulated accounting stay comparable.
-        let mut core = FalkonCore::with_index(
-            &cfg.scheduler,
-            catalog,
-            crate::index::build(&cfg.index, cfg.seed),
-        );
+        let shards = cfg.coordinator.shards.max(1);
+        let indexes = (0..shards)
+            .map(|_| crate::index::build(&cfg.index, cfg.seed))
+            .collect();
+        let mut core = ShardedCore::with_indexes(&cfg.scheduler, catalog, indexes);
 
         // Compute service (if stacking compute is wanted).
         let compute = match artifacts {
@@ -611,7 +613,7 @@ impl LiveCluster {
                                 // world may have moved since the
                                 // directive — eviction pressure, churn).
                                 let droppable = {
-                                    let locs = core.index().locations(obj);
+                                    let locs = core.locations_for(victim, obj);
                                     locs.len() > 1 && locs.binary_search(&victim).is_ok()
                                 };
                                 let sent = droppable
@@ -736,7 +738,7 @@ impl LiveCluster {
             // charged at the backend's lookup cost, like dispatch-side
             // lookups.
             for obj in &c.stale {
-                metrics.add_index_cost(core.index().lookup_cost(*obj));
+                metrics.add_index_cost(core.lookup_cost_for(c.exec, *obj));
             }
             for ev in &c.events {
                 if let CacheEvent::Evicted(v) = ev {
@@ -760,6 +762,7 @@ impl LiveCluster {
         metrics.staging_deferred = plane.stats().deferred;
         metrics.t_end = t0.elapsed().as_secs_f64();
         metrics.peak_executors = metrics.peak_executors.max(core.executor_count());
+        metrics.harvest_shard_stats(&core.shard_stats());
 
         // Shutdown. (In elastic mode our keep-alive `done_tx` lives until
         // the function returns; the loop above exits on the completion

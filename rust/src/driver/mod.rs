@@ -1,6 +1,6 @@
 //! Execution drivers.
 //!
-//! * [`sim`] — replays a workload through [`crate::coordinator::FalkonCore`]
+//! * [`sim`] — replays a workload through [`crate::coordinator::ShardedCore`]
 //!   over the simulated testbed (discrete events + fair-share flows).
 //!   All figure benches use this driver at paper scale (64 nodes / 128
 //!   CPUs / 100K tasks).

@@ -69,8 +69,9 @@
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
-use crate::coordinator::core::{DispatchOrder, FalkonCore};
+use crate::coordinator::core::DispatchOrder;
 use crate::coordinator::metrics::{ByteSource, Metrics};
+use crate::coordinator::sharded::ShardedCore;
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::index::central::ExecutorId;
 use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
@@ -152,8 +153,9 @@ impl SimOutcome {
 enum Ev {
     /// Task with this index arrives at the dispatcher.
     Arrive(u32),
-    /// Run the dispatch loop.
-    Dispatch,
+    /// Run one dispatcher shard's dispatch loop (a completion wake-up:
+    /// only the shard owning the freed executor needs to re-decide).
+    Dispatch(u32),
     /// A dispatched task reaches its executor (run id).
     AtExecutor(u64),
     /// Generic continuation after a timed phase (run id).
@@ -259,7 +261,7 @@ struct SimWorld {
     caching: bool,
     format: DataFormat,
     expansion: f64,
-    core: FalkonCore,
+    core: ShardedCore,
     /// The metered transfer plane: owns the wired testbed; every byte
     /// movement starts through it class-tagged, and background staging is
     /// admission-controlled against source egress utilization.
@@ -501,7 +503,7 @@ impl SimWorld {
         let droppable = victim < self.caches.len()
             && self.core.executors().binary_search(&victim).is_ok()
             && self.caches[victim].contains(obj)
-            && self.core.index().locations(obj).len() > 1;
+            && self.core.locations_for(victim, obj).len() > 1;
         if droppable && self.caches[victim].remove(obj) {
             self.staged_replicas.remove(&(victim, obj));
             self.core
@@ -857,11 +859,11 @@ impl SimWorld {
                 .get(&obj)
                 .is_some_and(|locs| locs.iter().any(|&p| p != exec));
             if hinted {
-                let cost = self.core.index().lookup_cost(obj);
+                let cost = self.core.lookup_cost_for(exec, obj);
                 self.metrics.add_index_cost(cost);
                 let rot = run.task.id.0 as usize;
                 let fresh = {
-                    let locs = self.core.index().locations(obj);
+                    let locs = self.core.locations_for(exec, obj);
                     if locs.is_empty() {
                         None
                     } else {
@@ -1002,7 +1004,11 @@ impl SimWorld {
         self.metrics.exec_latency.add(now - run.t_dispatch);
         self.metrics.t_end = now;
         self.core.on_task_complete(run.exec, run.task.id, &run.events);
-        q.after(self.cfg.testbed.net_latency_s, Ev::Dispatch);
+        // Wake only the shard that owns the freed executor: the other
+        // shards' idle sets did not change (they steal on their own
+        // wake-ups if this completion leaves queues imbalanced).
+        let shard = self.core.shard_of_executor(run.exec) as u32;
+        q.after(self.cfg.testbed.net_latency_s, Ev::Dispatch(shard));
     }
 }
 
@@ -1019,8 +1025,8 @@ impl World for SimWorld {
                     self.execute_orders(now, orders, q);
                 }
             }
-            Ev::Dispatch => {
-                let orders = self.core.try_dispatch();
+            Ev::Dispatch(s) => {
+                let orders = self.core.try_dispatch_shard(s as usize);
                 self.execute_orders(now, orders, q);
             }
             Ev::AtExecutor(rid) => self.step(now, rid, q),
@@ -1052,11 +1058,14 @@ impl SimDriver {
         let t0 = std::time::Instant::now();
         let SimDriver { cfg, spec, catalog } = self;
 
-        let mut core = FalkonCore::with_index(
-            &cfg.scheduler,
-            catalog,
-            crate::index::build(&cfg.index, cfg.seed),
-        );
+        // One index slice per dispatcher shard: each shard resolves (and
+        // is charged for) only the objects its executors cache, so the
+        // slices stay disjoint by construction.
+        let shards = cfg.coordinator.shards.max(1);
+        let indexes = (0..shards)
+            .map(|_| crate::index::build(&cfg.index, cfg.seed))
+            .collect();
+        let mut core = ShardedCore::with_indexes(&cfg.scheduler, catalog, indexes);
         let nodes = cfg.testbed.nodes;
         let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
         let mut prov = None;
@@ -1173,6 +1182,8 @@ impl SimDriver {
         let control = engine.world.core.take_index_control();
         engine.world.metrics.add_control_traffic(control);
         engine.world.metrics.staging_deferred = engine.world.plane.stats().deferred;
+        let shard_stats = engine.world.core.shard_stats();
+        engine.world.metrics.harvest_shard_stats(&shard_stats);
         let mut metrics = engine.world.metrics.clone();
         metrics.peak_executors = metrics
             .peak_executors
@@ -1727,6 +1738,41 @@ mod tests {
         assert_eq!(a.metrics.tasks_done, b.metrics.tasks_done);
         assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn sharded_dispatch_drains_batches_and_replays() {
+        // A 4-shard run over 8 executors (2 per shard) must retire the
+        // whole workload, replay deterministically (per-shard wake-ups
+        // included), and account its dispatch batches.
+        let run = |shards: usize| {
+            let mut cfg = Config::with_nodes(8);
+            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+            cfg.coordinator.shards = shards;
+            let tasks: Vec<(f64, Task)> = (0..96)
+                .map(|i| {
+                    (
+                        i as f64 * 0.25,
+                        Task::with_inputs(TaskId(i), vec![ObjectId(i % 12)]),
+                    )
+                })
+                .collect();
+            SimDriver::new(cfg, SimWorkloadSpec::new(tasks), catalog(12, MB)).run()
+        };
+        let a = run(4);
+        let b = run(4);
+        assert_eq!(a.events, b.events, "sharded runs must replay");
+        assert_eq!(a.metrics.tasks_done, 96);
+        assert_eq!(a.metrics.tasks_dispatched, 96);
+        assert!(a.metrics.dispatch_batches > 0, "batches must be accounted");
+        assert_eq!(a.metrics.shard_queue_depths.len(), 4);
+        assert!(
+            a.metrics.shard_queue_depths.iter().all(|&d| d == 0),
+            "all shard queues drain by quiesce"
+        );
+        let single = run(1);
+        assert_eq!(single.metrics.tasks_done, 96);
+        assert_eq!(single.metrics.dispatch_steals, 0, "one shard cannot steal");
     }
 
     /// A bursty-demand config with an elastic pool.

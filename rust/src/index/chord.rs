@@ -33,16 +33,25 @@
 //! [`DataIndex::take_control_traffic`] into the run metrics.
 //!
 //! **Updates are metered too** (the last free operation fell with the
-//! weighted-shares refactor): every `insert`/`remove` routes the record
-//! update to the object's ring owner — O(log N) measured hops, each one
-//! control message — a membership change ships every location record
-//! whose owner moved to its new owner (the per-owner partition handoff:
-//! one direct message per record, since post-stabilization the old
-//! owner knows its successor), and a deregistration's purge routes one
-//! eviction per record the departing executor held. The centralized
-//! index pays none of this: updates mutate one in-process hash table.
+//! weighted-shares refactor), and since the sharded-dispatch refactor
+//! they are **batched per owner**: every `insert`/`remove`/handoff
+//! *record* destined for the same ring owner piggybacks onto one
+//! control message per owner per flush — a real deployment coalesces
+//! same-destination updates rather than routing each record separately,
+//! and sharded dispatch would otherwise multiply per-record traffic.
+//! Records accumulate in a per-owner pending set
+//! ([`ChordIndex::update_batching`] exposes the records/trains ratio);
+//! [`DataIndex::take_control_traffic`] flushes one routed message train
+//! per pending owner — O(log N) measured hops on the real finger
+//! tables, charged as control messages — so `update_msgs` keeps its
+//! *messages, not records* semantics. A membership change queues every
+//! location record whose owner moved (grouped under its **new** owner),
+//! and a deregistration's purge queues one eviction record per object
+//! the departing executor held. The centralized index pays none of
+//! this: updates mutate one in-process hash table.
 
 use std::cell::Cell;
+use std::collections::BTreeMap;
 
 use super::central::{CentralIndex, ExecutorId};
 use super::dht::{ChordRing, DhtModel};
@@ -73,10 +82,22 @@ pub struct ChordIndex {
     /// Routed update / partition-handoff messages charged since the
     /// last harvest.
     pending_update_msgs: u64,
+    /// Update records queued per owner ring position, awaiting the next
+    /// flush: owner position → (record count, representative object).
+    /// A `BTreeMap` so flush order is deterministic regardless of the
+    /// order records were queued in; the representative is the smallest
+    /// queued object id for the same reason (store iteration order is
+    /// not deterministic).
+    pending_updates: BTreeMap<u64, (u64, ObjectId)>,
     /// Monotone update counter — rotates the overlay entry point for
-    /// routed updates (separate from `queries` so update routing never
-    /// perturbs the lookup-side hop statistics).
+    /// routed update trains (separate from `queries` so update routing
+    /// never perturbs the lookup-side hop statistics).
     update_queries: u64,
+    /// Lifetime count of record updates queued (inserts, evictions,
+    /// handoff records).
+    batched_records: u64,
+    /// Lifetime count of per-owner message trains flushed.
+    batched_trains: u64,
     /// Stale-finger misroutes charged since the last harvest.
     pending_misroutes: Cell<u64>,
     /// Lookups left in the current post-rebuild stale window: each pays
@@ -99,7 +120,10 @@ impl ChordIndex {
             routed_lookups: Cell::new(0),
             pending_stab_msgs: 0,
             pending_update_msgs: 0,
+            pending_updates: BTreeMap::new(),
             update_queries: 0,
+            batched_records: 0,
+            batched_trains: 0,
             pending_misroutes: Cell::new(0),
             stale_lookups: Cell::new(0),
         }
@@ -129,24 +153,34 @@ impl ChordIndex {
         self.routed_hops.get() as f64 / self.routed_lookups.get() as f64
     }
 
+    /// Lifetime (record updates queued, per-owner message trains
+    /// flushed). The ratio `records / trains` is the control traffic the
+    /// per-owner piggybacking saves over routing each record separately.
+    pub fn update_batching(&self) -> (u64, u64) {
+        (self.batched_records, self.batched_trains)
+    }
+
     /// Rebuild the overlay for the current membership, charging the
-    /// stabilization traffic the change costs a real deployment, the
-    /// partition handoff for every record whose ring owner moved, and
+    /// stabilization traffic the change costs a real deployment, queueing
+    /// the partition handoff for every record whose ring owner moved, and
     /// opening the stale-finger window the next lookups pay through.
     fn rebuild_ring(&mut self) {
         let old = std::mem::replace(&mut self.ring, ChordRing::new(self.members.max(1), self.seed));
         self.pending_stab_msgs += DhtModel::stabilization_msgs(self.members.max(1));
         // Per-owner partition handoff: ownership is a function of the
         // ring, so a membership change relocates every record whose
-        // owner position moved — one direct message per record (after
-        // stabilization the old owner knows the new one; no routing).
-        let mut handoff = 0u64;
-        for (obj, replicas) in self.store.iter_counts() {
-            if old.owner_pos(obj) != self.ring.owner_pos(obj) {
-                handoff += replicas as u64;
+        // owner position moved. Moved records queue under their *new*
+        // owner and piggyback on that owner's next update train.
+        let moved: Vec<(ObjectId, usize)> = self
+            .store
+            .iter_counts()
+            .filter(|&(obj, _)| old.owner_pos(obj) != self.ring.owner_pos(obj))
+            .collect();
+        for (obj, replicas) in moved {
+            for _ in 0..replicas {
+                self.queue_update(obj);
             }
         }
-        self.pending_update_msgs += handoff;
         self.stale_lookups.set(if self.members > 1 {
             DhtModel::stale_window(self.members)
         } else {
@@ -169,28 +203,54 @@ impl ChordIndex {
         hops
     }
 
-    /// Route one record *update* for `obj` to its owner and charge the
-    /// measured hops as control messages. Separate rotation counter from
-    /// lookups so update routing never perturbs `mean_hops`.
-    fn route_update(&mut self, obj: ObjectId) {
-        let entry = (self.update_queries as usize) % self.ring.len();
-        self.update_queries += 1;
-        let (_, hops) = self.ring.route(entry, obj);
-        self.pending_update_msgs += hops as u64;
+    /// Queue one record update for `obj` under its current ring owner.
+    /// Same-owner records batch into one routed message train at the
+    /// next control-traffic flush; the store mutation itself is always
+    /// immediate (placement never lags — the trait contract).
+    fn queue_update(&mut self, obj: ObjectId) {
+        self.batched_records += 1;
+        let owner = self.ring.owner_pos(obj);
+        let slot = self.pending_updates.entry(owner).or_insert((0, obj));
+        slot.0 += 1;
+        // Deterministic representative for the train's route whatever
+        // order records were queued in.
+        if obj < slot.1 {
+            slot.1 = obj;
+        }
+    }
+
+    /// Flush the pending per-owner batches: one routed message *train*
+    /// per owner, entered at the rotating update entry point and charged
+    /// its measured hops as control messages — however many records
+    /// piggybacked on it. Separate rotation counter from lookups so
+    /// update routing never perturbs `mean_hops`.
+    fn flush_updates(&mut self) {
+        if self.pending_updates.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending_updates);
+        for (_, (_, rep)) in pending {
+            let entry = (self.update_queries as usize) % self.ring.len();
+            self.update_queries += 1;
+            let (_, hops) = self.ring.route(entry, rep);
+            self.pending_update_msgs += hops as u64;
+            self.batched_trains += 1;
+        }
     }
 }
 
 impl DataIndex for ChordIndex {
     fn insert(&mut self, obj: ObjectId, exec: ExecutorId) {
-        // The record update must reach the object's ring owner: O(log N)
-        // routed hops, billed to the control plane (placement stays
-        // backend-invariant — only the charged cost differs).
-        self.route_update(obj);
+        // The record update must reach the object's ring owner: it
+        // queues under that owner and shares the owner's next routed
+        // message train, billed to the control plane at flush (placement
+        // stays backend-invariant — only the charged cost differs).
+        self.queue_update(obj);
         self.store.insert(obj, exec);
     }
 
     fn remove(&mut self, obj: ObjectId, exec: ExecutorId) {
-        self.route_update(obj);
+        self.queue_update(obj);
         self.store.remove(obj, exec);
     }
 
@@ -216,11 +276,12 @@ impl DataIndex for ChordIndex {
             self.members -= 1;
             self.rebuild_ring();
         }
-        // The purge is a batch of eviction updates: one routed record
-        // removal per object the departing executor held.
+        // The purge is a batch of eviction updates: one record removal
+        // per object the departing executor held, queued under the
+        // record's owner like any other update.
         let held: Vec<ObjectId> = self.store.objects_of(exec).to_vec();
         for obj in held {
-            self.route_update(obj);
+            self.queue_update(obj);
         }
         self.store.drop_executor(exec)
     }
@@ -257,6 +318,7 @@ impl DataIndex for ChordIndex {
     }
 
     fn take_control_traffic(&mut self) -> ControlTraffic {
+        self.flush_updates();
         let msgs = std::mem::take(&mut self.pending_stab_msgs);
         let updates = std::mem::take(&mut self.pending_update_msgs);
         let misroutes = self.pending_misroutes.take();
@@ -424,37 +486,88 @@ mod tests {
     }
 
     #[test]
-    fn membership_change_charges_partition_handoff_per_moved_record() {
+    fn membership_change_batches_partition_handoff_per_new_owner() {
         let mut idx = chord(8);
-        // Two copies of every object: a moved object ships 2 records.
+        // Two copies of every object: a moved object queues 2 records.
         for i in 0..128u64 {
             DataIndex::insert(&mut idx, ObjectId(i), (i % 4) as usize);
             DataIndex::insert(&mut idx, ObjectId(i), 4 + (i % 4) as usize);
         }
         let _ = idx.take_control_traffic(); // drain bootstrap + inserts
-        // Predict which records change owner when the ring shrinks 8→7.
+        let (r0, t0) = idx.update_batching();
+        // Predict the handoff when the ring shrinks 8→7: moved records
+        // group under their *new* owner, one routed train per owner,
+        // each train keyed by the group's smallest object id.
         let old = ChordRing::new(8, 42);
         let new = ChordRing::new(7, 42);
-        let expect: u64 = (0..128u64)
-            .map(|i| {
-                if old.owner_pos(ObjectId(i)) != new.owner_pos(ObjectId(i)) {
-                    2
-                } else {
-                    0
-                }
-            })
-            .sum();
-        // Drop an executor holding nothing, so the purge adds no routed
+        let mut groups: BTreeMap<u64, ObjectId> = BTreeMap::new();
+        let mut moved_records = 0u64;
+        for i in 0..128u64 {
+            let obj = ObjectId(i);
+            if old.owner_pos(obj) != new.owner_pos(obj) {
+                moved_records += 2;
+                groups.entry(new.owner_pos(obj)).or_insert(obj);
+            }
+        }
+        assert!(moved_records > 0, "an 8→7 shrink must move some ownership");
+        // Replicate the flush: sorted owner order, rotating entry point.
+        let mut uq = idx.update_queries;
+        let mut expect_msgs = 0u64;
+        for rep in groups.values() {
+            let entry = (uq as usize) % new.len();
+            uq += 1;
+            expect_msgs += new.route(entry, *rep).1 as u64;
+        }
+        // Drop an executor holding nothing, so the purge queues no
         // evictions and the handoff is isolated.
         let orphans = DataIndex::drop_executor(&mut idx, 17);
         assert!(orphans.is_empty());
         let ct = idx.take_control_traffic();
         assert_eq!(ct.stabilization_msgs, DhtModel::stabilization_msgs(7));
+        let (r1, t1) = idx.update_batching();
+        assert_eq!(r1 - r0, moved_records, "every moved record queues once");
         assert_eq!(
-            ct.update_msgs, expect,
-            "handoff must ship exactly the records whose owner moved"
+            t1 - t0,
+            groups.len() as u64,
+            "one message train per receiving owner, not per record"
         );
-        assert!(expect > 0, "an 8→7 shrink must move some ownership");
+        assert_eq!(
+            ct.update_msgs, expect_msgs,
+            "each train charges its own routed hops"
+        );
+    }
+
+    #[test]
+    fn same_owner_updates_batch_into_one_message() {
+        let mut idx = chord(64);
+        let _ = idx.take_control_traffic(); // drain the bootstrap bill
+        // Pick the owner arc holding the most of the first 10k object
+        // ids — by pigeonhole it owns at least ⌈10000/64⌉ of them,
+        // plenty for a 20-record batch.
+        let mut by_owner: BTreeMap<u64, Vec<ObjectId>> = BTreeMap::new();
+        for i in 0..10_000u64 {
+            by_owner
+                .entry(idx.ring.owner_pos(ObjectId(i)))
+                .or_default()
+                .push(ObjectId(i));
+        }
+        let group = by_owner.into_values().max_by_key(|g| g.len()).unwrap();
+        let (r0, t0) = idx.update_batching();
+        for (i, &obj) in group.iter().take(20).enumerate() {
+            DataIndex::insert(&mut idx, obj, i % 8);
+        }
+        // Predict the single train: entered at the rotating update entry
+        // point, routed toward the group's smallest object id.
+        let entry = (idx.update_queries as usize) % idx.ring.len();
+        let (_, hops) = idx.ring.route(entry, group[0]);
+        let ct = idx.take_control_traffic();
+        let (r1, t1) = idx.update_batching();
+        assert_eq!(r1 - r0, 20, "twenty records queued");
+        assert_eq!(t1 - t0, 1, "same-owner records share one train");
+        assert_eq!(ct.update_msgs, hops as u64, "the train bills its hops once");
+        assert_eq!(ct.stabilization_msgs, 0);
+        // Nothing left pending: the next harvest is free.
+        assert!(idx.take_control_traffic().is_zero());
     }
 
     #[test]

@@ -48,12 +48,12 @@
 //! [`DataIndex::take_control_traffic`]). Lookups meter the data plane;
 //! membership churn *and index updates* meter the control plane — Chord
 //! charges O(log²N) stabilization messages per join/leave, stale-finger
-//! misroutes on the lookups issued before its finger tables repair,
-//! O(log N) routed hops per `insert`/`remove` (the record update must
-//! reach the object's ring owner), and a partition handoff (one message
-//! per relocated record) when a membership change moves ownership —
-//! while the centralized index charges nothing (its "overlay" is one
-//! process). Both drivers harvest this into
+//! misroutes on the lookups issued before its finger tables repair, and
+//! **batched update routing**: `insert`/`remove`/handoff records queue
+//! under their ring owner and each owner's batch flushes as one routed
+//! message train (O(log N) measured hops), so same-owner records within
+//! a harvest window share a single message — while the centralized
+//! index charges nothing (its "overlay" is one process). Both drivers harvest this into
 //! `Metrics::stabilization_msgs` / `Metrics::index_update_msgs`, so a
 //! churning elastic pool shows the distributed design's full
 //! maintenance bill next to its routing bill.
@@ -135,12 +135,13 @@ impl LookupCost {
 ///   surface as extra hops/latency in the affected [`LookupCost`]s —
 ///   `latency_s` here covers only the control messages, so harvesting
 ///   never double-charges);
-/// * **update traffic**: every `insert`/`remove` is a record update
-///   *routed to the object's owner node* (O(log N) hops, measured on
-///   the real finger tables), and a membership change additionally
-///   ships every location record whose ring owner moved to its new
-///   owner — the per-owner partition handoff (one direct message per
-///   record: after stabilization the old owner knows the new one).
+/// * **update traffic**: every `insert`/`remove` queues a record update
+///   under the object's owner node, and a membership change queues
+///   every location record whose ring owner moved (under its *new*
+///   owner) — at harvest each owner's pending batch flushes as one
+///   message train *routed to that owner* (O(log N) hops, measured on
+///   the real finger tables), so `update_msgs` counts messages, not
+///   records, and same-owner records piggyback on a single train.
 ///
 /// Drivers drain this via [`crate::coordinator::core::FalkonCore::take_index_control`]
 /// and fold it into [`crate::coordinator::metrics::Metrics`].
@@ -151,8 +152,9 @@ pub struct ControlTraffic {
     /// Lookups that misrouted through a stale finger since the last
     /// harvest (their extra hop is charged in the lookup's own cost).
     pub misroutes: u64,
-    /// Update messages: routed insert/evict record updates plus
-    /// partition-handoff record transfers on membership changes.
+    /// Update messages: the routed per-owner trains carrying batched
+    /// insert/evict record updates and partition-handoff records
+    /// (messages, not records — same-owner records share a train).
     pub update_msgs: u64,
     /// Simulated wall time behind the stabilization and update
     /// messages, seconds.

@@ -24,6 +24,7 @@
 //! | Paper section | Module |
 //! |---|---|
 //! | §3.1 Falkon dispatcher | [`coordinator`] |
+//! | Sharded, batched dispatch core (`--shards`, work stealing, `--figure shards`) | [`coordinator::sharded`] |
 //! | §3.2.2 eviction + dispatch policies | [`cache`], [`scheduler`] |
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
 //! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |

@@ -40,6 +40,7 @@ fn main() {
         OptSpec { name: "scale", value: "F", help: "workload scale (0,1]", default: "0.02" },
         OptSpec { name: "policy", value: "NAME", help: "dispatch policy", default: "max-compute-util" },
         OptSpec { name: "index", value: "BACKEND", help: "cache-location index (central|chord)", default: "central" },
+        OptSpec { name: "shards", value: "N", help: "dispatcher shard count for sim/live runs (sweep --figure shards instead takes a comma-separated list)", default: "1" },
         OptSpec { name: "provisioner", value: "POLICY", help: "elastic pool: one-at-a-time|all-at-once|adaptive", default: "" },
         OptSpec { name: "replication", value: "POLICY", help: "data diffusion: least-loaded|hash-spread|co-locate", default: "" },
         OptSpec { name: "max-replicas", value: "N", help: "per-object replica ceiling (with --replication)", default: "" },
@@ -51,7 +52,7 @@ fn main() {
         OptSpec { name: "tasks", value: "N", help: "task count (live: 64, bursty sim: 512)", default: "" },
         OptSpec { name: "objects", value: "N", help: "distinct objects (live: 16, bursty sim: 64)", default: "" },
         OptSpec { name: "workdir", value: "DIR", help: "live-mode working dir", default: "/tmp/falkon-live" },
-        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13,drp,diffusion,qos)", default: "11" },
+        OptSpec { name: "figure", value: "N", help: "figure to sweep (2,3,4,5,8,9,10,11,12,13,drp,diffusion,qos,shards)", default: "11" },
         OptSpec { name: "list", value: "", help: "sweep: list available figures and exit", default: "" },
         OptSpec { name: "config", value: "FILE", help: "TOML config (see configs/)", default: "" },
         OptSpec { name: "gz", value: "", help: "compressed (GZ) store format", default: "" },
@@ -104,6 +105,9 @@ fn cmd_sim(args: &Args) -> i32 {
     }
     // CLI flags win over presets and config file.
     cfg.index.backend = backend;
+    if apply_shards_flag(args, &mut cfg).is_err() {
+        return 2;
+    }
     if let Some(p) = args.get("provisioner") {
         let Some(policy) = AllocationPolicy::parse(p) else {
             eprintln!("error: --provisioner expects one-at-a-time|all-at-once|adaptive");
@@ -188,6 +192,20 @@ fn cmd_sim(args: &Args) -> i32 {
         out.events as f64 / out.wall_s.max(1e-9)
     );
     0
+}
+
+/// Apply `--shards N` (dispatcher shard count for sim/live runs).
+fn apply_shards_flag(args: &Args, cfg: &mut Config) -> Result<(), ()> {
+    if let Some(s) = args.get("shards") {
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => cfg.coordinator.shards = n,
+            _ => {
+                eprintln!("error: --shards expects an integer >= 1");
+                return Err(());
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Apply `--replication <policy>` / `--max-replicas N` /
@@ -340,6 +358,9 @@ fn cmd_live(args: &Args) -> i32 {
     let mut cfg = Config::with_nodes(nodes);
     cfg.scheduler.policy = policy;
     cfg.index.backend = backend;
+    if apply_shards_flag(args, &mut cfg).is_err() {
+        return 2;
+    }
     if let Some(p) = args.get("provisioner") {
         let Some(pol) = AllocationPolicy::parse(p) else {
             eprintln!("error: --provisioner expects one-at-a-time|all-at-once|adaptive");
@@ -404,6 +425,7 @@ const FIGURES: &[(&str, &str)] = &[
     ("drp", "dynamic provisioning: the three allocation policies on bursty runs (CSVs)"),
     ("diffusion", "demand-driven replication on/off vs cache-node count (CSV)"),
     ("qos", "share-policy axis off/binary/weighted: foreground p50/p90/p99 under saturating staging (--tasks = bursts of `nodes` tasks, CSV)"),
+    ("shards", "dispatch-core shard scaling: drain throughput, batches and steals vs shard count (CSV)"),
 ];
 
 /// `falkon sweep --list`: enumerate the available figures.
@@ -428,6 +450,9 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
     if fig_arg == "qos" {
         return sweep_qos(args);
+    }
+    if fig_arg == "shards" {
+        return sweep_shards(args);
     }
     let Ok(fig) = fig_arg.parse::<u32>() else {
         eprintln!("unknown figure {fig_arg}; see `falkon sweep --list`");
@@ -535,6 +560,39 @@ fn sweep_qos(args: &Args) -> i32 {
                  'weighted' admits staging throttled at its class weight, so foreground p99\n\
                  stays at binary's level while staging throughput stays strictly smoother\n\
                  than stop-start deferral.\nwrote {}",
+                p.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing CSV: {e}");
+            1
+        }
+    }
+}
+
+/// The shard-scaling figure: dispatch throughput vs dispatcher shard
+/// count through `ShardedCore::drain_all` on one bursty hot-set
+/// workload (same emitter as the `dispatch_throughput` bench).
+/// `--shards` here is a comma-separated list of shard counts to sweep;
+/// `--tasks` and `--nodes` size the drained workload.
+fn sweep_shards(args: &Args) -> i32 {
+    let tasks: u64 = args.num_or("tasks", 4096);
+    let executors: usize = args.num_or("nodes", 32);
+    let shards: Vec<usize> = args.num_list_or("shards", &[1, 2, 4, 8]);
+    if shards.iter().any(|&n| n == 0) {
+        eprintln!("error: --shards expects shard counts >= 1");
+        return 2;
+    }
+    let rows = figures::fig_shard_scaling(&shards, tasks, executors);
+    match figures::emit_shard_scaling(&rows, &results_dir()) {
+        Ok(p) => {
+            println!(
+                "\nreading the figure: one dispatcher loop is the decision-rate ceiling the\n\
+                 paper's §3.1 task rates push against; sharding the core lets each shard\n\
+                 batch its own ready queue against its own idle set, and bounded stealing\n\
+                 keeps starved shards fed, so drain throughput scales with shard count\n\
+                 until cores run out.\nwrote {}",
                 p.display()
             );
             0

@@ -41,6 +41,25 @@ pub enum Decision {
     NoExecutor,
 }
 
+/// Reusable scoring scratch for batched dispatch.
+///
+/// Scoring one task builds a tiny executor → cached-bytes map; deciding a
+/// whole ready batch per wake-up would otherwise allocate that map k
+/// times. The dispatcher owns one `BatchScratch` and threads it through
+/// [`DispatchPolicy::decide_with`], so a batch of k decisions reuses a
+/// single allocation. Purely an allocation-reuse vehicle: decisions made
+/// with or without a scratch are identical by construction
+/// ([`SchedView::best_holder`] delegates to [`SchedView::best_holder_in`]
+/// with a throwaway scratch).
+///
+/// [`DispatchPolicy::decide_with`]: super::DispatchPolicy::decide_with
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// Executor → cached bytes accumulator (cleared per decision, the
+    /// backing allocation survives across the batch).
+    pub per_exec: Vec<(ExecutorId, u64)>,
+}
+
 /// Read-only scheduler inputs.
 pub struct SchedView<'a> {
     /// Idle executors, in ascending id order (determinism).
@@ -89,12 +108,28 @@ impl<'a> SchedView<'a> {
     /// membership filter also guards against locations that outlived a
     /// deregistration: the scheduler must never target a ghost.
     pub fn best_holder(&self, task: &Task, members: &[ExecutorId]) -> Option<(ExecutorId, u64)> {
+        self.best_holder_in(task, members, &mut BatchScratch::default())
+    }
+
+    /// [`best_holder`] with a caller-owned [`BatchScratch`], so batched
+    /// dispatch scores k tasks without k map allocations. Identical
+    /// decisions — the scratch only recycles the accumulator's backing
+    /// storage.
+    ///
+    /// [`best_holder`]: SchedView::best_holder
+    pub fn best_holder_in(
+        &self,
+        task: &Task,
+        members: &[ExecutorId],
+        scratch: &mut BatchScratch,
+    ) -> Option<(ExecutorId, u64)> {
         if self.index.is_empty() {
             return None;
         }
         // Tiny linear map: an object rarely lives on more than a few
         // executors.
-        let mut per_exec: Vec<(ExecutorId, u64)> = Vec::with_capacity(8);
+        let per_exec = &mut scratch.per_exec;
+        per_exec.clear();
         for &obj in &task.inputs {
             let size = self.catalog.size(obj).unwrap_or(1);
             for &e in self.index.locations(obj) {
@@ -107,7 +142,7 @@ impl<'a> SchedView<'a> {
                 }
             }
         }
-        Self::rotate_tied(&per_exec, task)
+        Self::rotate_tied(per_exec, task)
     }
 
     /// The one spread rule: among `scored` executors, pick the max score;
@@ -205,6 +240,26 @@ mod tests {
         // Nothing held by the members: no candidate.
         let task3 = Task::with_inputs(TaskId(4), vec![ObjectId(3)]);
         assert_eq!(view.best_holder(&task3, view.all), None);
+    }
+
+    #[test]
+    fn best_holder_in_matches_best_holder_across_a_batch() {
+        let (idx, cat) = setup();
+        let view = SchedView {
+            idle: &[0, 1],
+            all: &[0, 1],
+            index: &idx,
+            catalog: &cat,
+        };
+        let mut scratch = BatchScratch::default();
+        for id in 0..8u64 {
+            let task = Task::with_inputs(TaskId(id), vec![ObjectId(1), ObjectId(2)]);
+            assert_eq!(
+                view.best_holder_in(&task, view.all, &mut scratch),
+                view.best_holder(&task, view.all),
+                "scratch reuse must not change the decision (task {id})"
+            );
+        }
     }
 
     #[test]

@@ -6,11 +6,18 @@
 //! task. Thus, the executor must fetch all data needed by a task from
 //! persistent storage on every access."
 
-use super::decision::{Decision, LocationHints, SchedView};
+use super::decision::{BatchScratch, Decision, LocationHints, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the first-available policy.
-pub fn decide(_task: &Task, view: &SchedView) -> Decision {
+pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    decide_with(task, view, &mut BatchScratch::default())
+}
+
+/// [`decide`] with a caller-owned scoring scratch (unused here: the
+/// policy never scores holders, but the batched dispatcher threads one
+/// scratch through every policy uniformly).
+pub fn decide_with(_task: &Task, view: &SchedView, _scratch: &mut BatchScratch) -> Decision {
     match view.idle.first() {
         Some(&executor) => Decision::Dispatch {
             executor,

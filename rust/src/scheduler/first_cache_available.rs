@@ -3,11 +3,18 @@
 //! task, so the executor can fetch from its own cache or a peer instead
 //! of persistent storage.
 
-use super::decision::{Decision, SchedView};
+use super::decision::{BatchScratch, Decision, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the first-cache-available policy.
 pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    decide_with(task, view, &mut BatchScratch::default())
+}
+
+/// [`decide`] with a caller-owned scoring scratch (unused here: the
+/// executor choice is location-unaware; hints come from the index
+/// directly).
+pub fn decide_with(task: &Task, view: &SchedView, _scratch: &mut BatchScratch) -> Decision {
     match view.idle.first() {
         Some(&executor) => Decision::Dispatch {
             executor,

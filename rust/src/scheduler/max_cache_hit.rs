@@ -12,12 +12,18 @@
 //! exhaustive scan did, and the membership filter ensures the policy
 //! never waits on a deregistered ghost.
 
-use super::decision::{Decision, SchedView};
+use super::decision::{BatchScratch, Decision, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the max-cache-hit policy.
 pub fn decide(task: &Task, view: &SchedView) -> Decision {
-    match view.best_holder(task, view.all) {
+    decide_with(task, view, &mut BatchScratch::default())
+}
+
+/// [`decide`] with a caller-owned scoring scratch, so a batched drain
+/// scores k tasks against one reused accumulator.
+pub fn decide_with(task: &Task, view: &SchedView, scratch: &mut BatchScratch) -> Decision {
+    match view.best_holder_in(task, view.all, scratch) {
         Some((e, bytes)) if bytes > 0 => {
             if view.idle.binary_search(&e).is_ok() {
                 Decision::Dispatch {

@@ -10,15 +10,21 @@
 //! them, which is exactly the executor the exhaustive scan would have
 //! picked (max over zero scores, ties to the lowest id).
 
-use super::decision::{Decision, SchedView};
+use super::decision::{BatchScratch, Decision, SchedView};
 use crate::coordinator::task::Task;
 
 /// Decide per the max-compute-util policy.
 pub fn decide(task: &Task, view: &SchedView) -> Decision {
+    decide_with(task, view, &mut BatchScratch::default())
+}
+
+/// [`decide`] with a caller-owned scoring scratch, so a batched drain
+/// scores k tasks against one reused accumulator.
+pub fn decide_with(task: &Task, view: &SchedView, scratch: &mut BatchScratch) -> Decision {
     if view.idle.is_empty() {
         return Decision::NoExecutor;
     }
-    let executor = match view.best_holder(task, view.idle) {
+    let executor = match view.best_holder_in(task, view.idle, scratch) {
         // Zero-byte candidates tie with every idle executor; the scan's
         // lowest-id tie-break is the first idle one.
         Some((e, bytes)) if bytes > 0 => e,

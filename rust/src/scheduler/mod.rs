@@ -25,7 +25,7 @@ pub mod max_cache_hit;
 pub mod max_compute_util;
 pub mod queue;
 
-pub use decision::{Decision, LocationHints, SchedView};
+pub use decision::{BatchScratch, Decision, LocationHints, SchedView};
 pub use queue::WaitQueue;
 
 use crate::coordinator::task::Task;
@@ -72,11 +72,28 @@ impl DispatchPolicy {
 
     /// Make a dispatch decision for `task` given the current view.
     pub fn decide(&self, task: &Task, view: &SchedView) -> Decision {
+        self.decide_with(task, view, &mut BatchScratch::default())
+    }
+
+    /// [`decide`] with a caller-owned [`BatchScratch`]: the batched
+    /// dispatcher drains the ready queue once per wake-up and scores the
+    /// whole batch through one reused accumulator instead of allocating
+    /// per task. Decisions are identical to [`decide`] by construction.
+    ///
+    /// [`decide`]: DispatchPolicy::decide
+    pub fn decide_with(
+        &self,
+        task: &Task,
+        view: &SchedView,
+        scratch: &mut BatchScratch,
+    ) -> Decision {
         match self {
-            DispatchPolicy::FirstAvailable => first_available::decide(task, view),
-            DispatchPolicy::FirstCacheAvailable => first_cache_available::decide(task, view),
-            DispatchPolicy::MaxCacheHit => max_cache_hit::decide(task, view),
-            DispatchPolicy::MaxComputeUtil => max_compute_util::decide(task, view),
+            DispatchPolicy::FirstAvailable => first_available::decide_with(task, view, scratch),
+            DispatchPolicy::FirstCacheAvailable => {
+                first_cache_available::decide_with(task, view, scratch)
+            }
+            DispatchPolicy::MaxCacheHit => max_cache_hit::decide_with(task, view, scratch),
+            DispatchPolicy::MaxComputeUtil => max_compute_util::decide_with(task, view, scratch),
         }
     }
 }

@@ -89,6 +89,24 @@ impl WaitQueue {
         self.fifo.len()
     }
 
+    /// Steal up to `max` ready tasks from the *back* of the FIFO,
+    /// returned in their original front-to-back order. The back is where
+    /// the youngest work sits, so a thief takes the tasks that would have
+    /// waited longest here while the victim keeps its oldest (closest to
+    /// dispatch) tasks. Parked tasks are never stolen: they wait on a
+    /// specific busy executor that only the owning shard tracks.
+    pub fn steal_back(&mut self, max: usize) -> Vec<Task> {
+        let n = max.min(self.fifo.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if let Some(t) = self.fifo.pop_back() {
+                out.push(t);
+            }
+        }
+        out.reverse();
+        out
+    }
+
     /// High-water mark (drives the provisioner).
     pub fn peak(&self) -> usize {
         self.peak
@@ -154,6 +172,29 @@ mod tests {
         let mut q = WaitQueue::new();
         q.release(99);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn steal_back_takes_youngest_in_order() {
+        let mut q = WaitQueue::new();
+        for i in 0..5 {
+            q.push(task(i));
+        }
+        q.park(7, task(99));
+        let stolen = q.steal_back(3);
+        let ids: Vec<u64> = stolen.iter().map(|t| t.id.0).collect();
+        // Back of the FIFO (youngest), original relative order kept.
+        assert_eq!(ids, vec![2, 3, 4]);
+        // Victim keeps its oldest ready tasks and all parked tasks.
+        assert_eq!(q.ready_len(), 2);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().id, TaskId(0));
+        // Over-asking drains only what is ready.
+        let rest = q.steal_back(10);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, TaskId(1));
+        assert_eq!(q.ready_len(), 0);
+        assert_eq!(q.len(), 1, "parked task untouched");
     }
 
     #[test]

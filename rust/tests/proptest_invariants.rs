@@ -257,6 +257,152 @@ fn prop_no_task_lost_or_duplicated() {
     }
 }
 
+/// Sharding equivalence (the refactor's safety rail): a `ShardedCore`
+/// at shards=1 must reproduce the single-loop `FalkonCore`'s dispatch
+/// orders exactly — the same tasks to the same executors in the same
+/// order — under random interleavings of submission, completion and
+/// executor churn, for all four policies on both index backends.
+#[test]
+fn prop_sharded_equivalence() {
+    use datadiffusion::config::IndexConfig;
+    use datadiffusion::coordinator::sharded::ShardedCore;
+    use datadiffusion::index::IndexBackend;
+
+    for policy in [
+        DispatchPolicy::FirstAvailable,
+        DispatchPolicy::FirstCacheAvailable,
+        DispatchPolicy::MaxCacheHit,
+        DispatchPolicy::MaxComputeUtil,
+    ] {
+        for backend in [IndexBackend::Central, IndexBackend::Chord] {
+            for case in 0..cases() {
+                let seed = 0x54A2D + case;
+                let mut rng = Rng::new(seed);
+                let mut catalog = Catalog::new();
+                for i in 0..20 {
+                    catalog.insert(ObjectId(i), rng.range_u64(1, 100));
+                }
+                let cfg = SchedulerConfig {
+                    policy,
+                    ..SchedulerConfig::default()
+                };
+                let index_cfg = IndexConfig {
+                    backend,
+                    ..IndexConfig::default()
+                };
+                let mut mono = FalkonCore::with_index(
+                    &cfg,
+                    catalog.clone(),
+                    datadiffusion::index::build(&index_cfg, seed),
+                );
+                let mut sharded = ShardedCore::with_indexes(
+                    &cfg,
+                    catalog,
+                    vec![datadiffusion::index::build(&index_cfg, seed)],
+                );
+                let mut live: Vec<usize> = (0..4).collect();
+                for &e in &live {
+                    mono.register_executor(e);
+                    sharded.register_executor(e);
+                }
+                let mut next_exec = 4usize;
+                let mut submitted = 0u64;
+                let mut running: Vec<(usize, TaskId, ObjectId)> = Vec::new();
+
+                for step in 0..200 {
+                    match rng.below(10) {
+                        0..=4 => {
+                            let inputs = vec![ObjectId(rng.below(20))];
+                            mono.submit(Task::with_inputs(TaskId(submitted), inputs.clone()));
+                            sharded.submit(Task::with_inputs(TaskId(submitted), inputs));
+                            submitted += 1;
+                        }
+                        5..=7 => {
+                            if !running.is_empty() {
+                                let (e, id, obj) = running.swap_remove(rng.index(running.len()));
+                                let ev = [CacheEvent::Inserted(obj)];
+                                mono.on_task_complete(e, id, &ev);
+                                sharded.on_task_complete(e, id, &ev);
+                            }
+                        }
+                        8 => {
+                            if live.len() > 1 {
+                                let e = live.swap_remove(rng.index(live.len()));
+                                let mut keep = Vec::new();
+                                for (re, id, obj) in running.drain(..) {
+                                    if re == e {
+                                        mono.on_task_complete(re, id, &[]);
+                                        sharded.on_task_complete(re, id, &[]);
+                                        let _ = obj;
+                                    } else {
+                                        keep.push((re, id, obj));
+                                    }
+                                }
+                                running = keep;
+                                mono.deregister_executor(e);
+                                sharded.deregister_executor(e);
+                            }
+                        }
+                        _ => {
+                            live.push(next_exec);
+                            mono.register_executor(next_exec);
+                            sharded.register_executor(next_exec);
+                            next_exec += 1;
+                        }
+                    }
+                    let a = mono.try_dispatch();
+                    let b = sharded.try_dispatch();
+                    assert_eq!(
+                        a.len(),
+                        b.len(),
+                        "[{policy:?} {backend:?} seed={seed} step={step}] batch size diverged"
+                    );
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(
+                            (x.executor, x.task.id),
+                            (y.executor, y.task.id),
+                            "[{policy:?} {backend:?} seed={seed} step={step}] orders diverged"
+                        );
+                    }
+                    for o in a {
+                        running.push((o.executor, o.task.id, o.task.inputs[0]));
+                    }
+                }
+                // Drain both in lockstep; the streams must stay identical
+                // to the very last order.
+                let mut guard = 0;
+                while (!running.is_empty() || mono.queue_len() > 0) && guard < 10_000 {
+                    guard += 1;
+                    if let Some((e, id, obj)) = running.pop() {
+                        let ev = [CacheEvent::Inserted(obj)];
+                        mono.on_task_complete(e, id, &ev);
+                        sharded.on_task_complete(e, id, &ev);
+                    }
+                    let a = mono.try_dispatch();
+                    let b = sharded.try_dispatch();
+                    assert_eq!(
+                        a.len(),
+                        b.len(),
+                        "[{policy:?} {backend:?} seed={seed}] drain diverged"
+                    );
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(
+                            (x.executor, x.task.id),
+                            (y.executor, y.task.id),
+                            "[{policy:?} {backend:?} seed={seed}] drain orders diverged"
+                        );
+                    }
+                    for o in a {
+                        running.push((o.executor, o.task.id, o.task.inputs[0]));
+                    }
+                }
+                assert!(guard < 10_000, "[{policy:?} {backend:?} seed={seed}] no quiesce");
+                assert_eq!(mono.queue_len(), sharded.queue_len(), "residual queue drift");
+            }
+        }
+    }
+}
+
 /// Backend invariant (the `DataIndex` contract): with the Chord cost
 /// model zeroed, all four dispatch policies return byte-identical
 /// `Decision`s over a `CentralIndex` and a `ChordIndex` that saw the
