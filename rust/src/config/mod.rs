@@ -175,7 +175,8 @@ pub struct CoordinatorConfig {
     /// ([`crate::coordinator::ShardedCore`]). 1 (the default) reproduces
     /// the single-loop dispatcher's decisions bit-for-bit; N > 1
     /// partitions executors and tasks across N independent cores with
-    /// cross-shard work stealing.
+    /// cross-shard work stealing. 0 in a config file (or `--shards 0`)
+    /// resolves at load time to one shard per available core.
     pub shards: usize,
 }
 
@@ -461,9 +462,11 @@ impl Config {
         let co = &mut self.coordinator;
         co.shards = doc.num_or("coordinator.shards", co.shards as f64) as usize;
         if co.shards == 0 {
-            return Err(crate::error::Error::Config(
-                "coordinator.shards must be at least 1".to_string(),
-            ));
+            // 0 = auto: one shard per available core, resolved at load
+            // time so everything downstream sees a concrete count.
+            co.shards = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
         }
 
         let ix = &mut self.index;
@@ -714,14 +717,18 @@ release_threshold = 0.4
     }
 
     #[test]
-    fn coordinator_shards_override_applies_and_validates() {
+    fn coordinator_shards_override_applies_and_resolves_auto() {
         let doc = parse::Doc::parse("[coordinator]\nshards = 4").unwrap();
         let mut c = Config::default();
         c.apply_doc(&doc).unwrap();
         assert_eq!(c.coordinator.shards, 4);
         assert_eq!(Config::default().coordinator.shards, 1);
-        let bad = parse::Doc::parse("[coordinator]\nshards = 0").unwrap();
-        assert!(Config::default().apply_doc(&bad).is_err());
+        // 0 = auto: resolved to one shard per core at load time, never
+        // left as a literal zero for downstream code to trip on.
+        let auto = parse::Doc::parse("[coordinator]\nshards = 0").unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&auto).unwrap();
+        assert!(c.coordinator.shards >= 1, "shards={}", c.coordinator.shards);
     }
 
     #[test]

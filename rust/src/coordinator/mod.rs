@@ -41,6 +41,12 @@
 //!   only the owning shard tracks. Submit credit stays with the victim
 //!   so counters summed across shards remain exact.
 //!
+//! The shard count comes from `coordinator.shards` in config (or
+//! `--shards` on the CLI): 1 by default, N for a fixed count, and 0 for
+//! auto — resolved at config-load time to one shard per available core
+//! (`std::thread::available_parallelism`), so everything below this
+//! layer always sees a concrete count ≥ 1.
+//!
 //! Execution drivers live in [`crate::driver`]: `sim` replays workloads
 //! over the discrete-event testbed (per-shard dispatch wake-ups); `live`
 //! runs real executor threads with real files and PJRT compute.

@@ -281,6 +281,9 @@ struct SimWorld {
     first_dispatch: Option<f64>,
     total_tasks: u64,
     prov: Option<ProvisionState>,
+    /// Recycled per-run cache-event vectors: at 10⁵ executors the
+    /// dispatch hot path must not allocate one per task.
+    events_pool: Vec<Vec<CacheEvent>>,
 }
 
 impl SimWorld {
@@ -652,7 +655,7 @@ impl SimWorld {
                     next_input: 0,
                     phase: Phase::Start,
                     refetch_src: None,
-                    events: Vec::new(),
+                    events: self.events_pool.pop().unwrap_or_default(),
                 },
             );
             q.at(t_out + self.cfg.testbed.net_latency_s, Ev::AtExecutor(rid));
@@ -998,12 +1001,17 @@ impl SimWorld {
 
     /// Task finished on its executor: report to the dispatcher.
     fn complete_run(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
-        let run = self.runs.remove(&rid).unwrap();
+        let mut run = self.runs.remove(&rid).unwrap();
         self.metrics.tasks_done += 1;
         self.metrics.note_task_latency(now - run.t_submit);
         self.metrics.exec_latency.add(now - run.t_dispatch);
         self.metrics.t_end = now;
         self.core.on_task_complete(run.exec, run.task.id, &run.events);
+        let mut events = std::mem::take(&mut run.events);
+        events.clear();
+        if self.events_pool.len() < 4096 {
+            self.events_pool.push(events);
+        }
         // Wake only the shard that owns the freed executor: the other
         // shards' idle sets did not change (they steal on their own
         // wake-ups if this completion leaves queues imbalanced).
@@ -1163,6 +1171,7 @@ impl SimDriver {
             first_dispatch: None,
             total_tasks,
             prov,
+            events_pool: Vec::new(),
         };
 
         let mut engine = Engine::new(world);

@@ -34,6 +34,7 @@
 //! | DRP demand-response figure (`--figure drp`) | [`analysis::figures`], [`workloads::bursty`] |
 //! | Diffusion figure (`--figure diffusion`, replication on/off) | [`analysis::figures`] |
 //! | QoS figure (`--figure qos`, share policy off/binary/weighted) | [`analysis::figures`] |
+//! | Simulator scalability figure (`--figure scale`, events/sec, peak RSS) | [`analysis::figures`], [`sim::engine`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |

@@ -16,4 +16,4 @@ pub mod object;
 pub mod testbed;
 
 pub use object::{Catalog, DataFormat, ObjectId};
-pub use testbed::{SimTestbed, TransferKind};
+pub use testbed::{ResourceSet, SimTestbed, TransferKind};

@@ -20,6 +20,33 @@ use crate::config::Config;
 use crate::sim::flownet::{FlowNetwork, ResourceId};
 use crate::sim::server::FifoServer;
 
+/// A transfer's resource set, inline and `Copy` (at most four legs), so
+/// the per-flow hot path allocates nothing. Derefs to `[ResourceId]`.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceSet {
+    ids: [ResourceId; 4],
+    len: u8,
+}
+
+impl ResourceSet {
+    fn new(ids: &[ResourceId]) -> Self {
+        debug_assert!(!ids.is_empty() && ids.len() <= 4);
+        let mut set = ResourceSet {
+            ids: [ResourceId(0); 4],
+            len: ids.len() as u8,
+        };
+        set.ids[..ids.len()].copy_from_slice(ids);
+        set
+    }
+}
+
+impl std::ops::Deref for ResourceSet {
+    type Target = [ResourceId];
+    fn deref(&self) -> &[ResourceId] {
+        &self.ids[..self.len as usize]
+    }
+}
+
 /// Per-node resource handles.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeResources {
@@ -89,29 +116,36 @@ impl SimTestbed {
         }
     }
 
-    /// Resource set a transfer of the given kind crosses.
-    pub fn resources(&self, kind: TransferKind) -> Vec<ResourceId> {
+    /// Resource set a transfer of the given kind crosses (inline `Copy`
+    /// set — no allocation; pair with `FlowNetwork::start_flow_on`).
+    pub fn resource_set(&self, kind: TransferKind) -> ResourceSet {
         match kind {
             TransferKind::GpfsRead { node } => {
-                vec![self.gpfs_read, self.nodes[node].nic_in]
+                ResourceSet::new(&[self.gpfs_read, self.nodes[node].nic_in])
             }
-            TransferKind::GpfsReadCached { node } => vec![
+            TransferKind::GpfsReadCached { node } => ResourceSet::new(&[
                 self.gpfs_read,
                 self.nodes[node].nic_in,
                 self.nodes[node].disk_write,
-            ],
+            ]),
             TransferKind::GpfsWrite { node } => {
-                vec![self.gpfs_write, self.nodes[node].nic_out]
+                ResourceSet::new(&[self.gpfs_write, self.nodes[node].nic_out])
             }
-            TransferKind::Peer { src, dst } => vec![
+            TransferKind::Peer { src, dst } => ResourceSet::new(&[
                 self.nodes[src].disk_read,
                 self.nodes[src].nic_out,
                 self.nodes[dst].nic_in,
                 self.nodes[dst].disk_write,
-            ],
-            TransferKind::LocalRead { node } => vec![self.nodes[node].disk_read],
-            TransferKind::LocalWrite { node } => vec![self.nodes[node].disk_write],
+            ]),
+            TransferKind::LocalRead { node } => ResourceSet::new(&[self.nodes[node].disk_read]),
+            TransferKind::LocalWrite { node } => ResourceSet::new(&[self.nodes[node].disk_write]),
         }
+    }
+
+    /// Resource set a transfer of the given kind crosses, as an owned
+    /// vector (benchmark/test convenience).
+    pub fn resources(&self, kind: TransferKind) -> Vec<ResourceId> {
+        self.resource_set(kind).to_vec()
     }
 
     /// Number of nodes.
@@ -183,5 +217,20 @@ mod tests {
         let rs = tb.resources(TransferKind::GpfsReadCached { node: 2 });
         let f = tb.net.start_flow(0.0, rs, 100 * MB);
         assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn resource_set_matches_vec_for_every_kind() {
+        let tb = testbed(4);
+        for kind in [
+            TransferKind::GpfsRead { node: 1 },
+            TransferKind::GpfsReadCached { node: 2 },
+            TransferKind::GpfsWrite { node: 0 },
+            TransferKind::Peer { src: 0, dst: 3 },
+            TransferKind::LocalRead { node: 2 },
+            TransferKind::LocalWrite { node: 1 },
+        ] {
+            assert_eq!(&*tb.resource_set(kind), tb.resources(kind).as_slice());
+        }
     }
 }

@@ -55,10 +55,10 @@ impl SimTransferPlane {
         bytes: u64,
     ) -> FlowId {
         self.started[class.index()] += 1;
-        let rs = self.testbed.resources(kind);
+        let rs = self.testbed.resource_set(kind);
         self.testbed
             .net
-            .start_flow_weighted(now, rs, bytes, self.ctl.weight_of(class))
+            .start_flow_on(now, &rs, bytes, self.ctl.weight_of(class))
     }
 
     /// Flows started per class: (foreground, staging, prestage).

@@ -107,12 +107,31 @@ impl Summary {
     }
 }
 
-/// Percentile estimator over a stored sample (exact; for bench runs whose
-/// sample counts are modest). For very long streams, prefer [`Summary`].
-#[derive(Debug, Clone, Default)]
+/// Hard cap on stored samples: past it the sample is decimated (every
+/// other stored value dropped, keep-stride doubled), bounding memory at
+/// 10⁷–10⁸-task simulations while keeping a deterministic, evenly
+/// strided subsample. 2²⁰ f64s ≈ 8 MiB per estimator.
+const MAX_SAMPLES: usize = 1 << 20;
+
+/// Percentile estimator over a stored sample — exact below
+/// [`MAX_SAMPLES`] observations (every existing figure and test), a
+/// deterministic strided subsample beyond. For running moments over
+/// unbounded streams, prefer [`Summary`].
+#[derive(Debug, Clone)]
 pub struct Percentiles {
     samples: Vec<f64>,
     sorted: bool,
+    /// Keep every `stride`-th observation (1 until the buffer first
+    /// fills, then doubling at each decimation).
+    stride: u64,
+    /// Observations offered, kept or not.
+    seen: u64,
+}
+
+impl Default for Percentiles {
+    fn default() -> Self {
+        Percentiles::new()
+    }
 }
 
 impl Percentiles {
@@ -121,18 +140,46 @@ impl Percentiles {
         Percentiles {
             samples: Vec::new(),
             sorted: true,
+            stride: 1,
+            seen: 0,
         }
     }
 
     /// Add one observation.
     pub fn add(&mut self, x: f64) {
+        let keep = self.seen % self.stride == 0;
+        self.seen += 1;
+        if !keep {
+            return;
+        }
         self.samples.push(x);
         self.sorted = false;
+        if self.samples.len() >= MAX_SAMPLES {
+            // Drop every other stored sample. Kept arrivals were the
+            // multiples of `stride`, so the survivors are exactly the
+            // multiples of the doubled stride — one uniform subsample,
+            // regardless of when decimations happened. (If a quantile
+            // call sorted the buffer first, this decimates the sorted
+            // order instead — an equally valid stratified thinning.)
+            let mut i = 0usize;
+            self.samples.retain(|_| {
+                let k = i % 2 == 0;
+                i += 1;
+                k
+            });
+            self.stride *= 2;
+        }
     }
 
-    /// Number of observations.
+    /// Number of *stored* observations (== observations offered until
+    /// the first decimation).
     pub fn count(&self) -> usize {
         self.samples.len()
+    }
+
+    /// Number of observations offered, kept or not.
+    pub fn seen(&self) -> u64 {
+        self.seen
     }
 
     /// Exact p-quantile by linear interpolation (p in [0, 1]).
@@ -219,5 +266,22 @@ mod tests {
         assert!(s.min().is_nan());
         let mut p = Percentiles::new();
         assert!(p.median().is_nan());
+    }
+
+    #[test]
+    fn percentiles_decimation_bounds_memory_and_preserves_quantiles() {
+        let mut p = Percentiles::new();
+        let n: u64 = (1 << 21) + 123;
+        for i in 0..n {
+            p.add(i as f64);
+        }
+        assert_eq!(p.seen(), n);
+        assert!(p.count() < (1 << 20), "count={}", p.count());
+        // Uniform ramp: the strided subsample keeps quantiles within a
+        // fraction of a percent of exact.
+        let med = p.median();
+        assert!((med / (n as f64 / 2.0) - 1.0).abs() < 1e-3, "med={med}");
+        let p99 = p.quantile(0.99);
+        assert!((p99 / (0.99 * n as f64) - 1.0).abs() < 1e-3, "p99={p99}");
     }
 }

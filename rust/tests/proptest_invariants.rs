@@ -1197,3 +1197,163 @@ fn prop_astro_generator_locality_preserved() {
         }
     }
 }
+
+/// Calendar-queue equivalence: the bucketed `EventQueue` must pop the
+/// exact (time, payload) stream a sorted model produces, under random
+/// interleavings of inserts (past, near-future, exact-duplicate, and
+/// far-future times) and pops — ties broken by insertion order, past
+/// times clamped to the cursor, far-future times exercising the
+/// overflow heap and width rebasing.
+#[test]
+fn prop_calendar_queue_order_matches_heap() {
+    use datadiffusion::sim::engine::EventQueue;
+    for case in 0..cases() {
+        let seed = 0xCA1E + case;
+        let mut rng = Rng::new(seed);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        // Model: (effective time, insertion seq, payload). Pops take the
+        // (time, seq)-minimum — the production tie-break.
+        let mut model: Vec<(f64, u64, u64)> = Vec::new();
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        let mut times: Vec<f64> = Vec::new();
+        let model_min = |model: &[(f64, u64, u64)]| {
+            model
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then(a.1 .1.cmp(&b.1 .1)))
+                .map(|(k, _)| k)
+                .unwrap()
+        };
+        for _ in 0..400 {
+            if model.is_empty() || rng.below(5) < 3 {
+                let t_raw = match rng.below(10) {
+                    0..=5 => now + rng.range_f64(0.0, 5e-3),
+                    6 | 7 if !times.is_empty() => times[rng.index(times.len())],
+                    8 => now + rng.range_f64(1e4, 1e7),
+                    _ => now - rng.range_f64(0.0, 10.0),
+                };
+                times.push(t_raw);
+                q.at(t_raw, seq);
+                model.push((t_raw.max(now), seq, seq));
+                seq += 1;
+            } else {
+                let k = model_min(&model);
+                let (mt, _, mp) = model.remove(k);
+                assert_eq!(q.pop(), Some((mt, mp)), "seed={seed}: pop mismatch");
+                now = mt;
+            }
+            assert_eq!(q.len(), model.len(), "seed={seed}: length drift");
+        }
+        while !model.is_empty() {
+            let k = model_min(&model);
+            let (mt, _, mp) = model.remove(k);
+            assert_eq!(q.pop(), Some((mt, mp)), "seed={seed}: drain mismatch");
+        }
+        assert!(q.pop().is_none(), "seed={seed}: queue must drain empty");
+    }
+}
+
+/// Reference from-scratch progressive filling over an explicit record of
+/// live flows — the same arithmetic as the network's fill loop, written
+/// against this test's own bookkeeping rather than the network's state.
+fn reference_rates(
+    caps: &[f64],
+    flows: &[(datadiffusion::sim::flownet::FlowId, Vec<usize>, f64)],
+) -> Vec<f64> {
+    let mut cap = caps.to_vec();
+    let mut wsum = vec![0.0f64; caps.len()];
+    for (_, set, w) in flows {
+        for &r in set {
+            wsum[r] += w;
+        }
+    }
+    let mut rates = vec![0.0f64; flows.len()];
+    let mut unfixed: Vec<usize> = (0..flows.len()).collect();
+    while !unfixed.is_empty() {
+        let mut share = f64::INFINITY;
+        for i in 0..caps.len() {
+            if wsum[i] > 1e-12 {
+                let s = cap[i] / wsum[i];
+                if s < share {
+                    share = s;
+                }
+            }
+        }
+        if !share.is_finite() {
+            break;
+        }
+        let mut keep = Vec::new();
+        for &j in &unfixed {
+            let (_, set, w) = &flows[j];
+            let bottlenecked = set
+                .iter()
+                .any(|&i| wsum[i] > 1e-12 && cap[i] / wsum[i] <= share + 1e-9);
+            if bottlenecked {
+                rates[j] = w * share;
+                for &i in set {
+                    cap[i] -= w * share;
+                    wsum[i] -= w;
+                }
+            } else {
+                keep.push(j);
+            }
+        }
+        assert!(keep.len() < unfixed.len(), "reference filling must shrink");
+        unfixed = keep;
+    }
+    rates
+}
+
+/// Incremental-refill equivalence: after every start/remove of a random
+/// churn sequence (weighted flows over random resource subsets, shared
+/// and disjoint components mixed), each live flow's rate matches an
+/// independent from-scratch progressive filling over the whole network.
+/// (Debug builds additionally cross-check inside the network after every
+/// refill; this property pins the behaviour from outside the crate.)
+#[test]
+fn prop_incremental_rates_match_full_recompute() {
+    use datadiffusion::sim::flownet::FlowId;
+    for case in 0..cases() {
+        let seed = 0x1FC2 + case;
+        let mut rng = Rng::new(seed);
+        let mut net = FlowNetwork::new();
+        let nr = rng.range_u64(2, 10) as usize;
+        let caps: Vec<f64> = (0..nr).map(|_| rng.range_f64(1e6, 1e9)).collect();
+        let rs: Vec<ResourceId> = caps.iter().map(|&c| net.add_resource(c)).collect();
+        let mut live: Vec<(FlowId, Vec<usize>, f64)> = Vec::new();
+        let mut now = 0.0f64;
+        for step in 0..80 {
+            now += rng.range_f64(0.0, 1e-3);
+            if live.is_empty() || rng.below(3) > 0 {
+                let k = rng.range_u64(1, 3.min(nr as u64)) as usize;
+                let mut set: Vec<usize> = Vec::new();
+                for _ in 0..k {
+                    let r = rng.index(nr);
+                    if !set.contains(&r) {
+                        set.push(r);
+                    }
+                }
+                let weight = rng.range_f64(0.25, 4.0);
+                let ids: Vec<ResourceId> = set.iter().map(|&i| rs[i]).collect();
+                let bytes = rng.range_u64(1, 10_000_000);
+                let f = net.start_flow_weighted(now, ids, bytes, weight);
+                live.push((f, set, weight));
+            } else {
+                let i = rng.index(live.len());
+                let (f, _, _) = live.swap_remove(i);
+                net.remove_flow(now, f);
+            }
+            let expect = reference_rates(&caps, &live);
+            for (j, &(f, _, _)) in live.iter().enumerate() {
+                let got = net.rate(f);
+                let tol = 1e-6 + 1e-9 * got.abs().max(expect[j].abs());
+                assert!(
+                    (got - expect[j]).abs() <= tol,
+                    "seed={seed} step={step}: flow {j} rate {got} != reference {}",
+                    expect[j]
+                );
+            }
+        }
+    }
+}
