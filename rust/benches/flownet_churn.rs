@@ -9,7 +9,7 @@
 //! time should stay near-flat from 10² to 10⁴ flows, where a full
 //! recompute per churn grows ~100x.
 
-use datadiffusion::sim::flownet::{FlowId, FlowNetwork, ResourceId};
+use datadiffusion::sim::flownet::{FlowId, FlowNetwork, FlowSpec, ResourceId};
 use datadiffusion::util::bench::{bench_header, black_box, time_it};
 use datadiffusion::util::units::MB;
 
@@ -23,9 +23,9 @@ fn churn_at(n: usize, iters: usize) {
     let disks: Vec<ResourceId> = (0..n).map(|_| net.add_resource(470e6)).collect();
     let start = |net: &mut FlowNetwork, t: f64, i: usize| -> FlowId {
         if i % 4 == 0 {
-            net.start_flow_on(t, &[disks[i], racks[i / RACK]], 100 * MB, 1.0)
+            net.start(t, FlowSpec::new(100 * MB).over(&[disks[i], racks[i / RACK]]))
         } else {
-            net.start_flow_on(t, &[disks[i]], 100 * MB, 1.0)
+            net.start(t, FlowSpec::new(100 * MB).over(&[disks[i]]))
         }
     };
     let mut flows: Vec<FlowId> = (0..n).map(|i| start(&mut net, 0.0, i)).collect();

@@ -9,7 +9,7 @@
 //! * local read+write ~25 Gb/s at 162 nodes.
 
 use datadiffusion::config::{presets, Config};
-use datadiffusion::sim::flownet::FlowNetwork;
+use datadiffusion::sim::flownet::{FlowNetwork, FlowSpec};
 use datadiffusion::storage::testbed::{SimTestbed, TransferKind};
 use datadiffusion::util::bench::bench_header;
 use datadiffusion::util::csv::{results_dir, CsvWriter};
@@ -26,14 +26,16 @@ fn aggregate(cfg: &Config, n: usize, rw: bool, local: bool) -> f64 {
         } else {
             TransferKind::GpfsRead { node }
         };
-        flows.push(tb.net.start_flow(0.0, tb.resources(read_kind), 100 * MB));
+        let rs = tb.resource_set(read_kind);
+        flows.push(tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs)));
         if rw {
             let write_kind = if local {
                 TransferKind::LocalWrite { node }
             } else {
                 TransferKind::GpfsWrite { node }
             };
-            flows.push(tb.net.start_flow(0.0, tb.resources(write_kind), 100 * MB));
+            let rs = tb.resource_set(write_kind);
+            flows.push(tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs)));
         }
     }
     flows.iter().map(|&f| tb.net.rate(f)).sum()
@@ -97,7 +99,7 @@ fn main() {
     let r = net.add_resource(1e9);
     let mut completions = 0u64;
     for i in 0..20_000u64 {
-        let f = net.start_flow(i as f64, vec![r], 1_000);
+        let f = net.start(i as f64, FlowSpec::new(1_000).over(&[r]));
         if let Some((t, id)) = net.next_completion(i as f64) {
             net.remove_flow(t, id);
             completions += 1;

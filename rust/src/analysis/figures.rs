@@ -8,7 +8,8 @@
 use crate::analysis::model;
 use crate::config::{presets, Config};
 use crate::coordinator::task::{Task, TaskId, TaskKind};
-use crate::driver::sim::{SimDriver, SimOutcome, SimWorkloadSpec};
+use crate::driver::sim::{SimDriver, SimWorkloadSpec};
+use crate::driver::RunOutcome;
 use crate::index::IndexBackend;
 use crate::provisioner::AllocationPolicy;
 use crate::scheduler::DispatchPolicy;
@@ -207,7 +208,7 @@ pub struct DrpPoint {
     /// Local cache-hit ratio over the whole run.
     pub hit_ratio: f64,
     /// The full outcome (pool timeline included), for deeper analysis.
-    pub outcome: SimOutcome,
+    pub outcome: RunOutcome,
 }
 
 /// The DRP figure: the same square-burst workload (two bursts separated
@@ -412,7 +413,7 @@ pub struct DiffusionPoint {
     /// Executors that joined mid-run (the churn replication heals).
     pub executors_joined: u64,
     /// The full outcome (pool timeline included), for deeper analysis.
-    pub outcome: SimOutcome,
+    pub outcome: RunOutcome,
 }
 
 /// The data-diffusion figure: aggregate read throughput and hit ratio
@@ -618,7 +619,7 @@ pub struct QosPoint {
     /// Persistent-storage resolutions.
     pub gpfs_misses: u64,
     /// The full outcome, for deeper analysis.
-    pub outcome: SimOutcome,
+    pub outcome: RunOutcome,
 }
 
 /// The QoS figure: foreground task latency under saturating staging
@@ -1107,6 +1108,163 @@ pub fn emit_scale(
     csv.finish()
 }
 
+// ----------------------------------------------------------- Federation
+
+/// One cell of the federation sweep: one placement mode on one
+/// (site count × WAN bandwidth × origin skew) configuration.
+#[derive(Debug, Clone)]
+pub struct FederationPoint {
+    /// Member sites the testbed was split into.
+    pub sites: usize,
+    /// Per-site WAN uplink, Gbit/s (pairwise link = min of endpoints).
+    pub wan_gbps: f64,
+    /// Fraction of task origins pinned to the home site.
+    pub skew: f64,
+    /// Placement-policy label ("affinity" / "home" / "random").
+    pub placement: &'static str,
+    /// Tasks retired (all must drain).
+    pub tasks: u64,
+    /// Simulated makespan, seconds.
+    pub makespan_s: f64,
+    /// Bytes that crossed a WAN link (cross-site cache pulls + off-home
+    /// GPFS traffic) — the cost axis affinity placement must win.
+    pub wan_bytes: u64,
+    /// Tasks placed at a site other than their origin.
+    pub cross_site_tasks: u64,
+    /// Cache-to-cache bytes (any distance).
+    pub c2c_bytes: u64,
+    /// Shared-filesystem read bytes.
+    pub gpfs_bytes: u64,
+}
+
+/// The federation figure: ship-task vs ship-data across a (site count ×
+/// WAN bandwidth × origin skew) grid, all three placement modes per
+/// cell.
+///
+/// The workload gives data-aware placement something to follow: one
+/// 32 MB object per executor, prewarmed in place, so the cache layout is
+/// round-robin across sites; each task reads one object round-robin,
+/// with origins drawn per the skew. Affinity ships tasks to the holding
+/// site (paying only the dispatch hop); the always-home and random-site
+/// baselines ship data instead, serializing on the WAN links — they must
+/// lose on makespan AND WAN bytes whenever there is more than one site.
+pub fn fig_federation(
+    sites_list: &[usize],
+    wan_gbps_list: &[f64],
+    skew_list: &[f64],
+    nodes: usize,
+    tasks_per_node: usize,
+) -> Vec<FederationPoint> {
+    use crate::federation::PlacementMode;
+    let nodes = nodes.max(2);
+    let mut rows = Vec::new();
+    for &n_sites in sites_list {
+        for &wan in wan_gbps_list {
+            for &skew in skew_list {
+                for mode in [
+                    PlacementMode::Affinity,
+                    PlacementMode::AlwaysHome,
+                    PlacementMode::RandomSite,
+                ] {
+                    let mut cfg = Config::with_nodes(nodes);
+                    cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+                    cfg.split_into_sites(n_sites);
+                    for s in cfg.federation.sites.iter_mut() {
+                        s.wan_bps = crate::util::units::gbps(wan);
+                    }
+                    cfg.federation.placement = mode;
+                    cfg.federation.skew = skew;
+                    let mut catalog = Catalog::new();
+                    for e in 0..nodes {
+                        catalog.insert(ObjectId(e as u64), 32 * crate::util::units::MB);
+                    }
+                    let tasks = (nodes * tasks_per_node) as u64;
+                    let task_list: Vec<(f64, Task)> = (0..tasks)
+                        .map(|i| {
+                            (
+                                i as f64 * 0.005,
+                                Task::with_inputs(TaskId(i), vec![ObjectId(i % nodes as u64)]),
+                            )
+                        })
+                        .collect();
+                    let mut spec = SimWorkloadSpec::new(task_list);
+                    spec.prewarm = (0..nodes).map(|e| (e, ObjectId(e as u64))).collect();
+                    let out = SimDriver::new(cfg, spec, catalog).run();
+                    rows.push(FederationPoint {
+                        sites: n_sites.max(1),
+                        wan_gbps: wan,
+                        skew,
+                        placement: mode.label(),
+                        tasks: out.metrics.tasks_done,
+                        makespan_s: out.makespan_s,
+                        wan_bytes: out.metrics.wan_bytes,
+                        cross_site_tasks: out.metrics.cross_site_tasks,
+                        c2c_bytes: out.metrics.c2c_bytes,
+                        gpfs_bytes: out.metrics.gpfs_bytes,
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Print the federation table and write its CSV under `dir`. Shared by
+/// the `fig_federation` bench and `falkon sweep --figure federation`.
+/// Returns the CSV path.
+pub fn emit_federation(
+    rows: &[FederationPoint],
+    dir: &std::path::Path,
+) -> std::io::Result<std::path::PathBuf> {
+    use crate::util::csv::CsvWriter;
+    let mut csv = CsvWriter::new(
+        dir.join("fig_federation.csv"),
+        &[
+            "sites",
+            "wan_gbps",
+            "skew",
+            "placement",
+            "tasks",
+            "makespan_s",
+            "wan_bytes",
+            "cross_site_tasks",
+            "c2c_bytes",
+            "gpfs_bytes",
+        ],
+    );
+    println!(
+        "{:<6} {:>8} {:>5} {:<10} {:>7} {:>11} {:>12} {:>11} {:>12}",
+        "sites", "wan", "skew", "placement", "tasks", "makespan", "wan-bytes", "cross-site", "c2c"
+    );
+    for r in rows {
+        println!(
+            "{:<6} {:>6.2}G {:>5.2} {:<10} {:>7} {:>10.1}s {:>12} {:>11} {:>12}",
+            r.sites,
+            r.wan_gbps,
+            r.skew,
+            r.placement,
+            r.tasks,
+            r.makespan_s,
+            r.wan_bytes,
+            r.cross_site_tasks,
+            r.c2c_bytes
+        );
+        csv.rowf(&[
+            &r.sites,
+            &r.wan_gbps,
+            &r.skew,
+            &r.placement,
+            &r.tasks,
+            &r.makespan_s,
+            &r.wan_bytes,
+            &r.cross_site_tasks,
+            &r.c2c_bytes,
+            &r.gpfs_bytes,
+        ]);
+    }
+    csv.finish()
+}
+
 // ---------------------------------------------------------------- Fig 3/4
 
 /// One point of Figures 3/4: aggregate throughput for a configuration at
@@ -1282,7 +1440,7 @@ pub fn run_stacking(
     sc: StackConfig,
     scale: f64,
     seed: u64,
-) -> SimOutcome {
+) -> RunOutcome {
     let cfg = if sc.caching() {
         presets::stacking(cpus)
     } else {
@@ -1306,7 +1464,7 @@ pub struct StackPoint {
     /// Local cache-hit ratio achieved.
     pub hit_ratio: f64,
     /// The full outcome, for deeper analysis.
-    pub outcome: SimOutcome,
+    pub outcome: RunOutcome,
 }
 
 /// Figures 8/9: time per stack as CPUs scale, at one locality.
@@ -1403,6 +1561,42 @@ mod tests {
         if cfg!(target_os = "linux") {
             assert!(rows[0].peak_rss_mb > 0.0);
         }
+    }
+
+    #[test]
+    fn fig_federation_affinity_beats_both_baselines() {
+        // The PR's acceptance criterion: at >= 2 sites, Pilot-Data
+        // affinity placement must beat always-home AND random-site on
+        // makespan AND WAN bytes.
+        let rows = fig_federation(&[2], &[0.25], &[0.5], 8, 4);
+        assert_eq!(rows.len(), 3);
+        let get = |p: &str| rows.iter().find(|r| r.placement == p).unwrap();
+        let (aff, home, random) = (get("affinity"), get("home"), get("random"));
+        for r in &rows {
+            assert_eq!(r.tasks, 32, "{}: run must drain", r.placement);
+            assert!(r.makespan_s > 0.0);
+        }
+        assert!(aff.cross_site_tasks > 0, "affinity must ship tasks between sites");
+        assert!(
+            home.wan_bytes > 0 && random.wan_bytes > 0,
+            "baselines must ship data over the WAN: home={} random={}",
+            home.wan_bytes,
+            random.wan_bytes
+        );
+        assert!(
+            aff.wan_bytes < home.wan_bytes && aff.wan_bytes < random.wan_bytes,
+            "affinity must win on WAN bytes: aff={} home={} random={}",
+            aff.wan_bytes,
+            home.wan_bytes,
+            random.wan_bytes
+        );
+        assert!(
+            aff.makespan_s < home.makespan_s && aff.makespan_s < random.makespan_s,
+            "affinity must win on makespan: aff={} home={} random={}",
+            aff.makespan_s,
+            home.makespan_s,
+            random.makespan_s
+        );
     }
 
     #[test]

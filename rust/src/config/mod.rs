@@ -308,6 +308,72 @@ impl Default for ReplicationConfig {
     }
 }
 
+/// One `[[site]]` table: a member cluster of the federation (see
+/// [`crate::federation`]).
+///
+/// Site executor ranges are contiguous in declaration order: the first
+/// table owns executors `0..nodes`, the next the following slice, and
+/// so on. Site 0 is the *home* site — it hosts the shared filesystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteConfig {
+    /// Executor nodes in this site.
+    pub nodes: usize,
+    /// This site's WAN uplink capacity; a cross-site flow is capped by
+    /// the slower of the two endpoints' uplinks.
+    pub wan_bps: BitsPerSec,
+    /// One-way latency from this site to the WAN backbone, seconds.
+    /// Pairwise site latency is the sum of the two endpoints'.
+    pub wan_latency_s: f64,
+    /// Intra-site LAN aggregate capacity — the backplane every
+    /// non-node-local transfer inside the site crosses.
+    pub lan_bps: BitsPerSec,
+}
+
+impl Default for SiteConfig {
+    fn default() -> Self {
+        SiteConfig {
+            nodes: 0,
+            wan_bps: gbps(0.5),
+            wan_latency_s: 0.025,
+            lan_bps: gbps(10.0),
+        }
+    }
+}
+
+/// Multi-cluster federation configuration (see [`crate::federation`]).
+///
+/// With no `[[site]]` tables (the default) the whole testbed is one
+/// cluster and every federation code path is a pure passthrough — the
+/// simulation reproduces single-site behavior bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Member sites, in `[[site]]` declaration order. Their `nodes`
+    /// must sum to `testbed.nodes` (the loader derives the total when
+    /// it is not given explicitly).
+    pub sites: Vec<SiteConfig>,
+    /// How the federation scheduler places tasks across sites.
+    pub placement: crate::federation::PlacementMode,
+    /// Fraction of task *origins* concentrated on site 0, in [0, 1]
+    /// (workload-skew knob for sweeps; the remainder spreads uniformly
+    /// over all sites).
+    pub skew: f64,
+    /// Estimated seconds of queueing delay charged per queued task per
+    /// executor in the affinity score — the ship-task vs ship-data
+    /// trade-off knob (Pilot-Data §affinity).
+    pub queue_weight_s: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            sites: Vec::new(),
+            placement: crate::federation::PlacementMode::Affinity,
+            skew: 0.0,
+            queue_weight_s: 1.0,
+        }
+    }
+}
+
 /// Metered transfer plane configuration (see [`crate::transfer`]).
 #[derive(Debug, Clone)]
 pub struct TransferConfig {
@@ -404,6 +470,8 @@ pub struct Config {
     pub replication: ReplicationConfig,
     /// Metered transfer plane (staging admission control).
     pub transfer: TransferConfig,
+    /// Multi-cluster federation (sites, WAN fabric, placement).
+    pub federation: FederationConfig,
     /// Stacking application constants.
     pub app: AppConfig,
     /// Master RNG seed for workload generation and tie-breaking.
@@ -417,6 +485,32 @@ impl Config {
         c.testbed.nodes = nodes;
         c.provisioner.max_executors = nodes;
         c
+    }
+
+    /// Number of federation sites (1 when no `[[site]]` tables: the
+    /// whole testbed is one cluster).
+    pub fn sites(&self) -> usize {
+        self.federation.sites.len().max(1)
+    }
+
+    /// Split the testbed into `n` near-equal contiguous sites with
+    /// default WAN parameters (the `--sites N` CLI path). `n <= 1`
+    /// clears the site list back to single-cluster behavior; `n` is
+    /// capped at the node count so every site keeps at least one node.
+    pub fn split_into_sites(&mut self, n: usize) {
+        if n <= 1 {
+            self.federation.sites.clear();
+            return;
+        }
+        let n = n.min(self.testbed.nodes.max(1));
+        let base = self.testbed.nodes / n;
+        let rem = self.testbed.nodes % n;
+        self.federation.sites = (0..n)
+            .map(|i| SiteConfig {
+                nodes: base + usize::from(i < rem),
+                ..SiteConfig::default()
+            })
+            .collect();
     }
 
     /// Apply overrides from a TOML-subset document.
@@ -545,6 +639,72 @@ impl Config {
                     "transfer.{name} must be a positive number, got {v}"
                 )));
             }
+        }
+
+        let f = &mut self.federation;
+        if let Some(parse::Value::Str(s)) = doc.get("federation.placement") {
+            f.placement = crate::federation::PlacementMode::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("bad federation.placement {s:?}"))
+            })?;
+        }
+        f.skew = doc.num_or("federation.skew", f.skew);
+        if !(0.0..=1.0).contains(&f.skew) {
+            return Err(crate::error::Error::Config(format!(
+                "federation.skew must be in [0, 1], got {}",
+                f.skew
+            )));
+        }
+        f.queue_weight_s = doc.num_or("federation.queue_weight_s", f.queue_weight_s);
+        // `[federation]` keys set the defaults each `[[site]]` table may
+        // override per site.
+        let site_default = SiteConfig {
+            wan_bps: gbps(doc.num_or(
+                "federation.wan_gbps",
+                SiteConfig::default().wan_bps / 1e9,
+            )),
+            wan_latency_s: doc.num_or(
+                "federation.wan_latency_s",
+                SiteConfig::default().wan_latency_s,
+            ),
+            lan_bps: gbps(doc.num_or(
+                "federation.lan_gbps",
+                SiteConfig::default().lan_bps / 1e9,
+            )),
+            ..SiteConfig::default()
+        };
+        let n_sites = doc.array_len("site");
+        if n_sites > 0 {
+            f.sites = (0..n_sites)
+                .map(|i| SiteConfig {
+                    nodes: doc.num_or(&format!("site.{i}.nodes"), 0.0) as usize,
+                    wan_bps: gbps(doc.num_or(
+                        &format!("site.{i}.wan_gbps"),
+                        site_default.wan_bps / 1e9,
+                    )),
+                    wan_latency_s: doc.num_or(
+                        &format!("site.{i}.wan_latency_s"),
+                        site_default.wan_latency_s,
+                    ),
+                    lan_bps: gbps(doc.num_or(
+                        &format!("site.{i}.lan_gbps"),
+                        site_default.lan_bps / 1e9,
+                    )),
+                })
+                .collect();
+            if f.sites.iter().any(|s| s.nodes == 0) {
+                return Err(crate::error::Error::Config(
+                    "every [[site]] table needs nodes >= 1".into(),
+                ));
+            }
+            let total: usize = f.sites.iter().map(|s| s.nodes).sum();
+            if doc.get("testbed.nodes").is_some() && total != self.testbed.nodes {
+                return Err(crate::error::Error::Config(format!(
+                    "[[site]] nodes sum to {total} but testbed.nodes = {} — drop \
+                     testbed.nodes to derive it, or make them agree",
+                    self.testbed.nodes
+                )));
+            }
+            self.testbed.nodes = total;
         }
 
         self.seed = doc.num_or("seed", self.seed as f64) as u64;
@@ -729,6 +889,71 @@ release_threshold = 0.4
         let mut c = Config::default();
         c.apply_doc(&auto).unwrap();
         assert!(c.coordinator.shards >= 1, "shards={}", c.coordinator.shards);
+    }
+
+    #[test]
+    fn federation_sites_parse_and_validate() {
+        let doc = parse::Doc::parse(
+            r#"
+[federation]
+placement = "home"
+skew = 0.6
+wan_gbps = 0.25
+[[site]]
+nodes = 8
+[[site]]
+nodes = 4
+wan_gbps = 1.0
+wan_latency_s = 0.05
+lan_gbps = 20
+"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.sites(), 2);
+        assert_eq!(c.testbed.nodes, 12, "nodes derived from site sum");
+        assert_eq!(
+            c.federation.placement,
+            crate::federation::PlacementMode::AlwaysHome
+        );
+        assert!((c.federation.skew - 0.6).abs() < 1e-12);
+        // Site 0 inherits the [federation] default uplink; site 1
+        // overrides everything.
+        assert!((c.federation.sites[0].wan_bps - 0.25e9).abs() < 1.0);
+        assert!((c.federation.sites[1].wan_bps - 1e9).abs() < 1.0);
+        assert!((c.federation.sites[1].wan_latency_s - 0.05).abs() < 1e-12);
+        assert!((c.federation.sites[1].lan_bps - 20e9).abs() < 1.0);
+
+        // Defaults: no sites, single-cluster behavior.
+        let d = Config::default();
+        assert_eq!(d.sites(), 1);
+        assert!(d.federation.sites.is_empty());
+
+        // Explicit testbed.nodes must agree with the site sum.
+        let bad = parse::Doc::parse("[testbed]\nnodes = 9\n[[site]]\nnodes = 8").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+        // Empty sites are rejected.
+        let bad = parse::Doc::parse("[[site]]\nnodes = 0").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+        // Skew outside [0,1] is rejected.
+        let bad = parse::Doc::parse("[federation]\nskew = 1.5").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+        // Unknown placement is rejected.
+        let bad = parse::Doc::parse("[federation]\nplacement = \"psychic\"").unwrap();
+        assert!(Config::default().apply_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn split_into_sites_covers_all_nodes() {
+        let mut c = Config::with_nodes(10);
+        c.split_into_sites(3);
+        let sizes: Vec<usize> = c.federation.sites.iter().map(|s| s.nodes).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(c.sites(), 3);
+        c.split_into_sites(1);
+        assert_eq!(c.sites(), 1);
+        assert!(c.federation.sites.is_empty());
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! Nested tables use dotted section headers (`[storage.gpfs]`). Values are
 //! stored flat as `"section.key" -> Value`, which keeps lookup trivial and
 //! is all the config layer needs.
+//!
+//! Array-of-tables headers (`[[site]]`) are supported by indexing: the
+//! n-th `[[site]]` table stores its keys under `site.<n-1>.key`, and
+//! [`Doc::array_len`] reports how many tables a name accumulated, so the
+//! config layer iterates `site.0.*`, `site.1.*`, ….
 
 use std::collections::BTreeMap;
 
@@ -36,16 +41,29 @@ pub enum Value {
 #[derive(Debug, Default, Clone)]
 pub struct Doc {
     map: BTreeMap<String, Value>,
+    /// `[[name]]` table counts (name → how many tables were declared).
+    arrays: BTreeMap<String, usize>,
 }
 
 impl Doc {
     /// Parse a TOML-subset document.
     pub fn parse(text: &str) -> Result<Doc> {
         let mut map = BTreeMap::new();
+        let mut arrays: BTreeMap<String, usize> = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest.strip_suffix("]]").ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated array header", lineno + 1))
+                })?;
+                let name = name.trim();
+                let n = arrays.entry(name.to_string()).or_insert(0);
+                section = format!("{name}.{n}");
+                *n += 1;
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -68,7 +86,7 @@ impl Doc {
                 .ok_or_else(|| Error::Config(format!("line {}: bad value {val:?}", lineno + 1)))?;
             map.insert(full, value);
         }
-        Ok(Doc { map })
+        Ok(Doc { map, arrays })
     }
 
     /// Look up a raw value.
@@ -112,6 +130,11 @@ impl Doc {
     /// All keys (for validation / unknown-key warnings).
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
+    }
+
+    /// How many `[[name]]` tables the document declared (0 if none).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
     }
 }
 
@@ -192,8 +215,35 @@ ops = [1, 2, 3]
     #[test]
     fn errors_on_malformed() {
         assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("[[unterminated]").is_err());
         assert!(Doc::parse("keyonly").is_err());
         assert!(Doc::parse("k = @bogus@").is_err());
+    }
+
+    #[test]
+    fn array_tables_index_flat_keys() {
+        let doc = Doc::parse(
+            r#"
+[federation]
+wan_gbps = 0.1
+[[site]]
+nodes = 8
+[[site]]
+nodes = 4
+wan_gbps = 0.2
+[transfer]
+staging_budget = 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("site"), 2);
+        assert_eq!(doc.array_len("rack"), 0);
+        assert_eq!(doc.num_or("site.0.nodes", 0.0), 8.0);
+        assert_eq!(doc.num_or("site.1.nodes", 0.0), 4.0);
+        assert_eq!(doc.num_or("site.1.wan_gbps", 0.0), 0.2);
+        // Plain sections keep working before, between, and after arrays.
+        assert_eq!(doc.num_or("federation.wan_gbps", 0.0), 0.1);
+        assert_eq!(doc.num_or("transfer.staging_budget", 0.0), 0.5);
     }
 
     #[test]

@@ -182,6 +182,17 @@ pub struct Metrics {
     /// mean achieved rate — the readout that shows weighted shares
     /// actually throttling background movement.
     pub class_xfer_s: [f64; 3],
+    /// Bytes that crossed a WAN link between federation sites (also
+    /// accounted in their per-source counters; 0 without `[[site]]`
+    /// tables). The `fig_federation` cost axis.
+    pub wan_bytes: u64,
+    /// Tasks the federation scheduler placed at a site other than their
+    /// origin (ship-task decisions; 0 without federation).
+    pub cross_site_tasks: u64,
+    /// Per-site allocated-pool samples (one inner timeline per site,
+    /// sampled alongside `pool_timeline`; empty without federation or
+    /// with a static pool).
+    pub site_pool_timeline: Vec<Vec<PoolSample>>,
 }
 
 impl Metrics {
@@ -295,6 +306,26 @@ impl Metrics {
             peer_hits: self.peer_hits,
             gpfs_misses: self.gpfs_misses,
             replicas,
+            staging_deferred: self.staging_deferred,
+        });
+    }
+
+    /// Record one elastic-pool sample for a single federation site
+    /// (pool shape only; cumulative hit counters are run-global and the
+    /// demand split lives in the combined `pool_timeline`).
+    pub fn sample_site_pool(&mut self, site: usize, t: f64, allocated: usize, pending: usize, queued: usize) {
+        if self.site_pool_timeline.len() <= site {
+            self.site_pool_timeline.resize_with(site + 1, Vec::new);
+        }
+        self.site_pool_timeline[site].push(PoolSample {
+            t,
+            allocated,
+            pending,
+            queued,
+            cache_hits: self.cache_hits,
+            peer_hits: self.peer_hits,
+            gpfs_misses: self.gpfs_misses,
+            replicas: 0,
             staging_deferred: self.staging_deferred,
         });
     }
@@ -468,6 +499,20 @@ mod tests {
         assert!((m.class_mean_rate_bps(TransferClass::Foreground) - 8e6).abs() < 1.0);
         assert!((m.class_mean_rate_bps(TransferClass::Staging) - 2e6).abs() < 1.0);
         assert_eq!(m.class_mean_rate_bps(TransferClass::Prestage), 0.0);
+    }
+
+    #[test]
+    fn site_pool_timelines_grow_independently() {
+        let mut m = Metrics::new();
+        m.sample_site_pool(1, 0.0, 4, 0, 2);
+        m.sample_site_pool(0, 0.0, 8, 1, 0);
+        m.sample_site_pool(1, 5.0, 3, 0, 0);
+        assert_eq!(m.site_pool_timeline.len(), 2);
+        assert_eq!(m.site_pool_timeline[0].len(), 1);
+        assert_eq!(m.site_pool_timeline[1].len(), 2);
+        assert_eq!(m.site_pool_timeline[1][1].allocated, 3);
+        // Site samples don't disturb the combined peak.
+        assert_eq!(m.peak_executors, 0);
     }
 
     #[test]

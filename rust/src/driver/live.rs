@@ -212,16 +212,21 @@ fn spawn_compute(
     }
 }
 
-/// Outcome of a live run.
-#[derive(Debug)]
-pub struct LiveOutcome {
-    /// Experiment metrics (bytes by source, hit ratios, latencies).
-    pub metrics: Metrics,
-    /// Wall-clock makespan, seconds.
-    pub makespan_s: f64,
-    /// Stacked-image checksums per task (first 8 tasks), for end-to-end
-    /// verification against the reference.
-    pub sample_checksums: Vec<(TaskId, f64)>,
+use super::{Driver, RunOutcome};
+
+/// A [`LiveCluster`] with its task batch bound, so a live run can be
+/// launched through the common [`Driver`] interface.
+pub struct LiveDriver {
+    /// The cluster to run on.
+    pub cluster: LiveCluster,
+    /// The batch to run to completion.
+    pub tasks: Vec<Task>,
+}
+
+impl Driver for LiveDriver {
+    fn run(self) -> Result<RunOutcome> {
+        self.cluster.run(self.tasks)
+    }
 }
 
 /// A live mini-cluster.
@@ -258,7 +263,7 @@ impl LiveCluster {
     /// configured allocation latency, on wall-clock time) and reaped —
     /// shutdown message, deregistration, cache-directory teardown — when
     /// the provisioner releases an idle executor.
-    pub fn run(self, tasks: Vec<Task>) -> Result<LiveOutcome> {
+    pub fn run(self, tasks: Vec<Task>) -> Result<RunOutcome> {
         let LiveCluster {
             cfg,
             store,
@@ -782,9 +787,11 @@ impl LiveCluster {
         }
         let makespan = metrics.t_end;
         sample_checksums.truncate(8);
-        Ok(LiveOutcome {
+        Ok(RunOutcome {
             metrics,
             makespan_s: makespan,
+            events: 0,
+            wall_s: t0.elapsed().as_secs_f64(),
             sample_checksums,
         })
     }

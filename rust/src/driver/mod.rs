@@ -1,9 +1,10 @@
 //! Execution drivers.
 //!
-//! * [`sim`] — replays a workload through [`crate::coordinator::ShardedCore`]
-//!   over the simulated testbed (discrete events + fair-share flows).
-//!   All figure benches use this driver at paper scale (64 nodes / 128
-//!   CPUs / 100K tasks).
+//! * [`sim`] — replays a workload through [`crate::federation::FedCore`]
+//!   (per-site [`crate::coordinator::ShardedCore`]s) over the simulated
+//!   testbed (discrete events + fair-share flows, WAN links between
+//!   sites). All figure benches use this driver at paper scale (64
+//!   nodes / 128 CPUs / 100K tasks).
 //! * [`live`] — real executor threads, real files on disk, real gzip and
 //!   real PJRT stacking compute. Used by the end-to-end example and
 //!   integration tests.
@@ -14,8 +15,55 @@
 //! (§3.1) when `provisioner.enabled` is set: the sim through
 //! `ProvisionTick`/`AllocReady` events, the live cluster on wall-clock
 //! time with real threads spawned and reaped mid-run.
+//!
+//! Both produce the same [`RunOutcome`] through the common [`Driver`]
+//! trait, so figures and integration tests consume one summary shape
+//! regardless of substrate.
 
 pub mod live;
 pub mod sim;
 
-pub use sim::{SimDriver, SimOutcome, SimWorkloadSpec};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::task::TaskId;
+
+pub use live::{LiveCluster, LiveDriver};
+pub use sim::{SimDriver, SimWorkloadSpec};
+
+/// What one run produced — the single summary shape shared by the
+/// simulated and live drivers.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// Experiment metrics (bytes by source, hit ratios, latencies).
+    pub metrics: Metrics,
+    /// Makespan (first dispatch → last completion), seconds. Simulated
+    /// time on the sim driver, wall-clock on the live cluster.
+    pub makespan_s: f64,
+    /// DES events processed (sim-engine throughput diagnostics; 0 on
+    /// the live driver — there is no event loop to count).
+    pub events: u64,
+    /// Wall-clock seconds the run itself took.
+    pub wall_s: f64,
+    /// Stacked-image checksums per task (first 8 tasks) for end-to-end
+    /// verification against the reference; empty on the simulator.
+    pub sample_checksums: Vec<(TaskId, f64)>,
+}
+
+impl RunOutcome {
+    /// Time per task per CPU — the paper's normalized §5 metric ("time
+    /// per stack per CPU": with perfect scalability it stays constant as
+    /// CPUs grow).
+    pub fn time_per_task_per_cpu(&self, cpus: usize) -> f64 {
+        if self.metrics.tasks_done == 0 {
+            return f64::NAN;
+        }
+        self.makespan_s * cpus as f64 / self.metrics.tasks_done as f64
+    }
+}
+
+/// The common face of an execution driver: consume it, run the workload
+/// to completion, summarize. The simulator is infallible (any bug is a
+/// panic); the live cluster surfaces real I/O and runtime errors.
+pub trait Driver {
+    /// Run the workload to completion.
+    fn run(self) -> crate::error::Result<RunOutcome>;
+}

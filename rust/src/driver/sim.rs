@@ -71,8 +71,8 @@ use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
 use crate::coordinator::core::DispatchOrder;
 use crate::coordinator::metrics::{ByteSource, Metrics};
-use crate::coordinator::sharded::ShardedCore;
 use crate::coordinator::task::{Task, TaskId, TaskKind};
+use crate::federation::{FedCore, SiteId};
 use crate::index::central::ExecutorId;
 use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
 use crate::replication::ReplicaDirective;
@@ -123,30 +123,7 @@ impl SimWorkloadSpec {
     }
 }
 
-/// What one simulated run produced.
-#[derive(Debug, Clone)]
-pub struct SimOutcome {
-    /// Experiment metrics (bytes by source, hit ratios, latencies).
-    pub metrics: Metrics,
-    /// Simulated makespan (first dispatch → last completion), seconds.
-    pub makespan_s: f64,
-    /// DES events processed (sim-engine throughput diagnostics).
-    pub events: u64,
-    /// Wall-clock seconds the simulation itself took.
-    pub wall_s: f64,
-}
-
-impl SimOutcome {
-    /// Time per task per CPU — the paper's normalized §5 metric ("time
-    /// per stack per CPU": with perfect scalability it stays constant as
-    /// CPUs grow).
-    pub fn time_per_task_per_cpu(&self, cpus: usize) -> f64 {
-        if self.metrics.tasks_done == 0 {
-            return f64::NAN;
-        }
-        self.makespan_s * cpus as f64 / self.metrics.tasks_done as f64
-    }
-}
+pub use super::{Driver, RunOutcome};
 
 /// Events of the simulation world.
 #[derive(Debug)]
@@ -162,8 +139,9 @@ enum Ev {
     Step(u64),
     /// Flow-completion check (validity-stamped with a version).
     FlowCheck(u64),
-    /// Periodic provisioner evaluation (elastic pools only).
-    ProvisionTick,
+    /// Periodic provisioner evaluation for one site's pool (elastic
+    /// pools only; each site churns independently).
+    ProvisionTick(u32),
     /// A cluster allocation finished its latency; nodes come up.
     AllocReady(u64),
     /// Periodic replication evaluation (replication.enabled only).
@@ -241,17 +219,20 @@ struct Running {
     events: Vec<CacheEvent>,
 }
 
-/// Elastic-pool state (present only when `provisioner.enabled`).
+/// Elastic-pool state for one site (present only when
+/// `provisioner.enabled`; one entry per federation site, so every site
+/// grows and shrinks against its own demand).
 struct ProvisionState {
     drp: Provisioner,
+    /// Owns this site's slice of global node ids.
     cluster: ClusterProvider,
     /// Evaluation interval, seconds.
     interval_s: f64,
     /// Task slots per executor (cpus × tasks_per_cpu).
     capacity: usize,
-    /// In-flight allocation grants, keyed by the `AllocReady` event id.
+    /// In-flight allocation grants, keyed by the `AllocReady` event id
+    /// (ids are unique across sites — see `SimWorld::next_alloc_id`).
     pending_allocs: FxHashMap<u64, Vec<usize>>,
-    next_alloc_id: u64,
     /// Time of the previous evaluation (for executor-second integrals).
     last_tick: f64,
 }
@@ -261,7 +242,7 @@ struct SimWorld {
     caching: bool,
     format: DataFormat,
     expansion: f64,
-    core: ShardedCore,
+    core: FedCore,
     /// The metered transfer plane: owns the wired testbed; every byte
     /// movement starts through it class-tagged, and background staging is
     /// admission-controlled against source egress utilization.
@@ -280,7 +261,10 @@ struct SimWorld {
     submit_times: FxHashMap<TaskId, f64>,
     first_dispatch: Option<f64>,
     total_tasks: u64,
-    prov: Option<ProvisionState>,
+    /// One elastic pool per site; empty for static pools.
+    provs: Vec<ProvisionState>,
+    /// Allocation-grant id source, shared by every site's pool.
+    next_alloc_id: u64,
     /// Recycled per-run cache-event vectors: at 10⁵ executors the
     /// dispatch hot path must not allocate one per task.
     events_pool: Vec<Vec<CacheEvent>>,
@@ -296,23 +280,26 @@ impl SimWorld {
         )
     }
 
-    /// Handle one provisioner evaluation round.
-    fn provision_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
-        let Some(mut prov) = self.prov.take() else {
+    /// Handle one provisioner evaluation round for one site's pool.
+    fn provision_tick(&mut self, now: f64, site: u32, q: &mut EventQueue<Ev>) {
+        let mut provs = std::mem::take(&mut self.provs);
+        let Some(prov) = provs.get_mut(site as usize) else {
+            self.provs = provs;
             return;
         };
+        let sid = SiteId(site);
         let dt = (now - prov.last_tick).max(0.0);
         prov.last_tick = now;
 
-        // Demand: the queue's high-water mark since the last tick (a
-        // burst that arrived and drained in between still registers).
-        let queued_now = self.core.queue_len();
-        let demand = self.core.take_queue_peak().max(queued_now);
+        // Demand: this site's queue high-water mark since the last tick
+        // (a burst that arrived and drained in between still registers).
+        let queued_now = self.core.site_queue_len(sid);
+        let demand = self.core.site_take_queue_peak(sid).max(queued_now);
 
         // Idle bookkeeping: an executor is a release candidate only while
         // every one of its slots is free.
-        let quiescent = self.core.quiescent_executors();
-        for &e in self.core.executors() {
+        let quiescent = self.core.site(sid).quiescent_executors();
+        for &e in self.core.site(sid).executors() {
             if quiescent.binary_search(&e).is_ok() {
                 prov.drp.note_idle(e, now);
             } else {
@@ -331,8 +318,8 @@ impl SimWorld {
                         prov.drp.cancel_pending(count - grant.nodes.len());
                     }
                     if !grant.nodes.is_empty() {
-                        let id = prov.next_alloc_id;
-                        prov.next_alloc_id += 1;
+                        let id = self.next_alloc_id;
+                        self.next_alloc_id += 1;
                         prov.pending_allocs.insert(id, grant.nodes);
                         q.at(grant.ready_at, Ev::AllocReady(id));
                     }
@@ -370,19 +357,35 @@ impl SimWorld {
         let ct = self.core.take_index_control();
         self.metrics.add_control_traffic(ct);
         self.metrics.staging_deferred = self.plane.stats().deferred;
+        let site_pending = prov.drp.pending();
+        let interval_s = prov.interval_s;
+        let multi = self.core.site_count() > 1;
+        if multi {
+            // Per-site pool timeline (the combined sample below keeps the
+            // legacy figure inputs working).
+            self.metrics.sample_site_pool(
+                site as usize,
+                now,
+                self.core.site(sid).executor_count(),
+                site_pending,
+                queued_now,
+            );
+        }
+        let total_pending: usize = provs.iter().map(|p| p.drp.pending()).sum();
+        let total_queued = if multi { self.core.queue_len() } else { queued_now };
         let replicas = self.core.replica_location_entries();
         self.metrics.sample_pool(
             now,
             self.core.executor_count(),
-            prov.drp.pending(),
-            queued_now,
+            total_pending,
+            total_queued,
             replicas,
         );
         // Keep evaluating while work (or an allocation) is outstanding.
-        if self.metrics.tasks_done < self.total_tasks || prov.drp.pending() > 0 {
-            q.after(prov.interval_s, Ev::ProvisionTick);
+        if self.metrics.tasks_done < self.total_tasks || site_pending > 0 {
+            q.after(interval_s, Ev::ProvisionTick(site));
         }
-        self.prov = Some(prov);
+        self.provs = provs;
         // A release may have requeued parked tasks onto live executors.
         let orders = self.core.try_dispatch();
         self.execute_orders(now, orders, q);
@@ -390,21 +393,24 @@ impl SimWorld {
 
     /// A cluster grant completed: the nodes register and take work.
     fn alloc_ready(&mut self, now: f64, id: u64, q: &mut EventQueue<Ev>) {
-        let Some(mut prov) = self.prov.take() else {
-            return;
-        };
-        if let Some(nodes) = prov.pending_allocs.remove(&id) {
-            let n = nodes.len();
-            for e in nodes {
-                self.core.register_executor_with(e, prov.capacity);
-                self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
+        let mut provs = std::mem::take(&mut self.provs);
+        if let Some(prov) = provs
+            .iter_mut()
+            .find(|p| p.pending_allocs.contains_key(&id))
+        {
+            if let Some(nodes) = prov.pending_allocs.remove(&id) {
+                let n = nodes.len();
+                for e in nodes {
+                    self.core.register_executor_with(e, prov.capacity);
+                    self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
+                }
+                prov.drp.on_allocated(n);
+                self.metrics.executors_joined += n as u64;
+                self.metrics.peak_executors =
+                    self.metrics.peak_executors.max(self.core.executor_count());
             }
-            prov.drp.on_allocated(n);
-            self.metrics.executors_joined += n as u64;
-            self.metrics.peak_executors =
-                self.metrics.peak_executors.max(self.core.executor_count());
         }
-        self.prov = Some(prov);
+        self.provs = provs;
         let orders = self.core.try_dispatch();
         self.execute_orders(now, orders, q);
     }
@@ -575,6 +581,9 @@ impl SimWorld {
         bytes: u64,
         q: &mut EventQueue<Ev>,
     ) {
+        if self.plane.testbed.cross_site(kind) {
+            self.metrics.wan_bytes += bytes;
+        }
         let fid = self.plane.start(now, class, kind, bytes);
         self.flow_map.insert(
             fid,
@@ -883,6 +892,20 @@ impl SimWorld {
                 q.after(cost.latency_s, Ev::Step(rid));
                 return;
             }
+            // Federation ship-data: nothing local and no hints — ask the
+            // global directory whether a peer *site* holds a cached copy
+            // before falling back to persistent storage (itself a WAN
+            // hop away from every non-home site). A hit re-enters the
+            // Refetch machinery, which re-validates the source cache and
+            // falls to GPFS if the copy evaporated in flight.
+            if let Some((src, cost)) = self.core.remote_holder(exec, obj) {
+                self.metrics.add_index_cost(cost);
+                let run = self.runs.get_mut(&rid).unwrap();
+                run.refetch_src = Some(src);
+                run.phase = Phase::Refetch;
+                q.after(cost.latency_s, Ev::Step(rid));
+                return;
+            }
         }
 
         // Persistent storage: metadata open, then the data flow.
@@ -1040,7 +1063,7 @@ impl World for SimWorld {
             Ev::AtExecutor(rid) => self.step(now, rid, q),
             Ev::Step(rid) => self.step(now, rid, q),
             Ev::FlowCheck(v) => self.flow_check(now, v, q),
-            Ev::ProvisionTick => self.provision_tick(now, q),
+            Ev::ProvisionTick(site) => self.provision_tick(now, site, q),
             Ev::AllocReady(id) => self.alloc_ready(now, id, q),
             Ev::ReplTick => self.repl_tick(now, q),
         }
@@ -1062,48 +1085,57 @@ impl SimDriver {
     }
 
     /// Run to completion and return the outcome.
-    pub fn run(self) -> SimOutcome {
+    pub fn run(self) -> RunOutcome {
         let t0 = std::time::Instant::now();
         let SimDriver { cfg, spec, catalog } = self;
 
-        // One index slice per dispatcher shard: each shard resolves (and
-        // is charged for) only the objects its executors cache, so the
-        // slices stay disjoint by construction.
-        let shards = cfg.coordinator.shards.max(1);
-        let indexes = (0..shards)
-            .map(|_| crate::index::build(&cfg.index, cfg.seed))
-            .collect();
-        let mut core = ShardedCore::with_indexes(&cfg.scheduler, catalog, indexes);
+        // One dispatch core per site (one total without `[[site]]`
+        // tables), each sharded with its own disjoint index slices; the
+        // federation facade routes submissions and mirrors cache events
+        // into the cross-site directory.
+        let mut core = FedCore::new(&cfg, catalog);
         let nodes = cfg.testbed.nodes;
         let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
-        let mut prov = None;
+        let mut provs = Vec::new();
         if cfg.provisioner.enabled {
-            // Elastic pool: start at min_executors (granted instantly —
-            // the warm floor is provisioned before the run), grow and
-            // shrink through ProvisionTick / AllocReady events.
+            // Elastic pools, one per site over the site's node slice:
+            // each starts at min_executors (granted instantly — the warm
+            // floor is provisioned before the run), then grows and
+            // shrinks through its own ProvisionTick / AllocReady events.
             assert!(
                 nodes > 0 && cfg.provisioner.max_executors > 0,
                 "elastic pool needs at least one allocatable executor"
             );
-            let mut drp = Provisioner::new(cfg.provisioner.clone());
-            let mut cluster = ClusterProvider::new(nodes, cfg.provisioner.allocation_latency_s);
-            let warm = cfg.provisioner.min_executors.min(nodes);
-            if warm > 0 {
-                let grant = cluster.allocate(0.0, warm);
-                for &e in &grant.nodes {
-                    core.register_executor_with(e, capacity);
+            let n_sites = core.site_count();
+            for s in 0..n_sites {
+                let range = core.topology().executor_range(SiteId(s as u32));
+                let site_nodes = range.len();
+                let mut pcfg = cfg.provisioner.clone();
+                if n_sites > 1 {
+                    // Clamp the global bounds to what the site owns.
+                    pcfg.max_executors = pcfg.max_executors.min(site_nodes);
+                    pcfg.min_executors = pcfg.min_executors.min(site_nodes);
                 }
-                drp.on_allocated(grant.nodes.len());
+                let mut drp = Provisioner::new(pcfg.clone());
+                let mut cluster =
+                    ClusterProvider::with_range(range, cfg.provisioner.allocation_latency_s);
+                let warm = pcfg.min_executors.min(site_nodes);
+                if warm > 0 {
+                    let grant = cluster.allocate(0.0, warm);
+                    for &e in &grant.nodes {
+                        core.register_executor_with(e, capacity);
+                    }
+                    drp.on_allocated(grant.nodes.len());
+                }
+                provs.push(ProvisionState {
+                    drp,
+                    cluster,
+                    interval_s: cfg.provisioner.poll_interval_s.max(1e-3),
+                    capacity,
+                    pending_allocs: FxHashMap::default(),
+                    last_tick: 0.0,
+                });
             }
-            prov = Some(ProvisionState {
-                drp,
-                cluster,
-                interval_s: cfg.provisioner.poll_interval_s.max(1e-3),
-                capacity,
-                pending_allocs: FxHashMap::default(),
-                next_alloc_id: 0,
-                last_tick: 0.0,
-            });
         } else {
             for e in 0..nodes {
                 core.register_executor_with(e, capacity);
@@ -1150,7 +1182,7 @@ impl SimDriver {
             spec.tasks.iter().map(|(_, t)| Some(t.clone())).collect();
 
         let total_tasks = pending_tasks.len() as u64;
-        let elastic = prov.is_some();
+        let n_pools = provs.len();
         let world = SimWorld {
             cfg,
             caching,
@@ -1170,13 +1202,14 @@ impl SimDriver {
             submit_times: FxHashMap::default(),
             first_dispatch: None,
             total_tasks,
-            prov,
+            provs,
+            next_alloc_id: 0,
             events_pool: Vec::new(),
         };
 
         let mut engine = Engine::new(world);
-        if elastic {
-            engine.schedule(0.0, Ev::ProvisionTick);
+        for s in 0..n_pools {
+            engine.schedule(0.0, Ev::ProvisionTick(s as u32));
         }
         if replicating {
             engine.schedule(repl_interval_s, Ev::ReplTick);
@@ -1193,6 +1226,11 @@ impl SimDriver {
         engine.world.metrics.staging_deferred = engine.world.plane.stats().deferred;
         let shard_stats = engine.world.core.shard_stats();
         engine.world.metrics.harvest_shard_stats(&shard_stats);
+        // Federation bill: tasks shipped off their origin site plus the
+        // directory cost of routing them there.
+        engine.world.metrics.cross_site_tasks = engine.world.core.cross_site_tasks();
+        let route_cost = engine.world.core.take_route_cost();
+        engine.world.metrics.add_index_cost(route_cost);
         let mut metrics = engine.world.metrics.clone();
         metrics.peak_executors = metrics
             .peak_executors
@@ -1203,12 +1241,19 @@ impl SimDriver {
             "tasks stuck in flight at quiesce"
         );
         let _ = end;
-        SimOutcome {
+        RunOutcome {
             metrics,
             makespan_s: makespan,
             events: engine.events_processed(),
             wall_s: t0.elapsed().as_secs_f64(),
+            sample_checksums: Vec::new(),
         }
+    }
+}
+
+impl Driver for SimDriver {
+    fn run(self) -> crate::error::Result<RunOutcome> {
+        Ok(SimDriver::run(self))
     }
 }
 
@@ -1911,5 +1956,106 @@ mod tests {
         // Nothing could run before the first allocation landed.
         assert!(out.makespan_s >= 0.0);
         assert!(out.metrics.t_start >= 10.0, "first dispatch waits for the grant");
+    }
+
+    #[test]
+    fn one_site_federation_reproduces_the_flat_config_bit_for_bit() {
+        use crate::config::SiteConfig;
+        // One [[site]] covering every node must be a pure passthrough:
+        // no WAN fabric, no routing draws, no extra cost — the exact
+        // same computation as the pre-federation flat config.
+        let run = |federated: bool| {
+            let mut cfg = elastic_cfg(4);
+            cfg.replication.enabled = true;
+            cfg.replication.evaluate_interval_s = 0.5;
+            if federated {
+                cfg.federation.sites.push(SiteConfig {
+                    nodes: 4,
+                    ..SiteConfig::default()
+                });
+            }
+            let spec = SimWorkloadSpec::new(read_tasks(40));
+            SimDriver::new(cfg, spec, catalog(40, MB)).run()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.events, b.events, "one-site federation must replay the flat run");
+        assert!((a.makespan_s - b.makespan_s).abs() < 1e-12);
+        assert_eq!(a.metrics.tasks_done, b.metrics.tasks_done);
+        assert_eq!(a.metrics.cache_hits, b.metrics.cache_hits);
+        assert_eq!(a.metrics.executors_joined, b.metrics.executors_joined);
+        assert_eq!(b.metrics.wan_bytes, 0);
+        assert_eq!(b.metrics.cross_site_tasks, 0);
+    }
+
+    #[test]
+    fn two_sites_meter_wan_traffic_and_cross_site_placement() {
+        use crate::federation::PlacementMode;
+        let run = |mode: PlacementMode| {
+            let mut cfg = Config::with_nodes(8);
+            cfg.split_into_sites(2);
+            cfg.federation.placement = mode;
+            cfg.federation.skew = 0.0; // origins uniform across sites
+            let spec = SimWorkloadSpec::new(read_tasks(40));
+            SimDriver::new(cfg, spec, catalog(40, 4 * MB)).run()
+        };
+        let random = run(PlacementMode::RandomSite);
+        assert_eq!(random.metrics.tasks_done, 40);
+        assert!(
+            random.metrics.wan_bytes > 0,
+            "random placement runs tasks at site 1, whose GPFS reads cross the WAN"
+        );
+        let affinity = run(PlacementMode::Affinity);
+        assert_eq!(affinity.metrics.tasks_done, 40);
+        assert!(
+            affinity.metrics.cross_site_tasks > 0,
+            "uniform origins + cold caches pull site-1 work to the GPFS home site"
+        );
+    }
+
+    #[test]
+    fn ship_data_pulls_from_a_remote_site_cache_over_the_wan() {
+        use crate::federation::PlacementMode;
+        let mut cfg = Config::with_nodes(8);
+        cfg.split_into_sites(2);
+        cfg.federation.placement = PlacementMode::AlwaysHome;
+        cfg.federation.skew = 1.0; // every origin (hence placement) is site 0
+        let tasks: Vec<(f64, Task)> = (0..4)
+            .map(|i| (i as f64 * 0.5, Task::with_inputs(TaskId(i), vec![ObjectId(0)])))
+            .collect();
+        let mut spec = SimWorkloadSpec::new(tasks);
+        spec.prewarm = vec![(6, ObjectId(0))]; // the only cached copy: site 1
+        let out = SimDriver::new(cfg, spec, catalog(1, 16 * MB)).run();
+        assert_eq!(out.metrics.tasks_done, 4);
+        assert!(
+            out.metrics.c2c_bytes > 0,
+            "the global directory must surface the site-1 copy as a peer fetch"
+        );
+        assert!(
+            out.metrics.wan_bytes > 0,
+            "a cross-site peer fetch traverses the WAN"
+        );
+        assert_eq!(
+            out.metrics.gpfs_bytes, 0,
+            "no task should fall back to a GPFS data read"
+        );
+    }
+
+    #[test]
+    fn per_site_elastic_pools_sample_their_own_timelines() {
+        let mut cfg = elastic_cfg(8);
+        cfg.split_into_sites(2);
+        let spec = SimWorkloadSpec::new(read_tasks(40));
+        let out = SimDriver::new(cfg, spec, catalog(40, MB)).run();
+        assert_eq!(out.metrics.tasks_done, 40);
+        assert_eq!(out.metrics.site_pool_timeline.len(), 2, "one timeline per site");
+        assert!(
+            out.metrics.site_pool_timeline.iter().all(|t| !t.is_empty()),
+            "both site pools tick independently"
+        );
+        assert!(
+            !out.metrics.pool_timeline.is_empty(),
+            "the combined timeline keeps feeding the legacy figures"
+        );
     }
 }

@@ -1,0 +1,559 @@
+//! [`FedCore`]: the federation of per-site dispatch cores.
+//!
+//! One [`ShardedCore`] per site, joined by the [`GlobalIndex`] (so sites
+//! can find each other's cached replicas) and the
+//! [`FederationScheduler`] (so each submitted task lands at the site
+//! where ship-task-vs-ship-data is cheapest). Executor ids stay global —
+//! site `s` simply owns the contiguous range from the [`Topology`] — and
+//! dispatcher shards pack globally as `site × shards_per_site + local`,
+//! so the sharded wake-up protocol in the sim driver keeps working
+//! unchanged.
+//!
+//! Every index-mutating entry point (cache events, replication staging,
+//! executor churn) routes through here so the global directory stays
+//! consistent with the per-site slices. With one site the facade is a
+//! pure passthrough: no global directory, no routing draws, no extra
+//! cost anywhere — single-site runs are bit-for-bit the pre-federation
+//! simulation.
+
+use crate::cache::store::CacheEvent;
+use crate::config::{Config, ReplicationConfig};
+use crate::coordinator::core::DispatchOrder;
+use crate::coordinator::sharded::{ShardStats, ShardedCore};
+use crate::coordinator::task::{Task, TaskId};
+use crate::index::{ControlTraffic, ExecutorId, LookupCost};
+use crate::replication::ReplicaDirective;
+use crate::scheduler::DispatchPolicy;
+use crate::storage::object::{Catalog, ObjectId};
+
+use super::sched::SiteLoad;
+use super::{FederationScheduler, GlobalIndex, SiteId, Topology};
+
+/// Varies per-site index seeds so overlay layouts differ between sites
+/// (site 0 keeps the configured seed unchanged).
+const SITE_SEED_SALT: u64 = 0xA24B_AED4_963E_E407;
+
+/// The federation facade the driver talks to (see module docs).
+pub struct FedCore {
+    sites: Vec<ShardedCore>,
+    topo: Topology,
+    sched: FederationScheduler,
+    /// Cross-site replica directory; `None` with a single site.
+    global: Option<GlobalIndex>,
+    shards_per_site: usize,
+    /// Combined registered-executor set, sorted ascending.
+    all: Vec<ExecutorId>,
+    /// Tasks placed at a site other than their origin.
+    cross_site_tasks: u64,
+    /// Accumulated placement-routing cost, drained by the driver.
+    route_cost: LookupCost,
+}
+
+impl FedCore {
+    /// Build one site core per `[[site]]` table (or a single passthrough
+    /// core), each with its own per-shard index slices.
+    pub fn new(cfg: &Config, catalog: Catalog) -> FedCore {
+        let topo = Topology::from_config(cfg);
+        let shards_per_site = cfg.coordinator.shards.max(1);
+        let n = topo.sites();
+        let mut sites = Vec::with_capacity(n);
+        for s in 0..n {
+            let seed = cfg.seed ^ (s as u64).wrapping_mul(SITE_SEED_SALT);
+            let indexes = (0..shards_per_site)
+                .map(|_| crate::index::build(&cfg.index, seed))
+                .collect();
+            sites.push(ShardedCore::with_indexes(
+                &cfg.scheduler,
+                catalog.clone(),
+                indexes,
+            ));
+        }
+        let sched = FederationScheduler::new(
+            topo.clone(),
+            cfg.federation.placement,
+            cfg.federation.skew,
+            cfg.federation.queue_weight_s,
+            cfg.seed,
+        );
+        let global = if n > 1 { Some(GlobalIndex::new(topo.clone())) } else { None };
+        FedCore {
+            sites,
+            topo,
+            sched,
+            global,
+            shards_per_site,
+            all: Vec::new(),
+            cross_site_tasks: 0,
+            route_cost: LookupCost::ZERO,
+        }
+    }
+
+    // ---- topology / site accessors -------------------------------------
+
+    /// The site layout.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Number of member sites.
+    pub fn site_count(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// One site's dispatch core.
+    pub fn site(&self, s: SiteId) -> &ShardedCore {
+        &self.sites[s.index()]
+    }
+
+    /// The site owning executor `e`.
+    pub fn site_of(&self, e: ExecutorId) -> SiteId {
+        self.topo.site_of(e)
+    }
+
+    /// Tasks placed at a site other than their origin so far.
+    pub fn cross_site_tasks(&self) -> u64 {
+        self.cross_site_tasks
+    }
+
+    /// Drain the accumulated placement-routing cost (global-directory
+    /// consultations at submit time).
+    pub fn take_route_cost(&mut self) -> LookupCost {
+        std::mem::replace(&mut self.route_cost, LookupCost::ZERO)
+    }
+
+    // ---- submit / dispatch ---------------------------------------------
+
+    /// Route `task` to its run site (per the placement policy) and
+    /// enqueue it there. Returns the chosen site.
+    pub fn submit(&mut self, task: Task) -> SiteId {
+        if self.sites.len() == 1 {
+            self.sites[0].submit(task);
+            return SiteId::HOME;
+        }
+        let origin = self.sched.origin_site(task.id.0);
+        let mut cost = LookupCost::ZERO;
+        let inputs: Vec<(u64, Option<SiteId>)> = {
+            let global = self.global.as_ref().expect("multi-site has a global index");
+            task.inputs
+                .iter()
+                .map(|&obj| {
+                    let bytes = self.sites[0].catalog().size(obj).unwrap_or(0);
+                    let (hit, c) = global.locate(origin, obj);
+                    cost.accumulate(c);
+                    (bytes, hit.map(|(s, _)| s))
+                })
+                .collect()
+        };
+        let load: Vec<SiteLoad> = self
+            .sites
+            .iter()
+            .map(|c| SiteLoad { queued: c.queue_len(), executors: c.executor_count() })
+            .collect();
+        let chosen = self.sched.choose(task.id.0, &inputs, &load);
+        if chosen != origin {
+            self.cross_site_tasks += 1;
+        }
+        self.route_cost.accumulate(cost);
+        self.sites[chosen.index()].submit(task);
+        chosen
+    }
+
+    /// Run every site's dispatch loop; orders concatenate in site order.
+    pub fn try_dispatch(&mut self) -> Vec<DispatchOrder> {
+        if self.sites.len() == 1 {
+            return self.sites[0].try_dispatch();
+        }
+        let mut orders = Vec::new();
+        for c in self.sites.iter_mut() {
+            orders.append(&mut c.try_dispatch());
+        }
+        orders
+    }
+
+    /// Run one global shard's dispatch loop
+    /// (`global = site × shards_per_site + local`).
+    pub fn try_dispatch_shard(&mut self, g: usize) -> Vec<DispatchOrder> {
+        self.sites[g / self.shards_per_site].try_dispatch_shard(g % self.shards_per_site)
+    }
+
+    /// Drain every site to quiescence; returns tasks dispatched.
+    pub fn drain_all(&mut self) -> u64 {
+        self.sites.iter_mut().map(|c| c.drain_all()).sum()
+    }
+
+    /// Total dispatcher shards across sites.
+    pub fn shard_count(&self) -> usize {
+        self.sites.len() * self.shards_per_site
+    }
+
+    /// The global shard owning executor `e`.
+    pub fn shard_of_executor(&self, e: ExecutorId) -> usize {
+        let s = self.topo.site_of(e);
+        s.index() * self.shards_per_site + self.sites[s.index()].shard_of_executor(e)
+    }
+
+    /// The dispatch policy in force (uniform across sites).
+    pub fn policy(&self) -> DispatchPolicy {
+        self.sites[0].policy()
+    }
+
+    /// The shared object catalog.
+    pub fn catalog(&self) -> &Catalog {
+        self.sites[0].catalog()
+    }
+
+    /// The index backend label (uniform across sites).
+    pub fn backend(&self) -> &'static str {
+        self.sites[0].backend()
+    }
+
+    // ---- executor membership -------------------------------------------
+
+    /// Register executor `e` (at its owning site) with `capacity` slots.
+    pub fn register_executor_with(&mut self, e: ExecutorId, capacity: usize) {
+        let s = self.topo.site_of(e);
+        self.sites[s.index()].register_executor_with(e, capacity);
+        if let Err(pos) = self.all.binary_search(&e) {
+            self.all.insert(pos, e);
+        }
+    }
+
+    /// Deregister executor `e`; returns the objects its departure
+    /// removed from the site index.
+    pub fn deregister_executor(&mut self, e: ExecutorId) -> Vec<ObjectId> {
+        let s = self.topo.site_of(e);
+        if let Ok(pos) = self.all.binary_search(&e) {
+            self.all.remove(pos);
+        }
+        if let Some(g) = self.global.as_mut() {
+            g.drop_executor(e);
+        }
+        self.sites[s.index()].deregister_executor(e)
+    }
+
+    /// All registered executors, ascending.
+    pub fn executors(&self) -> &[ExecutorId] {
+        &self.all
+    }
+
+    /// Registered executors across all sites.
+    pub fn executor_count(&self) -> usize {
+        self.all.len()
+    }
+
+    /// Idle executors across all sites.
+    pub fn idle_count(&self) -> usize {
+        self.sites.iter().map(|c| c.idle_count()).sum()
+    }
+
+    /// Executors with no running work anywhere, ascending.
+    pub fn quiescent_executors(&self) -> Vec<ExecutorId> {
+        if self.sites.len() == 1 {
+            return self.sites[0].quiescent_executors();
+        }
+        let mut q: Vec<ExecutorId> = self
+            .sites
+            .iter()
+            .flat_map(|c| c.quiescent_executors())
+            .collect();
+        q.sort_unstable();
+        q
+    }
+
+    /// Executor busy fraction (dispatch-time load signal).
+    pub fn busy_fraction(&self, e: ExecutorId) -> f64 {
+        self.sites[self.topo.site_of(e).index()].busy_fraction(e)
+    }
+
+    // ---- queue state ----------------------------------------------------
+
+    /// Waiting tasks across all sites.
+    pub fn queue_len(&self) -> usize {
+        self.sites.iter().map(|c| c.queue_len()).sum()
+    }
+
+    /// Waiting tasks at one site.
+    pub fn site_queue_len(&self, s: SiteId) -> usize {
+        self.sites[s.index()].queue_len()
+    }
+
+    /// Ready (dispatchable now) tasks across all sites.
+    pub fn ready_len(&self) -> usize {
+        self.sites.iter().map(|c| c.ready_len()).sum()
+    }
+
+    /// Harvest and reset the summed per-site queue peaks.
+    pub fn take_queue_peak(&mut self) -> usize {
+        self.sites.iter_mut().map(|c| c.take_queue_peak()).sum()
+    }
+
+    /// Harvest and reset one site's queue high-water mark (per-site
+    /// provisioners size their pools against local demand only).
+    pub fn site_take_queue_peak(&mut self, s: SiteId) -> usize {
+        self.sites[s.index()].take_queue_peak()
+    }
+
+    /// (submitted, dispatched, completed) across all sites.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        self.sites.iter().fold((0, 0, 0), |acc, c| {
+            let x = c.counters();
+            (acc.0 + x.0, acc.1 + x.1, acc.2 + x.2)
+        })
+    }
+
+    // ---- index + cache coherence ---------------------------------------
+
+    /// Cost of resolving `obj` from executor `e`'s site index.
+    pub fn lookup_cost_for(&self, e: ExecutorId, obj: ObjectId) -> LookupCost {
+        self.sites[self.topo.site_of(e).index()].lookup_cost_for(e, obj)
+    }
+
+    /// Locations of `obj` as seen from executor `e`'s site index.
+    pub fn locations_for(&self, e: ExecutorId, obj: ObjectId) -> &[ExecutorId] {
+        self.sites[self.topo.site_of(e).index()].locations_for(e, obj)
+    }
+
+    /// A holder of `obj` at some *other* site than executor `e`'s, with
+    /// the WAN lookup cost of finding it. `None` with one site, when the
+    /// object is cached at `e`'s own site (local hints cover that), or
+    /// when no site caches it.
+    pub fn remote_holder(&self, e: ExecutorId, obj: ObjectId) -> Option<(ExecutorId, LookupCost)> {
+        let global = self.global.as_ref()?;
+        let from = self.topo.site_of(e);
+        let (hit, cost) = global.locate(from, obj);
+        let (site, holders) = hit?;
+        if site == from {
+            return None;
+        }
+        let src = *holders.first()?;
+        Some((src, cost))
+    }
+
+    /// Apply buffered cache events from `e` at task completion.
+    pub fn on_task_complete(&mut self, e: ExecutorId, task: TaskId, events: &[CacheEvent]) {
+        self.mirror_events(e, events);
+        self.sites[self.topo.site_of(e).index()].on_task_complete(e, task, events);
+    }
+
+    /// Apply cache events outside task completion (prewarm, staging).
+    pub fn apply_cache_events(&mut self, e: ExecutorId, events: &[CacheEvent]) {
+        self.mirror_events(e, events);
+        self.sites[self.topo.site_of(e).index()].apply_cache_events(e, events);
+    }
+
+    /// Harvest control-plane traffic from every site's index slices.
+    pub fn take_index_control(&mut self) -> ControlTraffic {
+        let mut total = ControlTraffic::default();
+        for c in self.sites.iter_mut() {
+            let t = c.take_index_control();
+            total.stabilization_msgs += t.stabilization_msgs;
+            total.misroutes += t.misroutes;
+            total.update_msgs += t.update_msgs;
+            total.latency_s += t.latency_s;
+        }
+        total
+    }
+
+    /// Keep the global directory in step with a site's cache updates.
+    fn mirror_events(&mut self, e: ExecutorId, events: &[CacheEvent]) {
+        let Some(g) = self.global.as_mut() else { return };
+        for ev in events {
+            match *ev {
+                CacheEvent::Inserted(obj) => g.insert(obj, e),
+                CacheEvent::Evicted(obj) => g.remove(obj, e),
+            }
+        }
+    }
+
+    // ---- replication ----------------------------------------------------
+
+    /// Turn on proactive replication at every site.
+    pub fn enable_replication(&mut self, cfg: &ReplicationConfig) {
+        for c in self.sites.iter_mut() {
+            c.enable_replication(cfg);
+        }
+    }
+
+    /// Whether any site replicates.
+    pub fn replication_enabled(&self) -> bool {
+        self.sites.iter().any(|c| c.replication_enabled())
+    }
+
+    /// Replica-directory entries across all sites.
+    pub fn replica_location_entries(&self) -> usize {
+        self.sites.iter().map(|c| c.replica_location_entries()).sum()
+    }
+
+    /// Collect staging directives from every site.
+    pub fn poll_replication(&mut self) -> Vec<ReplicaDirective> {
+        if self.sites.len() == 1 {
+            return self.sites[0].poll_replication();
+        }
+        let mut dirs = Vec::new();
+        for c in self.sites.iter_mut() {
+            dirs.append(&mut c.poll_replication());
+        }
+        dirs
+    }
+
+    /// Note a peer fetch of `obj` toward `dst` (replication demand).
+    pub fn note_peer_fetch(&mut self, obj: ObjectId, dst: ExecutorId) {
+        self.sites[self.topo.site_of(dst).index()].note_peer_fetch(obj, dst);
+    }
+
+    /// A staged replica of `obj` landed at `dst`.
+    pub fn replication_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
+        if let Some(g) = self.global.as_mut() {
+            g.insert(obj, dst);
+        }
+        self.sites[self.topo.site_of(dst).index()].replication_staged(obj, dst);
+    }
+
+    /// A staged replica of `obj` was evicted from `victim`.
+    pub fn replication_dropped(&mut self, obj: ObjectId, victim: ExecutorId) {
+        if let Some(g) = self.global.as_mut() {
+            g.remove(obj, victim);
+        }
+        self.sites[self.topo.site_of(victim).index()].replication_dropped(obj, victim);
+    }
+
+    // ---- diagnostics -----------------------------------------------------
+
+    /// Merged work-stealing / batching statistics across sites.
+    pub fn shard_stats(&self) -> ShardStats {
+        let mut total = ShardStats::default();
+        for c in &self.sites {
+            let s = c.shard_stats();
+            total.steals += s.steals;
+            total.stolen_tasks += s.stolen_tasks;
+            total.batches += s.batches;
+            for (t, x) in total.batch_hist.iter_mut().zip(s.batch_hist) {
+                *t += x;
+            }
+            total.queue_depths.extend(s.queue_depths);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::PlacementMode;
+    use super::*;
+    use crate::config::SiteConfig;
+    use crate::util::units::MB;
+
+    fn catalog(n: u64) -> Catalog {
+        let mut c = Catalog::new();
+        for i in 0..n {
+            c.insert(ObjectId(i), MB);
+        }
+        c
+    }
+
+    fn two_site_cfg() -> Config {
+        let mut cfg = Config::with_nodes(8);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 4, ..SiteConfig::default() },
+            SiteConfig { nodes: 4, ..SiteConfig::default() },
+        ];
+        cfg
+    }
+
+    fn fed(cfg: &Config, objects: u64) -> FedCore {
+        let mut core = FedCore::new(cfg, catalog(objects));
+        for e in 0..cfg.testbed.nodes {
+            core.register_executor_with(e, 2);
+        }
+        core
+    }
+
+    #[test]
+    fn single_site_is_passthrough() {
+        let cfg = Config::with_nodes(4);
+        let mut core = fed(&cfg, 8);
+        assert_eq!(core.site_count(), 1);
+        assert_eq!(core.shard_count(), cfg.coordinator.shards.max(1));
+        for i in 0..8u64 {
+            assert_eq!(core.submit(Task::with_inputs(TaskId(i), vec![ObjectId(i)])), SiteId::HOME);
+        }
+        let orders = core.try_dispatch();
+        assert_eq!(orders.len(), 8);
+        assert_eq!(core.cross_site_tasks(), 0);
+        let cost = core.take_route_cost();
+        assert_eq!(cost.lookups, 0, "no routing charges with one site");
+    }
+
+    #[test]
+    fn membership_merges_across_sites() {
+        let cfg = two_site_cfg();
+        let mut core = fed(&cfg, 4);
+        assert_eq!(core.executor_count(), 8);
+        assert_eq!(core.executors(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(core.site(SiteId(0)).executor_count(), 4);
+        assert_eq!(core.site(SiteId(1)).executor_count(), 4);
+        core.deregister_executor(5);
+        assert_eq!(core.executor_count(), 7);
+        assert_eq!(core.site(SiteId(1)).executor_count(), 3);
+        assert!(!core.executors().contains(&5));
+    }
+
+    #[test]
+    fn shard_packing_is_global() {
+        let mut cfg = two_site_cfg();
+        cfg.coordinator.shards = 2;
+        let core = fed(&cfg, 4);
+        assert_eq!(core.shard_count(), 4);
+        // Site 0 executors land in shards 0..2, site 1 in shards 2..4.
+        for e in 0..4 {
+            assert!(core.shard_of_executor(e) < 2, "exec {e}");
+        }
+        for e in 4..8 {
+            let g = core.shard_of_executor(e);
+            assert!((2..4).contains(&g), "exec {e} -> {g}");
+        }
+    }
+
+    #[test]
+    fn cache_events_mirror_into_global_directory() {
+        let cfg = two_site_cfg();
+        let mut core = fed(&cfg, 4);
+        // Executor 6 (site 1) caches object 2.
+        core.apply_cache_events(6, &[CacheEvent::Inserted(ObjectId(2))]);
+        // From site 0 the holder is remote; from site 1 it is local.
+        let (src, cost) = core.remote_holder(0, ObjectId(2)).expect("remote holder");
+        assert_eq!(src, 6);
+        assert!(cost.latency_s > 0.0, "WAN round-trip charged");
+        assert!(core.remote_holder(6, ObjectId(2)).is_none(), "own site is not remote");
+        // Eviction clears it.
+        core.apply_cache_events(6, &[CacheEvent::Evicted(ObjectId(2))]);
+        assert!(core.remote_holder(0, ObjectId(2)).is_none());
+    }
+
+    #[test]
+    fn affinity_submit_ships_task_to_holding_site() {
+        let cfg = two_site_cfg();
+        let mut core = fed(&cfg, 4);
+        core.apply_cache_events(7, &[CacheEvent::Inserted(ObjectId(3))]);
+        // Find a task id originating at site 0 so the placement is a
+        // genuine cross-site decision.
+        let t = (0..100)
+            .find(|&t| {
+                FederationScheduler::new(
+                    core.topology().clone(),
+                    PlacementMode::Affinity,
+                    0.0,
+                    1.0,
+                    cfg.seed,
+                )
+                .origin_site(t)
+                    == SiteId::HOME
+            })
+            .unwrap();
+        let chosen = core.submit(Task::with_inputs(TaskId(t), vec![ObjectId(3)]));
+        assert_eq!(chosen, SiteId(1), "task follows its cached input");
+        assert_eq!(core.cross_site_tasks(), 1);
+        assert!(core.take_route_cost().lookups > 0, "routing consults the directory");
+        assert_eq!(core.site(SiteId(1)).queue_len() + core.site(SiteId(1)).ready_len(), 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Federated cache-location lookup: per-site directories under one roof.
+//!
+//! Each site keeps its own location directory (a zero-cost
+//! [`CentralIndex`] slice — the *intra-site* lookup cost is already
+//! charged by the site's own `DataIndex` backend; this layer only prices
+//! the *cross-site* part). [`GlobalIndex::locate`] resolves an object by
+//! asking the querying site's own directory first, then peers in
+//! ascending site order, charging one WAN round-trip per off-site
+//! directory consulted.
+//!
+//! Because inserts route by the owning site of the caching executor, a
+//! site's directory can only ever name executors inside that site's
+//! range — the invariant the federation property tests pin.
+
+use crate::index::{CentralIndex, DataIndex, ExecutorId, LookupCost};
+use crate::storage::object::ObjectId;
+
+use super::{SiteId, Topology};
+
+/// Thin federation layer over per-site location directories.
+#[derive(Debug)]
+pub struct GlobalIndex {
+    topo: Topology,
+    per_site: Vec<CentralIndex>,
+}
+
+impl GlobalIndex {
+    /// One empty directory per site in `topo`.
+    pub fn new(topo: Topology) -> GlobalIndex {
+        let per_site = (0..topo.sites()).map(|_| CentralIndex::with_cost(0.0)).collect();
+        GlobalIndex { topo, per_site }
+    }
+
+    /// Record that `exec` (at its owning site) now caches `obj`.
+    pub fn insert(&mut self, obj: ObjectId, exec: ExecutorId) {
+        let s = self.topo.site_of(exec);
+        self.per_site[s.index()].insert(obj, exec);
+    }
+
+    /// Forget one replica.
+    pub fn remove(&mut self, obj: ObjectId, exec: ExecutorId) {
+        let s = self.topo.site_of(exec);
+        self.per_site[s.index()].remove(obj, exec);
+    }
+
+    /// Drop every entry naming `exec` (site departure / churn).
+    pub fn drop_executor(&mut self, exec: ExecutorId) -> Vec<ObjectId> {
+        let s = self.topo.site_of(exec);
+        self.per_site[s.index()].drop_executor(exec)
+    }
+
+    /// Find a site caching `obj`, searching the querying site's own
+    /// directory first and then peers in ascending site order. The cost
+    /// charges one lookup per directory consulted plus a WAN round-trip
+    /// (and a hop) for each *off-site* directory.
+    pub fn locate(
+        &self,
+        from: SiteId,
+        obj: ObjectId,
+    ) -> (Option<(SiteId, &[ExecutorId])>, LookupCost) {
+        let mut cost = LookupCost::ZERO;
+        let order = std::iter::once(from)
+            .chain((0..self.topo.sites() as u32).map(SiteId).filter(|&s| s != from));
+        for s in order {
+            cost.lookups += 1;
+            if s != from {
+                cost.hops += 1;
+                cost.latency_s += 2.0 * self.topo.wan_latency_s(from, s);
+            }
+            let locs = self.per_site[s.index()].locations(obj);
+            if !locs.is_empty() {
+                return (Some((s, locs)), cost);
+            }
+        }
+        (None, cost)
+    }
+
+    /// Executors at site `s` caching `obj` (empty if none).
+    pub fn site_locations(&self, s: SiteId, obj: ObjectId) -> &[ExecutorId] {
+        self.per_site[s.index()].locations(obj)
+    }
+
+    /// Total location entries across all site directories.
+    pub fn entries(&self) -> usize {
+        self.per_site.iter().map(|i| i.entries()).sum()
+    }
+
+    /// The topology this index partitions by.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, SiteConfig};
+
+    fn topo2() -> Topology {
+        let mut cfg = Config::with_nodes(12);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 8, ..SiteConfig::default() },
+            SiteConfig { nodes: 4, ..SiteConfig::default() },
+        ];
+        Topology::from_config(&cfg)
+    }
+
+    #[test]
+    fn inserts_route_to_owning_site() {
+        let mut g = GlobalIndex::new(topo2());
+        g.insert(ObjectId(1), 2); // site 0
+        g.insert(ObjectId(1), 9); // site 1
+        assert_eq!(g.site_locations(SiteId(0), ObjectId(1)), &[2]);
+        assert_eq!(g.site_locations(SiteId(1), ObjectId(1)), &[9]);
+        assert_eq!(g.entries(), 2);
+        g.remove(ObjectId(1), 9);
+        assert!(g.site_locations(SiteId(1), ObjectId(1)).is_empty());
+    }
+
+    #[test]
+    fn locate_prefers_home_and_charges_wan_for_peers() {
+        let mut g = GlobalIndex::new(topo2());
+        g.insert(ObjectId(7), 1); // site 0
+        g.insert(ObjectId(7), 10); // site 1
+
+        // Both sites hold it: each site finds its own copy for free.
+        let (hit, cost) = g.locate(SiteId(1), ObjectId(7));
+        assert_eq!(hit, Some((SiteId(1), &[10usize][..])));
+        assert_eq!((cost.lookups, cost.hops), (1, 0));
+        assert!(cost.latency_s.abs() < 1e-12);
+
+        // Only site 0 holds it: site 1 pays one WAN round-trip.
+        g.remove(ObjectId(7), 10);
+        let (hit, cost) = g.locate(SiteId(1), ObjectId(7));
+        assert_eq!(hit, Some((SiteId(0), &[1usize][..])));
+        assert_eq!((cost.lookups, cost.hops), (2, 1));
+        let rtt = 2.0 * g.topology().wan_latency_s(SiteId(1), SiteId(0));
+        assert!((cost.latency_s - rtt).abs() < 1e-12);
+
+        // Nowhere: every directory consulted, all misses charged.
+        let (hit, cost) = g.locate(SiteId(0), ObjectId(99));
+        assert_eq!(hit, None);
+        assert_eq!((cost.lookups, cost.hops), (2, 1));
+    }
+
+    #[test]
+    fn drop_executor_clears_only_its_site() {
+        let mut g = GlobalIndex::new(topo2());
+        g.insert(ObjectId(1), 3);
+        g.insert(ObjectId(2), 3);
+        g.insert(ObjectId(1), 11);
+        let mut dropped = g.drop_executor(3);
+        dropped.sort_unstable();
+        assert_eq!(dropped, vec![ObjectId(1), ObjectId(2)]);
+        assert_eq!(g.site_locations(SiteId(1), ObjectId(1)), &[11]);
+        assert_eq!(g.entries(), 1);
+    }
+}

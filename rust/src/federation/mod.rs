@@ -1,0 +1,238 @@
+//! Multi-cluster federation (Pilot-Data, arXiv:1301.6228).
+//!
+//! Generalizes the single-cluster data-diffusion loop to a *federation*
+//! of sites: each `[[site]]` config table is an independent cluster with
+//! its own contiguous executor range, its own dispatcher shards, its own
+//! provisioner, and its own slice of the cache-location index. Sites are
+//! joined by a WAN fabric that is much slower (and higher-latency) than
+//! any intra-site path, which makes *where a task runs* the dominant
+//! cost decision — exactly the regime Pilot-Data's affinity scheduling
+//! targets.
+//!
+//! ## Site topology
+//!
+//! [`Topology`] pins the site layout for a run:
+//!
+//! * **Executor ranges** — site `s` owns the contiguous executor ids
+//!   `first[s]..first[s+1]`, in `[[site]]` declaration order. Everything
+//!   (index slices, provisioners, dispatch shards) partitions along
+//!   these ranges; [`GlobalIndex`] enforces that no site's directory
+//!   ever reports a location outside its own range.
+//! * **LAN caps** — each site has one aggregate LAN resource that every
+//!   non-node-local transfer inside the site crosses (GPFS traffic,
+//!   peer-to-peer staging), modeling the site backplane.
+//! * **WAN matrix** — every ordered site pair has a WAN link whose
+//!   capacity is the slower of the two endpoints' uplinks and whose
+//!   latency is the sum of their backbone latencies. Cross-site flows
+//!   cross the WAN link *and* both LANs, and they carry transfer-class
+//!   weights like any other flow — QoS pacing applies on WAN links too.
+//!
+//! Site 0 is the **home site**: it hosts the shared filesystem, so GPFS
+//! reads from (and writes by) any other site traverse the WAN.
+//!
+//! ## The ship-task / ship-data contract
+//!
+//! Every submitted task has an *origin* site (where its user lives —
+//! derived deterministically from the task id plus the configured skew).
+//! The [`FederationScheduler`] then picks the site the task actually
+//! runs at:
+//!
+//! * **ship the task** to the site already caching its inputs — pay a
+//!   dispatch hop, save the transfer; or
+//! * **ship the data** — run it where queues are short and accept the
+//!   WAN fetch for whatever bytes are missing.
+//!
+//! The affinity score is the estimated WAN transfer time of the missing
+//! bytes (source = the holding site found home-first through the
+//! [`GlobalIndex`], else GPFS at site 0) plus a queue-depth penalty
+//! (`queue_weight_s × queued-per-executor`); the task goes to the
+//! argmin, ties to the lower site id. `AlwaysHome` (run at the origin)
+//! and `RandomSite` (uniform) are the measured baselines the
+//! `fig_federation` sweep compares against.
+//!
+//! With a single site every type here collapses to a passthrough —
+//! [`FedCore`] delegates 1:1 to one [`crate::coordinator::ShardedCore`]
+//! and the simulation reproduces pre-federation behavior bit-for-bit.
+
+pub mod core;
+pub mod index;
+pub mod sched;
+
+pub use self::core::FedCore;
+pub use index::GlobalIndex;
+pub use sched::{FederationScheduler, PlacementMode};
+
+use crate::config::Config;
+
+/// Identifies a federation site (one member cluster). Site 0 is the
+/// *home* site: it hosts the shared filesystem, and single-site configs
+/// collapse to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId(pub u32);
+
+impl SiteId {
+    /// The home site (shared-filesystem host).
+    pub const HOME: SiteId = SiteId(0);
+
+    /// Index into per-site vectors.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Per-site executor ranges plus the WAN fabric between sites (see the
+/// module docs for the full contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Prefix sums of site sizes: site `s` owns executors
+    /// `first[s]..first[s+1]`; `first.len() == sites + 1`.
+    first: Vec<usize>,
+    /// Per-site LAN aggregate capacity, bits/sec.
+    lan_bps: Vec<f64>,
+    /// Row-major `sites × sites` pairwise WAN capacity (min of the two
+    /// endpoints' uplinks), bits/sec. Diagonal unused.
+    wan_bps: Vec<f64>,
+    /// Row-major pairwise one-way WAN latency (sum of the two
+    /// endpoints' backbone latencies), seconds. Diagonal zero.
+    wan_latency_s: Vec<f64>,
+}
+
+impl Topology {
+    /// Build the topology from `cfg.federation`. With no `[[site]]`
+    /// tables the whole testbed is one site with no WAN fabric.
+    pub fn from_config(cfg: &Config) -> Topology {
+        let sites = &cfg.federation.sites;
+        if sites.is_empty() {
+            return Topology {
+                first: vec![0, cfg.testbed.nodes],
+                lan_bps: vec![0.0],
+                wan_bps: vec![0.0],
+                wan_latency_s: vec![0.0],
+            };
+        }
+        let mut first = Vec::with_capacity(sites.len() + 1);
+        first.push(0usize);
+        for s in sites {
+            first.push(first.last().unwrap() + s.nodes);
+        }
+        let n = sites.len();
+        let mut wan_bps = vec![0.0; n * n];
+        let mut wan_latency_s = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    wan_bps[i * n + j] = sites[i].wan_bps.min(sites[j].wan_bps);
+                    wan_latency_s[i * n + j] = sites[i].wan_latency_s + sites[j].wan_latency_s;
+                }
+            }
+        }
+        Topology {
+            first,
+            lan_bps: sites.iter().map(|s| s.lan_bps).collect(),
+            wan_bps,
+            wan_latency_s,
+        }
+    }
+
+    /// Number of sites (>= 1).
+    pub fn sites(&self) -> usize {
+        self.first.len() - 1
+    }
+
+    /// Whether this is the degenerate single-site topology.
+    pub fn is_single(&self) -> bool {
+        self.sites() == 1
+    }
+
+    /// Total executor nodes across all sites.
+    pub fn nodes(&self) -> usize {
+        *self.first.last().unwrap()
+    }
+
+    /// The site owning executor `exec`. Ids at or past the last range
+    /// clamp to the last site (elastic pools never allocate outside
+    /// `0..nodes`, but stale ids must not panic).
+    pub fn site_of(&self, exec: usize) -> SiteId {
+        let s = self.first.partition_point(|&f| f <= exec);
+        SiteId((s.max(1).min(self.sites()) - 1) as u32)
+    }
+
+    /// The contiguous executor-id range site `s` owns.
+    pub fn executor_range(&self, s: SiteId) -> std::ops::Range<usize> {
+        self.first[s.index()]..self.first[s.index() + 1]
+    }
+
+    /// Executor nodes in site `s`.
+    pub fn site_nodes(&self, s: SiteId) -> usize {
+        self.executor_range(s).len()
+    }
+
+    /// Site `s`'s LAN aggregate capacity, bits/sec.
+    pub fn lan_bps(&self, s: SiteId) -> f64 {
+        self.lan_bps[s.index()]
+    }
+
+    /// WAN capacity between two distinct sites, bits/sec.
+    pub fn wan_bps(&self, from: SiteId, to: SiteId) -> f64 {
+        self.wan_bps[from.index() * self.sites() + to.index()]
+    }
+
+    /// One-way WAN latency between two sites, seconds (zero when
+    /// `from == to`).
+    pub fn wan_latency_s(&self, from: SiteId, to: SiteId) -> f64 {
+        self.wan_latency_s[from.index() * self.sites() + to.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SiteConfig;
+    use crate::util::units::gbps;
+
+    fn two_site_cfg() -> Config {
+        let mut cfg = Config::with_nodes(12);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 8, wan_bps: gbps(0.5), wan_latency_s: 0.02, ..SiteConfig::default() },
+            SiteConfig { nodes: 4, wan_bps: gbps(0.2), wan_latency_s: 0.03, ..SiteConfig::default() },
+        ];
+        cfg
+    }
+
+    #[test]
+    fn topology_partitions_executors_contiguously() {
+        let topo = Topology::from_config(&two_site_cfg());
+        assert_eq!(topo.sites(), 2);
+        assert_eq!(topo.nodes(), 12);
+        assert_eq!(topo.executor_range(SiteId(0)), 0..8);
+        assert_eq!(topo.executor_range(SiteId(1)), 8..12);
+        for e in 0..8 {
+            assert_eq!(topo.site_of(e), SiteId(0));
+        }
+        for e in 8..12 {
+            assert_eq!(topo.site_of(e), SiteId(1));
+        }
+        // Stale / out-of-range ids clamp rather than panic.
+        assert_eq!(topo.site_of(99), SiteId(1));
+    }
+
+    #[test]
+    fn wan_matrix_takes_min_uplink_and_summed_latency() {
+        let topo = Topology::from_config(&two_site_cfg());
+        let (a, b) = (SiteId(0), SiteId(1));
+        assert!((topo.wan_bps(a, b) - gbps(0.2)).abs() < 1.0, "min of uplinks");
+        assert!((topo.wan_bps(b, a) - gbps(0.2)).abs() < 1.0);
+        assert!((topo.wan_latency_s(a, b) - 0.05).abs() < 1e-12, "sum of latencies");
+        assert!((topo.wan_latency_s(a, a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_site_topology_is_degenerate() {
+        let topo = Topology::from_config(&Config::with_nodes(5));
+        assert!(topo.is_single());
+        assert_eq!(topo.sites(), 1);
+        assert_eq!(topo.executor_range(SiteId::HOME), 0..5);
+        assert_eq!(topo.site_of(4), SiteId::HOME);
+    }
+}

@@ -1,0 +1,277 @@
+//! Site placement: ship-task vs ship-data (Pilot-Data §affinity).
+//!
+//! For every submitted task the federation must pick the site it runs
+//! at. [`FederationScheduler`] implements the affinity policy from
+//! Pilot-Data (arXiv:1301.6228) — estimate the WAN time to move each
+//! input to each candidate site, add a queue-depth penalty, run where
+//! the sum is smallest — plus the two baselines the `fig_federation`
+//! sweep measures it against ([`PlacementMode::AlwaysHome`],
+//! [`PlacementMode::RandomSite`]).
+//!
+//! Origins are synthetic: task `t`'s submitting user lives at a site
+//! derived deterministically from `t` (so reruns are reproducible), with
+//! a configurable `skew` fraction pinned to the home site to model the
+//! common one-hot-site workload.
+
+use crate::util::rng::Rng;
+
+use super::{SiteId, Topology};
+
+/// Distinguishes the origin draw from the random-placement draw so the
+/// two hash streams stay independent for the same task id.
+const ORIGIN_SALT: u64 = 0x9E6C_8FBB_52B8_3E55;
+const RANDOM_SALT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// Which site-placement policy the federation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementMode {
+    /// Pilot-Data affinity: weigh estimated WAN transfer time of the
+    /// missing inputs against remote queue depth, run at the argmin.
+    #[default]
+    Affinity,
+    /// Always run at the task's origin site (no federation awareness).
+    AlwaysHome,
+    /// Uniform-random site (load spreading with no data awareness).
+    RandomSite,
+}
+
+impl PlacementMode {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<PlacementMode> {
+        match s {
+            "affinity" => Some(PlacementMode::Affinity),
+            "home" | "always_home" => Some(PlacementMode::AlwaysHome),
+            "random" | "random_site" => Some(PlacementMode::RandomSite),
+            _ => None,
+        }
+    }
+
+    /// Canonical label (CSV columns, figure legends).
+    pub fn label(self) -> &'static str {
+        match self {
+            PlacementMode::Affinity => "affinity",
+            PlacementMode::AlwaysHome => "home",
+            PlacementMode::RandomSite => "random",
+        }
+    }
+}
+
+/// A candidate site's scheduling load, as seen at submit time.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteLoad {
+    /// Tasks waiting (not yet dispatched) at the site.
+    pub queued: usize,
+    /// Executors currently registered at the site.
+    pub executors: usize,
+}
+
+/// Picks the run site for each task (see module docs).
+#[derive(Debug, Clone)]
+pub struct FederationScheduler {
+    topo: Topology,
+    mode: PlacementMode,
+    /// Fraction of task origins pinned to the home site; the rest are
+    /// uniform across all sites.
+    skew: f64,
+    /// Seconds of estimated delay charged per queued-task-per-executor
+    /// at a candidate site (converts queue depth into the same unit as
+    /// WAN transfer time).
+    queue_weight_s: f64,
+    seed: u64,
+}
+
+impl FederationScheduler {
+    /// Build a scheduler over `topo` with the configured policy knobs.
+    pub fn new(
+        topo: Topology,
+        mode: PlacementMode,
+        skew: f64,
+        queue_weight_s: f64,
+        seed: u64,
+    ) -> FederationScheduler {
+        FederationScheduler {
+            topo,
+            mode,
+            skew,
+            queue_weight_s,
+            seed,
+        }
+    }
+
+    /// The placement policy in force.
+    pub fn mode(&self) -> PlacementMode {
+        self.mode
+    }
+
+    /// The site task `task` originates from: home with probability
+    /// `skew`, else uniform. Deterministic in (seed, task).
+    pub fn origin_site(&self, task: u64) -> SiteId {
+        let n = self.topo.sites();
+        if n <= 1 {
+            return SiteId::HOME;
+        }
+        let mut r = Rng::new(self.seed ^ task.wrapping_mul(ORIGIN_SALT));
+        if r.next_f64() < self.skew {
+            SiteId::HOME
+        } else {
+            SiteId(r.below(n as u64) as u32)
+        }
+    }
+
+    /// Pick the site task `task` runs at. `inputs` is `(stored bytes,
+    /// holding site if some cache has it)` per input — inputs nowhere
+    /// cached fall back to GPFS at the home site. `load` must have one
+    /// entry per site.
+    pub fn choose(&self, task: u64, inputs: &[(u64, Option<SiteId>)], load: &[SiteLoad]) -> SiteId {
+        let n = self.topo.sites();
+        if n <= 1 {
+            return SiteId::HOME;
+        }
+        match self.mode {
+            PlacementMode::AlwaysHome => self.origin_site(task),
+            PlacementMode::RandomSite => {
+                let mut r = Rng::new(self.seed ^ task.wrapping_mul(RANDOM_SALT));
+                SiteId(r.below(n as u64) as u32)
+            }
+            PlacementMode::Affinity => {
+                let mut best = SiteId::HOME;
+                let mut best_score = f64::INFINITY;
+                for s in 0..n {
+                    let site = SiteId(s as u32);
+                    let score = self.affinity_score(site, inputs, &load[s]);
+                    if score < best_score {
+                        best_score = score;
+                        best = site;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Estimated seconds until task start if placed at `site`: WAN time
+    /// for every input not already there, plus the queue penalty.
+    fn affinity_score(&self, site: SiteId, inputs: &[(u64, Option<SiteId>)], load: &SiteLoad) -> f64 {
+        let mut score = 0.0;
+        for &(bytes, holder) in inputs {
+            let src = holder.unwrap_or(SiteId::HOME);
+            if src != site {
+                let bps = self.topo.wan_bps(src, site).max(1.0);
+                score += bytes as f64 * 8.0 / bps + self.topo.wan_latency_s(src, site);
+            }
+        }
+        score + self.queue_weight_s * load.queued as f64 / load.executors.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, SiteConfig};
+    use crate::util::units::{gbps, MB};
+
+    fn topo2() -> Topology {
+        let mut cfg = Config::with_nodes(8);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 4, ..SiteConfig::default() },
+            SiteConfig { nodes: 4, ..SiteConfig::default() },
+        ];
+        Topology::from_config(&cfg)
+    }
+
+    fn idle(sites: usize) -> Vec<SiteLoad> {
+        vec![SiteLoad { queued: 0, executors: 4 }; sites]
+    }
+
+    #[test]
+    fn affinity_follows_the_data() {
+        let sched =
+            FederationScheduler::new(topo2(), PlacementMode::Affinity, 0.0, 1.0, 42);
+        // One big input cached at site 1: ship the task there.
+        let inputs = [(100 * MB, Some(SiteId(1)))];
+        assert_eq!(sched.choose(7, &inputs, &idle(2)), SiteId(1));
+        // Uncached input: GPFS lives at home, stay home.
+        let inputs = [(100 * MB, None)];
+        assert_eq!(sched.choose(7, &inputs, &idle(2)), SiteId::HOME);
+    }
+
+    #[test]
+    fn deep_queues_overcome_affinity() {
+        let sched =
+            FederationScheduler::new(topo2(), PlacementMode::Affinity, 0.0, 1.0, 42);
+        let inputs = [(MB, Some(SiteId(1)))];
+        // ~1 MB over a 0.2 Gb/s WAN is ~0.04 s; a 4-deep-per-executor
+        // queue at site 1 costs 4 s — run at the idle home site instead.
+        let load = [
+            SiteLoad { queued: 0, executors: 4 },
+            SiteLoad { queued: 16, executors: 4 },
+        ];
+        assert_eq!(sched.choose(7, &inputs, &load), SiteId::HOME);
+    }
+
+    #[test]
+    fn origin_skew_pins_to_home() {
+        let pinned =
+            FederationScheduler::new(topo2(), PlacementMode::Affinity, 1.0, 1.0, 42);
+        for t in 0..200 {
+            assert_eq!(pinned.origin_site(t), SiteId::HOME);
+        }
+        let uniform =
+            FederationScheduler::new(topo2(), PlacementMode::Affinity, 0.0, 1.0, 42);
+        let offsite = (0..200).filter(|&t| uniform.origin_site(t) != SiteId::HOME).count();
+        assert!(offsite > 50, "uniform origins must reach other sites: {offsite}");
+        // Deterministic in (seed, task).
+        assert_eq!(uniform.origin_site(17), uniform.origin_site(17));
+    }
+
+    #[test]
+    fn baselines_ignore_data_location() {
+        let inputs = [(100 * MB, Some(SiteId(1)))];
+        let home =
+            FederationScheduler::new(topo2(), PlacementMode::AlwaysHome, 1.0, 1.0, 42);
+        assert_eq!(home.choose(3, &inputs, &idle(2)), home.origin_site(3));
+        let random =
+            FederationScheduler::new(topo2(), PlacementMode::RandomSite, 0.0, 1.0, 42);
+        let hits: Vec<SiteId> = (0..100).map(|t| random.choose(t, &inputs, &idle(2))).collect();
+        assert!(hits.iter().any(|&s| s == SiteId(0)));
+        assert!(hits.iter().any(|&s| s == SiteId(1)));
+    }
+
+    #[test]
+    fn mode_labels_round_trip() {
+        for mode in [
+            PlacementMode::Affinity,
+            PlacementMode::AlwaysHome,
+            PlacementMode::RandomSite,
+        ] {
+            assert_eq!(PlacementMode::parse(mode.label()), Some(mode));
+        }
+        assert_eq!(PlacementMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn single_site_short_circuits() {
+        let topo = Topology::from_config(&Config::with_nodes(4));
+        let sched =
+            FederationScheduler::new(topo, PlacementMode::RandomSite, 0.5, 1.0, 42);
+        assert_eq!(sched.origin_site(9), SiteId::HOME);
+        assert_eq!(sched.choose(9, &[(MB, None)], &idle(1)), SiteId::HOME);
+    }
+
+    #[test]
+    fn wan_bandwidth_asymmetry_matters() {
+        // Site 2 has a fat uplink; data there is cheap to leave behind.
+        let mut cfg = Config::with_nodes(12);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 4, wan_bps: gbps(0.5), ..SiteConfig::default() },
+            SiteConfig { nodes: 4, wan_bps: gbps(0.01), ..SiteConfig::default() },
+            SiteConfig { nodes: 4, wan_bps: gbps(0.5), ..SiteConfig::default() },
+        ];
+        let topo = Topology::from_config(&cfg);
+        let sched = FederationScheduler::new(topo, PlacementMode::Affinity, 0.0, 1.0, 42);
+        // Input pinned behind site 1's thin uplink: fetching it anywhere
+        // else costs ~80 s, so affinity ships the task to site 1.
+        let inputs = [(100 * MB, Some(SiteId(1)))];
+        assert_eq!(sched.choose(7, &inputs, &idle(3)), SiteId(1));
+    }
+}

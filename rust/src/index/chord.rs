@@ -40,11 +40,16 @@
 //! same-destination updates rather than routing each record separately,
 //! and sharded dispatch would otherwise multiply per-record traffic.
 //! Records accumulate in a per-owner pending set
-//! ([`ChordIndex::update_batching`] exposes the records/trains ratio);
-//! [`DataIndex::take_control_traffic`] flushes one routed message train
-//! per pending owner — O(log N) measured hops on the real finger
-//! tables, charged as control messages — so `update_msgs` keeps its
-//! *messages, not records* semantics. A membership change queues every
+//! ([`ChordIndex::update_batching`] exposes the records/trains ratio)
+//! and drain on a **size/age threshold**
+//! ([`ChordIndex::set_flush_policy`]): queueing the record that fills
+//! the bounded buffer flushes inline, and a batch that has been seen by
+//! `flush_age` control-traffic harvests flushes then — the default age
+//! of 1 drains every harvest, while a larger age deliberately delays
+//! billing to grow bigger trains. A flush routes one message train per
+//! pending owner — O(log N) measured hops on the real finger tables,
+//! charged as control messages — so `update_msgs` keeps its *messages,
+//! not records* semantics. A membership change queues every
 //! location record whose owner moved (grouped under its **new** owner),
 //! and a deregistration's purge queues one eviction record per object
 //! the departing executor held. The centralized index pays none of
@@ -98,6 +103,18 @@ pub struct ChordIndex {
     batched_records: u64,
     /// Lifetime count of per-owner message trains flushed.
     batched_trains: u64,
+    /// Records currently queued across all pending owner batches.
+    pending_record_total: u64,
+    /// Harvests the oldest unflushed batch has survived.
+    pending_age: u32,
+    /// Size threshold: queueing the record that reaches this total
+    /// force-flushes inline (a real buffer is bounded).
+    flush_records: u64,
+    /// Age threshold, in control-traffic harvests: a pending batch
+    /// flushes once it has been seen by this many harvests. 1 (the
+    /// default) flushes at the first harvest after queueing — the
+    /// pre-threshold behavior.
+    flush_age: u32,
     /// Stale-finger misroutes charged since the last harvest.
     pending_misroutes: Cell<u64>,
     /// Lookups left in the current post-rebuild stale window: each pays
@@ -124,6 +141,10 @@ impl ChordIndex {
             update_queries: 0,
             batched_records: 0,
             batched_trains: 0,
+            pending_record_total: 0,
+            pending_age: 0,
+            flush_records: 1024,
+            flush_age: 1,
             pending_misroutes: Cell::new(0),
             stale_lookups: Cell::new(0),
         }
@@ -158,6 +179,22 @@ impl ChordIndex {
     /// per-owner piggybacking saves over routing each record separately.
     pub fn update_batching(&self) -> (u64, u64) {
         (self.batched_records, self.batched_trains)
+    }
+
+    /// Tune the batch flush policy: a pending batch drains when it holds
+    /// `max_records` records (inline, at queue time) or once `max_age`
+    /// control-traffic harvests have seen it — whichever trips first.
+    /// Defaults (1024 records, age 1) flush every harvest like the
+    /// pre-threshold code; a larger age trades billing latency for
+    /// bigger trains.
+    pub fn set_flush_policy(&mut self, max_records: u64, max_age: u32) {
+        self.flush_records = max_records.max(1);
+        self.flush_age = max_age.max(1);
+    }
+
+    /// Records queued and not yet billed to a message train.
+    pub fn pending_update_records(&self) -> u64 {
+        self.pending_record_total
     }
 
     /// Rebuild the overlay for the current membership, charging the
@@ -209,6 +246,7 @@ impl ChordIndex {
     /// immediate (placement never lags — the trait contract).
     fn queue_update(&mut self, obj: ObjectId) {
         self.batched_records += 1;
+        self.pending_record_total += 1;
         let owner = self.ring.owner_pos(obj);
         let slot = self.pending_updates.entry(owner).or_insert((0, obj));
         slot.0 += 1;
@@ -216,6 +254,11 @@ impl ChordIndex {
         // order records were queued in.
         if obj < slot.1 {
             slot.1 = obj;
+        }
+        // Size threshold: a bounded buffer flushes when full, however
+        // young the batch is.
+        if self.pending_record_total >= self.flush_records {
+            self.flush_updates();
         }
     }
 
@@ -225,6 +268,8 @@ impl ChordIndex {
     /// piggybacked on it. Separate rotation counter from lookups so
     /// update routing never perturbs `mean_hops`.
     fn flush_updates(&mut self) {
+        self.pending_record_total = 0;
+        self.pending_age = 0;
         if self.pending_updates.is_empty() {
             return;
         }
@@ -318,7 +363,14 @@ impl DataIndex for ChordIndex {
     }
 
     fn take_control_traffic(&mut self) -> ControlTraffic {
-        self.flush_updates();
+        // Age threshold: a pending batch rides out `flush_age - 1`
+        // harvests unbilled (batching delay), then drains.
+        if !self.pending_updates.is_empty() {
+            self.pending_age += 1;
+            if self.pending_age >= self.flush_age {
+                self.flush_updates();
+            }
+        }
         let msgs = std::mem::take(&mut self.pending_stab_msgs);
         let updates = std::mem::take(&mut self.pending_update_msgs);
         let misroutes = self.pending_misroutes.take();
@@ -568,6 +620,48 @@ mod tests {
         assert_eq!(ct.stabilization_msgs, 0);
         // Nothing left pending: the next harvest is free.
         assert!(idx.take_control_traffic().is_zero());
+    }
+
+    #[test]
+    fn flush_policy_delays_billing_until_a_threshold_trips() {
+        let mut idx = chord(16);
+        let _ = idx.take_control_traffic(); // drain the bootstrap bill
+
+        // Age threshold 3: a small batch rides out two harvests
+        // unbilled — the pinned batching delay — and drains on the third.
+        idx.set_flush_policy(1000, 3);
+        DataIndex::insert(&mut idx, ObjectId(1), 0);
+        DataIndex::insert(&mut idx, ObjectId(2), 1);
+        assert_eq!(idx.pending_update_records(), 2);
+        let (_, t0) = idx.update_batching();
+        assert_eq!(idx.take_control_traffic().update_msgs, 0, "age 1 of 3");
+        assert_eq!(idx.take_control_traffic().update_msgs, 0, "age 2 of 3");
+        assert_eq!(idx.pending_update_records(), 2, "still buffered");
+        assert_eq!(idx.update_batching().1, t0, "no train left yet");
+        let _ = idx.take_control_traffic();
+        assert!(
+            idx.update_batching().1 > t0,
+            "the third harvest flushes the aged batch"
+        );
+        assert_eq!(idx.pending_update_records(), 0);
+        assert!(idx.take_control_traffic().is_zero(), "drained");
+
+        // Size threshold 2: the record that fills the buffer flushes
+        // inline, at queue time, however young the batch is.
+        idx.set_flush_policy(2, 1000);
+        DataIndex::insert(&mut idx, ObjectId(3), 2);
+        assert_eq!(
+            idx.take_control_traffic().update_msgs,
+            0,
+            "one record stays under both thresholds"
+        );
+        let (_, t1) = idx.update_batching();
+        DataIndex::insert(&mut idx, ObjectId(4), 3);
+        assert_eq!(idx.pending_update_records(), 0, "second record filled the buffer");
+        assert!(
+            idx.update_batching().1 > t1,
+            "the full buffer flushed inline, not at a harvest"
+        );
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! | Diffusion figure (`--figure diffusion`, replication on/off) | [`analysis::figures`] |
 //! | QoS figure (`--figure qos`, share policy off/binary/weighted) | [`analysis::figures`] |
 //! | Simulator scalability figure (`--figure scale`, events/sec, peak RSS) | [`analysis::figures`], [`sim::engine`] |
+//! | Multi-cluster federation: site topology, WAN fabric, affinity placement (`--figure federation`, Pilot-Data) | [`federation`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |
@@ -48,6 +49,7 @@ pub mod config;
 pub mod coordinator;
 pub mod driver;
 pub mod error;
+pub mod federation;
 pub mod index;
 pub mod provisioner;
 pub mod replication;

@@ -26,8 +26,14 @@ pub struct ClusterProvider {
 impl ClusterProvider {
     /// Provider over `total_nodes` nodes with the given allocation latency.
     pub fn new(total_nodes: usize, latency_s: f64) -> Self {
+        ClusterProvider::with_range(0..total_nodes, latency_s)
+    }
+
+    /// Provider over an explicit node-id range (a federation site's
+    /// executor slice; `with_range(0..n, l)` ≡ `new(n, l)`).
+    pub fn with_range(range: std::ops::Range<usize>, latency_s: f64) -> Self {
         ClusterProvider {
-            free: (0..total_nodes).collect(),
+            free: range.collect(),
             latency_s,
         }
     }

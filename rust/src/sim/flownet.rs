@@ -21,8 +21,13 @@
 //! allocation is **work-conserving**: share a bottlenecked flow cannot
 //! use (because another resource binds it first) is redistributed to the
 //! remaining flows, so capacity never idles while demand exists. With
-//! every weight at 1.0 (the default — [`FlowNetwork::start_flow`]) the
-//! arithmetic reduces bit-for-bit to the classic unweighted fair share.
+//! every weight at 1.0 (the [`FlowSpec`] default) the arithmetic reduces
+//! bit-for-bit to the classic unweighted fair share.
+//!
+//! Flows are started through one entry point: build a [`FlowSpec`]
+//! (`FlowSpec::new(bytes).weight(w).over(&resources)`) and hand it to
+//! [`FlowNetwork::start`]. The resource slice is copied into a pooled
+//! vector, so the hot path allocates nothing in steady state.
 //!
 //! ## The incremental / component model
 //!
@@ -80,6 +85,55 @@ impl FlowId {
     #[inline]
     fn slot(self) -> usize {
         (self.0 & 0xFFFF_FFFF) as usize
+    }
+}
+
+/// Description of a flow to start: size, fair-share weight, and the
+/// resource set it crosses. The single entry point for every byte
+/// movement in the simulator:
+///
+/// ```
+/// # use datadiffusion::sim::flownet::{FlowNetwork, FlowSpec};
+/// let mut net = FlowNetwork::new();
+/// let disk = net.add_resource(470e6);
+/// let nic = net.add_resource(1e9);
+/// // Unit-weight foreground fetch across disk + NIC.
+/// net.start(0.0, FlowSpec::new(100 << 20).over(&[disk, nic]));
+/// // Background staging at a quarter of the fair share.
+/// net.start(0.0, FlowSpec::new(100 << 20).weight(0.25).over(&[disk]));
+/// ```
+///
+/// The weight defaults to 1.0 (classic unweighted max-min); on every
+/// contended resource a flow receives capacity in proportion to its
+/// weight among the contending flows. Non-finite weights fall back to
+/// 1.0 and non-positive ones are clamped to a positive floor — a zero
+/// weight would starve the flow forever and stall the DES.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowSpec<'a> {
+    bytes: u64,
+    weight: f64,
+    resources: &'a [ResourceId],
+}
+
+impl<'a> FlowSpec<'a> {
+    /// A unit-weight flow of `bytes` crossing no resources yet; route it
+    /// with [`FlowSpec::over`] before starting it.
+    pub fn new(bytes: u64) -> FlowSpec<'static> {
+        FlowSpec { bytes, weight: 1.0, resources: &[] }
+    }
+
+    /// Set the fair-share weight (1.0 = classic max-min; the transfer
+    /// plane's background classes run below 1.0).
+    #[must_use]
+    pub fn weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// Set the resource set the flow crosses.
+    #[must_use]
+    pub fn over<'b>(self, resources: &'b [ResourceId]) -> FlowSpec<'b> {
+        FlowSpec { bytes: self.bytes, weight: self.weight, resources }
     }
 }
 
@@ -205,41 +259,15 @@ impl FlowNetwork {
         self.refill(t);
     }
 
-    /// Start a unit-weight flow of `bytes` across `resources` at time
-    /// `now`. A flow must cross at least one resource.
-    pub fn start_flow(&mut self, now: f64, resources: Vec<ResourceId>, bytes: u64) -> FlowId {
-        self.start_flow_weighted(now, resources, bytes, 1.0)
-    }
-
-    /// Start a flow carrying a fair-share `weight`: on every contended
-    /// resource it receives capacity in proportion to its weight among
-    /// the contending flows (clamped to a positive floor — a zero or
-    /// negative weight would starve the flow forever and stall the DES).
-    pub fn start_flow_weighted(
-        &mut self,
-        now: f64,
-        resources: Vec<ResourceId>,
-        bytes: u64,
-        weight: f64,
-    ) -> FlowId {
-        let positions = self.pos_pool.pop().unwrap_or_default();
-        self.start_flow_inner(now, resources, positions, bytes, weight)
-    }
-
-    /// Allocation-free variant of [`FlowNetwork::start_flow_weighted`]
-    /// for hot paths: the resource set is copied into a pooled vector.
-    pub fn start_flow_on(
-        &mut self,
-        now: f64,
-        resources: &[ResourceId],
-        bytes: u64,
-        weight: f64,
-    ) -> FlowId {
+    /// Start the flow described by `spec` at time `now`. A flow must
+    /// cross at least one resource. The spec's resource slice is copied
+    /// into a pooled vector, so steady-state churn allocates nothing.
+    pub fn start(&mut self, now: f64, spec: FlowSpec<'_>) -> FlowId {
         let mut rs = self.res_pool.pop().unwrap_or_default();
         rs.clear();
-        rs.extend_from_slice(resources);
+        rs.extend_from_slice(spec.resources);
         let positions = self.pos_pool.pop().unwrap_or_default();
-        self.start_flow_inner(now, rs, positions, bytes, weight)
+        self.start_flow_inner(now, rs, positions, spec.bytes, spec.weight)
     }
 
     fn start_flow_inner(
@@ -706,7 +734,7 @@ mod tests {
     fn single_flow_gets_full_capacity() {
         let mut net = FlowNetwork::new();
         let r = net.add_resource(8e6); // 1 MB/s
-        let f = net.start_flow(0.0, vec![r], 1_000_000);
+        let f = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
         let (t, id) = net.next_completion(0.0).unwrap();
         assert_eq!(id, f);
         assert!((t - 1.0).abs() < EPS, "t={t}");
@@ -716,8 +744,8 @@ mod tests {
     fn two_flows_share_fairly() {
         let mut net = FlowNetwork::new();
         let r = net.add_resource(8e6);
-        let _a = net.start_flow(0.0, vec![r], 1_000_000);
-        let _b = net.start_flow(0.0, vec![r], 1_000_000);
+        let _a = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
+        let _b = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
         // Each gets half: 2 s for both.
         let (t, _) = net.next_completion(0.0).unwrap();
         assert!((t - 2.0).abs() < EPS, "t={t}");
@@ -728,7 +756,7 @@ mod tests {
         let mut net = FlowNetwork::new();
         let wide = net.add_resource(80e6);
         let narrow = net.add_resource(8e6);
-        let f = net.start_flow(0.0, vec![wide, narrow], 1_000_000);
+        let f = net.start(0.0, FlowSpec::new(1_000_000).over(&[wide, narrow]));
         assert!((net.rate(f) - 8e6).abs() < EPS);
     }
 
@@ -740,9 +768,9 @@ mod tests {
         let mut net = FlowNetwork::new();
         let r0 = net.add_resource(10.0);
         let r1 = net.add_resource(4.0);
-        let a = net.start_flow(0.0, vec![r0], 1000);
-        let b = net.start_flow(0.0, vec![r0, r1], 1000);
-        let c = net.start_flow(0.0, vec![r1], 1000);
+        let a = net.start(0.0, FlowSpec::new(1000).over(&[r0]));
+        let b = net.start(0.0, FlowSpec::new(1000).over(&[r0, r1]));
+        let c = net.start(0.0, FlowSpec::new(1000).over(&[r1]));
         assert!((net.rate(a) - 8.0).abs() < EPS, "a={}", net.rate(a));
         assert!((net.rate(b) - 2.0).abs() < EPS, "b={}", net.rate(b));
         assert!((net.rate(c) - 2.0).abs() < EPS, "c={}", net.rate(c));
@@ -766,7 +794,7 @@ mod tests {
                     set.push(r);
                 }
             }
-            flows.push(net.start_flow(0.0, set, rng.range_u64(1, 1_000_000)));
+            flows.push(net.start(0.0, FlowSpec::new(rng.range_u64(1, 1_000_000)).over(&set)));
         }
         // Sum of rates per resource must not exceed its capacity.
         let mut usage = vec![0.0f64; 10];
@@ -790,8 +818,8 @@ mod tests {
         // 8 Mbit left at t=2, finishing at t=3.
         let mut net = FlowNetwork::new();
         let r = net.add_resource(8e6);
-        let a = net.start_flow(0.0, vec![r], 2_000_000);
-        let b = net.start_flow(0.0, vec![r], 1_000_000);
+        let a = net.start(0.0, FlowSpec::new(2_000_000).over(&[r]));
+        let b = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
         let (t1, id1) = net.next_completion(0.0).unwrap();
         assert_eq!(id1, b);
         assert!((t1 - 2.0).abs() < EPS);
@@ -813,8 +841,8 @@ mod tests {
             let mut gpfs_flows = Vec::new();
             for _ in 0..n {
                 let disk = net.add_resource(470e6);
-                disk_flows.push(net.start_flow(0.0, vec![disk], 100_000_000));
-                gpfs_flows.push(net.start_flow(0.0, vec![gpfs], 100_000_000));
+                disk_flows.push(net.start(0.0, FlowSpec::new(100_000_000).over(&[disk])));
+                gpfs_flows.push(net.start(0.0, FlowSpec::new(100_000_000).over(&[gpfs])));
             }
             let disk_agg: f64 = disk_flows.iter().map(|&f| net.rate(f)).sum();
             let gpfs_agg: f64 = gpfs_flows.iter().map(|&f| net.rate(f)).sum();
@@ -830,7 +858,7 @@ mod tests {
         let narrow = net.add_resource(4e6);
         assert_eq!(net.utilization(wide), 0.0);
         // One flow bound by the narrow resource: wide carries 4 of 10.
-        let f = net.start_flow(0.0, vec![wide, narrow], 1_000_000);
+        let f = net.start(0.0, FlowSpec::new(1_000_000).over(&[wide, narrow]));
         assert!((net.utilization(narrow) - 1.0).abs() < EPS);
         assert!((net.utilization(wide) - 0.4).abs() < EPS);
         net.remove_flow(0.0, f);
@@ -843,8 +871,8 @@ mod tests {
         // 8 Mb/s vs 2 Mb/s.
         let mut net = FlowNetwork::new();
         let r = net.add_resource(10e6);
-        let fg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 1.0);
-        let bg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 0.25);
+        let fg = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
+        let bg = net.start(0.0, FlowSpec::new(1_000_000).weight(0.25).over(&[r]));
         assert!((net.rate(fg) - 8e6).abs() < EPS, "fg={}", net.rate(fg));
         assert!((net.rate(bg) - 2e6).abs() < EPS, "bg={}", net.rate(bg));
         assert_eq!(net.flow_weight(fg), 1.0);
@@ -863,7 +891,7 @@ mod tests {
         // scale shares among *contenders*, they are not absolute caps).
         let mut net = FlowNetwork::new();
         let r = net.add_resource(10e6);
-        let bg = net.start_flow_weighted(0.0, vec![r], 1_000_000, 0.1);
+        let bg = net.start(0.0, FlowSpec::new(1_000_000).weight(0.1).over(&[r]));
         assert!((net.rate(bg) - 10e6).abs() < EPS, "bg={}", net.rate(bg));
         // And share a bottlenecked-elsewhere flow cannot use is
         // redistributed: B (weight 1) is pinned to 1 Mb/s by a narrow
@@ -871,30 +899,29 @@ mod tests {
         let mut net = FlowNetwork::new();
         let wide = net.add_resource(10e6);
         let narrow = net.add_resource(1e6);
-        let a = net.start_flow_weighted(0.0, vec![wide], 1_000_000, 0.25);
-        let b = net.start_flow_weighted(0.0, vec![wide, narrow], 1_000_000, 1.0);
+        let a = net.start(0.0, FlowSpec::new(1_000_000).weight(0.25).over(&[wide]));
+        let b = net.start(0.0, FlowSpec::new(1_000_000).over(&[wide, narrow]));
         assert!((net.rate(b) - 1e6).abs() < EPS, "b={}", net.rate(b));
         assert!((net.rate(a) - 9e6).abs() < EPS, "a={}", net.rate(a));
     }
 
     #[test]
     fn unit_weights_match_unweighted_filling_exactly() {
-        // start_flow and start_flow_weighted(…, 1.0) must be the same
-        // computation bit-for-bit (the binary share policy relies on it).
-        let build = |weighted: bool| {
+        // The FlowSpec default weight and an explicit `.weight(1.0)` must
+        // be the same computation bit-for-bit (the binary share policy
+        // relies on it).
+        let build = |explicit: bool| {
             let mut net = FlowNetwork::new();
             let r0 = net.add_resource(10.0);
             let r1 = net.add_resource(4.0);
-            let mk = |net: &mut FlowNetwork, rs: Vec<ResourceId>| {
-                if weighted {
-                    net.start_flow_weighted(0.0, rs, 1000, 1.0)
-                } else {
-                    net.start_flow(0.0, rs, 1000)
-                }
+            let mk = |net: &mut FlowNetwork, rs: &[ResourceId]| {
+                let spec = FlowSpec::new(1000);
+                let spec = if explicit { spec.weight(1.0) } else { spec };
+                net.start(0.0, spec.over(rs))
             };
-            let a = mk(&mut net, vec![r0]);
-            let b = mk(&mut net, vec![r0, r1]);
-            let c = mk(&mut net, vec![r1]);
+            let a = mk(&mut net, &[r0]);
+            let b = mk(&mut net, &[r0, r1]);
+            let c = mk(&mut net, &[r1]);
             let rates = (net.rate(a), net.rate(b), net.rate(c));
             let next = net.next_completion(0.0).unwrap();
             (rates, next)
@@ -906,7 +933,7 @@ mod tests {
     fn nonpositive_weight_is_clamped_not_starved() {
         let mut net = FlowNetwork::new();
         let r = net.add_resource(1e6);
-        let f = net.start_flow_weighted(0.0, vec![r], 1_000, 0.0);
+        let f = net.start(0.0, FlowSpec::new(1_000).weight(0.0).over(&[r]));
         assert!(net.rate(f) > 0.0, "clamped weight must still progress");
         let (t, _) = net.next_completion(0.0).unwrap();
         assert!(t.is_finite());
@@ -916,7 +943,7 @@ mod tests {
     fn zero_byte_flow_completes() {
         let mut net = FlowNetwork::new();
         let r = net.add_resource(1e6);
-        let _f = net.start_flow(0.0, vec![r], 0);
+        let _f = net.start(0.0, FlowSpec::new(0).over(&[r]));
         let (t, _) = net.next_completion(0.0).unwrap();
         assert!(t < 1e-9);
     }
@@ -925,9 +952,9 @@ mod tests {
     fn slot_reuse_keeps_ids_distinct() {
         let mut net = FlowNetwork::new();
         let r = net.add_resource(1e6);
-        let a = net.start_flow(0.0, vec![r], 100);
+        let a = net.start(0.0, FlowSpec::new(100).over(&[r]));
         net.remove_flow(0.0, a);
-        let b = net.start_flow(0.0, vec![r], 100);
+        let b = net.start(0.0, FlowSpec::new(100).over(&[r]));
         assert_ne!(a, b, "generation must differ after slot reuse");
         assert_eq!(net.rate(a), 0.0, "stale id must read as inactive");
         assert!(net.rate(b) > 0.0);
@@ -941,15 +968,15 @@ mod tests {
         let mut net = FlowNetwork::new();
         let r1 = net.add_resource(8e6);
         let r2 = net.add_resource(6e6);
-        let a = net.start_flow(0.0, vec![r1], 1_000_000);
-        let b = net.start_flow(0.0, vec![r1], 1_000_000);
+        let a = net.start(0.0, FlowSpec::new(1_000_000).over(&[r1]));
+        let b = net.start(0.0, FlowSpec::new(1_000_000).over(&[r1]));
         let rate_a = net.rate(a);
         let rate_b = net.rate(b);
         let (t0, id0) = net.next_completion(0.0).unwrap();
         // Heavy churn on the other component.
         let mut others = Vec::new();
         for i in 0..20 {
-            others.push(net.start_flow(0.1 * i as f64, vec![r2], 500_000));
+            others.push(net.start(0.1 * i as f64, FlowSpec::new(500_000).over(&[r2])));
         }
         for f in others {
             net.remove_flow(3.0, f);
@@ -965,8 +992,8 @@ mod tests {
         // the old deferred recompute did.
         let mut net = FlowNetwork::new();
         let r = net.add_resource(8e6);
-        let a = net.start_flow(0.0, vec![r], 1_000_000);
-        let b = net.start_flow(0.0, vec![r], 1_000_000);
+        let a = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
+        let b = net.start(0.0, FlowSpec::new(1_000_000).over(&[r]));
         assert!((net.rate(a) - 4e6).abs() < EPS);
         net.set_capacity(r, 16e6);
         assert!((net.rate(a) - 8e6).abs() < EPS, "a={}", net.rate(a));
@@ -976,26 +1003,25 @@ mod tests {
     }
 
     #[test]
-    fn start_flow_on_matches_vec_start() {
-        // The allocation-free entry point must produce identical rates
-        // and completions to the Vec-taking one.
-        let run = |pooled: bool| {
-            let mut net = FlowNetwork::new();
-            let r0 = net.add_resource(10e6);
-            let r1 = net.add_resource(4e6);
-            let mk = |net: &mut FlowNetwork, rs: &[ResourceId], w: f64| {
-                if pooled {
-                    net.start_flow_on(0.0, rs, 1_000_000, w)
-                } else {
-                    net.start_flow_weighted(0.0, rs.to_vec(), 1_000_000, w)
-                }
-            };
-            let a = mk(&mut net, &[r0], 1.0);
-            let b = mk(&mut net, &[r0, r1], 0.5);
-            net.remove_flow(0.5, a);
-            (net.rate(b), net.next_completion(0.5).unwrap().0)
+    fn pooled_vectors_are_transparent() {
+        // Flows started after churn reuse recycled resource/position
+        // vectors; the pooled path must produce identical rates and
+        // completions to a fresh-pool start of the same specs.
+        let mut net = FlowNetwork::new();
+        let r0 = net.add_resource(10e6);
+        let r1 = net.add_resource(4e6);
+        let mk = |net: &mut FlowNetwork| {
+            let a = net.start(0.0, FlowSpec::new(1_000_000).over(&[r0]));
+            let b = net.start(0.0, FlowSpec::new(1_000_000).weight(0.5).over(&[r0, r1]));
+            (a, b)
         };
-        assert_eq!(run(false), run(true));
+        let (a, b) = mk(&mut net);
+        let fresh = (net.rate(a), net.rate(b), net.next_completion(0.0).unwrap().0);
+        net.remove_flow(0.0, a);
+        net.remove_flow(0.0, b);
+        let (a2, b2) = mk(&mut net);
+        let reused = (net.rate(a2), net.rate(b2), net.next_completion(0.0).unwrap().0);
+        assert_eq!(fresh, reused);
     }
 
     #[test]
@@ -1022,7 +1048,7 @@ mod tests {
                         set.push(r);
                     }
                 }
-                live.push(net.start_flow_on(now, &set, 1_000_000, 1.0));
+                live.push(net.start(now, FlowSpec::new(1_000_000).over(&set)));
             }
         }
         assert_eq!(net.active_flows(), live.len());

@@ -15,24 +15,34 @@
 //! Every data movement is a flow across the right set of these resources
 //! ([`TransferKind::resources`]); saturation curves, the 8-node GPFS
 //! crossover, and linear cache scaling all emerge from max-min sharing.
+//!
+//! With `[[site]]` tables configured, a [`WanFabric`] is wired on top:
+//! one aggregate LAN backplane per site plus a directed WAN link per
+//! site pair. Non-node-local transfers then also cross their site
+//! backplane(s), and cross-site transfers cross the WAN link — as
+//! ordinary flow legs, so class weights pace WAN traffic exactly like
+//! any other resource. GPFS is homed at site 0: shared-filesystem
+//! traffic from any other site traverses the WAN.
 
 use crate::config::Config;
+use crate::federation::{SiteId, Topology};
 use crate::sim::flownet::{FlowNetwork, ResourceId};
 use crate::sim::server::FifoServer;
 
-/// A transfer's resource set, inline and `Copy` (at most four legs), so
-/// the per-flow hot path allocates nothing. Derefs to `[ResourceId]`.
+/// A transfer's resource set, inline and `Copy` (at most eight legs —
+/// the cross-site peer path is seven), so the per-flow hot path
+/// allocates nothing. Derefs to `[ResourceId]`.
 #[derive(Debug, Clone, Copy)]
 pub struct ResourceSet {
-    ids: [ResourceId; 4],
+    ids: [ResourceId; 8],
     len: u8,
 }
 
 impl ResourceSet {
     fn new(ids: &[ResourceId]) -> Self {
-        debug_assert!(!ids.is_empty() && ids.len() <= 4);
+        debug_assert!(!ids.is_empty() && ids.len() <= 8);
         let mut set = ResourceSet {
-            ids: [ResourceId(0); 4],
+            ids: [ResourceId(0); 8],
             len: ids.len() as u8,
         };
         set.ids[..ids.len()].copy_from_slice(ids);
@@ -78,6 +88,34 @@ pub enum TransferKind {
     LocalWrite { node: usize },
 }
 
+/// The inter-site fabric: per-site LAN backplanes plus a directed WAN
+/// link per site pair (present only with two or more sites).
+#[derive(Debug)]
+pub struct WanFabric {
+    topo: Topology,
+    /// Per-site aggregate LAN backplane.
+    lan: Vec<ResourceId>,
+    /// Row-major `sites × sites` directed WAN links (diagonal unused).
+    links: Vec<ResourceId>,
+}
+
+impl WanFabric {
+    /// Site `s`'s LAN backplane resource.
+    pub fn lan(&self, s: SiteId) -> ResourceId {
+        self.lan[s.index()]
+    }
+
+    /// The directed WAN link from `from` to `to` (`from != to`).
+    pub fn wan(&self, from: SiteId, to: SiteId) -> ResourceId {
+        self.links[from.index() * self.topo.sites() + to.index()]
+    }
+
+    /// The site topology this fabric was wired from.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+}
+
 /// The wired testbed: flow network + resource handles + metadata server.
 pub struct SimTestbed {
     /// The underlying fair-share network.
@@ -91,10 +129,14 @@ pub struct SimTestbed {
     pub nodes: Vec<NodeResources>,
     /// GPFS metadata server (opens, wrapper mkdir/symlink/rmdir).
     pub metadata: FifoServer,
+    /// Inter-site fabric; `None` for single-site configs, whose resource
+    /// wiring (and therefore whose simulations) are untouched.
+    pub wan: Option<WanFabric>,
 }
 
 impl SimTestbed {
-    /// Build the testbed for `cfg.testbed.nodes` nodes.
+    /// Build the testbed for `cfg.testbed.nodes` nodes (plus the WAN
+    /// fabric when `[[site]]` tables declare a federation).
     pub fn new(cfg: &Config) -> Self {
         let mut net = FlowNetwork::new();
         let gpfs_read = net.add_resource(cfg.shared_fs.read_cap_bps);
@@ -107,18 +149,56 @@ impl SimTestbed {
                 disk_write: net.add_resource(cfg.local_disk.write_bps),
             })
             .collect();
+        // Fabric resources append after the single-site set, and only
+        // when federated, so existing configs keep identical wiring.
+        let wan = (cfg.sites() > 1).then(|| {
+            let topo = Topology::from_config(cfg);
+            let n = topo.sites();
+            let lan = (0..n)
+                .map(|s| net.add_resource(topo.lan_bps(SiteId(s as u32))))
+                .collect();
+            let links = (0..n * n)
+                .map(|i| {
+                    let (a, b) = (SiteId((i / n) as u32), SiteId((i % n) as u32));
+                    net.add_resource(topo.wan_bps(a, b).max(1.0))
+                })
+                .collect();
+            WanFabric { topo, lan, links }
+        });
         SimTestbed {
             net,
             gpfs_read,
             gpfs_write,
             nodes,
             metadata: FifoServer::new(cfg.shared_fs.meta_op_s),
+            wan,
+        }
+    }
+
+    /// Whether a transfer of this kind crosses the WAN (always false
+    /// without a fabric). GPFS is homed at site 0.
+    pub fn cross_site(&self, kind: TransferKind) -> bool {
+        let Some(fab) = &self.wan else { return false };
+        match kind {
+            TransferKind::GpfsRead { node }
+            | TransferKind::GpfsReadCached { node }
+            | TransferKind::GpfsWrite { node } => fab.topo.site_of(node) != SiteId::HOME,
+            TransferKind::Peer { src, dst } => fab.topo.site_of(src) != fab.topo.site_of(dst),
+            TransferKind::LocalRead { .. } | TransferKind::LocalWrite { .. } => false,
         }
     }
 
     /// Resource set a transfer of the given kind crosses (inline `Copy`
-    /// set — no allocation; pair with `FlowNetwork::start_flow_on`).
+    /// set — no allocation; pair with
+    /// [`FlowNetwork::start`](crate::sim::flownet::FlowNetwork::start)).
+    ///
+    /// Without a WAN fabric these are the paper's single-cluster paths.
+    /// With one, non-node-local paths gain their site backplane leg(s),
+    /// and cross-site paths the WAN link, in path order.
     pub fn resource_set(&self, kind: TransferKind) -> ResourceSet {
+        if let Some(fab) = &self.wan {
+            return self.federated_set(fab, kind);
+        }
         match kind {
             TransferKind::GpfsRead { node } => {
                 ResourceSet::new(&[self.gpfs_read, self.nodes[node].nic_in])
@@ -142,6 +222,72 @@ impl SimTestbed {
         }
     }
 
+    /// Site-aware path (GPFS homed at site 0; see `resource_set`).
+    fn federated_set(&self, fab: &WanFabric, kind: TransferKind) -> ResourceSet {
+        let home = SiteId::HOME;
+        match kind {
+            TransferKind::GpfsRead { node } | TransferKind::GpfsReadCached { node } => {
+                let s = fab.topo.site_of(node);
+                let mut legs = [ResourceId(0); 8];
+                let mut n = 0;
+                for leg in [self.gpfs_read, fab.lan(home)] {
+                    legs[n] = leg;
+                    n += 1;
+                }
+                if s != home {
+                    legs[n] = fab.wan(home, s);
+                    legs[n + 1] = fab.lan(s);
+                    n += 2;
+                }
+                legs[n] = self.nodes[node].nic_in;
+                n += 1;
+                if matches!(kind, TransferKind::GpfsReadCached { .. }) {
+                    legs[n] = self.nodes[node].disk_write;
+                    n += 1;
+                }
+                ResourceSet::new(&legs[..n])
+            }
+            TransferKind::GpfsWrite { node } => {
+                let s = fab.topo.site_of(node);
+                if s == home {
+                    ResourceSet::new(&[self.nodes[node].nic_out, fab.lan(home), self.gpfs_write])
+                } else {
+                    ResourceSet::new(&[
+                        self.nodes[node].nic_out,
+                        fab.lan(s),
+                        fab.wan(s, home),
+                        fab.lan(home),
+                        self.gpfs_write,
+                    ])
+                }
+            }
+            TransferKind::Peer { src, dst } => {
+                let (ss, ds) = (fab.topo.site_of(src), fab.topo.site_of(dst));
+                if ss == ds {
+                    ResourceSet::new(&[
+                        self.nodes[src].disk_read,
+                        self.nodes[src].nic_out,
+                        fab.lan(ss),
+                        self.nodes[dst].nic_in,
+                        self.nodes[dst].disk_write,
+                    ])
+                } else {
+                    ResourceSet::new(&[
+                        self.nodes[src].disk_read,
+                        self.nodes[src].nic_out,
+                        fab.lan(ss),
+                        fab.wan(ss, ds),
+                        fab.lan(ds),
+                        self.nodes[dst].nic_in,
+                        self.nodes[dst].disk_write,
+                    ])
+                }
+            }
+            TransferKind::LocalRead { node } => ResourceSet::new(&[self.nodes[node].disk_read]),
+            TransferKind::LocalWrite { node } => ResourceSet::new(&[self.nodes[node].disk_write]),
+        }
+    }
+
     /// Resource set a transfer of the given kind crosses, as an owned
     /// vector (benchmark/test convenience).
     pub fn resources(&self, kind: TransferKind) -> Vec<ResourceId> {
@@ -157,11 +303,22 @@ impl SimTestbed {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::{Config, SiteConfig};
+    use crate::sim::flownet::FlowSpec;
     use crate::util::units::{gbps, MB};
 
     fn testbed(n: usize) -> SimTestbed {
         SimTestbed::new(&Config::with_nodes(n))
+    }
+
+    /// 2×4-node federation with a 0.2 Gb/s WAN bottleneck at site 1.
+    fn federated() -> SimTestbed {
+        let mut cfg = Config::with_nodes(8);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 4, wan_bps: gbps(1.0), ..SiteConfig::default() },
+            SiteConfig { nodes: 4, wan_bps: gbps(0.2), ..SiteConfig::default() },
+        ];
+        SimTestbed::new(&cfg)
     }
 
     #[test]
@@ -171,7 +328,7 @@ mod tests {
         let flows: Vec<_> = (0..64)
             .map(|n| {
                 let rs = tb.resources(TransferKind::GpfsRead { node: n });
-                tb.net.start_flow(0.0, rs, 100 * MB)
+                tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs))
             })
             .collect();
         let agg: f64 = flows.iter().map(|&f| tb.net.rate(f)).sum();
@@ -183,7 +340,7 @@ mod tests {
         // One client alone: NIC (1 Gb/s) binds before GPFS (3.4 Gb/s).
         let mut tb = testbed(4);
         let rs = tb.resources(TransferKind::GpfsRead { node: 0 });
-        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
         assert!((tb.net.rate(f) - gbps(1.0)).abs() < 1.0);
     }
 
@@ -193,7 +350,7 @@ mod tests {
         let flows: Vec<_> = (0..64)
             .map(|n| {
                 let rs = tb.resources(TransferKind::LocalRead { node: n });
-                tb.net.start_flow(0.0, rs, 100 * MB)
+                tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs))
             })
             .collect();
         let agg: f64 = flows.iter().map(|&f| tb.net.rate(f)).sum();
@@ -206,7 +363,7 @@ mod tests {
         let mut tb = testbed(4);
         let rs = tb.resources(TransferKind::Peer { src: 0, dst: 1 });
         assert_eq!(rs.len(), 4);
-        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
         // Bound by dst disk write (230 Mb/s), the tightest leg.
         assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
     }
@@ -215,22 +372,70 @@ mod tests {
     fn cached_gpfs_read_bound_by_disk_write() {
         let mut tb = testbed(4);
         let rs = tb.resources(TransferKind::GpfsReadCached { node: 2 });
-        let f = tb.net.start_flow(0.0, rs, 100 * MB);
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
         assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
     }
 
     #[test]
     fn resource_set_matches_vec_for_every_kind() {
-        let tb = testbed(4);
-        for kind in [
-            TransferKind::GpfsRead { node: 1 },
-            TransferKind::GpfsReadCached { node: 2 },
-            TransferKind::GpfsWrite { node: 0 },
-            TransferKind::Peer { src: 0, dst: 3 },
-            TransferKind::LocalRead { node: 2 },
-            TransferKind::LocalWrite { node: 1 },
-        ] {
-            assert_eq!(&*tb.resource_set(kind), tb.resources(kind).as_slice());
+        for tb in [testbed(4), federated()] {
+            for kind in [
+                TransferKind::GpfsRead { node: 1 },
+                TransferKind::GpfsReadCached { node: 2 },
+                TransferKind::GpfsWrite { node: 0 },
+                TransferKind::Peer { src: 0, dst: 3 },
+                TransferKind::LocalRead { node: 2 },
+                TransferKind::LocalWrite { node: 1 },
+            ] {
+                assert_eq!(&*tb.resource_set(kind), tb.resources(kind).as_slice());
+            }
         }
+    }
+
+    #[test]
+    fn single_site_config_builds_no_fabric() {
+        let tb = testbed(4);
+        assert!(tb.wan.is_none());
+        assert!(!tb.cross_site(TransferKind::Peer { src: 0, dst: 3 }));
+    }
+
+    #[test]
+    fn cross_site_peer_is_wan_bound() {
+        let mut tb = federated();
+        // Node 1 (site 0) → node 5 (site 1): 7 legs, WAN tightest.
+        let rs = tb.resources(TransferKind::Peer { src: 1, dst: 5 });
+        assert_eq!(rs.len(), 7);
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
+        assert!((tb.net.rate(f) - gbps(0.2)).abs() < 1.0, "WAN binds below disk write");
+        // Same-site peer stays disk-write bound, with its LAN leg.
+        let rs = tb.resources(TransferKind::Peer { src: 0, dst: 1 });
+        assert_eq!(rs.len(), 5);
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
+        assert!((tb.net.rate(f) - 230e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn remote_gpfs_read_traverses_wan() {
+        let mut tb = federated();
+        // Site 1 reading GPFS (homed at site 0): WAN (0.2 Gb/s) binds
+        // below the NIC (1 Gb/s) and GPFS (3.4 Gb/s).
+        let rs = tb.resources(TransferKind::GpfsRead { node: 6 });
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
+        assert!((tb.net.rate(f) - gbps(0.2)).abs() < 1.0);
+        // Home-site reads keep their NIC bound.
+        let rs = tb.resources(TransferKind::GpfsRead { node: 0 });
+        let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
+        assert!((tb.net.rate(f) - gbps(1.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn cross_site_classification() {
+        let tb = federated();
+        assert!(tb.cross_site(TransferKind::Peer { src: 0, dst: 5 }));
+        assert!(!tb.cross_site(TransferKind::Peer { src: 4, dst: 5 }));
+        assert!(tb.cross_site(TransferKind::GpfsRead { node: 5 }));
+        assert!(tb.cross_site(TransferKind::GpfsWrite { node: 5 }));
+        assert!(!tb.cross_site(TransferKind::GpfsRead { node: 0 }));
+        assert!(!tb.cross_site(TransferKind::LocalRead { node: 5 }));
     }
 }

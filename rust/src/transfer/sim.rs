@@ -18,7 +18,7 @@ use super::{
 };
 use crate::config::TransferConfig;
 use crate::index::central::ExecutorId;
-use crate::sim::flownet::FlowId;
+use crate::sim::flownet::{FlowId, FlowSpec};
 use crate::storage::testbed::{SimTestbed, TransferKind};
 
 /// The simulation driver's transfer plane.
@@ -56,9 +56,8 @@ impl SimTransferPlane {
     ) -> FlowId {
         self.started[class.index()] += 1;
         let rs = self.testbed.resource_set(kind);
-        self.testbed
-            .net
-            .start_flow_on(now, &rs, bytes, self.ctl.weight_of(class))
+        let spec = FlowSpec::new(bytes).weight(self.ctl.weight_of(class)).over(&rs);
+        self.testbed.net.start(now, spec)
     }
 
     /// Flows started per class: (foreground, staging, prestage).

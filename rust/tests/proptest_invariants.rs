@@ -15,7 +15,7 @@ use datadiffusion::index::central::CentralIndex;
 use datadiffusion::index::dht::DhtModel;
 use datadiffusion::index::{ChordIndex, DataIndex};
 use datadiffusion::scheduler::DispatchPolicy;
-use datadiffusion::sim::flownet::{FlowNetwork, ResourceId};
+use datadiffusion::sim::flownet::{FlowNetwork, FlowSpec, ResourceId};
 use datadiffusion::storage::object::{Catalog, ObjectId};
 use datadiffusion::util::rng::Rng;
 
@@ -826,7 +826,7 @@ fn prop_flownet_conservation_and_completion() {
                     set.push(r);
                 }
             }
-            flows.push(net.start_flow(0.0, set.clone(), rng.range_u64(1, 10_000_000)));
+            flows.push(net.start(0.0, FlowSpec::new(rng.range_u64(1, 10_000_000)).over(&set)));
         }
         // Oversubscription check at t=0.
         let mut usage = vec![0.0f64; nr];
@@ -891,7 +891,7 @@ fn prop_weighted_shares_conserve_capacity_and_weight_monotonicity() {
                 }
             }
             let w = rng.range_f64(0.05, 2.0);
-            flows.push(net.start_flow_weighted(0.0, set, rng.range_u64(1, 1_000_000), w));
+            flows.push(net.start(0.0, FlowSpec::new(rng.range_u64(1, 1_000_000)).weight(w).over(&set)));
         }
         let mut usage = vec![0.0f64; nr];
         for &f in &flows {
@@ -919,7 +919,7 @@ fn prop_weighted_shares_conserve_capacity_and_weight_monotonicity() {
         let ws: Vec<f64> = (0..n).map(|_| rng.range_f64(0.05, 3.0)).collect();
         let fs: Vec<FlowId> = ws
             .iter()
-            .map(|&w| net.start_flow_weighted(0.0, vec![r], 1_000_000_000, w))
+            .map(|&w| net.start(0.0, FlowSpec::new(1_000_000_000).weight(w).over(&[r])))
             .collect();
         let wsum: f64 = ws.iter().sum();
         let total: f64 = fs.iter().map(|&f| net.rate(f)).sum();
@@ -949,10 +949,10 @@ fn prop_weighted_shares_conserve_capacity_and_weight_monotonicity() {
             for _ in 0..rng.range_u64(1, 20) {
                 let r = rs[rng.index(nr)];
                 let w = rng.range_f64(0.05, 2.0);
-                net.start_flow_weighted(0.0, vec![r], 1_000_000, w);
+                net.start(0.0, FlowSpec::new(1_000_000).weight(w).over(&[r]));
             }
             let k = rng.range_u64(1, nr as u64 + 1) as usize;
-            let fg = net.start_flow_weighted(0.0, rs[..k].to_vec(), 1_000_000, fg_w);
+            let fg = net.start(0.0, FlowSpec::new(1_000_000).weight(fg_w).over(&rs[..k]));
             net.rate(fg)
         };
         let w1 = Rng::new(seed ^ 0x77).range_f64(0.1, 1.0);
@@ -1254,6 +1254,303 @@ fn prop_calendar_queue_order_matches_heap() {
     }
 }
 
+/// Federation-layer invariant: a [`GlobalIndex`] never reports a
+/// location outside the owning site's executor range, resolves
+/// home-first (an on-site copy is always found with zero WAN cost), and
+/// the union of the per-site directories always equals an independently
+/// maintained model map — under arbitrary interleavings of insert,
+/// remove and executor churn over random multi-site topologies.
+#[test]
+fn prop_global_index_never_escapes_site_ranges() {
+    use datadiffusion::config::SiteConfig;
+    use datadiffusion::federation::{GlobalIndex, SiteId, Topology};
+    use std::collections::{BTreeMap, BTreeSet};
+
+    const N_OBJ: u64 = 12;
+    for case in 0..cases() * 2 {
+        let seed = 0x517E + case;
+        let mut rng = Rng::new(seed);
+        let n_sites = rng.range_u64(2, 5) as usize;
+        let site_nodes: Vec<usize> =
+            (0..n_sites).map(|_| rng.range_u64(1, 8) as usize).collect();
+        let total: usize = site_nodes.iter().sum();
+        let mut cfg = datadiffusion::Config::with_nodes(total);
+        cfg.federation.sites = site_nodes
+            .iter()
+            .map(|&n| SiteConfig {
+                nodes: n,
+                ..SiteConfig::default()
+            })
+            .collect();
+        let topo = Topology::from_config(&cfg);
+        let mut g = GlobalIndex::new(topo.clone());
+        let mut model: BTreeMap<ObjectId, BTreeSet<usize>> = BTreeMap::new();
+
+        for step in 0..250 {
+            let obj = ObjectId(rng.below(N_OBJ));
+            let e = rng.index(total);
+            match rng.below(6) {
+                0..=3 => {
+                    g.insert(obj, e);
+                    model.entry(obj).or_default().insert(e);
+                }
+                4 => {
+                    g.remove(obj, e);
+                    if let Some(s) = model.get_mut(&obj) {
+                        s.remove(&e);
+                        if s.is_empty() {
+                            model.remove(&obj);
+                        }
+                    }
+                }
+                _ => {
+                    g.drop_executor(e);
+                    model.retain(|_, s| {
+                        s.remove(&e);
+                        !s.is_empty()
+                    });
+                }
+            }
+
+            for i in 0..N_OBJ {
+                let obj = ObjectId(i);
+                // (a) Each site's directory only names its own executors,
+                // and the union across sites matches the model exactly.
+                let mut union = BTreeSet::new();
+                for s in 0..n_sites {
+                    let sid = SiteId(s as u32);
+                    let range = topo.executor_range(sid);
+                    for &h in g.site_locations(sid, obj) {
+                        assert!(
+                            range.contains(&h),
+                            "seed={seed} step={step}: site {s} reports {h} \
+                             outside its range {range:?} for {obj}"
+                        );
+                        union.insert(h);
+                    }
+                }
+                let expect = model.get(&obj).cloned().unwrap_or_default();
+                assert_eq!(union, expect, "seed={seed} step={step}: {obj} drifted");
+
+                // (b) locate(): the hit's holders sit inside the reported
+                // site's range; home-first with zero WAN cost when the
+                // querying site holds a copy; a miss consults every site.
+                for s in 0..n_sites as u32 {
+                    let from = SiteId(s);
+                    let (hit, cost) = g.locate(from, obj);
+                    match hit {
+                        Some((site, locs)) => {
+                            assert!(!locs.is_empty(), "seed={seed}: empty hit");
+                            let range = topo.executor_range(site);
+                            for &h in locs {
+                                assert!(
+                                    range.contains(&h),
+                                    "seed={seed} step={step}: locate({s}) reports \
+                                     {h} outside site {}'s range",
+                                    site.0
+                                );
+                            }
+                            if !g.site_locations(from, obj).is_empty() {
+                                assert_eq!(site, from, "seed={seed}: not home-first");
+                                assert_eq!(cost.hops, 0);
+                                assert!(cost.latency_s.abs() < 1e-12);
+                            }
+                        }
+                        None => {
+                            assert!(expect.is_empty(), "seed={seed}: missed a holder");
+                            assert_eq!(
+                                cost.lookups as usize, n_sites,
+                                "seed={seed}: miss must consult every directory"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Federated backend equivalence: two [`FedCore`]s over the same
+/// multi-site topology — one with per-site Central slices, one with
+/// per-site Chord overlays — produce identical site routing, identical
+/// dispatch streams and identical location views under random
+/// interleavings of submission, completion, cross-site staging and
+/// executor churn. The DHT changes lookup *cost*, never *placement*,
+/// and the federation layer must preserve that contract site by site.
+#[test]
+fn prop_federated_site_backends_agree_under_churn_and_staging() {
+    use datadiffusion::config::SiteConfig;
+    use datadiffusion::federation::FedCore;
+    use datadiffusion::index::IndexBackend;
+    use std::collections::BTreeSet;
+
+    const N_OBJ: u64 = 16;
+    for case in 0..cases() {
+        let seed = 0xFED5 + case;
+        let mut rng = Rng::new(seed);
+        let n_sites = rng.range_u64(2, 4) as usize;
+        let site_nodes: Vec<usize> =
+            (0..n_sites).map(|_| rng.range_u64(2, 6) as usize).collect();
+        let total: usize = site_nodes.iter().sum();
+        let mut cfg = datadiffusion::Config::with_nodes(total);
+        cfg.seed = seed;
+        cfg.federation.sites = site_nodes
+            .iter()
+            .map(|&n| SiteConfig {
+                nodes: n,
+                ..SiteConfig::default()
+            })
+            .collect();
+        cfg.federation.skew = rng.range_f64(0.0, 1.0);
+        let mut catalog = Catalog::new();
+        for i in 0..N_OBJ {
+            catalog.insert(ObjectId(i), rng.range_u64(1, 100));
+        }
+        let mut fa = {
+            let mut c = cfg.clone();
+            c.index.backend = IndexBackend::Central;
+            FedCore::new(&c, catalog.clone())
+        };
+        let mut fb = {
+            let mut c = cfg.clone();
+            c.index.backend = IndexBackend::Chord;
+            FedCore::new(&c, catalog)
+        };
+        let mut live: Vec<usize> = (0..total).collect();
+        for &e in &live {
+            fa.register_executor_with(e, 2);
+            fb.register_executor_with(e, 2);
+        }
+        let mut dead: Vec<usize> = Vec::new();
+        let mut submitted = 0u64;
+        let mut running: Vec<(usize, TaskId, ObjectId)> = Vec::new();
+
+        let dispatch_both = |fa: &mut FedCore,
+                                 fb: &mut FedCore,
+                                 running: &mut Vec<(usize, TaskId, ObjectId)>,
+                                 tag: &str| {
+            let a = fa.try_dispatch();
+            let b = fb.try_dispatch();
+            assert_eq!(a.len(), b.len(), "seed={seed} {tag}: batch size diverged");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(
+                    (x.executor, x.task.id),
+                    (y.executor, y.task.id),
+                    "seed={seed} {tag}: dispatch streams diverged"
+                );
+            }
+            for o in a {
+                running.push((o.executor, o.task.id, o.task.inputs[0]));
+            }
+        };
+
+        for step in 0..200 {
+            match rng.below(10) {
+                // Submission: both federations must route the task to the
+                // same site (routing reads the backend-independent global
+                // directory plus per-site load, which agree inductively).
+                0..=3 => {
+                    let inputs = vec![ObjectId(rng.below(N_OBJ))];
+                    let t = TaskId(submitted);
+                    submitted += 1;
+                    let sa = fa.submit(Task::with_inputs(t, inputs.clone()));
+                    let sb = fb.submit(Task::with_inputs(t, inputs));
+                    assert_eq!(sa, sb, "seed={seed} step={step}: site routing diverged");
+                }
+                // Completion caches the input on the finishing executor.
+                4..=6 => {
+                    if !running.is_empty() {
+                        let (e, id, obj) = running.swap_remove(rng.index(running.len()));
+                        let ev = [CacheEvent::Inserted(obj)];
+                        fa.on_task_complete(e, id, &ev);
+                        fb.on_task_complete(e, id, &ev);
+                    }
+                }
+                // Cross-site staging traffic outside task completion: a
+                // replica lands on (or is evicted from) a random live
+                // executor, exercising the global-directory mirror.
+                7..=8 => {
+                    let e = live[rng.index(live.len())];
+                    let obj = ObjectId(rng.below(N_OBJ));
+                    let ev = if rng.below(4) == 0 {
+                        [CacheEvent::Evicted(obj)]
+                    } else {
+                        [CacheEvent::Inserted(obj)]
+                    };
+                    fa.apply_cache_events(e, &ev);
+                    fb.apply_cache_events(e, &ev);
+                }
+                // Churn: retire an executor (finish its work first — the
+                // provisioner only releases quiescent nodes), or re-admit
+                // a previously retired one.
+                _ => {
+                    if !dead.is_empty() && rng.below(2) == 0 {
+                        let e = dead.swap_remove(rng.index(dead.len()));
+                        live.push(e);
+                        fa.register_executor_with(e, 2);
+                        fb.register_executor_with(e, 2);
+                    } else if live.len() > 1 {
+                        let e = live.swap_remove(rng.index(live.len()));
+                        let mut keep = Vec::new();
+                        for (re, id, obj) in running.drain(..) {
+                            if re == e {
+                                fa.on_task_complete(re, id, &[]);
+                                fb.on_task_complete(re, id, &[]);
+                                let _ = obj;
+                            } else {
+                                keep.push((re, id, obj));
+                            }
+                        }
+                        running = keep;
+                        let a: BTreeSet<ObjectId> =
+                            fa.deregister_executor(e).into_iter().collect();
+                        let b: BTreeSet<ObjectId> =
+                            fb.deregister_executor(e).into_iter().collect();
+                        assert_eq!(a, b, "seed={seed} step={step}: orphan sets differ");
+                        dead.push(e);
+                    }
+                }
+            }
+            dispatch_both(&mut fa, &mut fb, &mut running, "step");
+            assert_eq!(
+                fa.queue_len(),
+                fb.queue_len(),
+                "seed={seed} step={step}: queue drift"
+            );
+            // Location views agree from every live executor's vantage.
+            for &e in &live {
+                for i in 0..N_OBJ {
+                    let obj = ObjectId(i);
+                    assert_eq!(
+                        fa.locations_for(e, obj),
+                        fb.locations_for(e, obj),
+                        "seed={seed} step={step}: backends disagree on {obj} from {e}"
+                    );
+                }
+            }
+        }
+        // Drain both in lockstep; the streams must stay identical to the
+        // very last order.
+        let mut guard = 0;
+        while (!running.is_empty() || fa.queue_len() > 0) && guard < 10_000 {
+            guard += 1;
+            if let Some((e, id, obj)) = running.pop() {
+                let ev = [CacheEvent::Inserted(obj)];
+                fa.on_task_complete(e, id, &ev);
+                fb.on_task_complete(e, id, &ev);
+            }
+            dispatch_both(&mut fa, &mut fb, &mut running, "drain");
+        }
+        assert!(guard < 10_000, "seed={seed}: federations did not quiesce");
+        assert_eq!(fa.queue_len(), fb.queue_len(), "residual queue drift");
+        assert_eq!(
+            fa.cross_site_tasks(),
+            fb.cross_site_tasks(),
+            "seed={seed}: cross-site placement counts diverged"
+        );
+    }
+}
+
 /// Reference from-scratch progressive filling over an explicit record of
 /// live flows — the same arithmetic as the network's fill loop, written
 /// against this test's own bookkeeping rather than the network's state.
@@ -1337,7 +1634,7 @@ fn prop_incremental_rates_match_full_recompute() {
                 let weight = rng.range_f64(0.25, 4.0);
                 let ids: Vec<ResourceId> = set.iter().map(|&i| rs[i]).collect();
                 let bytes = rng.range_u64(1, 10_000_000);
-                let f = net.start_flow_weighted(now, ids, bytes, weight);
+                let f = net.start(now, FlowSpec::new(bytes).weight(weight).over(&ids));
                 live.push((f, set, weight));
             } else {
                 let i = rng.index(live.len());
