@@ -9,8 +9,10 @@
 //! every multi-site cell, and the gap widens as the WAN thins.
 //!
 //! Grid is env-tunable: `DD_FED_SITES`, `DD_FED_WAN_GBPS`,
-//! `DD_FED_SKEW` (comma-separated), `DD_FED_NODES`, `DD_TPN`. Defaults
-//! keep the bench in seconds.
+//! `DD_FED_SKEW` (comma-separated), `DD_FED_NODES`, `DD_TPN`, and
+//! `DD_THREADS` (engine worker threads every cell runs at; 0 = one per
+//! core — outcomes are thread-count invariant). Defaults keep the
+//! bench in seconds.
 
 use datadiffusion::analysis::figures;
 use datadiffusion::util::bench::bench_header;
@@ -47,7 +49,11 @@ fn main() {
     let skew = env_list("DD_FED_SKEW", &[0.0f64, 0.8]);
     let nodes = env_num("DD_FED_NODES", 16usize);
     let tpn = env_num("DD_TPN", 8usize);
-    let rows = figures::fig_federation(&sites, &wan, &skew, nodes, tpn);
+    let threads = match env_num("DD_THREADS", 1usize) {
+        0 => std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+        n => n,
+    };
+    let rows = figures::fig_federation(&sites, &wan, &skew, nodes, tpn, threads);
     let path = figures::emit_federation(&rows, &results_dir()).expect("write csv");
 
     // Summarize the headline comparison: per multi-site cell, affinity's

@@ -9,8 +9,11 @@
 //! 10⁷-event runs feasible.
 //!
 //! Grid is env-tunable: `DD_SCALE_NODES` and `DD_SCALE_TASKS`
-//! (comma-separated). The default keeps CI runtimes in seconds; nightly
-//! runs the 10⁴-executor cell.
+//! (comma-separated), plus `DD_SCALE_SITES` (federation sites per cell)
+//! and `DD_THREADS` (comma-separated engine-thread axis; each cell's
+//! speedup column is relative to its first entry). The default keeps CI
+//! runtimes in seconds; nightly runs the 10⁴-executor cell and a
+//! threads=1-vs-cores comparison.
 
 use datadiffusion::analysis::figures;
 use datadiffusion::util::bench::bench_header;
@@ -30,6 +33,13 @@ fn env_list<T: std::str::FromStr + Copy>(name: &str, default: &[T]) -> Vec<T> {
     }
 }
 
+fn env_num<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() {
     bench_header(
         "simulator scale: events/sec and peak RSS across the grid",
@@ -39,7 +49,18 @@ fn main() {
     // ordering makes the RSS column read as per-cell peaks.
     let nodes = env_list("DD_SCALE_NODES", &[64usize, 256, 1024]);
     let tasks = env_list("DD_SCALE_TASKS", &[10_000u64]);
-    let rows = figures::fig_scale(&nodes, &tasks);
+    let sites = env_num("DD_SCALE_SITES", 1usize);
+    let threads: Vec<usize> = env_list("DD_THREADS", &[1usize])
+        .into_iter()
+        .map(|n: usize| {
+            if n == 0 {
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+            } else {
+                n
+            }
+        })
+        .collect();
+    let rows = figures::fig_scale(&nodes, &tasks, sites, &threads);
     let path = figures::emit_scale(&rows, &results_dir()).expect("write csv");
     if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
         println!(

@@ -979,6 +979,11 @@ pub fn emit_shard_scaling(
 pub struct ScalePoint {
     /// Executor nodes simulated.
     pub executors: usize,
+    /// Federation sites the testbed was split into (1 = single cluster).
+    pub sites: usize,
+    /// Parallel-engine worker threads the cell ran at (capped at the
+    /// site count inside the engine; 1 = serial).
+    pub threads: usize,
     /// Tasks submitted (all must retire).
     pub tasks: u64,
     /// Discrete events the engine processed.
@@ -990,30 +995,37 @@ pub struct ScalePoint {
     /// Engine throughput, events per wall-clock second — the axis that
     /// must degrade sub-linearly for extreme-scale runs to stay feasible.
     pub events_per_s: f64,
+    /// Wall-clock speedup over the cell's first thread count (1.0 in
+    /// the baseline row; timing-noisy — read trends, not digits).
+    pub speedup: f64,
     /// Process peak RSS after the cell, MB (`VmHWM`; cumulative across
     /// the process, so run cells smallest-first — 0.0 off Linux).
     pub peak_rss_mb: f64,
 }
 
-/// Peak resident-set size of this process in MB, from
-/// `/proc/self/status` `VmHWM` (0.0 where unavailable). A high-water
-/// mark: it only grows, so grids should run their largest cell last.
-pub fn peak_rss_mb() -> f64 {
-    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
-        return 0.0;
-    };
+/// Extract the `VmHWM` high-water mark (MB) from a
+/// `/proc/self/status`-shaped string; 0.0 when the field is absent or
+/// malformed (kernels without per-process HWM accounting omit it).
+fn parse_vm_hwm(status: &str) -> f64 {
     for line in status.lines() {
         if let Some(rest) = line.strip_prefix("VmHWM:") {
-            let kb: f64 = rest
-                .trim()
-                .trim_end_matches("kB")
-                .trim()
-                .parse()
-                .unwrap_or(0.0);
-            return kb / 1024.0;
+            let kb = rest.trim().trim_end_matches("kB").trim();
+            return kb.parse::<f64>().unwrap_or(0.0) / 1024.0;
         }
     }
     0.0
+}
+
+/// Peak resident-set size of this process in MB, from
+/// `/proc/self/status` `VmHWM` (0.0 where the file or the field is
+/// unavailable — figures still emit, with a zero RSS column). A
+/// high-water mark: it only grows, so grids should run their largest
+/// cell last.
+pub fn peak_rss_mb() -> f64 {
+    match std::fs::read_to_string("/proc/self/status") {
+        Ok(status) => parse_vm_hwm(&status),
+        Err(_) => 0.0,
+    }
 }
 
 /// The simulator-scalability figure: wall-clock, events/sec, and peak
@@ -1027,40 +1039,62 @@ pub fn peak_rss_mb() -> f64 {
 /// incremental per-component refill — rather than queueing physics.
 /// Cells run in the given order; pass grids smallest-first so the RSS
 /// column reads as per-cell peaks (see [`peak_rss_mb`]).
-pub fn fig_scale(executors_list: &[usize], tasks_list: &[u64]) -> Vec<ScalePoint> {
+///
+/// `sites` splits each cell's testbed into federation sites (1 = the
+/// classic single cluster) and `threads_list` sweeps the parallel
+/// engine's worker count per cell; each row's speedup is its
+/// wall-clock gain over the cell's *first* thread count, so pass the
+/// baseline (usually 1) first.
+pub fn fig_scale(
+    executors_list: &[usize],
+    tasks_list: &[u64],
+    sites: usize,
+    threads_list: &[usize],
+) -> Vec<ScalePoint> {
+    let threads_list = if threads_list.is_empty() { &[1][..] } else { threads_list };
     let mut rows = Vec::new();
     for &executors in executors_list {
         let executors = executors.max(2);
         for &tasks in tasks_list {
             let tasks = tasks.max(64);
-            let mut cfg = Config::with_nodes(executors);
-            cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
-            let mut catalog = Catalog::new();
-            for e in 0..executors {
-                catalog.insert(ObjectId(e as u64), crate::util::units::MB);
+            let mut base_wall = None;
+            for &threads in threads_list {
+                let threads = threads.max(1);
+                let mut cfg = Config::with_nodes(executors);
+                cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+                cfg.split_into_sites(sites);
+                cfg.sim.threads = threads;
+                let mut catalog = Catalog::new();
+                for e in 0..executors {
+                    catalog.insert(ObjectId(e as u64), crate::util::units::MB);
+                }
+                let task_list: Vec<(f64, Task)> = (0..tasks)
+                    .map(|i| {
+                        (
+                            i as f64 * 0.0005,
+                            Task::with_inputs(TaskId(i), vec![ObjectId(i % executors as u64)]),
+                        )
+                    })
+                    .collect();
+                let mut spec = SimWorkloadSpec::new(task_list);
+                spec.prewarm = (0..executors).map(|e| (e, ObjectId(e as u64))).collect();
+                let t0 = std::time::Instant::now();
+                let out = SimDriver::new(cfg, spec, catalog).run();
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                let base = *base_wall.get_or_insert(wall);
+                rows.push(ScalePoint {
+                    executors,
+                    sites: sites.max(1),
+                    threads,
+                    tasks: out.metrics.tasks_done,
+                    events: out.events,
+                    makespan_s: out.makespan_s,
+                    wall_s: wall,
+                    events_per_s: out.events as f64 / wall,
+                    speedup: base / wall,
+                    peak_rss_mb: peak_rss_mb(),
+                });
             }
-            let task_list: Vec<(f64, Task)> = (0..tasks)
-                .map(|i| {
-                    (
-                        i as f64 * 0.0005,
-                        Task::with_inputs(TaskId(i), vec![ObjectId(i % executors as u64)]),
-                    )
-                })
-                .collect();
-            let mut spec = SimWorkloadSpec::new(task_list);
-            spec.prewarm = (0..executors).map(|e| (e, ObjectId(e as u64))).collect();
-            let t0 = std::time::Instant::now();
-            let out = SimDriver::new(cfg, spec, catalog).run();
-            let wall = t0.elapsed().as_secs_f64().max(1e-9);
-            rows.push(ScalePoint {
-                executors,
-                tasks: out.metrics.tasks_done,
-                events: out.events,
-                makespan_s: out.makespan_s,
-                wall_s: wall,
-                events_per_s: out.events as f64 / wall,
-                peak_rss_mb: peak_rss_mb(),
-            });
         }
     }
     rows
@@ -1078,30 +1112,54 @@ pub fn emit_scale(
         dir.join("fig_scale.csv"),
         &[
             "executors",
+            "sites",
+            "threads",
             "tasks",
             "events",
             "makespan_s",
             "wall_s",
             "events_per_s",
+            "speedup",
             "peak_rss_mb",
         ],
     );
     println!(
-        "{:<10} {:>9} {:>10} {:>11} {:>10} {:>12} {:>9}",
-        "executors", "tasks", "events", "makespan", "wall", "events/s", "rss"
+        "{:<10} {:>5} {:>7} {:>9} {:>10} {:>11} {:>10} {:>12} {:>7} {:>9}",
+        "executors",
+        "sites",
+        "threads",
+        "tasks",
+        "events",
+        "makespan",
+        "wall",
+        "events/s",
+        "speedup",
+        "rss"
     );
     for r in rows {
         println!(
-            "{:<10} {:>9} {:>10} {:>10.1}s {:>9.3}s {:>12.0} {:>7.1}MB",
-            r.executors, r.tasks, r.events, r.makespan_s, r.wall_s, r.events_per_s, r.peak_rss_mb
+            "{:<10} {:>5} {:>7} {:>9} {:>10} {:>10.1}s {:>9.3}s {:>12.0} {:>6.2}x {:>7.1}MB",
+            r.executors,
+            r.sites,
+            r.threads,
+            r.tasks,
+            r.events,
+            r.makespan_s,
+            r.wall_s,
+            r.events_per_s,
+            r.speedup,
+            r.peak_rss_mb
         );
         csv.rowf(&[
             &r.executors,
+            &r.sites,
+            &r.threads,
             &r.tasks,
             &r.events,
             &r.makespan_s,
             &r.wall_s,
             &r.events_per_s,
+            &r.speedup,
             &r.peak_rss_mb,
         ]);
     }
@@ -1116,6 +1174,9 @@ pub fn emit_scale(
 pub struct FederationPoint {
     /// Member sites the testbed was split into.
     pub sites: usize,
+    /// Parallel-engine worker threads the cell ran at (outcomes are
+    /// thread-count invariant; only wall-clock changes).
+    pub threads: usize,
     /// Per-site WAN uplink, Gbit/s (pairwise link = min of endpoints).
     pub wan_gbps: f64,
     /// Fraction of task origins pinned to the home site.
@@ -1154,9 +1215,11 @@ pub fn fig_federation(
     skew_list: &[f64],
     nodes: usize,
     tasks_per_node: usize,
+    threads: usize,
 ) -> Vec<FederationPoint> {
     use crate::federation::PlacementMode;
     let nodes = nodes.max(2);
+    let threads = threads.max(1);
     let mut rows = Vec::new();
     for &n_sites in sites_list {
         for &wan in wan_gbps_list {
@@ -1174,6 +1237,7 @@ pub fn fig_federation(
                     }
                     cfg.federation.placement = mode;
                     cfg.federation.skew = skew;
+                    cfg.sim.threads = threads;
                     let mut catalog = Catalog::new();
                     for e in 0..nodes {
                         catalog.insert(ObjectId(e as u64), 32 * crate::util::units::MB);
@@ -1192,6 +1256,7 @@ pub fn fig_federation(
                     let out = SimDriver::new(cfg, spec, catalog).run();
                     rows.push(FederationPoint {
                         sites: n_sites.max(1),
+                        threads,
                         wan_gbps: wan,
                         skew,
                         placement: mode.label(),
@@ -1221,6 +1286,7 @@ pub fn emit_federation(
         dir.join("fig_federation.csv"),
         &[
             "sites",
+            "threads",
             "wan_gbps",
             "skew",
             "placement",
@@ -1251,6 +1317,7 @@ pub fn emit_federation(
         );
         csv.rowf(&[
             &r.sites,
+            &r.threads,
             &r.wan_gbps,
             &r.skew,
             &r.placement,
@@ -1549,13 +1616,14 @@ mod tests {
         // Tiny grid sanity: every cell retires the whole workload and
         // reports positive throughput. Wall-clock ratios are a bench
         // concern, not a test one — this must stay load-tolerant.
-        let rows = fig_scale(&[4, 16], &[256]);
+        let rows = fig_scale(&[4, 16], &[256], 1, &[1]);
         assert_eq!(rows.len(), 2);
         for r in &rows {
             assert_eq!(r.tasks, 256, "executors={} must retire all tasks", r.executors);
             assert!(r.events >= r.tasks, "each task takes >= 1 event");
             assert!(r.makespan_s > 0.0);
             assert!(r.events_per_s > 0.0);
+            assert_eq!(r.speedup, 1.0, "single-thread-axis rows are their own baseline");
         }
         // Linux CI reports a real high-water mark; elsewhere 0.0 is fine.
         if cfg!(target_os = "linux") {
@@ -1564,11 +1632,21 @@ mod tests {
     }
 
     #[test]
+    fn vm_hwm_parse_degrades_to_zero() {
+        assert_eq!(parse_vm_hwm("VmPeak:\t  100 kB\nVmHWM:\t  2048 kB\n"), 2.0);
+        // Kernels without per-process HWM accounting omit the field:
+        // the figure still emits, with a zero RSS column.
+        assert_eq!(parse_vm_hwm("VmPeak:\t  100 kB\nVmRSS:\t  50 kB\n"), 0.0);
+        assert_eq!(parse_vm_hwm(""), 0.0);
+        assert_eq!(parse_vm_hwm("VmHWM:\tgarbage kB\n"), 0.0);
+    }
+
+    #[test]
     fn fig_federation_affinity_beats_both_baselines() {
         // The PR's acceptance criterion: at >= 2 sites, Pilot-Data
         // affinity placement must beat always-home AND random-site on
         // makespan AND WAN bytes.
-        let rows = fig_federation(&[2], &[0.25], &[0.5], 8, 4);
+        let rows = fig_federation(&[2], &[0.25], &[0.5], 8, 4, 2);
         assert_eq!(rows.len(), 3);
         let get = |p: &str| rows.iter().find(|r| r.placement == p).unwrap();
         let (aff, home, random) = (get("affinity"), get("home"), get("random"));

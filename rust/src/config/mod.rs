@@ -186,6 +186,24 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Simulation-engine configuration (see [`crate::sim::parallel`]).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Worker threads for the conservative-lookahead parallel event
+    /// engine. 1 (the default) runs the serial engine bit-for-bit; N > 1
+    /// executes federation sites on N threads with identical merged
+    /// outcomes. 0 in a config file (or `--threads 0`) resolves at load
+    /// time to one thread per available core. Single-site runs always
+    /// use the serial engine regardless of this setting.
+    pub threads: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { threads: 1 }
+    }
+}
+
 /// Cache-location index configuration (§3.2.3).
 ///
 /// Selects the [`DataIndex`](crate::index::DataIndex) backend the
@@ -472,6 +490,8 @@ pub struct Config {
     pub transfer: TransferConfig,
     /// Multi-cluster federation (sites, WAN fabric, placement).
     pub federation: FederationConfig,
+    /// Simulation-engine settings (parallel event execution).
+    pub sim: SimConfig,
     /// Stacking application constants.
     pub app: AppConfig,
     /// Master RNG seed for workload generation and tie-breaking.
@@ -559,6 +579,16 @@ impl Config {
             // 0 = auto: one shard per available core, resolved at load
             // time so everything downstream sees a concrete count.
             co.shards = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+        }
+
+        let sm = &mut self.sim;
+        sm.threads = doc.num_or("sim.threads", sm.threads as f64) as usize;
+        if sm.threads == 0 {
+            // 0 = auto, resolved at load time exactly like
+            // coordinator.shards above.
+            sm.threads = std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1);
         }
@@ -889,6 +919,21 @@ release_threshold = 0.4
         let mut c = Config::default();
         c.apply_doc(&auto).unwrap();
         assert!(c.coordinator.shards >= 1, "shards={}", c.coordinator.shards);
+    }
+
+    #[test]
+    fn sim_threads_override_applies_and_resolves_auto() {
+        let doc = parse::Doc::parse("[sim]\nthreads = 4").unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.sim.threads, 4);
+        assert_eq!(Config::default().sim.threads, 1);
+        // 0 = auto: resolved to one thread per core at load time, the
+        // same contract as coordinator.shards.
+        let auto = parse::Doc::parse("[sim]\nthreads = 0").unwrap();
+        let mut c = Config::default();
+        c.apply_doc(&auto).unwrap();
+        assert!(c.sim.threads >= 1, "threads={}", c.sim.threads);
     }
 
     #[test]

@@ -393,6 +393,195 @@ impl Metrics {
             self.tasks_done as f64 / span
         }
     }
+
+    /// Fold another site's metrics into this one (the federated driver
+    /// merges per-site metrics in fixed site order, so the result is
+    /// deterministic and thread-count independent).
+    ///
+    /// Counters and byte totals sum; latency estimators merge; the
+    /// experiment span is the earliest dispatch to the latest
+    /// completion across sites that ran tasks; `pool_timeline`s merge
+    /// by carrying each side forward to the union of sample times and
+    /// summing; `site_pool_timeline` slots concatenate by index (each
+    /// site only ever writes its own); `peak_executors` sums, an upper
+    /// bound (site peaks need not coincide).
+    pub fn merge(&mut self, other: &Metrics) {
+        if other.tasks_dispatched > 0 {
+            self.t_start = if self.tasks_dispatched > 0 {
+                self.t_start.min(other.t_start)
+            } else {
+                other.t_start
+            };
+        }
+        self.t_end = self.t_end.max(other.t_end);
+        self.local_bytes += other.local_bytes;
+        self.c2c_bytes += other.c2c_bytes;
+        self.gpfs_bytes += other.gpfs_bytes;
+        self.gpfs_write_bytes += other.gpfs_write_bytes;
+        self.cache_hits += other.cache_hits;
+        self.peer_hits += other.peer_hits;
+        self.gpfs_misses += other.gpfs_misses;
+        self.tasks_done += other.tasks_done;
+        self.tasks_dispatched += other.tasks_dispatched;
+        self.index_lookups += other.index_lookups;
+        self.index_hops += other.index_hops;
+        self.index_cost_s += other.index_cost_s;
+        self.task_latency.merge(&other.task_latency);
+        self.task_latency_pcts.merge(&other.task_latency_pcts);
+        self.exec_latency.merge(&other.exec_latency);
+        self.pool_timeline = merge_timelines(&self.pool_timeline, &other.pool_timeline);
+        self.alloc_requests += other.alloc_requests;
+        self.executors_joined += other.executors_joined;
+        self.executors_released += other.executors_released;
+        self.peak_executors += other.peak_executors;
+        self.idle_exec_s += other.idle_exec_s;
+        self.alloc_wait_s += other.alloc_wait_s;
+        self.replicas_created += other.replicas_created;
+        self.replica_bytes_staged += other.replica_bytes_staged;
+        self.replica_hits += other.replica_hits;
+        self.replicas_dropped += other.replicas_dropped;
+        self.staging_deferred += other.staging_deferred;
+        self.stabilization_msgs += other.stabilization_msgs;
+        self.index_misroutes += other.index_misroutes;
+        self.index_update_msgs += other.index_update_msgs;
+        self.dispatch_steals += other.dispatch_steals;
+        self.dispatch_stolen_tasks += other.dispatch_stolen_tasks;
+        self.dispatch_batches += other.dispatch_batches;
+        for (dst, src) in self.dispatch_batch_hist.iter_mut().zip(other.dispatch_batch_hist) {
+            *dst += src;
+        }
+        self.shard_queue_depths.extend_from_slice(&other.shard_queue_depths);
+        for i in 0..3 {
+            self.class_bytes[i] += other.class_bytes[i];
+            self.class_xfer_s[i] += other.class_xfer_s[i];
+        }
+        self.wan_bytes += other.wan_bytes;
+        self.cross_site_tasks += other.cross_site_tasks;
+        for (site, tl) in other.site_pool_timeline.iter().enumerate() {
+            if tl.is_empty() {
+                continue;
+            }
+            if self.site_pool_timeline.len() <= site {
+                self.site_pool_timeline.resize_with(site + 1, Vec::new);
+            }
+            self.site_pool_timeline[site].extend_from_slice(tl);
+        }
+    }
+
+    /// Order-sensitive digest of the run's outcome counters (FNV-1a
+    /// over every counter and f64 bit pattern that is a function of
+    /// simulated — not wall-clock — time). Serial-vs-parallel
+    /// equivalence tests compare these: identical checksums mean
+    /// identical byte accounting, hit profiles, latency sums, spans,
+    /// and timeline shapes.
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut fold = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for x in [
+            self.local_bytes,
+            self.c2c_bytes,
+            self.gpfs_bytes,
+            self.gpfs_write_bytes,
+            self.cache_hits,
+            self.peer_hits,
+            self.gpfs_misses,
+            self.tasks_done,
+            self.tasks_dispatched,
+            self.index_lookups,
+            self.index_hops,
+            self.index_cost_s.to_bits(),
+            self.task_latency.count(),
+            self.task_latency.sum().to_bits(),
+            self.exec_latency.count(),
+            self.exec_latency.sum().to_bits(),
+            self.t_start.to_bits(),
+            self.t_end.to_bits(),
+            self.pool_timeline.len() as u64,
+            self.alloc_requests,
+            self.executors_joined,
+            self.executors_released,
+            self.peak_executors as u64,
+            self.idle_exec_s.to_bits(),
+            self.alloc_wait_s.to_bits(),
+            self.replicas_created,
+            self.replica_bytes_staged,
+            self.replica_hits,
+            self.replicas_dropped,
+            self.staging_deferred,
+            self.stabilization_msgs,
+            self.index_misroutes,
+            self.index_update_msgs,
+            self.dispatch_steals,
+            self.dispatch_stolen_tasks,
+            self.dispatch_batches,
+            self.wan_bytes,
+            self.cross_site_tasks,
+        ] {
+            fold(x);
+        }
+        for b in self.dispatch_batch_hist {
+            fold(b);
+        }
+        for i in 0..3 {
+            fold(self.class_bytes[i]);
+            fold(self.class_xfer_s[i].to_bits());
+        }
+        for s in &self.pool_timeline {
+            fold(s.t.to_bits());
+            fold(s.allocated as u64);
+            fold(s.queued as u64);
+        }
+        h
+    }
+}
+
+/// Union-merge two pool timelines: at each distinct sample time, carry
+/// each side forward to that time (zero before its first sample) and
+/// sum the pool shapes and cumulative counters. Associative, so
+/// pairwise merging across N sites equals the N-way merge.
+fn merge_timelines(a: &[PoolSample], b: &[PoolSample]) -> Vec<PoolSample> {
+    if a.is_empty() {
+        return b.to_vec();
+    }
+    if b.is_empty() {
+        return a.to_vec();
+    }
+    let zero = PoolSample::default();
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut last_a, mut last_b) = (zero, zero);
+    while i < a.len() || j < b.len() {
+        let ta = a.get(i).map_or(f64::INFINITY, |s| s.t);
+        let tb = b.get(j).map_or(f64::INFINITY, |s| s.t);
+        let t = ta.min(tb);
+        if ta <= t {
+            last_a = a[i];
+            i += 1;
+        }
+        if tb <= t {
+            last_b = b[j];
+            j += 1;
+        }
+        out.push(PoolSample {
+            t,
+            allocated: last_a.allocated + last_b.allocated,
+            pending: last_a.pending + last_b.pending,
+            queued: last_a.queued + last_b.queued,
+            cache_hits: last_a.cache_hits + last_b.cache_hits,
+            peer_hits: last_a.peer_hits + last_b.peer_hits,
+            gpfs_misses: last_a.gpfs_misses + last_b.gpfs_misses,
+            replicas: last_a.replicas + last_b.replicas,
+            staging_deferred: last_a.staging_deferred + last_b.staging_deferred,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -513,6 +702,60 @@ mod tests {
         assert_eq!(m.site_pool_timeline[1][1].allocated, 3);
         // Site samples don't disturb the combined peak.
         assert_eq!(m.peak_executors, 0);
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters_and_unions_timelines() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.tasks_dispatched = 2;
+        a.tasks_done = 2;
+        a.t_start = 1.0;
+        a.t_end = 9.0;
+        b.tasks_dispatched = 3;
+        b.tasks_done = 3;
+        b.t_start = 0.5;
+        b.t_end = 7.0;
+        a.add_bytes(ByteSource::Local, 10);
+        b.add_bytes(ByteSource::Gpfs, 4);
+        a.note_task_latency(1.0);
+        b.note_task_latency(3.0);
+        a.sample_pool(0.0, 2, 0, 1, 0);
+        b.sample_pool(0.0, 3, 0, 0, 0);
+        b.sample_pool(5.0, 4, 0, 2, 0);
+        b.sample_site_pool(1, 5.0, 4, 0, 2);
+        let before = a.checksum();
+        a.merge(&b);
+        assert_ne!(a.checksum(), before);
+        assert_eq!(a.tasks_done, 5);
+        assert_eq!(a.local_bytes, 10);
+        assert_eq!(a.gpfs_bytes, 4);
+        assert!((a.t_start - 0.5).abs() < 1e-12, "earliest dispatch wins");
+        assert!((a.t_end - 9.0).abs() < 1e-12, "latest completion wins");
+        assert_eq!(a.task_latency.count(), 2);
+        // Timeline union at times {0.0, 5.0}; at 5.0 side A carries its
+        // t=0 sample forward.
+        assert_eq!(a.pool_timeline.len(), 2);
+        assert_eq!(a.pool_timeline[0].allocated, 5);
+        assert_eq!(a.pool_timeline[1].allocated, 6);
+        assert_eq!(a.site_pool_timeline[1].len(), 1);
+    }
+
+    #[test]
+    fn merge_skips_t_start_of_idle_sites() {
+        // A site that never dispatched keeps its default t_start = 0.0,
+        // which must not drag the merged experiment start to zero.
+        let mut a = Metrics::new();
+        a.tasks_dispatched = 1;
+        a.tasks_done = 1;
+        a.t_start = 4.0;
+        a.t_end = 6.0;
+        let idle = Metrics::new();
+        a.merge(&idle);
+        assert!((a.t_start - 4.0).abs() < 1e-12);
+        let mut fresh = Metrics::new();
+        fresh.merge(&a);
+        assert!((fresh.t_start - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -66,6 +66,20 @@
 //! via [`crate::index::DataIndex::lookup_cost`] like a dispatch-side
 //! lookup — which is also how an executor discovers replicas staged
 //! after its task was dispatched.
+//!
+//! ## Multi-site runs (parallel federation)
+//!
+//! With more than one `[[site]]` table the run decomposes into one
+//! site-local world per federation site, executed in parallel on the
+//! conservative-lookahead engine ([`crate::sim::parallel`]). Each
+//! world owns its site's executors, caches, dispatch core, and
+//! resources; everything cross-site — task routing, the shared
+//! directory, GPFS and metadata access from non-home sites, WAN data
+//! transfers — travels as timestamped inter-site messages (see the
+//! `fedsim` submodule for the protocol and the deterministic merge).
+//! Single-site runs stay on the serial [`Engine`] below, bit-for-bit.
+
+mod fedsim;
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
@@ -146,6 +160,12 @@ enum Ev {
     AllocReady(u64),
     /// Periodic replication evaluation (replication.enabled only).
     ReplTick,
+    /// An inter-site message arrived from the given sender site
+    /// (multi-site runs on the parallel engine only).
+    Msg(u32, fedsim::SiteMsg),
+    /// The home metadata server finished an operation performed on
+    /// behalf of another site (remote-op id).
+    MetaStep(u64),
 }
 
 /// Why a flow was started (continuation tag).
@@ -156,6 +176,10 @@ enum FlowPurpose {
     FetchGpfs,
     WriteLocal,
     WriteGpfs,
+    /// Sender half of a GPFS output write from a non-home federation
+    /// site: on completion the bytes are handed to the home site over
+    /// the inter-site channel (metadata create + home legs there).
+    WriteGpfsWan,
 }
 
 /// Who owns a flow: a running task's pipeline phase, or a background
@@ -166,6 +190,9 @@ enum FlowTag {
     Run(u64, FlowPurpose),
     /// Replication staging: object headed for an executor's cache.
     Replica { obj: ObjectId, dst: ExecutorId },
+    /// A leg served on behalf of *another* site (remote-op id): a peer
+    /// egress toward a requesting site, or a home-side GPFS leg.
+    Remote(u64),
 }
 
 /// Bookkeeping for one in-flight flow: the owner tag plus what the
@@ -219,10 +246,90 @@ struct Running {
     events: Vec<CacheEvent>,
 }
 
+/// Slab of in-flight runs, keyed by run id = `generation << 32 | slot`.
+/// The dispatch hot path touches this on every event; a `Vec` index
+/// replaces the hash on every lookup, and the per-slot generation
+/// guard makes a recycled slot unable to satisfy a stale id.
+struct RunTable {
+    slots: Vec<(u32, Option<Running>)>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl RunTable {
+    fn new() -> RunTable {
+        RunTable {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn split(rid: u64) -> (u32, usize) {
+        ((rid >> 32) as u32, (rid & 0xFFFF_FFFF) as usize)
+    }
+
+    /// Insert a run, returning its id. Slots are reused LIFO, so id
+    /// assignment is deterministic for a deterministic event order.
+    fn insert(&mut self, run: Running) -> u64 {
+        self.len += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                let e = &mut self.slots[slot as usize];
+                e.1 = Some(run);
+                ((e.0 as u64) << 32) | slot as u64
+            }
+            None => {
+                let slot = self.slots.len() as u32;
+                self.slots.push((0, Some(run)));
+                slot as u64
+            }
+        }
+    }
+
+    fn get(&self, rid: u64) -> Option<&Running> {
+        let (gen, slot) = Self::split(rid);
+        match self.slots.get(slot) {
+            Some((g, run)) if *g == gen => run.as_ref(),
+            _ => None,
+        }
+    }
+
+    fn get_mut(&mut self, rid: u64) -> Option<&mut Running> {
+        let (gen, slot) = Self::split(rid);
+        match self.slots.get_mut(slot) {
+            Some((g, run)) if *g == gen => run.as_mut(),
+            _ => None,
+        }
+    }
+
+    fn remove(&mut self, rid: u64) -> Option<Running> {
+        let (gen, slot) = Self::split(rid);
+        match self.slots.get_mut(slot) {
+            Some((g, run)) if *g == gen && run.is_some() => {
+                *g = g.wrapping_add(1);
+                self.free.push(slot as u32);
+                self.len -= 1;
+                run.take()
+            }
+            _ => None,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// Elastic-pool state for one site (present only when
 /// `provisioner.enabled`; one entry per federation site, so every site
 /// grows and shrinks against its own demand).
 struct ProvisionState {
+    /// The federation site this pool serves (a legacy multi-site world
+    /// holds one entry per site; a federated site world holds only its
+    /// own — ticks find their pool by site, not by index).
+    site: u32,
     drp: Provisioner,
     /// Owns this site's slice of global node ids.
     cluster: ClusterProvider,
@@ -251,13 +358,13 @@ struct SimWorld {
     metrics: Metrics,
     dispatch_server: FifoServer,
     pending_tasks: Vec<Option<Task>>,
-    runs: FxHashMap<u64, Running>,
-    next_run: u64,
+    runs: RunTable,
     flow_map: FxHashMap<FlowId, FlowInfo>,
     flow_version: u64,
-    /// (executor, object) cache entries created by replication staging —
-    /// local hits on these count as `replica_hits`.
-    staged_replicas: FxHashSet<(ExecutorId, ObjectId)>,
+    /// Per-executor sets of objects whose cache entry was created by
+    /// replication staging — local hits on these count as
+    /// `replica_hits`. Indexed by executor id (hot path: no pair hash).
+    staged_replicas: Vec<FxHashSet<ObjectId>>,
     submit_times: FxHashMap<TaskId, f64>,
     first_dispatch: Option<f64>,
     total_tasks: u64,
@@ -268,6 +375,11 @@ struct SimWorld {
     /// Recycled per-run cache-event vectors: at 10⁵ executors the
     /// dispatch hot path must not allocate one per task.
     events_pool: Vec<Vec<CacheEvent>>,
+    /// Federation-site scope: present iff this world is one site of a
+    /// multi-site run on the parallel engine (`None` on the serial
+    /// single-site path — every fed hook below then compiles away to a
+    /// branch on this option).
+    fed: Option<fedsim::FedScope>,
 }
 
 impl SimWorld {
@@ -283,7 +395,7 @@ impl SimWorld {
     /// Handle one provisioner evaluation round for one site's pool.
     fn provision_tick(&mut self, now: f64, site: u32, q: &mut EventQueue<Ev>) {
         let mut provs = std::mem::take(&mut self.provs);
-        let Some(prov) = provs.get_mut(site as usize) else {
+        let Some(prov) = provs.iter_mut().find(|p| p.site == site) else {
             self.provs = provs;
             return;
         };
@@ -342,10 +454,11 @@ impl SimWorld {
                             self.core.replication_staged(req.obj, req.dst);
                         }
                         self.caches[e] = SimWorld::fresh_cache(&self.cfg, e);
-                        self.staged_replicas.retain(|&(se, _)| se != e);
+                        self.staged_replicas[e].clear();
                         prov.cluster.release(e);
                         prov.drp.on_released(e);
                         self.metrics.executors_released += 1;
+                        fedsim::note_executor_dropped(self, now, e);
                     }
                 }
             }
@@ -382,10 +495,17 @@ impl SimWorld {
             replicas,
         );
         // Keep evaluating while work (or an allocation) is outstanding.
-        if self.metrics.tasks_done < self.total_tasks || site_pending > 0 {
+        // A federated site cannot see the global task count, so it
+        // ticks until the home site declares the run quiesced.
+        let live = match &self.fed {
+            Some(fed) => !fed.quiesced || site_pending > 0,
+            None => self.metrics.tasks_done < self.total_tasks || site_pending > 0,
+        };
+        if live {
             q.after(interval_s, Ev::ProvisionTick(site));
         }
         self.provs = provs;
+        fedsim::report_load(self, now);
         // A release may have requeued parked tasks onto live executors.
         let orders = self.core.try_dispatch();
         self.execute_orders(now, orders, q);
@@ -411,6 +531,7 @@ impl SimWorld {
             }
         }
         self.provs = provs;
+        fedsim::report_load(self, now);
         let orders = self.core.try_dispatch();
         self.execute_orders(now, orders, q);
     }
@@ -449,14 +570,19 @@ impl SimWorld {
                         Admission::Defer => {}
                     }
                 }
-                ReplicaDirective::Drop { obj, victim } => self.execute_drop(obj, victim),
+                ReplicaDirective::Drop { obj, victim } => self.execute_drop(now, obj, victim),
             }
         }
         // Deferred stagings whose source drained since the last round.
         self.pump_admissions(now, q);
         // Keep evaluating while the workload is live; staging flows
         // already in flight drain through the flow network regardless.
-        if self.metrics.tasks_done < self.total_tasks {
+        // (Federated sites tick until the home site declares quiesce.)
+        let live = match &self.fed {
+            Some(fed) => !fed.quiesced,
+            None => self.metrics.tasks_done < self.total_tasks,
+        };
+        if live {
             q.after(self.cfg.replication.evaluate_interval_s.max(1e-3), Ev::ReplTick);
         }
     }
@@ -508,15 +634,16 @@ impl SimWorld {
     /// (freeing cache space ahead of pressure eviction), unless the world
     /// moved on — the copy is gone, the lease ended, or the index no
     /// longer records a second copy to fall back on.
-    fn execute_drop(&mut self, obj: ObjectId, victim: ExecutorId) {
+    fn execute_drop(&mut self, now: f64, obj: ObjectId, victim: ExecutorId) {
         let droppable = victim < self.caches.len()
             && self.core.executors().binary_search(&victim).is_ok()
             && self.caches[victim].contains(obj)
             && self.core.locations_for(victim, obj).len() > 1;
         if droppable && self.caches[victim].remove(obj) {
-            self.staged_replicas.remove(&(victim, obj));
+            self.staged_replicas[victim].remove(&obj);
             self.core
                 .apply_cache_events(victim, &[CacheEvent::Evicted(obj)]);
+            fedsim::digest(self, now, victim, &[CacheEvent::Evicted(obj)]);
             self.metrics.replicas_dropped += 1;
         }
         self.core.replication_dropped(obj, victim);
@@ -524,7 +651,7 @@ impl SimWorld {
 
     /// A replication staging flow completed: the copy enters the
     /// destination cache and the index (same path as any cache insert).
-    fn replica_staged(&mut self, obj: ObjectId, dst: ExecutorId) {
+    fn replica_staged(&mut self, now: f64, obj: ObjectId, dst: ExecutorId) {
         self.core.replication_staged(obj, dst);
         let bytes = self.cached_size(obj);
         // The transfer happened whether or not the copy is still wanted:
@@ -546,11 +673,12 @@ impl SimWorld {
         }
         for ev in &events {
             if let CacheEvent::Evicted(v) = ev {
-                self.staged_replicas.remove(&(dst, *v));
+                self.staged_replicas[dst].remove(v);
             }
         }
         self.core.apply_cache_events(dst, &events);
-        self.staged_replicas.insert((dst, obj));
+        fedsim::digest(self, now, dst, &events);
+        self.staged_replicas[dst].insert(obj);
         self.metrics.replicas_created += 1;
     }
 
@@ -597,6 +725,37 @@ impl SimWorld {
         self.reschedule_flow_check(now, q);
     }
 
+    /// Start a class-tagged flow over an explicit resource set — the
+    /// per-site *half* of a cross-site transfer (see the `SimTestbed`
+    /// egress/ingress leg builders). Only the sender's half carries the
+    /// WAN leg, so only `wan` halves meter cross-site bytes.
+    #[allow(clippy::too_many_arguments)]
+    fn start_flow_over(
+        &mut self,
+        now: f64,
+        tag: FlowTag,
+        class: TransferClass,
+        rs: &crate::storage::testbed::ResourceSet,
+        bytes: u64,
+        wan: bool,
+        q: &mut EventQueue<Ev>,
+    ) {
+        if wan {
+            self.metrics.wan_bytes += bytes;
+        }
+        let fid = self.plane.start_over(now, class, rs, bytes);
+        self.flow_map.insert(
+            fid,
+            FlowInfo {
+                tag,
+                class,
+                bytes,
+                t_start: now,
+            },
+        );
+        self.reschedule_flow_check(now, q);
+    }
+
     fn reschedule_flow_check(&mut self, now: f64, q: &mut EventQueue<Ev>) {
         self.flow_version += 1;
         if let Some((t, _)) = self.plane.testbed.net.next_completion(now) {
@@ -619,7 +778,8 @@ impl SimWorld {
                             .note_class_transfer(info.class, info.bytes, now - info.t_start);
                         match info.tag {
                             FlowTag::Run(rid, purpose) => self.flow_done(now, rid, purpose, q),
-                            FlowTag::Replica { obj, dst } => self.replica_staged(obj, dst),
+                            FlowTag::Replica { obj, dst } => self.replica_staged(now, obj, dst),
+                            FlowTag::Remote(xid) => fedsim::remote_flow_done(self, now, xid),
                         }
                     }
                 }
@@ -651,29 +811,24 @@ impl SimWorld {
             let t_out = self
                 .dispatch_server
                 .submit_secs(now, 1.0 / DISPATCH_RATE + order.cost.latency_s);
-            let rid = self.next_run;
-            self.next_run += 1;
-            self.runs.insert(
-                rid,
-                Running {
-                    t_submit: self.submit_times.remove(&order.task.id).unwrap_or(now),
-                    t_dispatch: now,
-                    task: order.task,
-                    exec: order.executor,
-                    hints: order.hints,
-                    next_input: 0,
-                    phase: Phase::Start,
-                    refetch_src: None,
-                    events: self.events_pool.pop().unwrap_or_default(),
-                },
-            );
+            let rid = self.runs.insert(Running {
+                t_submit: self.submit_times.remove(&order.task.id).unwrap_or(now),
+                t_dispatch: now,
+                task: order.task,
+                exec: order.executor,
+                hints: order.hints,
+                next_input: 0,
+                phase: Phase::Start,
+                refetch_src: None,
+                events: self.events_pool.pop().unwrap_or_default(),
+            });
             q.at(t_out + self.cfg.testbed.net_latency_s, Ev::AtExecutor(rid));
         }
     }
 
     /// A timed phase for run `rid` elapsed: advance its state machine.
     fn step(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
-        let Some(run) = self.runs.get(&rid) else {
+        let Some(run) = self.runs.get(rid) else {
             return;
         };
         match run.phase {
@@ -681,22 +836,25 @@ impl SimWorld {
                 if self.cfg.scheduler.wrapper {
                     // mkdir + symlink on persistent storage before work.
                     let pre = self.cfg.shared_fs.meta_ops_wrapper.saturating_sub(1).max(1);
-                    let done = self
-                        .plane
-                        .testbed
-                        .metadata
-                        .submit_secs(now, pre as f64 * self.cfg.shared_fs.wrapper_op_s);
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::Fetch;
-                    q.at(done, Ev::Step(rid));
+                    let secs = pre as f64 * self.cfg.shared_fs.wrapper_op_s;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::Fetch;
+                    if self.fed_remote() {
+                        // The sandbox directory lives on the home
+                        // site's shared FS: the ops round-trip the WAN.
+                        fedsim::meta_request(self, now, rid, 0, secs, fedsim::MetaThen::Ack);
+                    } else {
+                        let done = self.plane.testbed.metadata.submit_secs(now, secs);
+                        q.at(done, Ev::Step(rid));
+                    }
                 } else {
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::Fetch;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::Fetch;
                     self.step(now, rid, q);
                 }
             }
             Phase::Fetch => self.fetch_next_input(now, rid, q),
             Phase::GpfsOpen => {
                 // Metadata open done; start the GPFS data transfer.
-                let run = self.runs.get_mut(&rid).unwrap();
+                let run = self.runs.get_mut(rid).unwrap();
                 let obj = run.task.inputs[run.next_input];
                 let node = run.exec;
                 run.phase = Phase::AwaitFlow;
@@ -720,7 +878,7 @@ impl SimWorld {
                 // fetch from the fresh copy it found (re-validated — the
                 // copy may have been evicted during the lookup) or fall
                 // through to persistent storage.
-                let run = self.runs.get_mut(&rid).unwrap();
+                let run = self.runs.get_mut(rid).unwrap();
                 let obj = run.task.inputs[run.next_input];
                 let exec = run.exec;
                 let src = run.refetch_src.take();
@@ -729,7 +887,7 @@ impl SimWorld {
                     Some(src) => {
                         self.core.note_peer_fetch(obj, exec);
                         let bytes = self.cached_size(obj);
-                        self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                        self.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
                         self.start_flow(
                             now,
                             FlowTag::Run(rid, FlowPurpose::FetchPeer),
@@ -739,15 +897,7 @@ impl SimWorld {
                             q,
                         );
                     }
-                    None => {
-                        let done = self
-                            .plane
-                            .testbed
-                            .metadata
-                            .submit(now, self.cfg.shared_fs.meta_ops_open);
-                        self.runs.get_mut(&rid).unwrap().phase = Phase::GpfsOpen;
-                        q.at(done, Ev::Step(rid));
-                    }
+                    None => self.gpfs_open_input(now, rid, q),
                 }
             }
             Phase::AwaitFlow => {
@@ -759,21 +909,37 @@ impl SimWorld {
                 self.finish_input_fetch(now, rid, ByteSource::Gpfs, q);
             }
             Phase::OutputStart => {
-                let run = self.runs.get(&rid).unwrap();
+                let run = self.runs.get(rid).unwrap();
                 let bytes = run.task.output_bytes;
                 let node = run.exec;
                 if bytes == 0 {
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::WrapperPost;
                     self.step(now, rid, q);
                 } else if self.caching {
                     // Diffused outputs land on local disk.
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
                     self.start_flow(
                         now,
                         FlowTag::Run(rid, FlowPurpose::WriteLocal),
                         TransferClass::Foreground,
                         TransferKind::LocalWrite { node },
                         bytes,
+                        q,
+                    );
+                } else if self.fed_remote() {
+                    // GPFS output from a non-home site: push the bytes
+                    // toward the home file system — sender-side legs
+                    // here; the metadata create and the home-side legs
+                    // happen at the home site when the data arrives.
+                    self.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
+                    let rs = self.plane.testbed.gpfs_write_egress(node);
+                    self.start_flow_over(
+                        now,
+                        FlowTag::Run(rid, FlowPurpose::WriteGpfsWan),
+                        TransferClass::Foreground,
+                        &rs,
+                        bytes,
+                        true,
                         q,
                     );
                 } else {
@@ -783,13 +949,13 @@ impl SimWorld {
                         .testbed
                         .metadata
                         .submit(now, self.cfg.shared_fs.meta_ops_open);
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::OutputOpen;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::OutputOpen;
                     q.at(done, Ev::Step(rid));
                 }
             }
             Phase::OutputOpen => {
                 // Output create done; start the GPFS write flow.
-                let run = self.runs.get_mut(&rid).unwrap();
+                let run = self.runs.get_mut(rid).unwrap();
                 let bytes = run.task.output_bytes;
                 let node = run.exec;
                 run.phase = Phase::AwaitFlow;
@@ -808,7 +974,7 @@ impl SimWorld {
 
     /// Resolve the next input of run `rid`, or move on to compute.
     fn fetch_next_input(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
-        let run = self.runs.get(&rid).unwrap();
+        let run = self.runs.get(rid).unwrap();
         if run.next_input >= run.task.inputs.len() {
             return self.start_compute(now, rid, q);
         }
@@ -824,7 +990,7 @@ impl SimWorld {
                 self.metrics.replica_hits += 1;
             }
             let bytes = self.cached_size(obj) + self.local_open_equiv_bytes();
-            self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+            self.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
             self.start_flow(
                 now,
                 FlowTag::Run(rid, FlowPurpose::FetchLocal),
@@ -851,7 +1017,7 @@ impl SimWorld {
             if let Some(src) = peer {
                 self.core.note_peer_fetch(obj, exec);
                 let bytes = self.cached_size(obj);
-                self.runs.get_mut(&rid).unwrap().phase = Phase::AwaitFlow;
+                self.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
                 self.start_flow(
                     now,
                     FlowTag::Run(rid, FlowPurpose::FetchPeer),
@@ -886,7 +1052,7 @@ impl SimWorld {
                             })
                     }
                 };
-                let run = self.runs.get_mut(&rid).unwrap();
+                let run = self.runs.get_mut(rid).unwrap();
                 run.refetch_src = fresh;
                 run.phase = Phase::Refetch;
                 q.after(cost.latency_s, Ev::Step(rid));
@@ -895,12 +1061,20 @@ impl SimWorld {
             // Federation ship-data: nothing local and no hints — ask the
             // global directory whether a peer *site* holds a cached copy
             // before falling back to persistent storage (itself a WAN
-            // hop away from every non-home site). A hit re-enters the
-            // Refetch machinery, which re-validates the source cache and
-            // falls to GPFS if the copy evaporated in flight.
-            if let Some((src, cost)) = self.core.remote_holder(exec, obj) {
+            // hop away from every non-home site). On the serial legacy
+            // path a hit re-enters the Refetch machinery; on the
+            // parallel engine the directory and the holder's cache are
+            // other sites' state, so both the lookup and the transfer
+            // go through the inter-site channel (the holder site
+            // re-validates its own cache and fails the request back to
+            // GPFS if the copy evaporated in flight).
+            if self.fed.is_some() {
+                if fedsim::request_remote(self, now, rid) {
+                    return;
+                }
+            } else if let Some((src, cost)) = self.core.remote_holder(exec, obj) {
                 self.metrics.add_index_cost(cost);
-                let run = self.runs.get_mut(&rid).unwrap();
+                let run = self.runs.get_mut(rid).unwrap();
                 run.refetch_src = Some(src);
                 run.phase = Phase::Refetch;
                 q.after(cost.latency_s, Ev::Step(rid));
@@ -909,18 +1083,42 @@ impl SimWorld {
         }
 
         // Persistent storage: metadata open, then the data flow.
+        self.gpfs_open_input(now, rid, q);
+    }
+
+    /// Open the current input on persistent storage and start its read
+    /// — the shared tail of the fetch path and its stale-hint fallback.
+    /// At a non-home federation site both the open and the read happen
+    /// at the home site, reached through the inter-site channel.
+    fn gpfs_open_input(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
+        if self.fed_remote() {
+            let run = self.runs.get_mut(rid).unwrap();
+            run.phase = Phase::AwaitFlow;
+            let obj = run.task.inputs[run.next_input];
+            let bytes = self.stored_size(obj);
+            let ops = self.cfg.shared_fs.meta_ops_open;
+            fedsim::meta_request(self, now, rid, ops, 0.0, fedsim::MetaThen::GpfsRead { bytes });
+            return;
+        }
         let done = self
             .plane
             .testbed
             .metadata
             .submit(now, self.cfg.shared_fs.meta_ops_open);
-        self.runs.get_mut(&rid).unwrap().phase = Phase::GpfsOpen;
+        self.runs.get_mut(rid).unwrap().phase = Phase::GpfsOpen;
         q.at(done, Ev::Step(rid));
+    }
+
+    /// Whether this world is a non-home site of a parallel federated
+    /// run — home-site resources (GPFS, the metadata server, the
+    /// directory) are then only reachable via inter-site messages.
+    fn fed_remote(&self) -> bool {
+        self.fed.as_ref().is_some_and(|f| f.site != 0)
     }
 
     /// A data flow for run `rid` completed.
     fn flow_done(&mut self, now: f64, rid: u64, purpose: FlowPurpose, q: &mut EventQueue<Ev>) {
-        let run = self.runs.get(&rid).unwrap();
+        let run = self.runs.get(rid).unwrap();
         match purpose {
             FlowPurpose::FetchLocal => {
                 let obj = run.task.inputs[run.next_input];
@@ -940,7 +1138,7 @@ impl SimWorld {
                 self.metrics.add_bytes(ByteSource::Gpfs, bytes);
                 if self.format == DataFormat::Gz && self.cfg.app.decompress_s > 0.0 {
                     // CPU decompression before the data is usable.
-                    self.runs.get_mut(&rid).unwrap().phase = Phase::Decompress;
+                    self.runs.get_mut(rid).unwrap().phase = Phase::Decompress;
                     q.after(self.cfg.app.decompress_s, Ev::Step(rid));
                 } else {
                     self.finish_input_fetch(now, rid, ByteSource::Gpfs, q);
@@ -951,14 +1149,21 @@ impl SimWorld {
                 // Local outputs are still new bytes written on the node;
                 // account them as local traffic.
                 self.metrics.add_bytes(ByteSource::Local, bytes);
-                self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                self.runs.get_mut(rid).unwrap().phase = Phase::WrapperPost;
                 self.after_output(now, rid, q);
             }
             FlowPurpose::WriteGpfs => {
                 let bytes = run.task.output_bytes;
                 self.metrics.add_bytes(ByteSource::GpfsWrite, bytes);
-                self.runs.get_mut(&rid).unwrap().phase = Phase::WrapperPost;
+                self.runs.get_mut(rid).unwrap().phase = Phase::WrapperPost;
                 self.after_output(now, rid, q);
+            }
+            FlowPurpose::WriteGpfsWan => {
+                // Sender half done: hand the output to the home site
+                // (metadata create + home-side legs + the ack happen
+                // there). The run stays in AwaitFlow until WriteAck.
+                let bytes = run.task.output_bytes;
+                fedsim::send_write(self, now, rid, bytes);
             }
         }
     }
@@ -972,7 +1177,7 @@ impl SimWorld {
         q: &mut EventQueue<Ev>,
     ) {
         self.metrics.add_resolution(source);
-        let run = self.runs.get(&rid).unwrap();
+        let run = self.runs.get(rid).unwrap();
         let obj = run.task.inputs[run.next_input];
         let exec = run.exec;
         if self.caching && source != ByteSource::Local {
@@ -981,12 +1186,12 @@ impl SimWorld {
             let events = self.caches[exec].insert(obj, bytes);
             for ev in &events {
                 if let CacheEvent::Evicted(v) = ev {
-                    self.staged_replicas.remove(&(exec, *v));
+                    self.staged_replicas[exec].remove(v);
                 }
             }
-            self.runs.get_mut(&rid).unwrap().events.extend(events);
+            self.runs.get_mut(rid).unwrap().events.extend(events);
         }
-        let run = self.runs.get_mut(&rid).unwrap();
+        let run = self.runs.get_mut(rid).unwrap();
         run.next_input += 1;
         run.phase = Phase::Fetch;
         self.fetch_next_input(now, rid, q);
@@ -994,7 +1199,7 @@ impl SimWorld {
 
     /// All inputs resolved: run the compute, then move to output.
     fn start_compute(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
-        let run = self.runs.get_mut(&rid).unwrap();
+        let run = self.runs.get_mut(rid).unwrap();
         let cpu = match run.task.kind {
             TaskKind::Synthetic { cpu_s } => cpu_s,
             TaskKind::Stack { .. } => self.cfg.app.radec2xy_s + self.cfg.app.stack_compute_s,
@@ -1011,12 +1216,17 @@ impl SimWorld {
     fn after_output(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
         if self.cfg.scheduler.wrapper {
             // rmdir of the sandbox directory on persistent storage.
-            let done = self
-                .plane
-                .testbed
-                .metadata
-                .submit_secs(now, self.cfg.shared_fs.wrapper_op_s);
-            q.at(done, Ev::Step(rid));
+            if self.fed_remote() {
+                let secs = self.cfg.shared_fs.wrapper_op_s;
+                fedsim::meta_request(self, now, rid, 0, secs, fedsim::MetaThen::Ack);
+            } else {
+                let done = self
+                    .plane
+                    .testbed
+                    .metadata
+                    .submit_secs(now, self.cfg.shared_fs.wrapper_op_s);
+                q.at(done, Ev::Step(rid));
+            }
         } else {
             self.complete_run(now, rid, q);
         }
@@ -1024,16 +1234,22 @@ impl SimWorld {
 
     /// Task finished on its executor: report to the dispatcher.
     fn complete_run(&mut self, now: f64, rid: u64, q: &mut EventQueue<Ev>) {
-        let mut run = self.runs.remove(&rid).unwrap();
+        let mut run = self.runs.remove(rid).unwrap();
         self.metrics.tasks_done += 1;
         self.metrics.note_task_latency(now - run.t_submit);
         self.metrics.exec_latency.add(now - run.t_dispatch);
         self.metrics.t_end = now;
         self.core.on_task_complete(run.exec, run.task.id, &run.events);
         let mut events = std::mem::take(&mut run.events);
-        events.clear();
-        if self.events_pool.len() < 4096 {
-            self.events_pool.push(events);
+        if self.fed.is_some() {
+            // The completion (with its cache deltas) feeds the home
+            // site's directory and load books.
+            fedsim::on_complete(self, now, run.exec, events);
+        } else {
+            events.clear();
+            if self.events_pool.len() < 4096 {
+                self.events_pool.push(events);
+            }
         }
         // Wake only the shard that owns the freed executor: the other
         // shards' idle sets did not change (they steal on their own
@@ -1050,10 +1266,16 @@ impl World for SimWorld {
         match ev {
             Ev::Arrive(i) => {
                 if let Some(task) = self.pending_tasks[i as usize].take() {
-                    self.submit_times.insert(task.id, now);
-                    self.core.submit(task);
-                    let orders = self.core.try_dispatch();
-                    self.execute_orders(now, orders, q);
+                    if self.fed.is_some() {
+                        // Arrivals land at the home site's frontend,
+                        // which routes them across sites.
+                        fedsim::route_arrival(self, now, task, q);
+                    } else {
+                        self.submit_times.insert(task.id, now);
+                        self.core.submit(task);
+                        let orders = self.core.try_dispatch();
+                        self.execute_orders(now, orders, q);
+                    }
                 }
             }
             Ev::Dispatch(s) => {
@@ -1066,6 +1288,8 @@ impl World for SimWorld {
             Ev::ProvisionTick(site) => self.provision_tick(now, site, q),
             Ev::AllocReady(id) => self.alloc_ready(now, id, q),
             Ev::ReplTick => self.repl_tick(now, q),
+            Ev::Msg(from, msg) => fedsim::handle_msg(self, now, from, msg, q),
+            Ev::MetaStep(xid) => fedsim::meta_step(self, now, xid, q),
         }
     }
 }
@@ -1086,8 +1310,15 @@ impl SimDriver {
 
     /// Run to completion and return the outcome.
     pub fn run(self) -> RunOutcome {
-        let t0 = std::time::Instant::now();
         let SimDriver { cfg, spec, catalog } = self;
+        if cfg.sites() > 1 {
+            // Multi-site runs decompose into per-site worlds on the
+            // conservative-lookahead parallel engine; the merged
+            // outcome is bit-for-bit identical at every `sim.threads`
+            // setting (tests/parallel_equivalence.rs).
+            return fedsim::run_federated(cfg, spec, catalog);
+        }
+        let t0 = std::time::Instant::now();
 
         // One dispatch core per site (one total without `[[site]]`
         // tables), each sharded with its own disjoint index slices; the
@@ -1128,6 +1359,7 @@ impl SimDriver {
                     drp.on_allocated(grant.nodes.len());
                 }
                 provs.push(ProvisionState {
+                    site: s as u32,
                     drp,
                     cluster,
                     interval_s: cfg.provisioner.poll_interval_s.max(1e-3),
@@ -1194,17 +1426,17 @@ impl SimDriver {
             metrics: Metrics::new(),
             dispatch_server: FifoServer::new(1.0 / DISPATCH_RATE),
             pending_tasks,
-            runs: FxHashMap::default(),
-            next_run: 0,
+            runs: RunTable::new(),
             flow_map: FxHashMap::default(),
             flow_version: 0,
-            staged_replicas: FxHashSet::default(),
+            staged_replicas: (0..nodes).map(|_| FxHashSet::default()).collect(),
             submit_times: FxHashMap::default(),
             first_dispatch: None,
             total_tasks,
             provs,
             next_alloc_id: 0,
             events_pool: Vec::new(),
+            fed: None,
         };
 
         let mut engine = Engine::new(world);
@@ -1275,6 +1507,41 @@ mod tests {
         (0..n)
             .map(|i| (0.0, Task::with_inputs(TaskId(i), vec![ObjectId(i)])))
             .collect()
+    }
+
+    fn dummy_run(i: u64) -> Running {
+        Running {
+            task: Task::with_inputs(TaskId(i), vec![ObjectId(i)]),
+            exec: 0,
+            hints: LocationHints::new(),
+            t_submit: 0.0,
+            t_dispatch: 0.0,
+            next_input: 0,
+            phase: Phase::Start,
+            refetch_src: None,
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn run_table_recycles_slots_with_generation_guard() {
+        let mut t = RunTable::new();
+        let a = t.insert(dummy_run(1));
+        let b = t.insert(dummy_run(2));
+        assert_ne!(a, b);
+        assert_eq!(t.get(a).unwrap().task.id, TaskId(1));
+        assert_eq!(t.remove(a).unwrap().task.id, TaskId(1));
+        assert!(t.get(a).is_none(), "removed id never resolves");
+        // LIFO slot reuse: the freed slot returns under a new generation,
+        // so the recycled id differs and the stale one stays dead.
+        let c = t.insert(dummy_run(3));
+        assert_eq!(c & 0xFFFF_FFFF, a & 0xFFFF_FFFF, "slot reused");
+        assert_ne!(c, a, "generation advanced");
+        assert!(t.get(a).is_none(), "stale id cannot see the new run");
+        assert_eq!(t.get_mut(c).unwrap().task.id, TaskId(3));
+        let _ = t.remove(b);
+        let _ = t.remove(c);
+        assert!(t.is_empty());
     }
 
     #[test]

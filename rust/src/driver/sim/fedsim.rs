@@ -1,0 +1,995 @@
+//! Federated multi-site simulation on the parallel engine.
+//!
+//! A multi-site run builds one [`SimWorld`] per federation site and
+//! executes them on [`ParallelEngine`] in conservative-lookahead rounds
+//! (see [`crate::sim::parallel`]). Each site world owns its slice of
+//! the cluster outright — executors, caches, a sharded dispatch core,
+//! an elastic pool, its LAN and its WAN uplink — plus the home-site
+//! resources (GPFS, the metadata server, the shared directory) when it
+//! is site 0. Nothing cross-site is ever touched directly: it travels
+//! as a timestamped [`SiteMsg`] through the engine's inter-site
+//! channel, arriving one WAN one-way latency after it was sent.
+//!
+//! ## Roles
+//!
+//! **The home site (site 0)** runs the *frontend*: task arrivals land
+//! there, are routed by the [`FederationScheduler`] against a
+//! [`GlobalIndex`] fed by completion digests, and either submit locally
+//! or ship to their run site as a [`SiteMsg::Submit`]. Site 0 also
+//! serves every remote GPFS open/read/write and wrapper metadata op
+//! ([`SiteMsg::MetaReq`]), and answers cross-site cache-location
+//! queries ([`SiteMsg::HolderReq`]).
+//!
+//! **Every site** executes its tasks with the unmodified serial state
+//! machine in `super` — the fed hooks only reroute the operations whose
+//! backing resource lives at another site. Cross-site transfers are
+//! *store-and-forward*: the sender runs its egress legs (disk/NIC/LAN +
+//! WAN uplink), hands the bytes over the channel, and the receiver runs
+//! its ingress legs — each half contends only with its own site's
+//! traffic, which is what makes sites safely parallel (and is also a
+//! reasonable physical model of a WAN relay). WAN bytes are metered on
+//! the egress half only.
+//!
+//! ## Termination
+//!
+//! A site cannot see the global task count, so the frontend tracks
+//! per-site completion counters (piggybacked on [`SiteMsg::Completion`]
+//! and [`SiteMsg::Load`]) and broadcasts [`SiteMsg::Quiesce`] once every
+//! task is done; periodic ticks stop rescheduling and the queues drain.
+//!
+//! ## Determinism
+//!
+//! Every per-site world is seeded exactly as the serial driver seeds
+//! it, messages carry sender-derived ordering keys, and per-site
+//! metrics merge in fixed site order — so the merged [`RunOutcome`] is
+//! bit-for-bit identical at every `sim.threads` setting (pinned by
+//! `tests/parallel_equivalence.rs`).
+
+use super::{
+    Ev, FlowPurpose, FlowTag, Metrics, Phase, ProvisionState, RunOutcome, RunTable, SimWorkloadSpec,
+    SimWorld, DISPATCH_RATE,
+};
+use crate::cache::store::{CacheEvent, DataCache};
+use crate::config::Config;
+use crate::coordinator::metrics::ByteSource;
+use crate::coordinator::task::Task;
+use crate::federation::sched::SiteLoad;
+use crate::federation::{FedCore, FederationScheduler, GlobalIndex, SiteId, Topology};
+use crate::index::central::ExecutorId;
+use crate::index::LookupCost;
+use crate::provisioner::{ClusterProvider, Provisioner};
+use crate::sim::engine::EventQueue;
+use crate::sim::parallel::{OutMsg, ParallelEngine, SiteWorld};
+use crate::sim::server::FifoServer;
+use crate::storage::object::{Catalog, ObjectId};
+use crate::storage::testbed::SimTestbed;
+use crate::transfer::sim::SimTransferPlane;
+use crate::transfer::{TransferClass, TransferPlane};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+
+/// Inter-site protocol. Every variant is delivered as
+/// [`Ev::Msg`]`(from, msg)` at the destination, one WAN one-way latency
+/// (plus any explicit extra) after it was sent. `rid` fields are run
+/// ids in the *requesting* site's run table, echoed back opaquely.
+#[derive(Debug)]
+pub(super) enum SiteMsg {
+    /// Frontend → run site: a routed task (submit time preserved so
+    /// queue latency is charged from arrival, not from WAN delivery).
+    Submit { task: Task, t_submit: f64 },
+    /// Any site → frontend: a task finished; its buffered cache deltas
+    /// plus a load/progress snapshot for the placement books.
+    Completion {
+        exec: ExecutorId,
+        events: Vec<CacheEvent>,
+        queued: usize,
+        executors: usize,
+        done: u64,
+    },
+    /// Any site → frontend: pool/queue change outside a completion
+    /// (provisioner grew or shrank the pool), change-throttled.
+    Load { queued: usize, executors: usize, done: u64 },
+    /// Any site → frontend: cache deltas outside a completion
+    /// (replication staged or dropped a copy).
+    Digest { exec: ExecutorId, events: Vec<CacheEvent> },
+    /// Any site → frontend: an executor's lease ended; purge it from
+    /// the shared directory.
+    Dropped { exec: ExecutorId },
+    /// Remote site → frontend: which off-site executor caches `obj`?
+    HolderReq { rid: u64, obj: ObjectId },
+    /// Frontend → requester: the directory's answer plus the lookup
+    /// bill (charged by the requester, whose metrics own the run).
+    HolderResp {
+        rid: u64,
+        src: Option<ExecutorId>,
+        cost: LookupCost,
+    },
+    /// Requester → holder site: ship `obj` out of `src`'s cache.
+    FetchReq { rid: u64, obj: ObjectId, src: ExecutorId },
+    /// Holder site → requester: the copy evaporated (or the lease
+    /// ended) — fall back to persistent storage.
+    FetchFail { rid: u64 },
+    /// Holder site → requester: egress legs done; run your ingress.
+    FetchData { rid: u64 },
+    /// Remote site → home: run `ops` metadata operations (or `secs` of
+    /// explicit service time when `ops == 0`) on the shared FS, then
+    /// continue per `then`.
+    MetaReq {
+        rid: u64,
+        ops: u32,
+        secs: f64,
+        then: MetaThen,
+    },
+    /// Home → requester: the metadata op completed (wrapper acks).
+    MetaDone { rid: u64 },
+    /// Home → requester: GPFS egress legs done; run your ingress.
+    GpfsData { rid: u64 },
+    /// Remote site → home: output bytes arrived over the WAN; run the
+    /// metadata create and the home-side write legs.
+    WriteData { rid: u64, bytes: u64 },
+    /// Home → requester: the remote GPFS write is durable.
+    WriteAck { rid: u64 },
+    /// Frontend → everyone: all tasks are done, stop periodic ticks.
+    Quiesce,
+}
+
+/// What the home site does after a [`SiteMsg::MetaReq`] completes.
+#[derive(Debug, Clone, Copy)]
+pub(super) enum MetaThen {
+    /// Just acknowledge (wrapper pre/post ops).
+    Ack,
+    /// Start a GPFS read of `bytes` toward the requesting site.
+    GpfsRead { bytes: u64 },
+}
+
+/// A continuation the home/holder site tracks on behalf of another
+/// site's run: which requester to answer, and with what.
+#[derive(Debug, Clone, Copy)]
+struct RemoteOp {
+    rid: u64,
+    to: u32,
+    bytes: u64,
+    kind: RemoteKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RemoteKind {
+    /// Metadata done → `MetaDone`.
+    MetaAck,
+    /// Metadata done → start the GPFS egress flow.
+    GpfsMeta,
+    /// GPFS egress flow done → `GpfsData`.
+    GpfsFlow,
+    /// Peer egress flow done → `FetchData`.
+    FetchFlow,
+    /// Write metadata done → start the home-side write legs.
+    WriteMeta,
+    /// Home-side write legs done → `WriteAck`.
+    WriteFlow,
+}
+
+/// The frontend: home-site-only routing state.
+struct Frontend {
+    sched: FederationScheduler,
+    /// The shared directory, fed by completion digests from every site
+    /// (loosely coherent, exactly like the serial global index).
+    global: GlobalIndex,
+    /// Last known queue/pool size per site (own entry refreshed
+    /// inline; remote entries from `Completion`/`Load` messages).
+    load: Vec<SiteLoad>,
+    /// Completed-task counters per site (for quiesce detection).
+    done: Vec<u64>,
+    /// Tasks routed off their origin site.
+    cross_site_tasks: u64,
+    /// Accumulated placement-lookup bill.
+    route_cost: LookupCost,
+    quiesce_sent: bool,
+}
+
+/// Per-world federation scope: which site this world is, its outbox
+/// into the engine's inter-site channel, and (at site 0) the frontend.
+pub(super) struct FedScope {
+    /// This world's site index.
+    pub(super) site: u32,
+    topo: Topology,
+    outbox: Vec<OutMsg<SiteMsg>>,
+    /// Per-sender message counter (ordering-key uniqueness).
+    sent: u64,
+    /// Continuations served for other sites, by remote-op id.
+    remote: FxHashMap<u64, RemoteOp>,
+    next_remote: u64,
+    frontend: Option<Frontend>,
+    /// Set once the frontend declares the run over; periodic ticks
+    /// then stop rescheduling.
+    pub(super) quiesced: bool,
+    /// Last (queued, executors) reported via `Load` (change throttle).
+    last_load: (usize, usize),
+    /// Tasks completed at this site.
+    done: u64,
+}
+
+impl FedScope {
+    /// Stage `msg` for `dst`, arriving `extra` seconds plus one WAN
+    /// one-way latency from now. The ordering key (bit 63, sender site,
+    /// per-sender counter) makes equal-time deliveries reproducible
+    /// regardless of routing (thread) order.
+    fn send(&mut self, now: f64, extra: f64, dst: SiteId, msg: SiteMsg) {
+        debug_assert_ne!(dst.index() as u32, self.site, "no self-sends");
+        let at = now + extra + self.topo.wan_latency_s(SiteId(self.site), dst);
+        self.sent += 1;
+        let key = (1u64 << 63) | ((self.site as u64) << 48) | self.sent;
+        self.outbox.push(OutMsg { dst: dst.index(), at, key, msg });
+    }
+
+    /// Register a continuation served on another site's behalf.
+    fn alloc_remote(&mut self, op: RemoteOp) -> u64 {
+        let xid = self.next_remote;
+        self.next_remote += 1;
+        self.remote.insert(xid, op);
+        xid
+    }
+}
+
+// ---- frontend bookkeeping ----------------------------------------------
+
+/// Mirror a site's cache deltas into the shared directory.
+fn frontend_mirror(fed: &mut FedScope, exec: ExecutorId, events: &[CacheEvent]) {
+    let fe = fed.frontend.as_mut().expect("only the home site mirrors");
+    for ev in events {
+        match *ev {
+            CacheEvent::Inserted(obj) => fe.global.insert(obj, exec),
+            CacheEvent::Evicted(obj) => fe.global.remove(obj, exec),
+        }
+    }
+}
+
+/// Update one site's load/progress books; returns true exactly once —
+/// when the last task completes and quiesce must be broadcast.
+fn frontend_note(
+    fed: &mut FedScope,
+    total: u64,
+    from: u32,
+    queued: usize,
+    executors: usize,
+    done: u64,
+) -> bool {
+    let fe = fed.frontend.as_mut().expect("only the home site keeps books");
+    fe.load[from as usize] = SiteLoad { queued, executors };
+    // Counters only grow; max() guards against reordered reports.
+    fe.done[from as usize] = fe.done[from as usize].max(done);
+    let all: u64 = fe.done.iter().sum();
+    if all >= total && !fe.quiesce_sent {
+        fe.quiesce_sent = true;
+        true
+    } else {
+        false
+    }
+}
+
+/// Tell every non-home site the run is over.
+fn broadcast_quiesce(fed: &mut FedScope, now: f64) {
+    fed.quiesced = true;
+    for s in 1..fed.topo.sites() as u32 {
+        fed.send(now, 0.0, SiteId(s), SiteMsg::Quiesce);
+    }
+}
+
+/// First off-site holder of `obj` per the shared directory, with the
+/// lookup bill (same cost model as the serial `FedCore::remote_holder`).
+fn frontend_remote_holder(
+    fed: &FedScope,
+    from: u32,
+    obj: ObjectId,
+) -> (Option<ExecutorId>, LookupCost) {
+    let fe = fed.frontend.as_ref().expect("only the home site resolves");
+    let (hit, cost) = fe.global.locate(SiteId(from), obj);
+    let src = hit
+        .filter(|&(s, _)| s != SiteId(from))
+        .and_then(|(_, locs)| locs.first().copied());
+    (src, cost)
+}
+
+// ---- hooks called from the serial state machine ------------------------
+
+/// An arrival reached the frontend: place it and either submit locally
+/// or ship it to its run site.
+pub(super) fn route_arrival(w: &mut SimWorld, now: f64, task: Task, q: &mut EventQueue<Ev>) {
+    let fed = w.fed.as_mut().expect("route_arrival is fed-only");
+    let (chosen, cost) = {
+        let fe = fed.frontend.as_mut().expect("arrivals land at the frontend");
+        let origin = fe.sched.origin_site(task.id.0);
+        let mut cost = LookupCost::ZERO;
+        let inputs: Vec<(u64, Option<SiteId>)> = task
+            .inputs
+            .iter()
+            .map(|&obj| {
+                let bytes = w.core.catalog().size(obj).unwrap_or(0);
+                let (hit, c) = fe.global.locate(origin, obj);
+                cost.accumulate(c);
+                (bytes, hit.map(|(s, _)| s))
+            })
+            .collect();
+        fe.load[0] = SiteLoad {
+            queued: w.core.site_queue_len(SiteId::HOME),
+            executors: w.core.site(SiteId::HOME).executor_count(),
+        };
+        let chosen = fe.sched.choose(task.id.0, &inputs, &fe.load);
+        if chosen != origin {
+            fe.cross_site_tasks += 1;
+        }
+        fe.route_cost.accumulate(cost);
+        (chosen, cost)
+    };
+    if chosen == SiteId::HOME {
+        w.submit_times.insert(task.id, now);
+        w.core.submit_at(SiteId::HOME, task);
+        let orders = w.core.try_dispatch();
+        w.execute_orders(now, orders, q);
+    } else {
+        // The routing lookup's latency delays the shipment, exactly as
+        // it delays a local dispatch through the serial service.
+        fed.send(now, cost.latency_s, chosen, SiteMsg::Submit { task, t_submit: now });
+    }
+}
+
+/// Ship-data over the WAN: resolve an off-site cached copy of the
+/// current input. At the home site the directory is local — resolve
+/// inline and ask the holder site directly; elsewhere round-trip a
+/// `HolderReq` through the home site. Returns false when the (local)
+/// directory knows of no off-site copy and the caller should fall
+/// through to persistent storage.
+pub(super) fn request_remote(w: &mut SimWorld, now: f64, rid: u64) -> bool {
+    let obj = {
+        let run = w.runs.get(rid).unwrap();
+        run.task.inputs[run.next_input]
+    };
+    let fed = w.fed.as_mut().expect("request_remote is fed-only");
+    if fed.site == 0 {
+        let (src, cost) = frontend_remote_holder(fed, 0, obj);
+        let Some(src) = src else { return false };
+        let dst = fed.topo.site_of(src);
+        w.metrics.add_index_cost(cost);
+        w.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
+        fed.send(now, cost.latency_s, dst, SiteMsg::FetchReq { rid, obj, src });
+    } else {
+        w.runs.get_mut(rid).unwrap().phase = Phase::AwaitFlow;
+        fed.send(now, 0.0, SiteId::HOME, SiteMsg::HolderReq { rid, obj });
+    }
+    true
+}
+
+/// Queue a home-site metadata operation for run `rid` (wrapper ops and
+/// GPFS opens from non-home sites).
+pub(super) fn meta_request(
+    w: &mut SimWorld,
+    now: f64,
+    rid: u64,
+    ops: u32,
+    secs: f64,
+    then: MetaThen,
+) {
+    let fed = w.fed.as_mut().expect("meta_request is fed-only");
+    fed.send(now, 0.0, SiteId::HOME, SiteMsg::MetaReq { rid, ops, secs, then });
+}
+
+/// The sender half of a remote GPFS write finished: hand the bytes to
+/// the home site.
+pub(super) fn send_write(w: &mut SimWorld, now: f64, rid: u64, bytes: u64) {
+    let fed = w.fed.as_mut().expect("send_write is fed-only");
+    fed.send(now, 0.0, SiteId::HOME, SiteMsg::WriteData { rid, bytes });
+}
+
+/// A task completed at this site: update progress and feed the
+/// frontend's directory and books.
+pub(super) fn on_complete(w: &mut SimWorld, now: f64, exec: ExecutorId, events: Vec<CacheEvent>) {
+    let fed = w.fed.as_mut().expect("on_complete fed hook");
+    fed.done += 1;
+    let done = fed.done;
+    let own = SiteId(fed.site);
+    let queued = w.core.site_queue_len(own);
+    let executors = w.core.site(own).executor_count();
+    let total = w.total_tasks;
+    if fed.site == 0 {
+        frontend_mirror(fed, exec, &events);
+        if frontend_note(fed, total, 0, queued, executors, done) {
+            broadcast_quiesce(fed, now);
+        }
+        let mut events = events;
+        events.clear();
+        if w.events_pool.len() < 4096 {
+            w.events_pool.push(events);
+        }
+    } else {
+        fed.send(
+            now,
+            0.0,
+            SiteId::HOME,
+            SiteMsg::Completion { exec, events, queued, executors, done },
+        );
+    }
+}
+
+/// Replication changed a cache outside a completion: keep the shared
+/// directory loosely coherent.
+pub(super) fn digest(w: &mut SimWorld, now: f64, exec: ExecutorId, events: &[CacheEvent]) {
+    if events.is_empty() {
+        return;
+    }
+    let Some(fed) = w.fed.as_mut() else { return };
+    if fed.site == 0 {
+        frontend_mirror(fed, exec, events);
+    } else {
+        fed.send(now, 0.0, SiteId::HOME, SiteMsg::Digest { exec, events: events.to_vec() });
+    }
+}
+
+/// An executor's lease ended: purge it from the shared directory.
+pub(super) fn note_executor_dropped(w: &mut SimWorld, now: f64, exec: ExecutorId) {
+    let Some(fed) = w.fed.as_mut() else { return };
+    if fed.site == 0 {
+        let fe = fed.frontend.as_mut().expect("home site owns the frontend");
+        fe.global.drop_executor(exec);
+    } else {
+        fed.send(now, 0.0, SiteId::HOME, SiteMsg::Dropped { exec });
+    }
+}
+
+/// The pool or queue changed outside a completion: report to the
+/// frontend's placement books (change-throttled).
+pub(super) fn report_load(w: &mut SimWorld, now: f64) {
+    let Some(fed) = w.fed.as_ref() else { return };
+    if fed.site == 0 {
+        return; // the frontend refreshes its own entry inline
+    }
+    let own = SiteId(fed.site);
+    let queued = w.core.site_queue_len(own);
+    let executors = w.core.site(own).executor_count();
+    let fed = w.fed.as_mut().unwrap();
+    if fed.last_load != (queued, executors) {
+        fed.last_load = (queued, executors);
+        let done = fed.done;
+        fed.send(now, 0.0, SiteId::HOME, SiteMsg::Load { queued, executors, done });
+    }
+}
+
+// ---- message / continuation handlers -----------------------------------
+
+/// Handle one delivered inter-site message.
+pub(super) fn handle_msg(
+    w: &mut SimWorld,
+    now: f64,
+    from: u32,
+    msg: SiteMsg,
+    q: &mut EventQueue<Ev>,
+) {
+    match msg {
+        SiteMsg::Submit { task, t_submit } => {
+            let own = SiteId(w.fed.as_ref().unwrap().site);
+            w.submit_times.insert(task.id, t_submit);
+            w.core.submit_at(own, task);
+            let orders = w.core.try_dispatch();
+            w.execute_orders(now, orders, q);
+        }
+        SiteMsg::Completion { exec, events, queued, executors, done } => {
+            let total = w.total_tasks;
+            let fed = w.fed.as_mut().unwrap();
+            frontend_mirror(fed, exec, &events);
+            if frontend_note(fed, total, from, queued, executors, done) {
+                broadcast_quiesce(fed, now);
+            }
+        }
+        SiteMsg::Load { queued, executors, done } => {
+            let total = w.total_tasks;
+            let fed = w.fed.as_mut().unwrap();
+            if frontend_note(fed, total, from, queued, executors, done) {
+                broadcast_quiesce(fed, now);
+            }
+        }
+        SiteMsg::Digest { exec, events } => {
+            frontend_mirror(w.fed.as_mut().unwrap(), exec, &events);
+        }
+        SiteMsg::Dropped { exec } => {
+            let fed = w.fed.as_mut().unwrap();
+            let fe = fed.frontend.as_mut().expect("home site owns the frontend");
+            fe.global.drop_executor(exec);
+        }
+        SiteMsg::HolderReq { rid, obj } => {
+            let fed = w.fed.as_mut().unwrap();
+            let (src, cost) = frontend_remote_holder(fed, from, obj);
+            // The physical request/response hops already model the
+            // lookup's WAN round trip; no extra delay on the answer.
+            fed.send(now, 0.0, SiteId(from), SiteMsg::HolderResp { rid, src, cost });
+        }
+        SiteMsg::HolderResp { rid, src, cost } => {
+            if w.runs.get(rid).is_none() {
+                return;
+            }
+            w.metrics.add_index_cost(cost);
+            match src {
+                Some(src) => {
+                    let obj = {
+                        let run = w.runs.get(rid).unwrap();
+                        run.task.inputs[run.next_input]
+                    };
+                    let fed = w.fed.as_mut().unwrap();
+                    let dst = fed.topo.site_of(src);
+                    fed.send(now, 0.0, dst, SiteMsg::FetchReq { rid, obj, src });
+                }
+                // No cached copy anywhere off-site: persistent storage.
+                None => w.gpfs_open_input(now, rid, q),
+            }
+        }
+        SiteMsg::FetchReq { rid, obj, src } => {
+            // Re-validate against *this* site's live state: the copy may
+            // have been evicted (or the lease ended) since the directory
+            // answered — the serial Refetch arm does the same dance.
+            let ok = w.caching
+                && src < w.caches.len()
+                && w.caches[src].contains(obj)
+                && w.core.executors().binary_search(&src).is_ok();
+            if ok {
+                w.core.note_peer_fetch(obj, src);
+                let bytes = w.cached_size(obj);
+                let fed = w.fed.as_mut().unwrap();
+                let xid = fed.alloc_remote(RemoteOp {
+                    rid,
+                    to: from,
+                    bytes,
+                    kind: RemoteKind::FetchFlow,
+                });
+                let rs = w.plane.testbed.peer_egress(src, SiteId(from));
+                w.start_flow_over(
+                    now,
+                    FlowTag::Remote(xid),
+                    TransferClass::Foreground,
+                    &rs,
+                    bytes,
+                    true,
+                    q,
+                );
+            } else {
+                let fed = w.fed.as_mut().unwrap();
+                fed.send(now, 0.0, SiteId(from), SiteMsg::FetchFail { rid });
+            }
+        }
+        SiteMsg::FetchFail { rid } => {
+            if w.runs.get(rid).is_some() {
+                w.gpfs_open_input(now, rid, q);
+            }
+        }
+        SiteMsg::FetchData { rid } => {
+            let Some(run) = w.runs.get(rid) else { return };
+            debug_assert_eq!(run.phase, Phase::AwaitFlow);
+            let obj = run.task.inputs[run.next_input];
+            let exec = run.exec;
+            let bytes = w.cached_size(obj);
+            // Peer fetches only exist with caching on: ingress includes
+            // the destination disk write.
+            let rs = w.plane.testbed.site_ingress(exec, true);
+            w.start_flow_over(
+                now,
+                FlowTag::Run(rid, FlowPurpose::FetchPeer),
+                TransferClass::Foreground,
+                &rs,
+                bytes,
+                false,
+                q,
+            );
+        }
+        SiteMsg::MetaReq { rid, ops, secs, then } => {
+            let (bytes, kind) = match then {
+                MetaThen::Ack => (0, RemoteKind::MetaAck),
+                MetaThen::GpfsRead { bytes } => (bytes, RemoteKind::GpfsMeta),
+            };
+            let fed = w.fed.as_mut().unwrap();
+            let xid = fed.alloc_remote(RemoteOp { rid, to: from, bytes, kind });
+            let done = if ops > 0 {
+                w.plane.testbed.metadata.submit(now, ops)
+            } else {
+                w.plane.testbed.metadata.submit_secs(now, secs)
+            };
+            q.at(done, Ev::MetaStep(xid));
+        }
+        SiteMsg::MetaDone { rid } => {
+            if w.runs.get(rid).is_some() {
+                w.step(now, rid, q);
+            }
+        }
+        SiteMsg::GpfsData { rid } => {
+            let Some(run) = w.runs.get(rid) else { return };
+            debug_assert_eq!(run.phase, Phase::AwaitFlow);
+            let obj = run.task.inputs[run.next_input];
+            let exec = run.exec;
+            let bytes = w.stored_size(obj);
+            let caching = w.caching;
+            let rs = w.plane.testbed.site_ingress(exec, caching);
+            w.start_flow_over(
+                now,
+                FlowTag::Run(rid, FlowPurpose::FetchGpfs),
+                TransferClass::Foreground,
+                &rs,
+                bytes,
+                false,
+                q,
+            );
+        }
+        SiteMsg::WriteData { rid, bytes } => {
+            let fed = w.fed.as_mut().unwrap();
+            let xid = fed.alloc_remote(RemoteOp {
+                rid,
+                to: from,
+                bytes,
+                kind: RemoteKind::WriteMeta,
+            });
+            let done = w.plane.testbed.metadata.submit(now, w.cfg.shared_fs.meta_ops_open);
+            q.at(done, Ev::MetaStep(xid));
+        }
+        SiteMsg::WriteAck { rid } => {
+            let Some(run) = w.runs.get_mut(rid) else { return };
+            let bytes = run.task.output_bytes;
+            run.phase = Phase::WrapperPost;
+            w.metrics.add_bytes(ByteSource::GpfsWrite, bytes);
+            w.after_output(now, rid, q);
+        }
+        SiteMsg::Quiesce => {
+            w.fed.as_mut().unwrap().quiesced = true;
+        }
+    }
+}
+
+/// The home metadata server finished a remote site's operation.
+pub(super) fn meta_step(w: &mut SimWorld, now: f64, xid: u64, q: &mut EventQueue<Ev>) {
+    let fed = w.fed.as_mut().expect("meta_step is fed-only");
+    let Some(op) = fed.remote.get(&xid).copied() else { return };
+    match op.kind {
+        RemoteKind::MetaAck => {
+            fed.remote.remove(&xid);
+            fed.send(now, 0.0, SiteId(op.to), SiteMsg::MetaDone { rid: op.rid });
+        }
+        RemoteKind::GpfsMeta => {
+            fed.remote.get_mut(&xid).unwrap().kind = RemoteKind::GpfsFlow;
+            let rs = w.plane.testbed.gpfs_egress(SiteId(op.to));
+            w.start_flow_over(
+                now,
+                FlowTag::Remote(xid),
+                TransferClass::Foreground,
+                &rs,
+                op.bytes,
+                true,
+                q,
+            );
+        }
+        RemoteKind::WriteMeta => {
+            fed.remote.get_mut(&xid).unwrap().kind = RemoteKind::WriteFlow;
+            let rs = w.plane.testbed.gpfs_write_ingress();
+            // WAN bytes were metered on the sender's egress half.
+            w.start_flow_over(
+                now,
+                FlowTag::Remote(xid),
+                TransferClass::Foreground,
+                &rs,
+                op.bytes,
+                false,
+                q,
+            );
+        }
+        _ => debug_assert!(false, "flow kinds resolve via remote_flow_done"),
+    }
+}
+
+/// A flow served on another site's behalf completed: answer them.
+pub(super) fn remote_flow_done(w: &mut SimWorld, now: f64, xid: u64) {
+    let fed = w.fed.as_mut().expect("remote flows are fed-only");
+    let Some(op) = fed.remote.remove(&xid) else { return };
+    let msg = match op.kind {
+        RemoteKind::FetchFlow => SiteMsg::FetchData { rid: op.rid },
+        RemoteKind::GpfsFlow => SiteMsg::GpfsData { rid: op.rid },
+        RemoteKind::WriteFlow => SiteMsg::WriteAck { rid: op.rid },
+        _ => {
+            debug_assert!(false, "meta kinds resolve via meta_step");
+            return;
+        }
+    };
+    fed.send(now, 0.0, SiteId(op.to), msg);
+}
+
+// ---- engine integration ------------------------------------------------
+
+impl SiteWorld for SimWorld {
+    type Msg = SiteMsg;
+
+    fn drain_outbox(&mut self) -> Vec<OutMsg<SiteMsg>> {
+        match self.fed.as_mut() {
+            Some(fed) => std::mem::take(&mut fed.outbox),
+            None => Vec::new(),
+        }
+    }
+
+    fn msg_event(from: u32, msg: SiteMsg) -> Ev {
+        Ev::Msg(from, msg)
+    }
+}
+
+/// Build one world per site and run them on the parallel engine.
+pub(super) fn run_federated(cfg: Config, spec: SimWorkloadSpec, catalog: Catalog) -> RunOutcome {
+    let t0 = std::time::Instant::now();
+    let topo = Topology::from_config(&cfg);
+    let n_sites = topo.sites();
+    let nodes = cfg.testbed.nodes;
+    let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
+    let replicating = cfg.replication.enabled && spec.caching;
+    let repl_interval_s = cfg.replication.evaluate_interval_s.max(1e-3);
+    let total_tasks = spec.tasks.len() as u64;
+
+    // Initial pool sizes are known without building the worlds (static:
+    // the full site slice; elastic: the warm floor) — the frontend's
+    // load books start from them.
+    let init_execs: Vec<usize> = (0..n_sites)
+        .map(|s| {
+            let site_nodes = topo.site_nodes(SiteId(s as u32));
+            if cfg.provisioner.enabled {
+                cfg.provisioner.min_executors.min(site_nodes)
+            } else {
+                site_nodes
+            }
+        })
+        .collect();
+
+    let mut engine: ParallelEngine<SimWorld> = ParallelEngine::new(cfg.sim.threads);
+    for s in 0..n_sites {
+        let sid = SiteId(s as u32);
+        let range = topo.executor_range(sid);
+        let mut core = FedCore::new(&cfg, catalog.clone());
+        let mut provs = Vec::new();
+        if cfg.provisioner.enabled {
+            assert!(
+                nodes > 0 && cfg.provisioner.max_executors > 0,
+                "elastic pool needs at least one allocatable executor"
+            );
+            let site_nodes = range.len();
+            let mut pcfg = cfg.provisioner.clone();
+            pcfg.max_executors = pcfg.max_executors.min(site_nodes);
+            pcfg.min_executors = pcfg.min_executors.min(site_nodes);
+            let mut drp = Provisioner::new(pcfg.clone());
+            let mut cluster =
+                ClusterProvider::with_range(range.clone(), cfg.provisioner.allocation_latency_s);
+            let warm = pcfg.min_executors.min(site_nodes);
+            if warm > 0 {
+                let grant = cluster.allocate(0.0, warm);
+                for &e in &grant.nodes {
+                    core.register_executor_with(e, capacity);
+                }
+                drp.on_allocated(grant.nodes.len());
+            }
+            provs.push(ProvisionState {
+                site: s as u32,
+                drp,
+                cluster,
+                interval_s: cfg.provisioner.poll_interval_s.max(1e-3),
+                capacity,
+                pending_allocs: FxHashMap::default(),
+                last_tick: 0.0,
+            });
+        } else {
+            for e in range.clone() {
+                core.register_executor_with(e, capacity);
+            }
+        }
+        if replicating {
+            core.enable_replication(&cfg.replication);
+        }
+
+        // Full-length cache vector (global executor ids index it), but
+        // only this site's slice ever holds real content.
+        let mut caches: Vec<DataCache> =
+            (0..nodes).map(|e| SimWorld::fresh_cache(&cfg, e)).collect();
+        for &(exec, obj) in &spec.prewarm {
+            if topo.site_of(exec) != sid {
+                continue;
+            }
+            let stored = catalog.size(obj).unwrap_or(1);
+            let bytes = (stored as f64 * spec.expansion).ceil() as u64;
+            let events = caches[exec].insert(obj, bytes);
+            core.apply_cache_events(exec, &events);
+        }
+
+        // The frontend lives at site 0: the placement scheduler, the
+        // shared directory (seeded with every site's prewarm), and the
+        // per-site load/progress books.
+        let frontend = (s == 0).then(|| {
+            let mut global = GlobalIndex::new(topo.clone());
+            for &(exec, obj) in &spec.prewarm {
+                global.insert(obj, exec);
+            }
+            Frontend {
+                sched: FederationScheduler::new(
+                    topo.clone(),
+                    cfg.federation.placement,
+                    cfg.federation.skew,
+                    cfg.federation.queue_weight_s,
+                    cfg.seed,
+                ),
+                global,
+                load: init_execs
+                    .iter()
+                    .map(|&executors| SiteLoad { queued: 0, executors })
+                    .collect(),
+                done: vec![0; n_sites],
+                cross_site_tasks: 0,
+                route_cost: LookupCost::ZERO,
+                quiesce_sent: false,
+            }
+        });
+
+        let pending_tasks: Vec<Option<Task>> = if s == 0 {
+            spec.tasks.iter().map(|(_, t)| Some(t.clone())).collect()
+        } else {
+            Vec::new()
+        };
+
+        let world = SimWorld {
+            cfg: cfg.clone(),
+            caching: spec.caching,
+            format: spec.format,
+            expansion: spec.expansion,
+            core,
+            plane: SimTransferPlane::new(SimTestbed::new(&cfg), &cfg.transfer),
+            caches,
+            metrics: Metrics::new(),
+            dispatch_server: FifoServer::new(1.0 / DISPATCH_RATE),
+            pending_tasks,
+            runs: RunTable::new(),
+            flow_map: FxHashMap::default(),
+            flow_version: 0,
+            staged_replicas: (0..nodes).map(|_| FxHashSet::default()).collect(),
+            submit_times: FxHashMap::default(),
+            first_dispatch: None,
+            total_tasks,
+            provs,
+            next_alloc_id: 0,
+            events_pool: Vec::new(),
+            fed: Some(FedScope {
+                site: s as u32,
+                topo: topo.clone(),
+                outbox: Vec::new(),
+                sent: 0,
+                remote: FxHashMap::default(),
+                next_remote: 0,
+                frontend,
+                quiesced: total_tasks == 0,
+                last_load: (usize::MAX, usize::MAX),
+                done: 0,
+            }),
+        };
+        engine.add_site(world, topo.lookahead_in(sid));
+        if cfg.provisioner.enabled {
+            engine.schedule(s, 0.0, Ev::ProvisionTick(s as u32));
+        }
+        if replicating {
+            engine.schedule(s, repl_interval_s, Ev::ReplTick);
+        }
+    }
+
+    // Every arrival lands at the frontend site.
+    for (i, (t, _)) in spec.tasks.iter().enumerate() {
+        engine.schedule(0, *t, Ev::Arrive(i as u32));
+    }
+
+    engine.run();
+    let events = engine.events_processed();
+
+    // Harvest per-site, then merge in fixed site order (deterministic
+    // regardless of thread count).
+    let mut merged: Option<Metrics> = None;
+    for (s, mut state) in engine.into_sites().into_iter().enumerate() {
+        let w = &mut state.world;
+        let control = w.core.take_index_control();
+        w.metrics.add_control_traffic(control);
+        w.metrics.staging_deferred = w.plane.stats().deferred;
+        let shard_stats = w.core.site(SiteId(s as u32)).shard_stats();
+        w.metrics.harvest_shard_stats(&shard_stats);
+        w.metrics.peak_executors = w.metrics.peak_executors.max(w.core.executor_count());
+        if s == 0 {
+            let fed = w.fed.as_mut().unwrap();
+            let fe = fed.frontend.as_mut().unwrap();
+            w.metrics.cross_site_tasks = fe.cross_site_tasks;
+            let route_cost = std::mem::replace(&mut fe.route_cost, LookupCost::ZERO);
+            w.metrics.add_index_cost(route_cost);
+        }
+        debug_assert!(w.runs.is_empty(), "tasks stuck in flight at quiesce");
+        debug_assert!(
+            w.fed.as_ref().unwrap().remote.is_empty(),
+            "remote ops stuck in flight at quiesce"
+        );
+        match merged.as_mut() {
+            None => merged = Some(w.metrics.clone()),
+            Some(m) => m.merge(&w.metrics),
+        }
+    }
+    let metrics = merged.expect("at least one site");
+    let makespan = (metrics.t_end - metrics.t_start).max(0.0);
+    RunOutcome {
+        metrics,
+        makespan_s: makespan,
+        events,
+        wall_s: t0.elapsed().as_secs_f64(),
+        sample_checksums: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_worlds_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<SimWorld>();
+        assert_send::<SiteMsg>();
+    }
+
+    #[test]
+    fn ordering_keys_are_unique_and_keyed() {
+        let cfg = {
+            let mut c = Config::with_nodes(8);
+            c.split_into_sites(2);
+            c
+        };
+        let topo = Topology::from_config(&cfg);
+        let mut fed = FedScope {
+            site: 1,
+            topo,
+            outbox: Vec::new(),
+            sent: 0,
+            remote: FxHashMap::default(),
+            next_remote: 0,
+            frontend: None,
+            quiesced: false,
+            last_load: (usize::MAX, usize::MAX),
+            done: 0,
+        };
+        fed.send(1.0, 0.0, SiteId::HOME, SiteMsg::Quiesce);
+        fed.send(1.0, 0.0, SiteId::HOME, SiteMsg::Quiesce);
+        assert_eq!(fed.outbox.len(), 2);
+        assert_ne!(fed.outbox[0].key, fed.outbox[1].key);
+        for m in &fed.outbox {
+            assert!(m.key & (1 << 63) != 0, "message keys carry bit 63");
+            assert!(m.at > 1.0, "WAN latency delays delivery");
+        }
+    }
+
+    #[test]
+    fn frontend_quiesces_exactly_once_when_all_sites_report_done() {
+        let cfg = {
+            let mut c = Config::with_nodes(8);
+            c.split_into_sites(2);
+            c
+        };
+        let topo = Topology::from_config(&cfg);
+        let mut fed = FedScope {
+            site: 0,
+            topo: topo.clone(),
+            outbox: Vec::new(),
+            sent: 0,
+            remote: FxHashMap::default(),
+            next_remote: 0,
+            frontend: Some(Frontend {
+                sched: FederationScheduler::new(topo, cfg.federation.placement, 0.0, 1.0, 1),
+                global: GlobalIndex::new(Topology::from_config(&cfg)),
+                load: vec![SiteLoad { queued: 0, executors: 4 }; 2],
+                done: vec![0; 2],
+                cross_site_tasks: 0,
+                route_cost: LookupCost::ZERO,
+                quiesce_sent: false,
+            }),
+            quiesced: false,
+            last_load: (usize::MAX, usize::MAX),
+            done: 0,
+        };
+        assert!(!frontend_note(&mut fed, 10, 0, 0, 4, 6));
+        assert!(frontend_note(&mut fed, 10, 1, 0, 4, 4), "last report quiesces");
+        assert!(!frontend_note(&mut fed, 10, 1, 0, 4, 4), "only once");
+        broadcast_quiesce(&mut fed, 5.0);
+        assert!(fed.quiesced);
+        assert_eq!(fed.outbox.len(), 1, "one Quiesce per non-home site");
+    }
+}

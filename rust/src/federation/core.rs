@@ -158,6 +158,14 @@ impl FedCore {
         chosen
     }
 
+    /// Enqueue `task` directly at `site`, bypassing placement. The
+    /// parallel federated driver routes at the home site's frontend and
+    /// delivers each task to its run site as a timestamped message;
+    /// that site's world then submits it here.
+    pub fn submit_at(&mut self, site: SiteId, task: Task) {
+        self.sites[site.index()].submit(task);
+    }
+
     /// Run every site's dispatch loop; orders concatenate in site order.
     pub fn try_dispatch(&mut self) -> Vec<DispatchOrder> {
         if self.sites.len() == 1 {

@@ -183,6 +183,28 @@ impl Topology {
     pub fn wan_latency_s(&self, from: SiteId, to: SiteId) -> f64 {
         self.wan_latency_s[from.index() * self.sites() + to.index()]
     }
+
+    /// Conservative lookahead into site `to`: the minimum one-way WAN
+    /// latency over all *other* sites, i.e. the earliest any cross-site
+    /// message emitted "now" can arrive. The parallel engine
+    /// ([`crate::sim::parallel`]) lets `to` safely execute up to
+    /// `min(next event times) + lookahead_in(to)`. `∞` for a
+    /// single-site topology (nothing can send to it).
+    pub fn lookahead_in(&self, to: SiteId) -> f64 {
+        let n = self.sites();
+        (0..n)
+            .filter(|&j| j != to.index())
+            .map(|j| self.wan_latency_s[j * n + to.index()])
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The lookahead floor across all sites (`∞` for a single site):
+    /// the tightest bound any site's window is subject to.
+    pub fn lookahead_floor(&self) -> f64 {
+        (0..self.sites() as u32)
+            .map(|s| self.lookahead_in(SiteId(s)))
+            .fold(f64::INFINITY, f64::min)
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +247,25 @@ mod tests {
         assert!((topo.wan_bps(b, a) - gbps(0.2)).abs() < 1.0);
         assert!((topo.wan_latency_s(a, b) - 0.05).abs() < 1e-12, "sum of latencies");
         assert!((topo.wan_latency_s(a, a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookahead_is_the_min_incoming_latency() {
+        let mut cfg = Config::with_nodes(9);
+        cfg.federation.sites = vec![
+            SiteConfig { nodes: 3, wan_latency_s: 0.02, ..SiteConfig::default() },
+            SiteConfig { nodes: 3, wan_latency_s: 0.03, ..SiteConfig::default() },
+            SiteConfig { nodes: 3, wan_latency_s: 0.10, ..SiteConfig::default() },
+        ];
+        let topo = Topology::from_config(&cfg);
+        // Into site 0: min(0.03+0.02, 0.10+0.02) = 0.05; into site 2 the
+        // cheapest sender is site 0 (0.02+0.10).
+        assert!((topo.lookahead_in(SiteId(0)) - 0.05).abs() < 1e-12);
+        assert!((topo.lookahead_in(SiteId(2)) - 0.12).abs() < 1e-12);
+        assert!((topo.lookahead_floor() - 0.05).abs() < 1e-12);
+        // Single site: unbounded window.
+        let single = Topology::from_config(&Config::with_nodes(4));
+        assert_eq!(single.lookahead_in(SiteId::HOME), f64::INFINITY);
     }
 
     #[test]

@@ -36,6 +36,7 @@
 //! | QoS figure (`--figure qos`, share policy off/binary/weighted) | [`analysis::figures`] |
 //! | Simulator scalability figure (`--figure scale`, events/sec, peak RSS) | [`analysis::figures`], [`sim::engine`] |
 //! | Multi-cluster federation: site topology, WAN fabric, affinity placement (`--figure federation`, Pilot-Data) | [`federation`] |
+//! | Parallel event execution across sites (`--threads`, conservative lookahead, deterministic merge) | [`sim::parallel`] |
 //! | §4 testbed + storage | [`storage`], [`sim`] |
 //! | §4.3 micro-benchmarks | [`workloads::microbench`], [`analysis`] |
 //! | §5 stacking application | [`workloads::astro`], [`runtime`] |

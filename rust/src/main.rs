@@ -42,6 +42,7 @@ fn main() {
         OptSpec { name: "index", value: "BACKEND", help: "cache-location index (central|chord)", default: "central" },
         OptSpec { name: "shards", value: "N", help: "dispatcher shard count for sim/live runs, 0 = one per core (sweep --figure shards instead takes a comma-separated list)", default: "1" },
         OptSpec { name: "sites", value: "N", help: "split the testbed into N federation sites (sweep --figure federation instead takes a comma-separated list)", default: "" },
+        OptSpec { name: "threads", value: "N", help: "sim-engine worker threads for multi-site runs, 0 = one per core (sweep --figure scale instead takes a comma-separated list)", default: "1" },
         OptSpec { name: "placement", value: "MODE", help: "federation placement (affinity|home|random), needs --sites >= 2", default: "" },
         OptSpec { name: "provisioner", value: "POLICY", help: "elastic pool: one-at-a-time|all-at-once|adaptive", default: "" },
         OptSpec { name: "replication", value: "POLICY", help: "data diffusion: least-loaded|hash-spread|co-locate", default: "" },
@@ -111,6 +112,9 @@ fn cmd_sim(args: &Args) -> i32 {
         return 2;
     }
     if apply_sites_flags(args, &mut cfg).is_err() {
+        return 2;
+    }
+    if apply_threads_flag(args, &mut cfg).is_err() {
         return 2;
     }
     if let Some(p) = args.get("provisioner") {
@@ -213,6 +217,27 @@ fn apply_shards_flag(args: &Args, cfg: &mut Config) -> Result<(), ()> {
             Ok(n) => cfg.coordinator.shards = n,
             Err(_) => {
                 eprintln!("error: --shards expects an integer (0 = one shard per core)");
+                return Err(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply `--threads N` (parallel sim-engine worker threads for
+/// multi-site runs; 0 resolves to one thread per available core,
+/// matching `sim.threads = 0` in config files).
+fn apply_threads_flag(args: &Args, cfg: &mut Config) -> Result<(), ()> {
+    if let Some(s) = args.get("threads") {
+        match s.parse::<usize>() {
+            Ok(0) => {
+                cfg.sim.threads = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            }
+            Ok(n) => cfg.sim.threads = n,
+            Err(_) => {
+                eprintln!("error: --threads expects an integer (0 = one thread per core)");
                 return Err(());
             }
         }
@@ -652,7 +677,11 @@ fn sweep_shards(args: &Args) -> i32 {
 /// RSS for full data-aware runs over an (executors × tasks) grid (same
 /// emitter as the `fig_scale` bench). `--nodes` and `--tasks` are
 /// comma-separated grid axes; pass them smallest-first so the
-/// peak-RSS high-water column reads as per-cell peaks.
+/// peak-RSS high-water column reads as per-cell peaks. `--sites`
+/// splits each cell's testbed into N federation sites and `--threads`
+/// is a comma-separated engine-thread axis (0 = one per core); the
+/// speedup column in each row is relative to the cell's first thread
+/// count.
 fn sweep_scale(args: &Args) -> i32 {
     let nodes: Vec<usize> = args.num_list_or("nodes", &[64, 256, 1024]);
     let tasks: Vec<u64> = args.num_list_or("tasks", &[10_000]);
@@ -660,7 +689,19 @@ fn sweep_scale(args: &Args) -> i32 {
         eprintln!("error: --nodes and --tasks expect comma-separated positive integers");
         return 2;
     }
-    let rows = figures::fig_scale(&nodes, &tasks);
+    let sites: usize = args.num_or("sites", 1);
+    let threads: Vec<usize> = args
+        .num_list_or("threads", &[1])
+        .into_iter()
+        .map(|n| {
+            if n == 0 {
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+            } else {
+                n
+            }
+        })
+        .collect();
+    let rows = figures::fig_scale(&nodes, &tasks, sites, &threads);
     match figures::emit_scale(&rows, &results_dir()) {
         Ok(p) => {
             println!(
@@ -684,7 +725,9 @@ fn sweep_scale(args: &Args) -> i32 {
 /// modes per cell (same emitter as the `fig_federation` bench).
 /// `--sites` is a comma-separated list of site counts to sweep;
 /// `--nodes` is the total executor count split across the sites;
-/// `--tasks` is tasks-per-node.
+/// `--tasks` is tasks-per-node; `--threads` sets the engine thread
+/// count every cell runs at (0 = one per core — outcomes are
+/// thread-count invariant, only wall-clock changes).
 fn sweep_federation(args: &Args) -> i32 {
     let nodes: usize = args.num_or("nodes", 16);
     let tpn: usize = args.num_or("tasks", 8);
@@ -693,7 +736,15 @@ fn sweep_federation(args: &Args) -> i32 {
         eprintln!("error: --sites expects a comma-separated list of site counts >= 1");
         return 2;
     }
-    let rows = figures::fig_federation(&sites, &[0.25, 1.0], &[0.0, 0.8], nodes, tpn);
+    let threads = match args.str_or("threads", "1").parse::<usize>() {
+        Ok(0) => std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+        Ok(n) => n,
+        Err(_) => {
+            eprintln!("error: --threads expects an integer (0 = one thread per core)");
+            return 2;
+        }
+    };
+    let rows = figures::fig_federation(&sites, &[0.25, 1.0], &[0.0, 0.8], nodes, tpn, threads);
     match figures::emit_federation(&rows, &results_dir()) {
         Ok(p) => {
             println!(

@@ -159,6 +159,29 @@ impl<E> EventQueue<E> {
         self.insert(Entry { time, seq, event });
     }
 
+    /// Schedule `event` at absolute time `at` with a caller-supplied
+    /// ordering key in place of the internal insertion sequence.
+    ///
+    /// The parallel engine ([`crate::sim::parallel`]) uses this to
+    /// deliver inter-site messages: the key is derived from the sender
+    /// (site id + per-sender counter), so the pop order at equal times
+    /// is a pure function of message identity, independent of the
+    /// delivery (thread-interleaving) order. Keys must be unique and
+    /// must have bit 63 set: that keeps them disjoint from the
+    /// auto-incremented sequence numbers of [`EventQueue::at`], and
+    /// makes same-time keyed events sort *after* locally scheduled
+    /// ones.
+    pub fn at_keyed(&mut self, at: f64, key: u64, event: E) {
+        debug_assert!(key >> 63 == 1, "keyed events must set bit 63");
+        let time = if at < self.now { self.now } else { at };
+        assert!(time.is_finite(), "event scheduled at non-finite time {at}");
+        self.insert(Entry {
+            time,
+            seq: key,
+            event,
+        });
+    }
+
     /// Schedule `event` after a relative delay (seconds).
     pub fn after(&mut self, delay: f64, event: E) {
         debug_assert!(delay >= 0.0, "negative delay {delay}");
@@ -496,6 +519,43 @@ mod tests {
             got.push(v);
         }
         assert_eq!(got, (0..150).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn keyed_events_sort_after_locals_and_by_key_at_equal_time() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        // Keyed (message) arrivals delivered out of key order...
+        q.at_keyed(1.0, (1 << 63) | (2 << 48) | 1, 202);
+        q.at_keyed(1.0, (1 << 63) | (1 << 48) | 2, 102);
+        q.at_keyed(1.0, (1 << 63) | (1 << 48) | 1, 101);
+        // ...and locally scheduled events at the same time.
+        q.at(1.0, 1);
+        q.at(1.0, 2);
+        let mut got = Vec::new();
+        while let Some((_, v)) = q.pop() {
+            got.push(v);
+        }
+        // Locals first (auto seq < any bit-63 key), then keyed events by
+        // (sender, counter) regardless of insertion order.
+        assert_eq!(got, vec![1, 2, 101, 102, 202]);
+    }
+
+    #[test]
+    fn keyed_events_stay_ordered_mid_drain() {
+        // The sorted-insert path must accept keyed entries too.
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..10 {
+            q.at(1.0, i);
+        }
+        for _ in 0..5 {
+            q.pop().unwrap();
+        }
+        q.at_keyed(1.0, (1 << 63) | 7, 99);
+        let mut got = Vec::new();
+        while let Some((_, v)) = q.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![5, 6, 7, 8, 9, 99]);
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //!   measures it).
 //! * [`server`] — a FIFO service-time queue used for the GPFS metadata
 //!   server (the resource that caps small-file and wrapper workloads).
+//! * [`parallel`] — a **conservative-lookahead parallel engine** for
+//!   multi-site federation runs: each site's world + queue advances on
+//!   its own worker thread in barrier-synchronized rounds, executing up
+//!   to `min(next event times) + lookahead` where the lookahead is the
+//!   site's WAN latency floor from `Topology`. Cross-site interactions
+//!   travel as timestamped messages with sender-derived ordering keys,
+//!   so outcomes are bit-for-bit identical at every thread count (see
+//!   the module docs for the serial-equivalence contract).
 //!
 //! Both hot structures are observationally identical to their simple
 //! predecessors (same event streams, same rates — debug builds
@@ -32,8 +40,10 @@
 
 pub mod engine;
 pub mod flownet;
+pub mod parallel;
 pub mod server;
 
 pub use engine::{Engine, World};
 pub use flownet::{FlowId, FlowNetwork, ResourceId};
+pub use parallel::{OutMsg, ParallelEngine, SiteWorld};
 pub use server::FifoServer;

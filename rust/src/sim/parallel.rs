@@ -1,0 +1,433 @@
+//! Conservative-lookahead parallel discrete-event engine.
+//!
+//! The serial [`Engine`](super::Engine) drives one world with one queue;
+//! multi-site federation runs decompose into per-site worlds whose only
+//! coupling is WAN traffic, which physically takes at least the
+//! site-pair latency floor to arrive. This module exploits that bound
+//! with a classic *conservative* parallel-DES protocol, executed in
+//! barrier-synchronized rounds:
+//!
+//! 1. **Deliver** — messages staged in the previous round are inserted
+//!    into their destination queues via [`EventQueue::at_keyed`], with a
+//!    sender-derived ordering key so the insertion (thread) order never
+//!    affects pop order.
+//! 2. **Window** — `T` is the global minimum next-event time across all
+//!    sites. If no site has a pending event, the run is over.
+//! 3. **Execute** — every site processes its events with `t < T + h(i)`
+//!    in parallel, where the *lookahead* `h(i)` is the minimum WAN
+//!    latency from any other site into `i` (from
+//!    [`Topology::lookahead_in`](crate::federation::Topology::lookahead_in)).
+//!    Any message emitted this round is sent at some `t ≥ T` and so
+//!    arrives at `t + lat(j→i) ≥ T + h(i)` — strictly after every event
+//!    executed at `i` this round. Emitted messages go to per-site
+//!    outboxes ([`SiteWorld::drain_outbox`]) and are routed at the
+//!    round barrier.
+//!
+//! If `h(i)` is zero (a zero-latency site pair, or `T + h(i)` rounds
+//! down to `T`), site `i` degrades to processing `t ≤ T` only; same-time
+//! message arrivals then execute in the next round, after same-time
+//! local events — exactly where the keyed ordering would place them.
+//! The site holding the global minimum always executes at least one
+//! event, so every round makes progress.
+//!
+//! ## Serial-equivalence contract
+//!
+//! The round structure — delivery, `T`, per-site windows, message
+//! routing — is a pure function of global simulation state; worker
+//! threads only parallelize step 3 *across* sites, and each site's event
+//! stream is handled by exactly one thread per round. `threads = 1` runs
+//! the identical round loop inline. Run outcomes (event counts,
+//! makespan, metric checksums) are therefore bit-for-bit identical at
+//! every thread count, pinned by `tests/parallel_equivalence.rs`.
+
+use std::sync::{Barrier, Mutex};
+
+use super::engine::{EventQueue, World};
+
+/// A world that can run as one site of a multi-site simulation.
+///
+/// Cross-site interactions must never touch another site's state
+/// directly: they are expressed as timestamped messages staged in an
+/// outbox while handling events, routed by the engine at round
+/// barriers, and delivered to the destination as ordinary events.
+pub trait SiteWorld: World + Send {
+    /// Inter-site message payload.
+    type Msg: Send;
+
+    /// Drain the messages staged while handling events this round.
+    fn drain_outbox(&mut self) -> Vec<OutMsg<Self::Msg>>;
+
+    /// Wrap an arriving message (with its sender's site id) as a local
+    /// event for [`World::handle`].
+    fn msg_event(from: u32, msg: Self::Msg) -> Self::Event;
+}
+
+/// One staged inter-site message.
+pub struct OutMsg<M> {
+    /// Destination site index.
+    pub dst: usize,
+    /// Absolute arrival time (send time + site-pair latency).
+    pub at: f64,
+    /// Ordering key for [`EventQueue::at_keyed`]: unique, bit 63 set,
+    /// derived from (sender site, per-sender counter) so equal-time
+    /// delivery order is reproducible.
+    pub key: u64,
+    /// The payload.
+    pub msg: M,
+}
+
+/// A message in flight between rounds (tagged with its sender).
+struct InMsg<M> {
+    at: f64,
+    key: u64,
+    from: u32,
+    msg: M,
+}
+
+/// One site: its world, its event queue, and its event counter.
+pub struct SiteState<W: SiteWorld> {
+    /// The site-local world.
+    pub world: W,
+    /// The site-local event queue.
+    pub queue: EventQueue<W::Event>,
+    /// Events executed at this site.
+    pub events: u64,
+}
+
+/// The parallel engine: a set of site worlds advanced in
+/// conservative-lookahead rounds (see the module docs).
+pub struct ParallelEngine<W: SiteWorld> {
+    sites: Vec<SiteState<W>>,
+    lookahead: Vec<f64>,
+    threads: usize,
+}
+
+/// Execute one site's window `[.., limit)` (or `[.., T]` when the
+/// lookahead collapsed) and return the messages it staged.
+fn run_window<W: SiteWorld>(s: &mut SiteState<W>, t: f64, h: f64) -> Vec<OutMsg<W::Msg>> {
+    let limit = t + h;
+    // `h` may be 0, or small enough that `t + h` rounds back to `t`;
+    // fall back to the inclusive window `t ≤ T` so the round still
+    // makes progress.
+    let inclusive = limit <= t;
+    loop {
+        match s.queue.peek_time() {
+            Some(pt) if (inclusive && pt <= t) || (!inclusive && pt < limit) => {
+                let (now, ev) = s.queue.pop().unwrap();
+                s.events += 1;
+                s.world.handle(now, ev, &mut s.queue);
+            }
+            _ => break,
+        }
+    }
+    s.world.drain_outbox()
+}
+
+impl<W: SiteWorld> ParallelEngine<W>
+where
+    W::Event: Send,
+{
+    /// Empty engine that will use up to `threads` worker threads
+    /// (clamped to the site count; `1` runs the round loop inline).
+    pub fn new(threads: usize) -> Self {
+        ParallelEngine {
+            sites: Vec::new(),
+            lookahead: Vec::new(),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Add a site with its incoming lookahead `h` (seconds): the
+    /// minimum latency with which any other site's message can reach
+    /// it. `f64::INFINITY` is valid for a site nothing can send to
+    /// (its window is then unbounded).
+    pub fn add_site(&mut self, world: W, lookahead_in: f64) -> usize {
+        debug_assert!(lookahead_in >= 0.0);
+        self.sites.push(SiteState {
+            world,
+            queue: EventQueue::new(),
+            events: 0,
+        });
+        self.lookahead.push(lookahead_in);
+        self.sites.len() - 1
+    }
+
+    /// Seed an event at `site`'s queue at absolute time `at`.
+    pub fn schedule(&mut self, site: usize, at: f64, event: W::Event) {
+        self.sites[site].queue.at(at, event);
+    }
+
+    /// Total events executed across all sites.
+    pub fn events_processed(&self) -> u64 {
+        self.sites.iter().map(|s| s.events).sum()
+    }
+
+    /// The sites (worlds inspectable after the run).
+    pub fn sites(&self) -> &[SiteState<W>] {
+        &self.sites
+    }
+
+    /// Consume the engine, yielding the site states for harvesting.
+    pub fn into_sites(self) -> Vec<SiteState<W>> {
+        self.sites
+    }
+
+    /// Run until every queue drains and no messages are in flight.
+    /// Returns the maximum site-local end time.
+    pub fn run(&mut self) -> f64 {
+        let k = self.threads.min(self.sites.len()).max(1);
+        if k <= 1 {
+            self.run_serial();
+        } else {
+            self.run_parallel(k);
+        }
+        self.sites.iter().map(|s| s.queue.now()).fold(0.0, f64::max)
+    }
+
+    /// The round loop, inline on the calling thread.
+    fn run_serial(&mut self) {
+        let n = self.sites.len();
+        let mut pending: Vec<Vec<InMsg<W::Msg>>> = (0..n).map(|_| Vec::new()).collect();
+        loop {
+            let mut t = f64::INFINITY;
+            for (i, s) in self.sites.iter_mut().enumerate() {
+                for m in pending[i].drain(..) {
+                    s.queue.at_keyed(m.at, m.key, W::msg_event(m.from, m.msg));
+                }
+                if let Some(pt) = s.queue.peek_time() {
+                    t = t.min(pt);
+                }
+            }
+            if !t.is_finite() {
+                break;
+            }
+            for i in 0..n {
+                for m in run_window(&mut self.sites[i], t, self.lookahead[i]) {
+                    pending[m.dst].push(InMsg {
+                        at: m.at,
+                        key: m.key,
+                        from: i as u32,
+                        msg: m.msg,
+                    });
+                }
+            }
+        }
+    }
+
+    /// The identical round loop across `k` persistent scoped workers
+    /// (sites assigned round-robin), synchronized with a barrier three
+    /// times per round: after delivery/min-reporting, after the window
+    /// reduction, and after outbox routing.
+    fn run_parallel(&mut self, k: usize) {
+        let n = self.sites.len();
+        let lookahead = std::mem::take(&mut self.lookahead);
+        let mut groups: Vec<Vec<(usize, SiteState<W>)>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, s) in std::mem::take(&mut self.sites).into_iter().enumerate() {
+            groups[i % k].push((i, s));
+        }
+
+        struct Shared<M> {
+            pending: Vec<Vec<InMsg<M>>>,
+            mins: Vec<f64>,
+            window: f64,
+            done: bool,
+        }
+        let shared = Mutex::new(Shared {
+            pending: (0..n).map(|_| Vec::new()).collect(),
+            mins: vec![f64::INFINITY; k],
+            window: 0.0,
+            done: false,
+        });
+        let barrier = Barrier::new(k);
+
+        let finished: Vec<Vec<(usize, SiteState<W>)>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            for (w, mut group) in groups.into_iter().enumerate() {
+                let shared = &shared;
+                let barrier = &barrier;
+                let lookahead = &lookahead;
+                handles.push(scope.spawn(move || {
+                    loop {
+                        // Deliver staged messages to my sites, then
+                        // report my local minimum next-event time.
+                        {
+                            let mut sh = shared.lock().unwrap();
+                            let mut lmin = f64::INFINITY;
+                            for (i, s) in group.iter_mut() {
+                                for m in sh.pending[*i].drain(..) {
+                                    s.queue.at_keyed(m.at, m.key, W::msg_event(m.from, m.msg));
+                                }
+                                if let Some(pt) = s.queue.peek_time() {
+                                    lmin = lmin.min(pt);
+                                }
+                            }
+                            sh.mins[w] = lmin;
+                        }
+                        barrier.wait();
+                        // One worker reduces the global window (min is
+                        // order-insensitive, so this is deterministic).
+                        if w == 0 {
+                            let mut sh = shared.lock().unwrap();
+                            let t = sh.mins.iter().copied().fold(f64::INFINITY, f64::min);
+                            sh.window = t;
+                            sh.done = !t.is_finite();
+                        }
+                        barrier.wait();
+                        let (t, done) = {
+                            let sh = shared.lock().unwrap();
+                            (sh.window, sh.done)
+                        };
+                        if done {
+                            break;
+                        }
+                        // Execute my sites' windows; stage emitted
+                        // messages for next round's delivery phase.
+                        let mut staged: Vec<(usize, InMsg<W::Msg>)> = Vec::new();
+                        for (i, s) in group.iter_mut() {
+                            for m in run_window(s, t, lookahead[*i]) {
+                                staged.push((
+                                    m.dst,
+                                    InMsg {
+                                        at: m.at,
+                                        key: m.key,
+                                        from: *i as u32,
+                                        msg: m.msg,
+                                    },
+                                ));
+                            }
+                        }
+                        if !staged.is_empty() {
+                            let mut sh = shared.lock().unwrap();
+                            for (dst, m) in staged {
+                                sh.pending[dst].push(m);
+                            }
+                        }
+                        barrier.wait();
+                    }
+                    group
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("site worker panicked"))
+                .collect()
+        });
+
+        let mut sites: Vec<Option<SiteState<W>>> = (0..n).map(|_| None).collect();
+        for group in finished {
+            for (i, s) in group {
+                sites[i] = Some(s);
+            }
+        }
+        self.sites = sites.into_iter().map(|s| s.unwrap()).collect();
+        self.lookahead = lookahead;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy site: every handled event logs itself and forwards a message
+    /// to the next site in the ring until the hop budget is spent.
+    struct Ring {
+        id: u32,
+        n: u32,
+        latency: f64,
+        hops_left: u32,
+        sent: u64,
+        log: Vec<(f64, u32)>,
+        outbox: Vec<OutMsg<u32>>,
+    }
+
+    enum TEv {
+        Local(u32),
+        Msg(u32),
+    }
+
+    impl World for Ring {
+        type Event = TEv;
+        fn handle(&mut self, now: f64, ev: TEv, _q: &mut EventQueue<TEv>) {
+            let x = match ev {
+                TEv::Local(x) | TEv::Msg(x) => x,
+            };
+            self.log.push((now, x));
+            if self.hops_left > 0 {
+                self.hops_left -= 1;
+                self.sent += 1;
+                self.outbox.push(OutMsg {
+                    dst: ((self.id + 1) % self.n) as usize,
+                    at: now + self.latency,
+                    key: (1 << 63) | ((self.id as u64) << 48) | self.sent,
+                    msg: x + 1,
+                });
+            }
+        }
+    }
+
+    impl SiteWorld for Ring {
+        type Msg = u32;
+        fn drain_outbox(&mut self) -> Vec<OutMsg<u32>> {
+            std::mem::take(&mut self.outbox)
+        }
+        fn msg_event(_from: u32, msg: u32) -> TEv {
+            TEv::Msg(msg)
+        }
+    }
+
+    fn run_ring(n: u32, latency: f64, threads: usize) -> (Vec<Vec<(f64, u32)>>, u64, f64) {
+        let mut eng = ParallelEngine::new(threads);
+        let h = if n > 1 { latency } else { f64::INFINITY };
+        for id in 0..n {
+            eng.add_site(
+                Ring {
+                    id,
+                    n,
+                    latency,
+                    hops_left: 25,
+                    sent: 0,
+                    log: Vec::new(),
+                    outbox: Vec::new(),
+                },
+                h,
+            );
+        }
+        for i in 0..n as usize {
+            eng.schedule(i, i as f64 * 0.01, TEv::Local(0));
+        }
+        let end = eng.run();
+        let events = eng.events_processed();
+        let logs = eng.into_sites().into_iter().map(|s| s.world.log).collect();
+        (logs, events, end)
+    }
+
+    #[test]
+    fn thread_counts_agree_bit_for_bit() {
+        let serial = run_ring(4, 0.05, 1);
+        for threads in [2, 4, 8] {
+            let par = run_ring(4, 0.05, threads);
+            assert_eq!(serial.0, par.0, "logs diverged at threads={threads}");
+            assert_eq!(serial.1, par.1);
+            assert_eq!(serial.2.to_bits(), par.2.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_lookahead_degrades_without_deadlock() {
+        // Zero-latency messages force the inclusive `t ≤ T` window; the
+        // run must still terminate and stay thread-count invariant.
+        let serial = run_ring(3, 0.0, 1);
+        let par = run_ring(3, 0.0, 3);
+        assert_eq!(serial.0, par.0);
+        assert_eq!(serial.1, par.1);
+        assert!(serial.1 > 0);
+    }
+
+    #[test]
+    fn single_site_drains_in_one_round() {
+        let (logs, events, _) = run_ring(1, 1.0, 4);
+        // 1 seed + 25 self-hops.
+        assert_eq!(events, 26);
+        assert_eq!(logs[0].len(), 26);
+    }
+}

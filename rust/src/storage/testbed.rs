@@ -294,6 +294,60 @@ impl SimTestbed {
         self.resource_set(kind).to_vec()
     }
 
+    // ---- Cross-site leg halves (federated parallel runs) ----
+    //
+    // The parallel engine gives every site its own world — its own flow
+    // network — so a cross-site transfer cannot be one flow over both
+    // sites' resources. It is split at the WAN boundary into an egress
+    // half owned by the sender (ending at the directed WAN link, which
+    // the sender owns) and an ingress half owned by the receiver,
+    // started when the data "arrives" as a message. The legs below are
+    // the exact halves of `federated_set`'s cross-site paths. All of
+    // them require the WAN fabric and panic without one.
+
+    /// Sender half of a cross-site peer fetch out of executor `src`.
+    pub fn peer_egress(&self, src: usize, to: SiteId) -> ResourceSet {
+        let fab = self.wan.as_ref().expect("peer_egress needs a WAN fabric");
+        let ss = fab.topo.site_of(src);
+        ResourceSet::new(&[
+            self.nodes[src].disk_read,
+            self.nodes[src].nic_out,
+            fab.lan(ss),
+            fab.wan(ss, to),
+        ])
+    }
+
+    /// Receiver half of any cross-site fetch into executor `dst` (peer
+    /// or GPFS data — the local path is the same).
+    pub fn site_ingress(&self, dst: usize, caching: bool) -> ResourceSet {
+        let fab = self.wan.as_ref().expect("site_ingress needs a WAN fabric");
+        let ds = fab.topo.site_of(dst);
+        if caching {
+            ResourceSet::new(&[fab.lan(ds), self.nodes[dst].nic_in, self.nodes[dst].disk_write])
+        } else {
+            ResourceSet::new(&[fab.lan(ds), self.nodes[dst].nic_in])
+        }
+    }
+
+    /// Home half of a remote GPFS read toward site `to`.
+    pub fn gpfs_egress(&self, to: SiteId) -> ResourceSet {
+        let fab = self.wan.as_ref().expect("gpfs_egress needs a WAN fabric");
+        ResourceSet::new(&[self.gpfs_read, fab.lan(SiteId::HOME), fab.wan(SiteId::HOME, to)])
+    }
+
+    /// Sender half of a remote GPFS write out of executor `src`.
+    pub fn gpfs_write_egress(&self, src: usize) -> ResourceSet {
+        let fab = self.wan.as_ref().expect("gpfs_write_egress needs a WAN fabric");
+        let ss = fab.topo.site_of(src);
+        ResourceSet::new(&[self.nodes[src].nic_out, fab.lan(ss), fab.wan(ss, SiteId::HOME)])
+    }
+
+    /// Home half of a remote GPFS write.
+    pub fn gpfs_write_ingress(&self) -> ResourceSet {
+        let fab = self.wan.as_ref().expect("gpfs_write_ingress needs a WAN fabric");
+        ResourceSet::new(&[fab.lan(SiteId::HOME), self.gpfs_write])
+    }
+
     /// Number of nodes.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
@@ -426,6 +480,26 @@ mod tests {
         let rs = tb.resources(TransferKind::GpfsRead { node: 0 });
         let f = tb.net.start(0.0, FlowSpec::new(100 * MB).over(&rs));
         assert!((tb.net.rate(f) - gbps(1.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn cross_site_halves_union_to_the_full_path() {
+        let tb = federated();
+        // Peer: node 1 (site 0) → node 5 (site 1), cached at dst.
+        let full = tb.resources(TransferKind::Peer { src: 1, dst: 5 });
+        let mut halves = tb.peer_egress(1, SiteId(1)).to_vec();
+        halves.extend_from_slice(&tb.site_ingress(5, true));
+        assert_eq!(full, halves);
+        // Remote GPFS read into node 6 (site 1), cached.
+        let full = tb.resources(TransferKind::GpfsReadCached { node: 6 });
+        let mut halves = tb.gpfs_egress(SiteId(1)).to_vec();
+        halves.extend_from_slice(&tb.site_ingress(6, true));
+        assert_eq!(full, halves);
+        // Remote GPFS write from node 6.
+        let full = tb.resources(TransferKind::GpfsWrite { node: 6 });
+        let mut halves = tb.gpfs_write_egress(6).to_vec();
+        halves.extend_from_slice(&tb.gpfs_write_ingress());
+        assert_eq!(full, halves);
     }
 
     #[test]

@@ -60,6 +60,22 @@ impl SimTransferPlane {
         self.testbed.net.start(now, spec)
     }
 
+    /// Start a class-tagged flow over an explicit resource set. The
+    /// federated parallel driver splits cross-site transfers into
+    /// per-site leg halves (see the `SimTestbed` egress/ingress
+    /// builders) that don't correspond to any single [`TransferKind`].
+    pub fn start_over(
+        &mut self,
+        now: f64,
+        class: TransferClass,
+        rs: &crate::storage::testbed::ResourceSet,
+        bytes: u64,
+    ) -> FlowId {
+        self.started[class.index()] += 1;
+        let spec = FlowSpec::new(bytes).weight(self.ctl.weight_of(class)).over(rs);
+        self.testbed.net.start(now, spec)
+    }
+
     /// Flows started per class: (foreground, staging, prestage).
     pub fn class_counts(&self) -> (u64, u64, u64) {
         (self.started[0], self.started[1], self.started[2])

@@ -207,6 +207,31 @@ impl Percentiles {
     pub fn median(&mut self) -> f64 {
         self.quantile(0.5)
     }
+
+    /// Merge another estimator's stored sample into this one (the
+    /// federated driver combines per-site latency estimators this way).
+    /// Deterministic: appends `other`'s kept samples in order, then
+    /// re-decimates while over the cap. The merged set is a union of
+    /// two (possibly differently) strided subsamples — still a valid
+    /// sample of the combined stream, exact while both were exact.
+    pub fn merge(&mut self, other: &Percentiles) {
+        self.seen += other.seen;
+        if other.samples.is_empty() {
+            return;
+        }
+        self.sorted = false;
+        self.stride = self.stride.max(other.stride);
+        self.samples.extend_from_slice(&other.samples);
+        while self.samples.len() >= MAX_SAMPLES {
+            let mut i = 0usize;
+            self.samples.retain(|_| {
+                let k = i % 2 == 0;
+                i += 1;
+                k
+            });
+            self.stride *= 2;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +291,27 @@ mod tests {
         assert!(s.min().is_nan());
         let mut p = Percentiles::new();
         assert!(p.median().is_nan());
+    }
+
+    #[test]
+    fn percentiles_merge_equals_combined_below_cap() {
+        let mut all = Percentiles::new();
+        let mut a = Percentiles::new();
+        let mut b = Percentiles::new();
+        for i in 0..1000 {
+            let x = (i as f64).cos() * 5.0;
+            all.add(x);
+            if i % 3 == 0 {
+                a.add(x)
+            } else {
+                b.add(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.seen(), all.seen());
+        assert_eq!(a.count(), all.count());
+        assert!((a.median() - all.median()).abs() < 1e-12);
+        assert!((a.quantile(0.99) - all.quantile(0.99)).abs() < 1e-12);
     }
 
     #[test]

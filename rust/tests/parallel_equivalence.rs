@@ -1,0 +1,159 @@
+//! Parallel-engine acceptance: multi-site runs on the
+//! conservative-lookahead engine must be (a) bit-for-bit identical at
+//! every thread count and (b) actually faster with threads where cores
+//! exist.
+//!
+//! Determinism is the non-negotiable half: per-site worlds are seeded
+//! independently of thread scheduling, inter-site messages carry
+//! sender-derived ordering keys, and per-site metrics merge in fixed
+//! site order — so the merged outcome checksum cannot depend on
+//! `sim.threads`. The speedup half mirrors `shard_scaling.rs`:
+//! best-of-3 to damp scheduler noise, ratio assert gated on visible
+//! parallelism, everything else asserted unconditionally.
+
+use datadiffusion::config::Config;
+use datadiffusion::coordinator::task::{Task, TaskId};
+use datadiffusion::driver::sim::{SimDriver, SimWorkloadSpec};
+use datadiffusion::driver::RunOutcome;
+use datadiffusion::index::IndexBackend;
+use datadiffusion::scheduler::DispatchPolicy;
+use datadiffusion::storage::object::{Catalog, ObjectId};
+use datadiffusion::util::units::MB;
+
+/// An elastic 4-site config: pools churn (allocate and release
+/// mid-run), so the equivalence check covers provisioner ticks,
+/// executor joins/leases, and directory purges — not just the steady
+/// state.
+fn churn_cfg(nodes: usize, backend: IndexBackend) -> Config {
+    let mut cfg = Config::with_nodes(nodes);
+    cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+    cfg.index.backend = backend;
+    cfg.split_into_sites(4);
+    cfg.federation.skew = 0.0; // origins uniform: real cross-site traffic
+    cfg.provisioner.enabled = true;
+    cfg.provisioner.policy = datadiffusion::provisioner::AllocationPolicy::Adaptive;
+    cfg.provisioner.min_executors = 1;
+    cfg.provisioner.max_executors = nodes;
+    cfg.provisioner.allocation_latency_s = 20.0;
+    cfg.provisioner.idle_release_s = 15.0;
+    cfg.provisioner.poll_interval_s = 2.0;
+    cfg.provisioner.queue_per_executor = 2;
+    cfg
+}
+
+fn churn_run(backend: IndexBackend, threads: usize) -> RunOutcome {
+    let nodes = 16;
+    let mut cfg = churn_cfg(nodes, backend);
+    cfg.sim.threads = threads;
+    let mut catalog = Catalog::new();
+    for i in 0..nodes {
+        catalog.insert(ObjectId(i as u64), 4 * MB);
+    }
+    // Bursty enough to grow the pools, spaced enough to shrink them.
+    let tasks: Vec<(f64, Task)> = (0..400)
+        .map(|i| {
+            let burst = (i / 50) as f64 * 60.0;
+            (
+                burst + (i % 50) as f64 * 0.05,
+                Task::with_inputs(TaskId(i), vec![ObjectId(i % nodes as u64)]),
+            )
+        })
+        .collect();
+    let spec = SimWorkloadSpec::new(tasks);
+    SimDriver::new(cfg, spec, catalog).run()
+}
+
+fn assert_identical(a: &RunOutcome, b: &RunOutcome, label: &str) {
+    assert_eq!(
+        a.metrics.checksum(),
+        b.metrics.checksum(),
+        "{label}: outcome checksum must be thread-count invariant"
+    );
+    assert_eq!(a.events, b.events, "{label}: event counts must match");
+    assert_eq!(
+        a.makespan_s.to_bits(),
+        b.makespan_s.to_bits(),
+        "{label}: makespan must match bit-for-bit"
+    );
+}
+
+#[test]
+fn outcomes_identical_across_thread_counts_central() {
+    let serial = churn_run(IndexBackend::Central, 1);
+    assert_eq!(serial.metrics.tasks_done, 400, "run must drain");
+    assert!(serial.metrics.executors_joined > 0, "pools must churn");
+    for threads in [2, 4] {
+        let par = churn_run(IndexBackend::Central, threads);
+        assert_identical(&serial, &par, &format!("central, threads={threads}"));
+    }
+}
+
+#[test]
+fn outcomes_identical_across_thread_counts_chord() {
+    let serial = churn_run(IndexBackend::Chord, 1);
+    assert_eq!(serial.metrics.tasks_done, 400, "run must drain");
+    assert!(
+        serial.metrics.stabilization_msgs > 0,
+        "chord joins must stabilize"
+    );
+    for threads in [2, 4] {
+        let par = churn_run(IndexBackend::Chord, threads);
+        assert_identical(&serial, &par, &format!("chord, threads={threads}"));
+    }
+}
+
+/// A site-parallel workload: every input prewarmed at its home
+/// executor, affinity placement keeping tasks at the caching site —
+/// the four site worlds run nearly independent event streams, which is
+/// the shape the window-barrier protocol must turn into wall-clock.
+fn parallel_run(threads: usize) -> (RunOutcome, f64) {
+    let nodes = 32;
+    let tasks = 20_000u64;
+    let mut cfg = Config::with_nodes(nodes);
+    cfg.scheduler.policy = DispatchPolicy::MaxComputeUtil;
+    cfg.split_into_sites(4);
+    cfg.federation.skew = 0.0;
+    cfg.sim.threads = threads;
+    let mut catalog = Catalog::new();
+    for e in 0..nodes {
+        catalog.insert(ObjectId(e as u64), MB);
+    }
+    let task_list: Vec<(f64, Task)> = (0..tasks)
+        .map(|i| {
+            (
+                i as f64 * 0.0005,
+                Task::with_inputs(TaskId(i), vec![ObjectId(i % nodes as u64)]),
+            )
+        })
+        .collect();
+    let mut spec = SimWorkloadSpec::new(task_list);
+    spec.prewarm = (0..nodes).map(|e| (e, ObjectId(e as u64))).collect();
+    let t0 = std::time::Instant::now();
+    let out = SimDriver::new(cfg, spec, catalog).run();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    (out, wall)
+}
+
+#[test]
+fn four_threads_speed_up_four_sites() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Best-of-3 damps scheduler noise on shared runners; the outcome
+    // itself is deterministic, only the wall clock varies.
+    let mut best = 0.0f64;
+    for _ in 0..3 {
+        let (serial, serial_wall) = parallel_run(1);
+        let (par, par_wall) = parallel_run(4);
+        assert_eq!(serial.metrics.tasks_done, 20_000, "threads=1 must drain");
+        assert_identical(&serial, &par, "speedup workload");
+        best = best.max(serial_wall / par_wall.max(1e-9));
+    }
+    if cores < 4 {
+        eprintln!("skipping parallel-engine ratio assert: only {cores} cores visible");
+        return;
+    }
+    assert!(
+        best >= 2.0,
+        "threads=4 must at least double threads=1 on the 4-site \
+         site-local workload, got {best:.2}x over 3 attempts"
+    );
+}
