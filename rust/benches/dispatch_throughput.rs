@@ -144,6 +144,31 @@ fn main() {
         Err(e) => eprintln!("error writing shard CSV: {e}"),
     }
 
+    // Live driver, per-shard dispatcher threads: the same axis through
+    // real executor threads and real channels (zero-I/O tasks, so the
+    // coordination plane is what's measured). `live-sharded@1` is the
+    // single coordinator loop; >=2 runs one dispatcher thread per shard.
+    println!();
+    match figures::fig_live_shard_scaling(&[1, 2, 4], 8_192, 4) {
+        Ok(rows) => {
+            for r in &rows {
+                println!(
+                    "{:<28} {:>12.0} tasks/s   busy {:>7.3}s   steals {:>6}",
+                    format!("live-sharded@{}", r.shards),
+                    r.tasks_per_s,
+                    r.busy_s,
+                    r.steals
+                );
+                csv.rowf(&[
+                    &format!("live-sharded@{}", r.shards),
+                    &r.tasks_per_s,
+                    &(r.wall_s / r.tasks.max(1) as f64 * 1e6),
+                ]);
+            }
+        }
+        Err(e) => eprintln!("error running live shard axis: {e}"),
+    }
+
     // Raw index ops (the §3.2.3 microbenchmark).
     let mut catalog = Catalog::new();
     catalog.insert(ObjectId(0), 1);

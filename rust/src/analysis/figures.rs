@@ -971,6 +971,78 @@ pub fn emit_shard_scaling(
     csv.finish()
 }
 
+// -------------------------------------------- Live shard-scaling figure
+
+/// One measured point of the live dispatcher-scaling axis: the same
+/// zero-I/O task batch pushed through the live driver's coordination
+/// plane at one `--shards` count.
+#[derive(Debug, Clone)]
+pub struct LiveShardPoint {
+    /// Dispatcher shard count (1 = the single coordinator loop).
+    pub shards: usize,
+    /// Tasks dispatched and retired through real executor threads.
+    pub tasks: u64,
+    /// Wall-clock seconds the run took.
+    pub wall_s: f64,
+    /// Live dispatch throughput, tasks/s.
+    pub tasks_per_s: f64,
+    /// Summed dispatcher-loop busy time across shard loops (0 at
+    /// `shards = 1`, where the single loop does not meter itself).
+    pub busy_s: f64,
+    /// Cross-shard steal batches executed by the shard loops.
+    pub steals: u64,
+}
+
+/// Measure live dispatch throughput at each shard count: real executor
+/// threads, real channels, real coordination — but zero-input synthetic
+/// tasks over an empty store, so no file I/O or compute dilutes the
+/// dispatcher axis. This is the live-mode counterpart of
+/// [`fig_shard_scaling`] (which measures the decision core alone), used
+/// by the `dispatch_throughput` bench's `live-sharded@N` rows and the
+/// `live_shard_equivalence` throughput gate.
+pub fn fig_live_shard_scaling(
+    shards_list: &[usize],
+    tasks: u64,
+    executors: usize,
+) -> crate::error::Result<Vec<LiveShardPoint>> {
+    use crate::driver::live::LiveCluster;
+    use crate::storage::live::LiveStore;
+
+    let executors = executors.max(1);
+    let tasks = tasks.max(64);
+    let base = std::env::temp_dir().join(format!("falkon-live-shards-{}", std::process::id()));
+    let mut rows: Vec<LiveShardPoint> = Vec::new();
+    for &shards in shards_list {
+        let shards = shards.max(1);
+        let dir = base.join(format!("s{shards}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = LiveStore::create(dir.join("gpfs"), DataFormat::Fit)?;
+        let mut cfg = Config::with_nodes(executors);
+        // FirstAvailable + inputless tasks: every report/dispatch
+        // round-trip exercises the coordination plane and nothing else.
+        cfg.scheduler.policy = DispatchPolicy::FirstAvailable;
+        cfg.scheduler.tasks_per_cpu = 4;
+        cfg.coordinator.shards = shards;
+        let batch: Vec<Task> = (0..tasks)
+            .map(|i| Task::with_inputs(TaskId(i), Vec::new()))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = LiveCluster::new(cfg, store, dir.join("work"), None).run(batch)?;
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        rows.push(LiveShardPoint {
+            shards,
+            tasks: out.metrics.tasks_done,
+            wall_s: wall,
+            tasks_per_s: out.metrics.tasks_done as f64 / wall,
+            busy_s: out.metrics.dispatch_loop_busy_s,
+            steals: out.metrics.dispatch_steals,
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(rows)
+}
+
 // ----------------------------------------------------- Simulator scale
 
 /// One measured cell of the simulator-scalability figure: a full

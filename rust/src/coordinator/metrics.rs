@@ -172,6 +172,17 @@ pub struct Metrics {
     /// Per-shard ready-queue depth at harvest time (one entry per
     /// dispatcher shard; a single entry at `shards = 1`).
     pub shard_queue_depths: Vec<usize>,
+    /// Wall-clock seconds dispatcher loops spent doing work (applying
+    /// reports, stealing, deciding, sending) rather than blocked on
+    /// their report channel — summed across per-shard loops, so it can
+    /// exceed the run's span. Live driver only; 0 in the simulator.
+    /// Wall-clock derived, so excluded from [`Metrics::checksum`].
+    pub dispatch_loop_busy_s: f64,
+    /// Largest report burst (completion/staging/drop messages drained
+    /// in one wake-up) per live dispatcher loop — one entry per shard
+    /// loop at `--shards >= 2`, empty elsewhere. A proxy for report
+    /// queue depth: deep bursts mean the loop was the bottleneck.
+    pub report_queue_peaks: Vec<u64>,
     /// Bytes moved by transfer-plane data movements, per
     /// [`TransferClass`] (indexed by [`TransferClass::index`]:
     /// foreground, staging, prestage).
@@ -451,6 +462,8 @@ impl Metrics {
             *dst += src;
         }
         self.shard_queue_depths.extend_from_slice(&other.shard_queue_depths);
+        self.dispatch_loop_busy_s += other.dispatch_loop_busy_s;
+        self.report_queue_peaks.extend_from_slice(&other.report_queue_peaks);
         for i in 0..3 {
             self.class_bytes[i] += other.class_bytes[i];
             self.class_xfer_s[i] += other.class_xfer_s[i];

@@ -35,11 +35,37 @@
 //! * **Steal protocol.** A shard with idle executors and an empty
 //!   ready queue steals from the shard with the longest ready queue:
 //!   at most half the victim's ready tasks, capped by the thief's idle
-//!   slots and [`sharded::MAX_STEAL_BATCH`], taken from the *back* of
-//!   the victim's FIFO (youngest first) with relative order preserved.
-//!   Parked tasks never move — they wait on a specific busy executor
-//!   only the owning shard tracks. Submit credit stays with the victim
-//!   so counters summed across shards remain exact.
+//!   slots and an adaptive [`sharded::StealSizer`] batch cap — an EWMA
+//!   of the victim's post-steal residual backlog, clamped to `[1, 64]`
+//!   and seeded at [`sharded::MAX_STEAL_BATCH`] — taken from the *back*
+//!   of the victim's FIFO (youngest first) with relative order
+//!   preserved. Parked tasks never move — they wait on a specific busy
+//!   executor only the owning shard tracks. Submit credit stays with
+//!   the victim so counters summed across shards remain exact.
+//!
+//! ## Two concurrency shapes
+//!
+//! The shard layer is used two ways, by channel topology:
+//!
+//! * **Single-owner facade** ([`ShardedCore`]) — one loop drives all
+//!   shards; concurrency exists only *inside* a call (scoped threads in
+//!   `try_dispatch`/`drain_all`). The simulator and the live driver at
+//!   `--shards 1` use this shape: every executor report funnels into
+//!   one channel owned by one coordinator loop.
+//! * **Per-shard dispatcher threads** ([`sharded::ShardPlane`], from
+//!   [`ShardedCore::into_plane`]) — each shard is a `Mutex<FalkonCore>`
+//!   driven by its own long-lived loop with its *own* report channel:
+//!   executors send completions to their owning shard's channel, so
+//!   dispatch decisions, cache-event application, and index updates for
+//!   shard *s* run concurrently with shard *t*. Cross-thread steals go
+//!   through `ShardPlane::steal_into` — victim picked from lock-free
+//!   published ready-length hints, victim lock only ever `try_lock`ed
+//!   (back off on contention), so no thread blocks on a second shard
+//!   lock and no deadlock cycle can form. A thin coordinator thread
+//!   handles membership churn (register/release handoff messages to the
+//!   owning shard loop), QoS harvest, and the final metrics merge. The
+//!   live driver at `--shards >= 2` uses this shape — see
+//!   [`crate::driver::live`] for the channel ownership map.
 //!
 //! The shard count comes from `coordinator.shards` in config (or
 //! `--shards` on the CLI): 1 by default, N for a fixed count, and 0 for
@@ -58,5 +84,5 @@ pub mod task;
 
 pub use self::core::{DispatchOrder, FalkonCore};
 pub use metrics::{ByteSource, Metrics};
-pub use sharded::{ShardStats, ShardedCore};
+pub use sharded::{ShardPlane, ShardStats, ShardedCore, StealSizer};
 pub use task::{Task, TaskId, TaskKind};

@@ -21,16 +21,34 @@
 //!   `Vec<DispatchOrder>`, instead of deciding task-by-task with fresh
 //!   allocations.
 //! * **Stealing** — a shard with idle executors and an empty ready
-//!   queue steals a bounded batch (≤ [`MAX_STEAL_BATCH`], at most half
-//!   the victim's ready queue) from the shard with the longest ready
-//!   queue. Only *ready* tasks move; parked (policy-delayed) tasks wait
-//!   on a specific busy executor that only the owning shard tracks.
+//!   queue steals a bounded batch (at most half the victim's ready
+//!   queue, capped by an adaptive [`StealSizer`] that starts at
+//!   [`MAX_STEAL_BATCH`]) from the shard with the longest ready queue.
+//!   Only *ready* tasks move; parked (policy-delayed) tasks wait on a
+//!   specific busy executor that only the owning shard tracks.
 //!
 //! At `shards = 1` everything degrades to exactly the single-core
 //! dispatcher: one shard owns all executors, every task routes to it,
 //! stealing is impossible, and the emitted orders are bit-for-bit the
 //! ones [`FalkonCore::try_dispatch`] would produce (property-tested in
 //! `tests/proptest_invariants.rs::prop_sharded_equivalence`).
+//!
+//! ## Cross-thread use: [`ShardPlane`]
+//!
+//! [`ShardedCore`] is a single-owner facade: one loop calls into it and
+//! the shards only run concurrently inside scoped calls like
+//! [`ShardedCore::try_dispatch`]. The live driver's per-shard dispatcher
+//! threads need the opposite shape — each shard driven by its *own*
+//! long-lived thread — so [`ShardedCore::into_plane`] decomposes the
+//! core into a [`ShardPlane`]: one `Mutex<FalkonCore>` per shard plus
+//! lock-free published hints (ready-queue length, executor count) that
+//! let a starved shard pick a steal victim without touching the
+//! victim's lock. The steal protocol is deadlock-free by construction:
+//! a thief holds its own core and only ever `try_lock`s the victim —
+//! no thread blocks on a second shard lock, so no lock cycle can form.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::cache::store::CacheEvent;
 use crate::config::{ReplicationConfig, SchedulerConfig};
@@ -43,9 +61,62 @@ use crate::replication::ReplicaDirective;
 use crate::scheduler::DispatchPolicy;
 use crate::storage::object::{Catalog, ObjectId};
 
-/// Upper bound on tasks moved per steal: enough to refill a starved
-/// shard's idle slots without oscillating work between shards.
+/// Initial cap on tasks moved per steal: enough to refill a starved
+/// shard's idle slots without oscillating work between shards. The
+/// effective cap adapts from there — see [`StealSizer`].
 pub const MAX_STEAL_BATCH: usize = 8;
+
+/// Hard ceiling of the adaptive steal-batch cap.
+const STEAL_BATCH_CEIL: usize = 64;
+
+/// EWMA smoothing factor for the post-steal residual signal.
+const STEAL_EWMA_ALPHA: f64 = 0.25;
+
+/// Adaptive steal-batch sizing from measured queue imbalance.
+///
+/// After each steal the victim's *residual* ready-queue length (what
+/// the bounded batch left behind) is the post-steal imbalance between
+/// victim and thief: the thief drains its batch immediately, so any
+/// leftover backlog means the batch was too small to rebalance. An
+/// EWMA of that residual drives the next steal's cap — deep persistent
+/// backlogs grow batches toward [`STEAL_BATCH_CEIL`] (64), clean
+/// steals shrink them toward 1 — clamped to `[1, 64]`, starting at
+/// [`MAX_STEAL_BATCH`].
+#[derive(Debug, Clone)]
+pub struct StealSizer {
+    /// EWMA of the victim's post-steal residual ready-queue length.
+    ewma: f64,
+    cap: usize,
+}
+
+impl Default for StealSizer {
+    fn default() -> Self {
+        StealSizer::new()
+    }
+}
+
+impl StealSizer {
+    /// Fresh sizer: the cap starts at [`MAX_STEAL_BATCH`].
+    pub fn new() -> StealSizer {
+        StealSizer {
+            ewma: MAX_STEAL_BATCH as f64,
+            cap: MAX_STEAL_BATCH,
+        }
+    }
+
+    /// Current steal-batch cap, in `[1, 64]`.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Record one steal: the victim had `victim_ready` ready tasks and
+    /// `stolen` of them moved.
+    pub fn record(&mut self, victim_ready: usize, stolen: usize) {
+        let residual = victim_ready.saturating_sub(stolen) as f64;
+        self.ewma = STEAL_EWMA_ALPHA * residual + (1.0 - STEAL_EWMA_ALPHA) * self.ewma;
+        self.cap = (self.ewma.ceil() as usize).clamp(1, STEAL_BATCH_CEIL);
+    }
+}
 
 /// Ready-task backlog at which [`ShardedCore::try_dispatch`] dispatches
 /// shards on scoped threads instead of sequentially: below this the
@@ -87,6 +158,8 @@ pub struct ShardedCore {
     catalog: Catalog,
     /// All registered executors across shards, ascending.
     all: Vec<ExecutorId>,
+    /// Adaptive steal-batch cap shared by every thief shard.
+    sizer: StealSizer,
     steals: u64,
     stolen_tasks: u64,
     batches: u64,
@@ -125,6 +198,7 @@ impl ShardedCore {
             catalog,
             all: Vec::new(),
             shards,
+            sizer: StealSizer::new(),
             steals: 0,
             stolen_tasks: 0,
             batches: 0,
@@ -463,7 +537,7 @@ impl ShardedCore {
         }
     }
 
-    fn record_batch(batches: &mut u64, hist: &mut [u64; 6], n: usize) {
+    pub(crate) fn record_batch(batches: &mut u64, hist: &mut [u64; 6], n: usize) {
         if n == 0 {
             return;
         }
@@ -493,7 +567,8 @@ impl ShardedCore {
     /// Steal one bounded batch into shard `s` if it is starved: victim
     /// is the longest ready queue elsewhere (first such shard on ties),
     /// batch is at most half the victim's ready queue, capped by the
-    /// thief's idle slots and [`MAX_STEAL_BATCH`].
+    /// thief's idle slots and the adaptive [`StealSizer`] cap (initially
+    /// [`MAX_STEAL_BATCH`]).
     fn steal_for(&mut self, s: usize) {
         if self.shards.len() < 2 {
             return;
@@ -513,16 +588,231 @@ impl ShardedCore {
             }
         }
         let Some((vlen, v)) = victim else { return };
-        let batch = vlen.div_ceil(2).min(thief_idle).min(MAX_STEAL_BATCH);
+        let batch = vlen.div_ceil(2).min(thief_idle).min(self.sizer.cap());
         let stolen = self.shards[v].steal_ready(batch);
         if stolen.is_empty() {
             return;
         }
+        self.sizer.record(vlen, stolen.len());
         self.steals += 1;
         self.stolen_tasks += stolen.len() as u64;
         for t in stolen {
             self.shards[s].absorb(t);
         }
+    }
+
+    /// Decompose into a thread-safe [`ShardPlane`] for per-shard
+    /// dispatcher threads (the live driver at `--shards >= 2`). Tasks
+    /// and executors already submitted/registered stay on their shards;
+    /// the facade's own steal/batch counters are dropped (per-shard
+    /// loops keep their own tallies and fold them into
+    /// [`ShardStats`] at harvest).
+    pub fn into_plane(self) -> ShardPlane {
+        ShardPlane {
+            slots: self
+                .shards
+                .into_iter()
+                .map(|core| ShardSlot {
+                    ready_hint: AtomicUsize::new(core.ready_len()),
+                    exec_hint: AtomicUsize::new(core.executor_count()),
+                    core: Mutex::new(core),
+                })
+                .collect(),
+            ring: self.ring,
+            catalog: self.catalog,
+        }
+    }
+}
+
+/// One shard of a [`ShardPlane`]: the core behind its lock, plus
+/// lock-free hints the owning loop publishes so *other* shards can pick
+/// steal victims without contending on the lock.
+struct ShardSlot {
+    core: Mutex<FalkonCore>,
+    /// Published ready-queue length (refreshed by the owning loop after
+    /// every dispatch/absorb, and by a thief after a successful steal).
+    ready_hint: AtomicUsize,
+    /// Published executor count (refreshed on membership churn).
+    exec_hint: AtomicUsize,
+}
+
+/// Thread-safe per-shard decomposition of a [`ShardedCore`].
+///
+/// Each dispatcher thread owns one shard: it locks `self.lock(s)` for
+/// short critical sections (apply reports, dispatch a batch), publishes
+/// its ready length, and steals through [`ShardPlane::steal_into`] when
+/// starved. A coordinator thread may lock any shard — one at a time —
+/// for membership churn and harvest. Lock discipline: hold at most one
+/// shard lock, except inside `steal_into`, which `try_lock`s the victim
+/// while holding the thief and backs off on contention — so no thread
+/// ever *blocks* for a second shard lock and no deadlock cycle exists.
+pub struct ShardPlane {
+    slots: Vec<ShardSlot>,
+    /// Task-partitioning ring (same [`PARTITION_SEED`] ring the facade
+    /// used; routing stays stable across the decomposition).
+    ring: ChordRing,
+    catalog: Catalog,
+}
+
+impl ShardPlane {
+    /// Number of dispatcher shards.
+    pub fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The shared object catalog.
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    /// The shard owning executor `e` (round-robin, as in the facade).
+    pub fn shard_of_executor(&self, e: ExecutorId) -> usize {
+        e % self.slots.len()
+    }
+
+    /// The shard owning tasks dominated by `obj`.
+    pub fn shard_of_object(&self, obj: ObjectId) -> usize {
+        self.ring.owner(obj)
+    }
+
+    /// Lock shard `s`'s core. Coordinator-side callers must release
+    /// before locking another shard.
+    pub fn lock(&self, s: usize) -> MutexGuard<'_, FalkonCore> {
+        self.slots[s].core.lock().expect("shard core poisoned")
+    }
+
+    /// Publish shard `s`'s ready-queue length and executor count for
+    /// lock-free victim selection (the owning loop calls this after
+    /// each dispatch round and on membership churn).
+    pub fn publish(&self, s: usize, ready: usize, executors: usize) {
+        self.slots[s].ready_hint.store(ready, Ordering::Relaxed);
+        self.slots[s].exec_hint.store(executors, Ordering::Relaxed);
+    }
+
+    /// Published ready-queue length of shard `s`.
+    pub fn ready_hint(&self, s: usize) -> usize {
+        self.slots[s].ready_hint.load(Ordering::Relaxed)
+    }
+
+    /// Whether any shard other than `s` advertises stealable work.
+    pub fn work_visible_elsewhere(&self, s: usize) -> bool {
+        self.slots
+            .iter()
+            .enumerate()
+            .any(|(v, slot)| v != s && slot.ready_hint.load(Ordering::Relaxed) > 0)
+    }
+
+    /// Cross-thread steal into shard `s`, whose (locked) core the
+    /// calling loop passes as `thief`. Victim selection reads the
+    /// published hints; the victim's lock is only `try_lock`ed, so a
+    /// contended victim means "no steal this round" rather than a
+    /// potential deadlock — the caller retries on its next wake-up.
+    ///
+    /// Unlike the single-owner facade, a victim with exactly one ready
+    /// task is eligible: an executor-less shard has no loop of its own
+    /// to ever run that task, so a lone leftover must be able to move.
+    /// Returns the number of tasks moved (0 on no victim/contention).
+    pub fn steal_into(&self, s: usize, thief: &mut FalkonCore, sizer: &mut StealSizer) -> u64 {
+        if self.slots.len() < 2 {
+            return 0;
+        }
+        let thief_idle = thief.idle_count();
+        if thief_idle == 0 || thief.ready_len() > 0 {
+            return 0;
+        }
+        let mut victim: Option<(usize, usize)> = None; // (ready_hint, shard)
+        for (v, slot) in self.slots.iter().enumerate() {
+            if v == s {
+                continue;
+            }
+            let len = slot.ready_hint.load(Ordering::Relaxed);
+            if len >= 1 && victim.map(|(best, _)| len > best).unwrap_or(true) {
+                victim = Some((len, v));
+            }
+        }
+        let Some((_, v)) = victim else { return 0 };
+        let Ok(mut vcore) = self.slots[v].core.try_lock() else {
+            return 0;
+        };
+        let vlen = vcore.ready_len();
+        if vlen == 0 {
+            return 0;
+        }
+        let batch = vlen.div_ceil(2).min(thief_idle).min(sizer.cap()).max(1);
+        let stolen = vcore.steal_ready(batch);
+        self.slots[v].ready_hint.store(vcore.ready_len(), Ordering::Relaxed);
+        drop(vcore);
+        if stolen.is_empty() {
+            return 0;
+        }
+        sizer.record(vlen, stolen.len());
+        let n = stolen.len() as u64;
+        for t in stolen {
+            thief.absorb(t);
+        }
+        n
+    }
+
+    /// Total wait-queue length across shards (locks one at a time).
+    pub fn queue_len(&self) -> usize {
+        (0..self.slots.len()).map(|s| self.lock(s).queue_len()).sum()
+    }
+
+    /// Sum of per-shard queue high-water marks since the last call.
+    pub fn take_queue_peak(&self) -> usize {
+        (0..self.slots.len())
+            .map(|s| self.lock(s).take_queue_peak())
+            .sum()
+    }
+
+    /// Executors running nothing at all, ascending across shards.
+    pub fn quiescent_executors(&self) -> Vec<ExecutorId> {
+        let mut q: Vec<ExecutorId> = (0..self.slots.len())
+            .flat_map(|s| self.lock(s).quiescent_executors())
+            .collect();
+        q.sort_unstable();
+        q
+    }
+
+    /// All registered executors, ascending across shards.
+    pub fn executors(&self) -> Vec<ExecutorId> {
+        let mut all: Vec<ExecutorId> = (0..self.slots.len())
+            .flat_map(|s| self.lock(s).executors().to_vec())
+            .collect();
+        all.sort_unstable();
+        all
+    }
+
+    /// Number of registered executors across shards.
+    pub fn executor_count(&self) -> usize {
+        (0..self.slots.len())
+            .map(|s| self.lock(s).executor_count())
+            .sum()
+    }
+
+    /// Replica location entries across shards.
+    pub fn replica_location_entries(&self) -> usize {
+        (0..self.slots.len())
+            .map(|s| self.lock(s).replica_location_entries())
+            .sum()
+    }
+
+    /// Drain control-plane traffic accumulated by every shard's index.
+    pub fn take_index_control(&self) -> ControlTraffic {
+        let mut total = ControlTraffic::default();
+        for s in 0..self.slots.len() {
+            let c = self.lock(s).take_index_control();
+            total.stabilization_msgs += c.stabilization_msgs;
+            total.misroutes += c.misroutes;
+            total.update_msgs += c.update_msgs;
+            total.latency_s += c.latency_s;
+        }
+        total
+    }
+
+    /// Final wait-queue depth per shard, for the metrics harvest.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        (0..self.slots.len()).map(|s| self.lock(s).queue_len()).collect()
     }
 }
 
@@ -706,6 +996,112 @@ mod tests {
             let (sub, disp, comp) = c.counters();
             assert_eq!((sub, disp, comp), (200, 200, 200));
         }
+    }
+
+    #[test]
+    fn steal_sizer_starts_at_constant_and_clamps() {
+        let mut s = StealSizer::new();
+        assert_eq!(s.cap(), MAX_STEAL_BATCH, "initial cap is the old constant");
+        // Persistent deep residuals grow the cap, but never past 64.
+        for _ in 0..64 {
+            s.record(1_000, 8);
+        }
+        assert_eq!(s.cap(), 64, "deep residual backlog saturates at the ceiling");
+        // Clean steals (no residual) shrink it, but never below 1.
+        for _ in 0..64 {
+            s.record(4, 4);
+        }
+        assert_eq!(s.cap(), 1, "residual-free steals decay to the floor");
+        // And it can grow back.
+        s.record(40, 1);
+        assert!(s.cap() > 1 && s.cap() <= 64);
+    }
+
+    #[test]
+    fn steal_sizer_tracks_residual_ewma() {
+        let mut s = StealSizer::new();
+        // One steal leaving 24 behind: EWMA = 0.25*24 + 0.75*8 = 12.
+        s.record(32, 8);
+        assert_eq!(s.cap(), 12);
+        // A clean follow-up decays it: 0.25*0 + 0.75*12 = 9.
+        s.record(9, 9);
+        assert_eq!(s.cap(), 9);
+    }
+
+    #[test]
+    fn plane_cross_thread_steal_moves_lone_and_batched_tasks() {
+        let mut c = sharded(DispatchPolicy::FirstAvailable, 2);
+        // Executors land on shard 0 only; tasks on shard 1 only.
+        c.register_executor(0);
+        c.register_executor(2);
+        let victim_obj = (0..65536u64)
+            .map(ObjectId)
+            .find(|&o| c.shard_of_object(o) == 1)
+            .expect("some object owned by shard 1");
+        c.submit(Task::with_inputs(TaskId(0), vec![victim_obj]));
+        let plane = c.into_plane();
+        assert_eq!(plane.ready_hint(1), 1);
+        assert!(plane.work_visible_elsewhere(0));
+        let mut sizer = StealSizer::new();
+        {
+            let mut thief = plane.lock(0);
+            // A lone task on an executor-less shard must be stealable —
+            // there is no shard-1 loop to ever run it.
+            assert_eq!(plane.steal_into(0, &mut thief, &mut sizer), 1);
+            let mut orders = Vec::new();
+            thief.dispatch_into(&mut orders);
+            assert_eq!(orders.len(), 1);
+            assert_eq!(orders[0].executor % 2, 0, "runs on shard 0's slot");
+        }
+        assert_eq!(plane.ready_hint(1), 0, "victim hint refreshed by the thief");
+        assert_eq!(plane.queue_len(), 0);
+    }
+
+    #[test]
+    fn plane_parallel_drain_retires_everything() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let shards = 4;
+        let mut c = sharded(DispatchPolicy::MaxComputeUtil, shards);
+        for e in 0..8 {
+            c.register_executor_with(e, 2);
+        }
+        let total = 400u64;
+        for i in 0..total {
+            c.submit(Task::with_inputs(TaskId(i), vec![ObjectId(i % 64)]));
+        }
+        let plane = c.into_plane();
+        let done = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for s in 0..shards {
+                let (plane, done) = (&plane, &done);
+                scope.spawn(move || {
+                    let mut sizer = StealSizer::new();
+                    let mut orders = Vec::new();
+                    let mut idle_rounds = 0;
+                    while done.load(Ordering::Relaxed) < total && idle_rounds < 10_000 {
+                        let mut core = plane.lock(s);
+                        plane.steal_into(s, &mut core, &mut sizer);
+                        core.dispatch_into(&mut orders);
+                        if orders.is_empty() {
+                            idle_rounds += 1;
+                        } else {
+                            idle_rounds = 0;
+                        }
+                        for o in orders.drain(..) {
+                            core.on_task_complete(o.executor, o.task.id, &[]);
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        plane.publish(s, core.ready_len(), core.executor_count());
+                        drop(core);
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), total);
+        assert_eq!(plane.queue_len(), 0);
+        assert_eq!(plane.executor_count(), 8);
+        assert_eq!(plane.executors(), (0..8).collect::<Vec<_>>());
     }
 
     #[test]

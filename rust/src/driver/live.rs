@@ -1,50 +1,90 @@
 //! Live execution driver: real threads, real files, real compute.
 //!
-//! The same [`ShardedCore`] as the simulator, but executors are OS threads
+//! The same shard layer as the simulator, but executors are OS threads
 //! doing real I/O against a directory tree ("persistent storage"), real
 //! per-executor cache directories, real gzip decoding
 //! ([`crate::util::gzip`]), and real PJRT stacking compute through
 //! [`crate::runtime::PjrtEngine`] (when the `pjrt` feature is on).
 //!
-//! Threading model:
+//! ## Channel topology
 //!
-//! * the coordinator owns the sharded dispatcher core and runs the
-//!   dispatch loop — above a backlog threshold [`ShardedCore`] drains
-//!   its shards concurrently on scoped dispatcher threads; with
-//!   `provisioner.enabled` it also runs the DRP on wall-clock time,
-//!   spawning executor threads when the (simulated GRAM4-like) cluster
-//!   grants an allocation and reaping idle ones on release; replication
-//!   `Stage` messages pass through a [`LiveTransferPlane`]
-//!   ([`crate::transfer`]) that defers them while the source executor's
-//!   egress runs over the staging budget — measured by real byte-level
-//!   accounting ([`crate::transfer::live::EgressLedger`]: every copy
-//!   out of a cache directory registers its bytes against the source
-//!   while in flight) — re-admits them as it drains, and under the
-//!   weighted share policy paces the staging copies themselves with a
-//!   per-source token bucket sized from the class weight
-//!   ([`crate::transfer::live::StagingPacer`]); `Drop` messages
-//!   actively release decayed replicas from cache directories;
-//! * each executor is a thread with an inbox (`mpsc::Sender<ExecMsg>`);
-//! * completions flow back on one shared channel;
-//! * PJRT compute runs on a dedicated **compute service** thread (the
-//!   `xla` crate's client is not `Send`/`Sync` — and a single shared
-//!   accelerator queue is how a real deployment looks anyway).
+//! Every executor is a thread with an inbox
+//! (`mpsc::Sender<ExecMsg>`). What changes with `--shards` is who owns
+//! the *other* end of the report path:
+//!
+//! * **`--shards 1` — single coordinator loop.** One loop owns the
+//!   [`ShardedCore`], every executor reports into one shared channel,
+//!   and the loop interleaves provisioning, replication, dispatch, and
+//!   report application. This is the pre-shard-thread topology,
+//!   preserved byte-for-byte for static single-shard runs.
+//! * **`--shards >= 2` — per-shard dispatcher threads.** The core is
+//!   decomposed into a [`ShardPlane`] and each shard gets its own
+//!   long-lived dispatcher thread with a *dedicated* channel
+//!   ([`ShardMsg`]): executor `e` sends its `Report`s to shard
+//!   `e % shards`'s channel, so dispatch decisions, cache-event
+//!   application, and index updates for shard *s* run concurrently
+//!   with shard *t*. Each shard loop also owns the inbox senders of
+//!   its executors, its own [`LiveTransferPlane`] admission state and
+//!   replication cadence (replica managers are per-shard), and a
+//!   shard-local [`Metrics`].
+//!
+//! ## Cross-thread steal protocol (`--shards >= 2`)
+//!
+//! A starved shard loop (idle slots, empty ready queue) steals through
+//! [`ShardPlane::steal_into`]: the victim is picked from lock-free
+//! published ready-length hints, and the victim's core is only ever
+//! `try_lock`ed while the thief holds its own — contention means "no
+//! steal this round", so no thread blocks on a second shard lock and
+//! no deadlock cycle can form. Batch size adapts via
+//! [`crate::coordinator::StealSizer`].
+//!
+//! ## Churn handoff (`--shards >= 2`)
+//!
+//! A thin control loop (the caller's thread) handles only membership
+//! churn, QoS harvest, and the metrics merge. It runs the DRP on
+//! wall-clock time and talks to shard loops through their channels:
+//! a granted executor `e` is spawned by the control loop and handed to
+//! shard `e % shards` with [`ShardCtl::Register`] (the shard loop
+//! registers it with its core slice and adopts the inbox); a release
+//! is *proposed* with [`ShardCtl::Release`] — the owning shard loop
+//! re-validates quiescence (a dispatch may have raced the control
+//! loop's observation) and acks the outcome, and only an `ok` ack lets
+//! the control loop join the thread, tear down the cache directory,
+//! and bill the cluster. Completion is tracked by a shared atomic; the
+//! loop that retires the last task sends a `Drained` ack so the
+//! control loop wakes promptly.
+//!
+//! Replication `Stage` messages pass through a per-shard
+//! [`LiveTransferPlane`] ([`crate::transfer`]) that defers them while
+//! the source executor's egress runs over the staging budget — measured
+//! by real byte-level accounting against the *shared*
+//! [`crate::transfer::live::EgressLedger`] — re-admits them as it
+//! drains, and under the weighted share policy paces the staging copies
+//! themselves with a per-source token bucket
+//! ([`crate::transfer::live::StagingPacer`]); `Drop` messages actively
+//! release decayed replicas from cache directories.
+//!
+//! PJRT compute runs on a dedicated **compute service** thread (the
+//! `xla` crate's client is not `Send`/`Sync` — and a single shared
+//! accelerator queue is how a real deployment looks anyway).
 //!
 //! Python is never involved: executors load AOT artifacts only.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::cache::store::{CacheEvent, DataCache};
 use crate::config::Config;
 use crate::coordinator::metrics::{ByteSource, Metrics};
-use crate::coordinator::sharded::ShardedCore;
+use crate::coordinator::sharded::{ShardPlane, ShardStats, ShardedCore, StealSizer};
 use crate::coordinator::task::{Task, TaskId, TaskKind};
 use crate::error::{Error, Result};
 use crate::index::central::ExecutorId;
+use crate::index::DataIndex;
 use crate::provisioner::{ClusterProvider, ProvisionAction, Provisioner};
 use crate::replication::ReplicaDirective;
 use crate::runtime::{PjrtEngine, StackRequest};
@@ -126,6 +166,46 @@ enum Report {
     Done(Completion),
     Staged(StageReport),
     Dropped(DropReport),
+}
+
+/// Message into a coordinator/shard dispatcher loop. Executor reports
+/// share the channel with control handoffs so a single `recv` wakes a
+/// shard loop for either kind of event.
+enum ShardMsg {
+    Report(Report),
+    Ctl(ShardCtl),
+}
+
+/// Control handoff from the thin control loop to a shard dispatcher
+/// loop (`--shards >= 2` only; the single-loop path never sends these).
+enum ShardCtl {
+    /// A provisioning grant landed: adopt executor `e` — register it
+    /// with this shard's core slice and dispatch to `inbox` from now on.
+    Register {
+        e: ExecutorId,
+        capacity: usize,
+        inbox: mpsc::Sender<ExecMsg>,
+    },
+    /// The provisioner wants `e` released. The owning loop re-validates
+    /// quiescence (a dispatch may have raced the control loop's
+    /// observation), shuts the executor down and deregisters it on
+    /// success, and always acks the outcome.
+    Release { e: ExecutorId },
+    /// Run over (or aborted): shut down owned executors and exit.
+    Shutdown,
+}
+
+/// Shard-loop → control-loop acknowledgements.
+enum CtlAck {
+    /// Outcome of a [`ShardCtl::Release`] handoff. `ok` means the
+    /// executor was quiescent, shut down, and deregistered — the
+    /// control loop may now join its thread, tear down its cache
+    /// directory, and bill the cluster. A refusal means a dispatch won
+    /// the race; the release is simply dropped, as on the single loop.
+    Released { e: ExecutorId, ok: bool },
+    /// Sent by the shard loop that retired the last task of the batch,
+    /// so the control loop wakes promptly instead of on its backstop.
+    Drained,
 }
 
 /// Request to the compute-service thread.
@@ -264,6 +344,13 @@ impl LiveCluster {
     /// shutdown message, deregistration, cache-directory teardown — when
     /// the provisioner releases an idle executor.
     pub fn run(self, tasks: Vec<Task>) -> Result<RunOutcome> {
+        // `--shards >= 2`: per-shard dispatcher threads (see module
+        // docs). The single-loop path below is kept verbatim for
+        // `--shards 1`, so static single-shard runs reproduce the
+        // pre-shard-thread summary metrics exactly.
+        if self.cfg.coordinator.shards.max(1) >= 2 {
+            return self.run_sharded(tasks);
+        }
         let LiveCluster {
             cfg,
             store,
@@ -311,14 +398,14 @@ impl LiveCluster {
 
         // Executor plumbing: a slot per provisionable node. `inboxes[e]`
         // is `Some` exactly while executor `e`'s thread is alive.
-        let (done_tx, done_rx) = mpsc::channel::<Report>();
+        let (done_tx, done_rx) = mpsc::channel::<ShardMsg>();
         let mut inboxes: Vec<Option<mpsc::Sender<ExecMsg>>> = (0..n_exec).map(|_| None).collect();
         let mut handles: Vec<(ExecutorId, JoinHandle<()>)> = Vec::new();
         let cache_roots: Vec<PathBuf> =
             (0..n_exec).map(|e| workdir.join(format!("cache{e}"))).collect();
         let store_root = store.path_of(ObjectId(0)).parent().unwrap().to_path_buf();
         let spawn_exec = |e: ExecutorId,
-                          done: mpsc::Sender<Report>|
+                          done: mpsc::Sender<ShardMsg>|
          -> Result<(mpsc::Sender<ExecMsg>, JoinHandle<()>)> {
             let (tx, rx) = mpsc::channel::<ExecMsg>();
             let ctx = ExecutorCtx {
@@ -656,11 +743,30 @@ impl LiveCluster {
                     .map_err(|_| Error::Protocol(format!("executor {} died", order.executor)))?;
             }
             // Elastic pools use a timed receive so provisioning can
-            // progress while the pool is empty; static pools block, as
-            // before the refactor.
-            let report = if elastic {
-                match done_rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                    Ok(r) => r,
+            // progress while the pool is empty — sleeping until the
+            // next provisioning deadline (grant delivery, DRP
+            // evaluation, or the replication poll) rather than a fixed
+            // 20 ms tick, so an idle elastic pool stops spinning 50×/s
+            // doing nothing. Static pools block, as before the
+            // refactor.
+            let msg = if elastic {
+                let now_s = t0.elapsed().as_secs_f64();
+                let mut next = last_eval + poll_s;
+                for (ready_at, _) in &pending_allocs {
+                    next = next.min(*ready_at);
+                }
+                if replicating {
+                    next = next.min(last_repl + repl_poll_s);
+                }
+                let mut wait = (next - now_s).clamp(0.001, 0.25);
+                if replicating && plane.deferred_len() > 0 {
+                    // Deferred stagings re-admit as the source's egress
+                    // drains, which no deadline announces — keep the
+                    // old 20 ms cadence while any are parked.
+                    wait = wait.min(0.02);
+                }
+                match done_rx.recv_timeout(Duration::from_secs_f64(wait)) {
+                    Ok(m) => m,
                     Err(mpsc::RecvTimeoutError::Timeout) => continue,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         return Err(Error::Protocol("all executors died".into()))
@@ -670,6 +776,12 @@ impl LiveCluster {
                 done_rx
                     .recv()
                     .map_err(|_| Error::Protocol("all executors died".into()))?
+            };
+            let report = match msg {
+                ShardMsg::Report(r) => r,
+                // Control handoffs exist only on the `--shards >= 2`
+                // path; the single loop never receives one.
+                ShardMsg::Ctl(_) => continue,
             };
             let c = match report {
                 Report::Staged(s) => {
@@ -795,6 +907,780 @@ impl LiveCluster {
             sample_checksums,
         })
     }
+
+    /// Run a batch with per-shard dispatcher threads (`--shards >= 2`).
+    ///
+    /// Each shard owns a dispatcher loop, the dedicated [`ShardMsg`]
+    /// channel its executors report into, the inbox senders of those
+    /// executors, its own [`LiveTransferPlane`] admission state, and a
+    /// shard-local [`Metrics`]. The calling thread becomes the thin
+    /// control loop: provisioning on wall-clock time, membership-churn
+    /// handoffs, pool sampling, and the final merge. See the module
+    /// docs for the full protocol.
+    fn run_sharded(self, tasks: Vec<Task>) -> Result<RunOutcome> {
+        let LiveCluster {
+            cfg,
+            store,
+            workdir,
+            artifacts,
+        } = self;
+        let n_exec = cfg.testbed.nodes;
+        let format = store.format();
+        let capacity = (cfg.testbed.cpus_per_node * cfg.scheduler.tasks_per_cpu).max(1);
+        let elastic = cfg.provisioner.enabled;
+        let shards = cfg.coordinator.shards.max(1);
+
+        let mut catalog = Catalog::new();
+        for id in store.catalog().ids() {
+            catalog.insert(id, store.catalog().size(id).unwrap());
+        }
+        let indexes = (0..shards)
+            .map(|_| crate::index::build(&cfg.index, cfg.seed))
+            .collect();
+        let mut core = ShardedCore::with_indexes(&cfg.scheduler, catalog, indexes);
+
+        let compute = match artifacts {
+            Some(dir) => Some(spawn_compute(dir)?),
+            None => None,
+        };
+        let compute_client = compute.as_ref().map(|(c, _, _)| c.clone());
+
+        let egress_bps = cfg.testbed.nic_bps.min(cfg.local_disk.read_bps);
+        let ledger = Arc::new(EgressLedger::new(n_exec, egress_bps));
+        let pacer = Arc::new(StagingPacer::new(n_exec, egress_bps, &cfg.transfer));
+
+        // One dedicated report/control channel per shard. Executor `e`
+        // reports to shard `e % shards`; the control loop keeps a sender
+        // clone per shard for churn handoffs — which also keeps every
+        // channel alive while a shard's pool is transiently empty.
+        let mut shard_txs: Vec<mpsc::Sender<ShardMsg>> = Vec::with_capacity(shards);
+        let mut shard_rxs: Vec<mpsc::Receiver<ShardMsg>> = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            shard_txs.push(tx);
+            shard_rxs.push(rx);
+        }
+
+        let cache_roots: Vec<PathBuf> =
+            (0..n_exec).map(|e| workdir.join(format!("cache{e}"))).collect();
+        let store_root = store.path_of(ObjectId(0)).parent().unwrap().to_path_buf();
+        let spawn_exec = |e: ExecutorId| -> Result<(mpsc::Sender<ExecMsg>, JoinHandle<()>)> {
+            let (tx, rx) = mpsc::channel::<ExecMsg>();
+            let ctx = ExecutorCtx {
+                exec: e,
+                cfg: cfg.clone(),
+                format,
+                store_root: store_root.clone(),
+                cache_dir: LiveCacheDir::create(&cache_roots[e])?,
+                cache_roots: cache_roots.clone(),
+                cache: DataCache::new(
+                    cfg.cache.capacity_bytes,
+                    cfg.cache.policy,
+                    cfg.seed ^ e as u64,
+                ),
+                compute: compute_client.clone(),
+                ledger: ledger.clone(),
+                pacer: pacer.clone(),
+                done: shard_txs[e % shards].clone(),
+            };
+            Ok((tx, std::thread::spawn(move || executor_loop(ctx, rx))))
+        };
+
+        // Provisioning + pool bookkeeping, owned by the control loop.
+        let mut drp = Provisioner::new(cfg.provisioner.clone());
+        let mut cluster = ClusterProvider::new(n_exec, cfg.provisioner.allocation_latency_s);
+        let mut pending_allocs: Vec<(f64, Vec<usize>)> = Vec::new(); // (ready_at_s, nodes)
+        let poll_s = cfg.provisioner.poll_interval_s.max(0.005);
+        let mut last_eval = 0.0f64;
+        let mut metrics = Metrics::new();
+        metrics.t_start = 0.0;
+        let mut handles: Vec<(ExecutorId, JoinHandle<()>)> = Vec::new();
+        // `alive[e]`: executor `e`'s thread is up and owned by a shard
+        // loop — the per-shard analogue of the single loop's
+        // `inboxes[e].is_some()`.
+        let mut alive: Vec<bool> = vec![false; n_exec];
+        let mut init_inboxes: Vec<Vec<(ExecutorId, mpsc::Sender<ExecMsg>)>> =
+            (0..shards).map(|_| Vec::new()).collect();
+
+        if elastic {
+            if n_exec == 0 || cfg.provisioner.max_executors == 0 {
+                return Err(Error::Config(
+                    "elastic pool needs at least one allocatable executor \
+                     (testbed.nodes and provisioner.max_executors must be >= 1)"
+                        .into(),
+                ));
+            }
+            let warm = cfg.provisioner.min_executors.min(n_exec);
+            if warm > 0 {
+                let grant = cluster.allocate(0.0, warm);
+                for &e in &grant.nodes {
+                    core.register_executor_with(e, capacity);
+                    let (tx, h) = spawn_exec(e)?;
+                    init_inboxes[e % shards].push((e, tx));
+                    handles.push((e, h));
+                    alive[e] = true;
+                }
+                drp.on_allocated(grant.nodes.len());
+            }
+        } else {
+            for e in 0..n_exec {
+                core.register_executor_with(e, capacity);
+                let (tx, h) = spawn_exec(e)?;
+                init_inboxes[e % shards].push((e, tx));
+                handles.push((e, h));
+                alive[e] = true;
+            }
+        }
+
+        let replicating = cfg.replication.enabled && cfg.scheduler.policy.is_data_aware();
+        if replicating {
+            core.enable_replication(&cfg.replication);
+        }
+
+        let t0 = Instant::now();
+        let total = tasks.len() as u64;
+        // Frozen before the loops start; shard loops read concurrently.
+        let mut submit_times: HashMap<TaskId, Instant> = HashMap::new();
+        for t in tasks {
+            submit_times.insert(t.id, Instant::now());
+            core.submit(t);
+        }
+        let plane = core.into_plane();
+        let completed = AtomicU64::new(0);
+        let abort = AtomicBool::new(false);
+        let first_error: Mutex<Option<String>> = Mutex::new(None);
+        let fatal: Mutex<Option<String>> = Mutex::new(None);
+        let (ack_tx, ack_rx) = mpsc::channel::<CtlAck>();
+
+        let mut shard_outs: Vec<ShardLoopOut> = Vec::with_capacity(shards);
+        let run_result: Result<()> = std::thread::scope(|scope| {
+            let mut loops = Vec::with_capacity(shards);
+            for (s, rx) in shard_rxs.into_iter().enumerate() {
+                let ctx = ShardLoopCtx {
+                    s,
+                    plane: &plane,
+                    rx,
+                    inboxes: init_inboxes[s].drain(..).collect(),
+                    cfg: &cfg,
+                    ledger: ledger.clone(),
+                    submit_times: &submit_times,
+                    completed: &completed,
+                    total,
+                    abort: &abort,
+                    first_error: &first_error,
+                    fatal: &fatal,
+                    ack_tx: ack_tx.clone(),
+                    replicating,
+                    t0,
+                };
+                loops.push(scope.spawn(move || shard_loop(ctx)));
+            }
+            // The shard loops now hold the only long-lived ack senders:
+            // `ack_rx` disconnecting means every loop is gone.
+            drop(ack_tx);
+
+            let ctl = (|| -> Result<()> {
+                while completed.load(Ordering::Relaxed) < total && !abort.load(Ordering::Relaxed)
+                {
+                    let now_s = t0.elapsed().as_secs_f64();
+                    // A thread that finished while a shard loop still
+                    // owns its inbox died on its own (panic).
+                    for (e, h) in &handles {
+                        if alive[*e] && h.is_finished() {
+                            return Err(Error::Protocol(format!(
+                                "executor {e} died unexpectedly"
+                            )));
+                        }
+                    }
+                    let mut next = now_s + 0.2; // death-probe backstop
+                    if elastic {
+                        // Deliver allocation grants whose latency
+                        // elapsed: spawn the thread here, hand its inbox
+                        // to the owning shard loop.
+                        let mut i = 0;
+                        while i < pending_allocs.len() {
+                            if pending_allocs[i].0 <= now_s {
+                                let (_, nodes) = pending_allocs.swap_remove(i);
+                                let n = nodes.len();
+                                for e in nodes {
+                                    let (tx, h) = spawn_exec(e)?;
+                                    handles.push((e, h));
+                                    alive[e] = true;
+                                    shard_txs[e % shards]
+                                        .send(ShardMsg::Ctl(ShardCtl::Register {
+                                            e,
+                                            capacity,
+                                            inbox: tx,
+                                        }))
+                                        .map_err(|_| {
+                                            Error::Protocol(format!(
+                                                "shard loop {} gone",
+                                                e % shards
+                                            ))
+                                        })?;
+                                }
+                                drp.on_allocated(n);
+                                metrics.executors_joined += n as u64;
+                                let count = alive.iter().filter(|&&a| a).count();
+                                metrics.peak_executors = metrics.peak_executors.max(count);
+                            } else {
+                                next = next.min(pending_allocs[i].0);
+                                i += 1;
+                            }
+                        }
+                        if now_s - last_eval >= poll_s {
+                            let dt = now_s - last_eval;
+                            last_eval = now_s;
+                            let queued_now = plane.queue_len();
+                            let demand = plane.take_queue_peak().max(queued_now);
+                            let quiescent = plane.quiescent_executors();
+                            for e in plane.executors() {
+                                if quiescent.binary_search(&e).is_ok() {
+                                    drp.note_idle(e, now_s);
+                                } else {
+                                    drp.note_busy(e);
+                                }
+                            }
+                            metrics.idle_exec_s += quiescent.len() as f64 * dt;
+                            metrics.alloc_wait_s += drp.pending() as f64 * dt;
+                            let mut releases = 0usize;
+                            for action in drp.evaluate(demand, now_s) {
+                                match action {
+                                    ProvisionAction::Allocate { count } => {
+                                        metrics.alloc_requests += 1;
+                                        let grant = cluster.allocate(now_s, count);
+                                        if grant.nodes.len() < count {
+                                            drp.cancel_pending(count - grant.nodes.len());
+                                        }
+                                        if !grant.nodes.is_empty() {
+                                            pending_allocs.push((grant.ready_at, grant.nodes));
+                                        }
+                                    }
+                                    ProvisionAction::Release { executors } => {
+                                        for e in executors {
+                                            if quiescent.binary_search(&e).is_err() || !alive[e]
+                                            {
+                                                continue;
+                                            }
+                                            // Propose; the owning loop
+                                            // re-validates and acks.
+                                            shard_txs[e % shards]
+                                                .send(ShardMsg::Ctl(ShardCtl::Release { e }))
+                                                .map_err(|_| {
+                                                    Error::Protocol(format!(
+                                                        "shard loop {} gone",
+                                                        e % shards
+                                                    ))
+                                                })?;
+                                            releases += 1;
+                                        }
+                                    }
+                                }
+                            }
+                            // Reap `ok` releases: join the thread, tear
+                            // down the cache directory, bill the
+                            // cluster. A refused release means a
+                            // dispatch won the race — dropped, exactly
+                            // as the single loop skips it.
+                            let mut acked = 0usize;
+                            while acked < releases {
+                                match ack_rx.recv_timeout(Duration::from_secs(10)) {
+                                    Ok(CtlAck::Released { e, ok }) => {
+                                        acked += 1;
+                                        if !ok {
+                                            continue;
+                                        }
+                                        if let Some(pos) =
+                                            handles.iter().position(|(he, _)| *he == e)
+                                        {
+                                            let (_, h) = handles.swap_remove(pos);
+                                            let _ = h.join();
+                                        }
+                                        alive[e] = false;
+                                        let _ = std::fs::remove_dir_all(&cache_roots[e]);
+                                        cluster.release(e);
+                                        drp.on_released(e);
+                                        metrics.executors_released += 1;
+                                    }
+                                    // Advisory; the outer condition
+                                    // re-checks the completion count.
+                                    Ok(CtlAck::Drained) => {}
+                                    Err(_) => {
+                                        return Err(Error::Protocol(
+                                            "release ack lost (shard loop gone?)".into(),
+                                        ))
+                                    }
+                                }
+                            }
+                            // Pool sample + control-plane harvest.
+                            // (`staging_deferred` is per-shard plane
+                            // state here; the merged total lands in the
+                            // summary at run end.)
+                            let ct = plane.take_index_control();
+                            metrics.add_control_traffic(ct);
+                            let replicas = plane.replica_location_entries();
+                            let count = alive.iter().filter(|&&a| a).count();
+                            metrics.sample_pool(
+                                now_s,
+                                count,
+                                drp.pending(),
+                                queued_now,
+                                replicas,
+                            );
+                        }
+                        next = next.min(last_eval + poll_s);
+                    }
+                    // Sleep until the next provisioning deadline (or the
+                    // death-probe backstop); a `Drained` ack wakes us
+                    // early, stray release refusals are ignored.
+                    let wait = (next - t0.elapsed().as_secs_f64()).clamp(0.001, 0.2);
+                    match ack_rx.recv_timeout(Duration::from_secs_f64(wait)) {
+                        Ok(_) | Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            return Err(Error::Protocol("all shard loops gone".into()));
+                        }
+                    }
+                }
+                Ok(())
+            })();
+
+            // Stop the shard loops however the control loop ended; they
+            // drain their channels, shut their executors down, and hand
+            // back their tallies.
+            for tx in &shard_txs {
+                let _ = tx.send(ShardMsg::Ctl(ShardCtl::Shutdown));
+            }
+            for h in loops {
+                match h.join() {
+                    Ok(out) => shard_outs.push(out),
+                    Err(_) => return Err(Error::Protocol("shard loop panicked".into())),
+                }
+            }
+            ctl
+        });
+
+        for (_, h) in handles {
+            let _ = h.join();
+        }
+        if let Some((_, tx, h)) = compute {
+            let _ = tx.send(ComputeMsg::Shutdown);
+            let _ = h.join();
+        }
+        if let Some(msg) = fatal.into_inner().expect("fatal lock") {
+            return Err(Error::Protocol(msg));
+        }
+        run_result?;
+        if let Some(e) = first_error.into_inner().expect("error lock") {
+            return Err(Error::Protocol(format!("task failed: {e}")));
+        }
+
+        // Merge: shard tallies into one ShardStats, shard metrics into
+        // the control metrics, then the pool-level overrides only this
+        // thread can set.
+        let mut stats = ShardStats {
+            queue_depths: plane.queue_depths(),
+            ..ShardStats::default()
+        };
+        for out in &shard_outs {
+            stats.steals += out.steals;
+            stats.stolen_tasks += out.stolen_tasks;
+            stats.batches += out.batches;
+            for (h, o) in stats.batch_hist.iter_mut().zip(out.batch_hist) {
+                *h += o;
+            }
+        }
+        for out in &shard_outs {
+            metrics.merge(&out.metrics);
+        }
+        let control = plane.take_index_control();
+        metrics.add_control_traffic(control);
+        metrics.harvest_shard_stats(&stats);
+        metrics.t_end = t0.elapsed().as_secs_f64();
+        metrics.peak_executors = metrics.peak_executors.max(plane.executor_count());
+        let makespan = metrics.t_end;
+        Ok(RunOutcome {
+            metrics,
+            makespan_s: makespan,
+            events: 0,
+            wall_s: t0.elapsed().as_secs_f64(),
+            sample_checksums: Vec::new(),
+        })
+    }
+}
+
+/// Everything one shard dispatcher loop owns or borrows for the
+/// duration of the scoped run (`--shards >= 2`).
+struct ShardLoopCtx<'a> {
+    s: usize,
+    plane: &'a ShardPlane,
+    rx: mpsc::Receiver<ShardMsg>,
+    /// Inbox senders of the executors this shard currently owns.
+    inboxes: HashMap<ExecutorId, mpsc::Sender<ExecMsg>>,
+    cfg: &'a Config,
+    ledger: Arc<EgressLedger>,
+    /// Submission instants, frozen before the loops start.
+    submit_times: &'a HashMap<TaskId, Instant>,
+    completed: &'a AtomicU64,
+    total: u64,
+    abort: &'a AtomicBool,
+    first_error: &'a Mutex<Option<String>>,
+    fatal: &'a Mutex<Option<String>>,
+    ack_tx: mpsc::Sender<CtlAck>,
+    replicating: bool,
+    t0: Instant,
+}
+
+/// What one shard dispatcher loop hands back when it exits.
+struct ShardLoopOut {
+    /// Shard-local metrics: everything derived from the reports this
+    /// loop processed, plus its dispatch busy time and report-burst
+    /// peak. Pool-level fields are left at zero for the control loop's
+    /// merge (`Metrics::merge` *sums* `peak_executors`).
+    metrics: Metrics,
+    steals: u64,
+    stolen_tasks: u64,
+    batches: u64,
+    batch_hist: [u64; 6],
+}
+
+/// One shard's dispatcher loop: drain reports and control handoffs from
+/// the shard channel, apply them to the locked shard core, run the
+/// shard's replication cadence, steal when starved, dispatch a batch,
+/// publish hints — concurrently with every other shard's loop. Inbox
+/// sends happen while the shard lock is held, but mpsc sends never
+/// block, so the lock is only ever held for bounded CPU work.
+fn shard_loop(ctx: ShardLoopCtx<'_>) -> ShardLoopOut {
+    let ShardLoopCtx {
+        s,
+        plane,
+        rx,
+        mut inboxes,
+        cfg,
+        ledger,
+        submit_times,
+        completed,
+        total,
+        abort,
+        first_error,
+        fatal,
+        ack_tx,
+        replicating,
+        t0,
+    } = ctx;
+    let mut m = Metrics::new();
+    m.t_start = 0.0;
+    let mut xfer = LiveTransferPlane::new(&cfg.transfer, ledger);
+    let mut staged: HashSet<(ExecutorId, ObjectId)> = HashSet::new();
+    let mut sizer = StealSizer::new();
+    let mut orders = Vec::new();
+    let mut steals = 0u64;
+    let mut stolen_tasks = 0u64;
+    let mut batches = 0u64;
+    let mut batch_hist = [0u64; 6];
+    let repl_poll_s = cfg.replication.evaluate_interval_s.max(0.005);
+    let mut last_repl = 0.0f64;
+    let mut busy = 0.0f64;
+    let mut burst_peak = 0u64;
+    let mut steal_retry = false;
+    let mut first_pass = true;
+
+    'run: loop {
+        // Sleep until something is due: a 200 ms backstop (abort
+        // checks), pulled in to 2 ms after a steal whiff while work is
+        // visible elsewhere (the victim's lock was contended — retry
+        // soon), and by the replication cadence. The first pass does
+        // not wait at all: tasks submitted before the loops started
+        // must dispatch immediately, as on the single loop.
+        let mut wait = Duration::from_millis(200);
+        if steal_retry {
+            wait = Duration::from_millis(2);
+        }
+        if first_pass {
+            first_pass = false;
+            wait = Duration::ZERO;
+        }
+        if replicating {
+            let now_s = t0.elapsed().as_secs_f64();
+            let until = (last_repl + repl_poll_s - now_s).max(0.0005);
+            wait = wait.min(Duration::from_secs_f64(until));
+            if xfer.deferred_len() > 0 {
+                wait = wait.min(Duration::from_millis(20));
+            }
+        }
+        let first = match rx.recv_timeout(wait) {
+            Ok(msg) => Some(msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            // Control loop gone without a shutdown handoff: bail out.
+            Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
+        };
+        let t_work = Instant::now();
+        if abort.load(Ordering::Relaxed) {
+            for tx in inboxes.values() {
+                let _ = tx.send(ExecMsg::Shutdown);
+            }
+            break 'run;
+        }
+
+        // Apply the whole burst under one core lock.
+        let mut core = plane.lock(s);
+        let mut burst = 0u64;
+        let mut shutdown = false;
+        let mut next_msg = first;
+        while let Some(msg) = next_msg {
+            match msg {
+                ShardMsg::Ctl(ShardCtl::Shutdown) => shutdown = true,
+                ShardMsg::Ctl(ShardCtl::Register { e, capacity, inbox }) => {
+                    core.register_executor_with(e, capacity);
+                    inboxes.insert(e, inbox);
+                }
+                ShardMsg::Ctl(ShardCtl::Release { e }) => {
+                    // Re-validate: a dispatch this loop made after the
+                    // control loop's observation voids the release.
+                    let ok = inboxes.contains_key(&e)
+                        && core.quiescent_executors().binary_search(&e).is_ok();
+                    if ok {
+                        if let Some(tx) = inboxes.remove(&e) {
+                            let _ = tx.send(ExecMsg::Shutdown);
+                        }
+                        let _orphans = core.deregister_executor(e);
+                        // Deferred stagings touching the released
+                        // executor are cancelled; free the manager's
+                        // in-flight slots.
+                        for req in xfer.executor_released(e) {
+                            core.replication_staged(req.obj, req.dst);
+                        }
+                        staged.retain(|&(se, _)| se != e);
+                    }
+                    let _ = ack_tx.send(CtlAck::Released { e, ok });
+                }
+                ShardMsg::Report(Report::Staged(sr)) => {
+                    burst += 1;
+                    core.replication_staged(sr.obj, sr.exec);
+                    if sr.bytes > 0 {
+                        m.add_bytes(ByteSource::CacheToCache, sr.bytes);
+                        m.replica_bytes_staged += sr.bytes;
+                        m.note_class_transfer(sr.class, sr.bytes, sr.elapsed_s);
+                    }
+                    // Released between sending and reading: index
+                    // entries are already purged and must stay purged.
+                    if core.executors().binary_search(&sr.exec).is_ok() {
+                        for ev in &sr.events {
+                            if let CacheEvent::Evicted(v) = ev {
+                                staged.remove(&(sr.exec, *v));
+                            }
+                        }
+                        core.apply_cache_events(sr.exec, &sr.events);
+                        if sr.created {
+                            m.replicas_created += 1;
+                            staged.insert((sr.exec, sr.obj));
+                        }
+                    }
+                }
+                ShardMsg::Report(Report::Dropped(d)) => {
+                    burst += 1;
+                    core.replication_dropped(d.obj, d.exec);
+                    if core.executors().binary_search(&d.exec).is_ok() {
+                        if !d.events.is_empty() {
+                            m.replicas_dropped += 1;
+                        }
+                        staged.remove(&(d.exec, d.obj));
+                        core.apply_cache_events(d.exec, &d.events);
+                    }
+                }
+                ShardMsg::Report(Report::Done(c)) => {
+                    burst += 1;
+                    m.tasks_done += 1;
+                    m.note_task_latency(c.t_submit.elapsed().as_secs_f64());
+                    m.exec_latency.add(c.t_dispatch.elapsed().as_secs_f64());
+                    for (class, bytes, secs) in &c.xfers {
+                        m.note_class_transfer(*class, *bytes, *secs);
+                    }
+                    for (src, bytes, obj) in &c.resolutions {
+                        m.add_resolution(*src);
+                        m.add_bytes(*src, *bytes);
+                        match src {
+                            // Peer fetches are a replication demand
+                            // signal.
+                            ByteSource::CacheToCache => core.note_peer_fetch(*obj, c.exec),
+                            ByteSource::Local => {
+                                if staged.contains(&(c.exec, *obj)) {
+                                    m.replica_hits += 1;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    // Executor-side re-resolution of stale hints
+                    // (§3.2.2), charged at this shard's backend cost.
+                    for obj in &c.stale {
+                        m.add_index_cost(core.index().lookup_cost(*obj));
+                    }
+                    for ev in &c.events {
+                        if let CacheEvent::Evicted(v) = ev {
+                            staged.remove(&(c.exec, *v));
+                        }
+                    }
+                    if let Some(e) = c.error {
+                        first_error.lock().expect("error lock").get_or_insert(e);
+                    }
+                    core.on_task_complete(c.exec, c.task, &c.events);
+                    if completed.fetch_add(1, Ordering::Relaxed) + 1 == total {
+                        // We retired the last task: wake the control
+                        // loop promptly.
+                        let _ = ack_tx.send(CtlAck::Drained);
+                    }
+                }
+            }
+            next_msg = rx.try_recv().ok();
+        }
+        burst_peak = burst_peak.max(burst);
+        if shutdown {
+            for tx in inboxes.values() {
+                let _ = tx.send(ExecMsg::Shutdown);
+            }
+            plane.publish(s, core.ready_len(), core.executor_count());
+            drop(core);
+            busy += t_work.elapsed().as_secs_f64();
+            break 'run;
+        }
+
+        // Shard-local replication cadence: this shard's manager only
+        // ever names this shard's executors (locations live in the
+        // index slice its executors report into), so the inbox map and
+        // transfer-plane state stay strictly shard-local.
+        if replicating {
+            let now_s = t0.elapsed().as_secs_f64();
+            if xfer.deferred_len() > 0 {
+                for req in xfer.readmit() {
+                    let sent = inboxes
+                        .get(&req.dst)
+                        .map(|tx| {
+                            tx.send(ExecMsg::Stage {
+                                obj: req.obj,
+                                src: req.src,
+                                class: req.class,
+                            })
+                            .is_ok()
+                        })
+                        .unwrap_or(false);
+                    if !sent {
+                        // Destination already released: abandon.
+                        core.replication_staged(req.obj, req.dst);
+                    }
+                }
+            }
+            if now_s - last_repl >= repl_poll_s {
+                last_repl = now_s;
+                for d in core.poll_replication() {
+                    match d {
+                        ReplicaDirective::Stage {
+                            obj,
+                            src,
+                            dst,
+                            prestage,
+                        } => {
+                            let class = if prestage {
+                                TransferClass::Prestage
+                            } else {
+                                TransferClass::Staging
+                            };
+                            let req = TransferRequest {
+                                class,
+                                obj,
+                                src,
+                                dst,
+                                bytes: plane.catalog().size(obj).unwrap_or(1),
+                            };
+                            match xfer.submit(req) {
+                                Admission::Defer => {}
+                                Admission::Start => {
+                                    let sent = inboxes
+                                        .get(&dst)
+                                        .map(|tx| {
+                                            tx.send(ExecMsg::Stage { obj, src, class }).is_ok()
+                                        })
+                                        .unwrap_or(false);
+                                    if !sent {
+                                        core.replication_staged(obj, dst);
+                                    }
+                                }
+                            }
+                        }
+                        ReplicaDirective::Drop { obj, victim } => {
+                            // Honor the drop only while the index still
+                            // records a second copy to fall back on.
+                            let droppable = {
+                                let locs = core.index().locations(obj);
+                                locs.len() > 1 && locs.binary_search(&victim).is_ok()
+                            };
+                            let sent = droppable
+                                && inboxes
+                                    .get(&victim)
+                                    .map(|tx| tx.send(ExecMsg::Drop { obj }).is_ok())
+                                    .unwrap_or(false);
+                            if !sent {
+                                core.replication_dropped(obj, victim);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Steal if starved, dispatch one batch, publish hints for the
+        // other loops' victim selection.
+        let moved = plane.steal_into(s, &mut core, &mut sizer);
+        if moved > 0 {
+            steals += 1;
+            stolen_tasks += moved;
+        }
+        core.dispatch_into(&mut orders);
+        ShardedCore::record_batch(&mut batches, &mut batch_hist, orders.len());
+        let starved = core.idle_count() > 0 && core.ready_len() == 0;
+        plane.publish(s, core.ready_len(), core.executor_count());
+        drop(core);
+        steal_retry = starved && plane.work_visible_elsewhere(s);
+        for o in orders.drain(..) {
+            m.tasks_dispatched += 1;
+            m.add_index_cost(o.cost);
+            let exec = o.executor;
+            let msg = ExecMsg::Run {
+                t_submit: submit_times
+                    .get(&o.task.id)
+                    .copied()
+                    .unwrap_or_else(Instant::now),
+                task: o.task,
+                hints: o.hints,
+            };
+            let sent = inboxes.get(&exec).map(|tx| tx.send(msg).is_ok()).unwrap_or(false);
+            if !sent {
+                // Only reachable on protocol breakage — the core never
+                // places work on an unregistered executor. Surface it
+                // and stop the whole run.
+                fatal
+                    .lock()
+                    .expect("fatal lock")
+                    .get_or_insert(format!("shard {s}: executor {exec} unavailable for dispatch"));
+                abort.store(true, Ordering::Relaxed);
+                for tx in inboxes.values() {
+                    let _ = tx.send(ExecMsg::Shutdown);
+                }
+                busy += t_work.elapsed().as_secs_f64();
+                break 'run;
+            }
+        }
+        busy += t_work.elapsed().as_secs_f64();
+    }
+    m.dispatch_loop_busy_s = busy;
+    m.report_queue_peaks = vec![burst_peak];
+    m.staging_deferred = xfer.stats().deferred;
+    ShardLoopOut {
+        metrics: m,
+        steals,
+        stolen_tasks,
+        batches,
+        batch_hist,
+    }
 }
 
 struct ExecutorCtx {
@@ -812,7 +1698,10 @@ struct ExecutorCtx {
     /// Token-bucket pacing for background staging copies (no-op under
     /// the binary share policy).
     pacer: Arc<StagingPacer>,
-    done: mpsc::Sender<Report>,
+    /// Report channel of this executor's owning coordinator loop: the
+    /// shared coordinator channel at `--shards 1`, shard `e % shards`'s
+    /// dedicated channel at `--shards >= 2`.
+    done: mpsc::Sender<ShardMsg>,
 }
 
 /// File extension of stored/cached objects in `format`.
@@ -848,7 +1737,7 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                 )
                 .err()
                 .map(|e| e.to_string());
-                let _ = ctx.done.send(Report::Done(Completion {
+                let _ = ctx.done.send(ShardMsg::Report(Report::Done(Completion {
                     exec: ctx.exec,
                     task: task.id,
                     events,
@@ -858,11 +1747,11 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                     t_submit,
                     t_dispatch,
                     error: err,
-                }));
+                })));
             }
             ExecMsg::Stage { obj, src, class } => {
                 let report = stage_object(&mut ctx, obj, src, class);
-                let _ = ctx.done.send(Report::Staged(report));
+                let _ = ctx.done.send(ShardMsg::Report(Report::Staged(report)));
             }
             ExecMsg::Drop { obj } => {
                 // Replica teardown: release the cache entry and the file
@@ -874,11 +1763,11 @@ fn executor_loop(mut ctx: ExecutorCtx, rx: mpsc::Receiver<ExecMsg>) {
                     ctx.cache_dir.evict(obj, ctx.format);
                     events.push(CacheEvent::Evicted(obj));
                 }
-                let _ = ctx.done.send(Report::Dropped(DropReport {
+                let _ = ctx.done.send(ShardMsg::Report(Report::Dropped(DropReport {
                     exec: ctx.exec,
                     obj,
                     events,
-                }));
+                })));
             }
         }
     }

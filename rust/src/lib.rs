@@ -25,6 +25,7 @@
 //! |---|---|
 //! | §3.1 Falkon dispatcher | [`coordinator`] |
 //! | Sharded, batched dispatch core (`--shards`, work stealing, `--figure shards`) | [`coordinator::sharded`] |
+//! | Per-shard dispatcher threads in the live driver (per-shard report channels, cross-thread steals) | [`driver::live`] |
 //! | §3.2.2 eviction + dispatch policies | [`cache`], [`scheduler`] |
 //! | §3.2.3 centralized index, P-RLS | [`index`] |
 //! | §3.1 DRP (elastic pools, both drivers) | [`provisioner`], [`driver`] |

@@ -933,4 +933,18 @@ fn print_outcome_common(
             m.staging_deferred
         );
     }
+    // Per-shard dispatcher loops (live `--shards >= 2`): wall-clock busy
+    // time summed over shard loops plus the worst report burst drained
+    // under one core lock — the serialization the shard threads removed.
+    if m.dispatch_loop_busy_s > 0.0 {
+        let burst = m.report_queue_peaks.iter().copied().max().unwrap_or(0);
+        println!(
+            "  dispatcher: {} busy across {} shard loops | peak report burst {} | {} steals ({} tasks)",
+            fmt_secs(m.dispatch_loop_busy_s),
+            m.report_queue_peaks.len(),
+            burst,
+            m.dispatch_steals,
+            m.dispatch_stolen_tasks
+        );
+    }
 }
